@@ -1,0 +1,31 @@
+//! Fault-injection sweep (a configurable slice of the paper's Table 2).
+//!
+//! Run: `cargo run --release --example fault_sweep -- \
+//!        --models squeezenet_s --trials 3 --rates 1e-4,1e-3 --verbose`
+
+use zsecc::harness::table2;
+use zsecc::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = zsecc::artifacts_dir();
+    let mut cfg = table2::Config {
+        trials: args.usize_or("trials", 3)?,
+        batch: args.usize_or("batch", 256)?,
+        ..Default::default()
+    };
+    let models = args.list_or("models", &["squeezenet_s"]);
+    cfg.models = models;
+    if let Some(r) = args.str_opt("rates") {
+        cfg.rates = r
+            .split(',')
+            .map(|x| x.parse::<f64>().unwrap())
+            .collect();
+    }
+    let t2 = table2::run(&artifacts, &cfg, args.bool("verbose"))?;
+    println!("{}", t2.render(&cfg));
+    for (name, ok) in t2.shape_checks(&cfg) {
+        println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+    }
+    Ok(())
+}

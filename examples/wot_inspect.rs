@@ -1,0 +1,35 @@
+//! Inspect the WOT training artifacts of one model: Table-1 row, Fig-1
+//! large-weight position histogram (pre vs post WOT), and the Fig-3 /
+//! Fig-4 training curves, all rendered as ASCII.
+//!
+//! Run: `cargo run --release --example wot_inspect -- --model vgg16_s`
+
+use zsecc::harness::{fig1, fig34, table1};
+use zsecc::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = zsecc::artifacts_dir();
+    let model = args.str_or("model", "squeezenet_s");
+    let models = vec![model.clone()];
+
+    let rows = table1::run(&artifacts, &models, false)?;
+    println!("{}", table1::render(&rows));
+
+    let figs = fig1::run(&artifacts, &models)?;
+    println!("{}", fig1::render(&figs));
+    for f in &figs {
+        println!(
+            "pre-WOT large-position uniformity (tol 50%): {}",
+            fig1::is_roughly_uniform(&f.pre_wot, 0.5)
+        );
+    }
+
+    let logs = fig34::run(&artifacts, &models)?;
+    println!("{}", fig34::render_fig3(&logs));
+    println!("{}", fig34::render_fig4(&logs));
+    for (name, ok) in fig34::shape_checks(&logs) {
+        println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+    }
+    Ok(())
+}

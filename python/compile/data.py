@@ -1,0 +1,157 @@
+"""SynthImageNet: a procedurally generated, class-structured image dataset.
+
+The paper evaluates on ImageNet (ILSVRC2012), which is not available in
+this environment. The protection technique only requires (a) CNNs whose
+trained weights concentrate near zero and (b) a measurable accuracy under
+weight corruption; both hold for any non-trivially learnable dataset
+(DESIGN.md section 2). SynthImageNet provides that: each class is a bank
+of oriented sinusoid + blob templates, and each sample is an affine-jittered,
+noise-corrupted draw from its class bank. The generator is fully
+deterministic given a seed, so python training and the rust-side eval see
+byte-identical data.
+
+Images are 32x32x3 float32 in [-1, 1]; NUM_CLASSES = 10.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+IMG_SIZE = 32
+NUM_CLASSES = 10
+IMG_DIM = IMG_SIZE * IMG_SIZE * 3
+
+
+@dataclass
+class ClassTemplate:
+    """Parameters of one class's generative template."""
+
+    freqs: np.ndarray  # (K, 2) spatial frequency per sinusoid
+    phases: np.ndarray  # (K,)
+    chan_mix: np.ndarray  # (K, 3) per-channel amplitude of each sinusoid
+    blobs: np.ndarray  # (B, 5): cx, cy, sigma, amp, channel-weighting seed
+    blob_chan: np.ndarray  # (B, 3)
+
+
+def _make_templates(rng: np.random.Generator, k: int = 4, b: int = 3):
+    templates = []
+    for _ in range(NUM_CLASSES):
+        # Distinct dominant orientation/frequency band per class keeps the
+        # task solvable by small convnets while noise keeps it non-trivial.
+        theta = rng.uniform(0, np.pi, size=k)
+        radius = rng.uniform(1.5, 5.0, size=k)
+        freqs = np.stack([radius * np.cos(theta), radius * np.sin(theta)], axis=1)
+        phases = rng.uniform(0, 2 * np.pi, size=k)
+        chan_mix = rng.normal(0, 1, size=(k, 3))
+        blobs = np.stack(
+            [
+                rng.uniform(0.2, 0.8, size=b),  # cx
+                rng.uniform(0.2, 0.8, size=b),  # cy
+                rng.uniform(0.08, 0.2, size=b),  # sigma
+                rng.uniform(0.5, 1.5, size=b),  # amp
+                rng.uniform(0, 1, size=b),  # unused seed slot
+            ],
+            axis=1,
+        )
+        blob_chan = rng.normal(0, 1, size=(b, 3))
+        templates.append(ClassTemplate(freqs, phases, chan_mix, blobs, blob_chan))
+    return templates
+
+
+def _render(
+    tpl: ClassTemplate, rng: np.random.Generator, n: int, noise: float
+) -> np.ndarray:
+    """Render n samples of one class: affine-jittered template + noise."""
+    ys, xs = np.mgrid[0:IMG_SIZE, 0:IMG_SIZE].astype(np.float32) / IMG_SIZE
+    out = np.zeros((n, IMG_SIZE, IMG_SIZE, 3), dtype=np.float32)
+    for i in range(n):
+        ang = rng.uniform(-0.3, 0.3)
+        scale = rng.uniform(0.85, 1.15)
+        dx, dy = rng.uniform(-0.12, 0.12, size=2)
+        ca, sa = np.cos(ang), np.sin(ang)
+        u = ((xs - 0.5 + dx) * ca - (ys - 0.5 + dy) * sa) * scale
+        v = ((xs - 0.5 + dx) * sa + (ys - 0.5 + dy) * ca) * scale
+        img = np.zeros((IMG_SIZE, IMG_SIZE, 3), dtype=np.float32)
+        for j in range(tpl.freqs.shape[0]):
+            wave = np.sin(
+                2 * np.pi * (tpl.freqs[j, 0] * u + tpl.freqs[j, 1] * v)
+                + tpl.phases[j]
+            )
+            img += wave[..., None] * tpl.chan_mix[j][None, None, :]
+        for j in range(tpl.blobs.shape[0]):
+            cx, cy, sig, amp, _ = tpl.blobs[j]
+            g = amp * np.exp(-(((xs - cx) ** 2 + (ys - cy) ** 2) / (2 * sig**2)))
+            img += g[..., None] * tpl.blob_chan[j][None, None, :]
+        img += rng.normal(0, noise, size=img.shape).astype(np.float32)
+        # Per-sample contrast/brightness jitter.
+        img = img * rng.uniform(0.8, 1.2) + rng.uniform(-0.2, 0.2)
+        out[i] = img
+    # Normalize into roughly [-1, 1].
+    out = np.tanh(out * 0.6)
+    return out
+
+
+def generate(
+    n_train: int = 8000,
+    n_eval: int = 1024,
+    seed: int = 7,
+    noise: float = 1.6,
+):
+    """Return (x_train, y_train, x_eval, y_eval), deterministic in seed."""
+    rng = np.random.default_rng(seed)
+    templates = _make_templates(rng)
+    per_tr = n_train // NUM_CLASSES
+    per_ev = n_eval // NUM_CLASSES
+    xs_tr, ys_tr, xs_ev, ys_ev = [], [], [], []
+    for c, tpl in enumerate(templates):
+        xs_tr.append(_render(tpl, rng, per_tr, noise))
+        ys_tr.append(np.full(per_tr, c, dtype=np.int32))
+        xs_ev.append(_render(tpl, rng, per_ev, noise))
+        ys_ev.append(np.full(per_ev, c, dtype=np.int32))
+    x_tr = np.concatenate(xs_tr)
+    y_tr = np.concatenate(ys_tr)
+    x_ev = np.concatenate(xs_ev)
+    y_ev = np.concatenate(ys_ev)
+    # Shuffle train split (eval order is irrelevant but shuffle anyway so
+    # any batch is class-balanced on both sides).
+    p = rng.permutation(len(x_tr))
+    x_tr, y_tr = x_tr[p], y_tr[p]
+    p = rng.permutation(len(x_ev))
+    x_ev, y_ev = x_ev[p], y_ev[p]
+    return x_tr, y_tr, x_ev, y_ev
+
+
+def cached(cache_dir: str, **kw):
+    """Generate-or-load: caches the dataset as an .npz under cache_dir."""
+    os.makedirs(cache_dir, exist_ok=True)
+    tag = "synth_{n_train}_{n_eval}_{seed}_n{noise}".format(
+        n_train=kw.get("n_train", 8000),
+        n_eval=kw.get("n_eval", 1024),
+        seed=kw.get("seed", 7),
+        noise=kw.get("noise", 1.6),
+    )
+    path = os.path.join(cache_dir, tag + ".npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        return z["x_tr"], z["y_tr"], z["x_ev"], z["y_ev"]
+    x_tr, y_tr, x_ev, y_ev = generate(**kw)
+    np.savez_compressed(path, x_tr=x_tr, y_tr=y_tr, x_ev=x_ev, y_ev=y_ev)
+    return x_tr, y_tr, x_ev, y_ev
+
+
+def write_eval_bin(path: str, x_ev: np.ndarray, y_ev: np.ndarray) -> None:
+    """Serialize the eval split for the rust side.
+
+    Layout (little-endian): u32 N, u32 D, f32[N*D] images, u8[N] labels.
+    """
+    n = x_ev.shape[0]
+    flat = x_ev.reshape(n, -1).astype("<f4")
+    d = flat.shape[1]
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", n, d))
+        f.write(flat.tobytes())
+        f.write(y_ev.astype(np.uint8).tobytes())

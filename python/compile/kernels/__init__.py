@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref.py)."""
+
+from .conv2d import conv2d_pallas
+from .matmul import matmul, mxu_utilization, vmem_footprint_bytes
+from .quant import fake_quant_pallas
+from .throttle import throttle_pallas

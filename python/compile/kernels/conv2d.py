@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: quantized conv2d as im2col + blocked GEMM.
+
+The paper's inference substrate is a quantized CNN; its compute hot-spot
+is convolution. On TPU the canonical mapping is im2col (patch extraction,
+a layout transform XLA fuses into the surrounding HLO) feeding the MXU
+with a GEMM — which is the Pallas kernel (kernels/matmul.py). The GEMM
+shapes are (B*H*W, KH*KW*Cin) x (KH*KW*Cin, Cout).
+
+Oracle: kernels/ref.py::conv2d_ref (lax.conv_general_dilated).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def _im2col(x: jnp.ndarray, kh: int, kw: int, stride: int) -> jnp.ndarray:
+    """NHWC -> (B*OH*OW, KH*KW*C) patches, SAME padding.
+
+    Implemented with conv_general_dilated_patches so the exported HLO
+    keeps a single fusible gather; the channel-major patch order it emits
+    (C outer, then KH, KW) is matched in the weight reshape below.
+    """
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, OH, OW, C*KH*KW) with C slowest
+    oh, ow = patches.shape[1], patches.shape[2]
+    return patches.reshape(b * oh * ow, c * kh * kw), (b, oh, ow)
+
+
+def conv2d_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    stride: int = 1,
+    bm: int = 64,
+    bn: int = 64,
+    bk: int = 64,
+) -> jnp.ndarray:
+    """SAME conv, NHWC x HWIO -> NHWC, inner GEMM in Pallas."""
+    kh, kw, cin, cout = w.shape
+    cols, (b, oh, ow) = _im2col(x, kh, kw, stride)
+    # Match the patch order (C, KH, KW): HWIO -> (C*KH*KW, O).
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    out = matmul(cols, wmat, bm=bm, bn=bn, bk=bk)
+    return out.reshape(b, oh, ow, cout)

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: MXU-style blocked matmul.
+
+The inference hot-spot of a quantized CNN is GEMM (convs run as im2col
+GEMM, the classifier head is GEMM). This kernel expresses the TPU
+mapping of that hot-spot: a (bm, bn) output tile held in VMEM scratch,
+a K-loop as the innermost grid dimension accumulating partial products
+(`preferred_element_type=f32` targets the MXU's f32 accumulators), and
+BlockSpecs that describe the HBM->VMEM schedule.
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (semantically identical;
+DESIGN.md section 8 covers how TPU performance is estimated instead).
+
+Correctness oracle: kernels/ref.py::matmul_ref (pure jnp), checked by
+python/tests/test_kernels.py under a hypothesis shape sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    """Grid = (M/bm, N/bn, K/bk); K innermost so the accumulator tile
+    stays resident in VMEM across the K-loop."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _pad_to(a: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jnp.ndarray, y: jnp.ndarray, bm: int = 64, bn: int = 64, bk: int = 64
+) -> jnp.ndarray:
+    """x: (M, K) f32 @ y: (K, N) f32 -> (M, N) f32 via the Pallas kernel.
+
+    Inputs are zero-padded up to block multiples and the result sliced
+    back. Block defaults favour VMEM residency at our model sizes and are
+    swept in the perf pass (EXPERIMENTS.md §Perf).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    yp = _pad_to(_pad_to(y, 0, bk), 1, bn)
+    mp, kp = xp.shape
+    np_ = yp.shape[1]
+    nm, nn, nk = mp // bm, np_ // bn, kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int) -> int:
+    """Static VMEM usage of one grid step: x tile + y tile + acc tile.
+
+    Used by the perf pass to pick block shapes under the ~16 MiB/core
+    VMEM budget (DESIGN.md section 8: structural TPU estimates).
+    """
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (non-padding)."""
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+    return (m * n * k) / float(mp * np_ * kp)

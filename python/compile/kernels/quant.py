@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: symmetric range-based fake-quantization (paper Eq. 1).
+
+Elementwise quantize->dequantize on the int8 grid. The scale is computed
+by the caller (it is a reduction over the whole tensor, which belongs in
+the surrounding HLO, not the tile kernel) and passed as a (1, 1) array.
+
+Oracle: kernels/ref.py::fake_quant_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+QMIN = -128.0
+
+
+def _fq_kernel(x_ref, s_ref, o_ref):
+    s = s_ref[0, 0]
+    q = jnp.clip(jnp.round(x_ref[...] / s), QMIN, QMAX)
+    o_ref[...] = q * s
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fake_quant_pallas(x: jnp.ndarray, scale: jnp.ndarray, block: int = 1024):
+    """x: any shape f32; scale: scalar dequant step (max|x|/127)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    s = scale.reshape(1, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        _fq_kernel,
+        grid=(flat.shape[0],),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, s)
+    return out.reshape(-1)[:n].reshape(x.shape)

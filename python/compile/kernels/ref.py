@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the ground truth: pytest (with hypothesis sweeps over shapes)
+asserts each Pallas kernel matches its oracle to float32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+QMIN = -128.0
+SMALL_LO = -64.0
+SMALL_HI = 63.0
+BLOCK = 8
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def fake_quant_ref(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(jnp.round(x / scale), QMIN, QMAX) * scale
+
+
+def throttle_ref(q: jnp.ndarray) -> jnp.ndarray:
+    rows = q.reshape(-1, BLOCK)
+    pos = jnp.arange(BLOCK)
+    clamped = jnp.clip(rows, SMALL_LO, SMALL_HI)
+    return jnp.where(pos[None, :] < BLOCK - 1, clamped, rows).reshape(-1)

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: WOT throttling (paper section 4.1, QATT step 2).
+
+Operates on int8-grid values (carried as f32): viewing the flat weight
+vector as rows of 8 (one 64-bit memory block per row), clamp positions
+0..6 into [-64, 63]; position 7 is the free byte allowed to stay large.
+
+Oracle: quantize.throttle_q / kernels/ref.py::throttle_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SMALL_LO = -64.0
+SMALL_HI = 63.0
+BLOCK = 8
+
+
+def _throttle_kernel(q_ref, o_ref):
+    q = q_ref[...]  # (rows, 8)
+    pos = jax.lax.broadcasted_iota(jnp.int32, q.shape, dimension=1)
+    clamped = jnp.clip(q, SMALL_LO, SMALL_HI)
+    o_ref[...] = jnp.where(pos < BLOCK - 1, clamped, q)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_step",))
+def throttle_pallas(q: jnp.ndarray, rows_per_step: int = 512) -> jnp.ndarray:
+    """q: flat f32 vector of int8-grid values, len % 8 == 0."""
+    assert q.ndim == 1 and q.shape[0] % BLOCK == 0, q.shape
+    rows = q.reshape(-1, BLOCK)
+    n = rows.shape[0]
+    pad = (-n) % rows_per_step
+    rowsp = jnp.pad(rows, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _throttle_kernel,
+        grid=(rowsp.shape[0] // rows_per_step,),
+        in_specs=[pl.BlockSpec((rows_per_step, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_per_step, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(rowsp.shape, jnp.float32),
+        interpret=True,
+    )(rowsp)
+    return out[:n].reshape(-1)

@@ -1,0 +1,122 @@
+"""L2: the exported quantized-inference graph.
+
+Signature of every exported executable (one per (model, batch, variant)):
+
+    infer(weights_flat f32[P], images f32[B, 3072]) -> (logits f32[B, 10],)
+
+`weights_flat` is the *dequantized* protected weight buffer in canonical
+layout (tensors order, C-order ravel, per-layer offsets from the
+manifest): the rust coordinator owns the int8 bytes, runs the protection
+decode (in-place ECC etc.), dequantizes with the per-layer scales and
+feeds one flat buffer per scrub epoch. Biases / batch-norm parameters are
+baked into the HLO as constants (the paper protects weights only).
+
+Variants: "fast" uses plain jnp conv/dense; "pallas" routes every conv
+and dense through the L1 Pallas kernels (interpret=True), lowering them
+into the same HLO. Both must agree numerically (pytest + rust e2e test).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .data import IMG_DIM, IMG_SIZE
+from .kernels import conv2d_pallas, matmul
+from .models.common import ModelDef, Params, conv2d, dense
+
+
+def layer_table(model: ModelDef) -> List[Dict]:
+    """Manifest layer records: name, shape, element offset/size.
+
+    Every protected tensor's size is a multiple of 8 (enforced), so
+    64-bit blocks never straddle layers and offsets are block-aligned.
+    """
+    table = []
+    off = 0
+    for name, shape in model.tensors:
+        size = 1
+        for d in shape:
+            size *= d
+        assert size % 8 == 0, f"{name} size {size} not block-aligned"
+        table.append({"name": name, "shape": list(shape), "offset": off, "size": size})
+        off += size
+    return table
+
+
+def split_flat(wflat: jnp.ndarray, table: List[Dict]) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for rec in table:
+        seg = jax.lax.dynamic_slice(wflat, (rec["offset"],), (rec["size"],))
+        out[rec["name"]] = seg.reshape(rec["shape"])
+    return out
+
+
+def aux_params(model: ModelDef, params: Params) -> Params:
+    """Everything that is NOT a protected tensor (biases, BN) — baked."""
+    protected = set(model.protected_names())
+    return {k: v for k, v in params.items() if k not in protected}
+
+
+def make_infer(
+    model: ModelDef,
+    params: Params,
+    batch: int,
+    use_pallas: bool = False,
+) -> Callable:
+    aux = aux_params(model, params)
+    table = layer_table(model)
+    conv = conv2d_pallas if use_pallas else conv2d
+    dense_fn = (lambda x, w: matmul(x, w)) if use_pallas else dense
+
+    def infer(wflat: jnp.ndarray, images: jnp.ndarray):
+        p = dict(aux)
+        p.update(split_flat(wflat, table))
+        x = images.reshape(batch, IMG_SIZE, IMG_SIZE, 3)
+        logits, _ = model.apply(p, x, train=False, conv=conv, dense_fn=dense_fn)
+        return (logits,)
+
+    return infer
+
+
+def lower_to_hlo_text(
+    model: ModelDef, params: Params, batch: int, use_pallas: bool = False
+) -> str:
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO *text*.
+
+    Text is the interchange format: jax>=0.5 serialized protos carry
+    64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    parser reassigns ids (see /opt/xla-example/README.md).
+    """
+    from jax._src.lib import xla_client as xc  # noqa: PLC0415
+
+    infer = make_infer(model, params, batch, use_pallas)
+    nw = model.num_weights()
+    wspec = jax.ShapeDtypeStruct((nw,), jnp.float32)
+    xspec = jax.ShapeDtypeStruct((batch, IMG_DIM), jnp.float32)
+    lowered = jax.jit(infer).lower(wspec, xspec)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is LOAD-BEARING: the default text printer
+    # elides big constants as `constant({...})`, which the xla_extension
+    # 0.5.1 text parser silently reads as ZEROS — baked biases/batch-norm
+    # tensors would vanish on the rust side (logits go constant for BN
+    # models). Non-negotiable for the AOT interchange.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def dequant_flat(qflat, table: List[Dict], scales: Dict[str, float]) -> jnp.ndarray:
+    """Reference dequantizer (mirrors what rust does): int8 buffer ->
+    flat f32 with per-layer scales. Used by tests to validate the rust
+    path and the exported graph end-to-end."""
+    import numpy as np  # noqa: PLC0415
+
+    out = np.zeros(qflat.shape[0], dtype=np.float32)
+    for rec in table:
+        a, b = rec["offset"], rec["offset"] + rec["size"]
+        out[a:b] = qflat[a:b].astype(np.float32) * scales[rec["name"]]
+    return jnp.asarray(out)

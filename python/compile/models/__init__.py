@@ -1,0 +1,27 @@
+"""Model zoo registry.
+
+Six scaled-down counterparts of the paper's Table-1 models (DESIGN.md
+section 2 documents the scaling substitution). The three fault-injection
+models of Table 2 are vgg16_s, resnet18_s, squeezenet_s.
+"""
+
+from .alexnet import AlexNetS
+from .common import ModelDef, conv2d, dense
+from .inception import InceptionS
+from .resnet import ResNet18S
+from .squeezenet import SqueezeNetS
+from .vgg import VGG16BNS, VGG16S
+
+REGISTRY = {
+    m.name: m
+    for m in (VGG16S, VGG16BNS, ResNet18S, SqueezeNetS, AlexNetS, InceptionS)
+}
+
+# Order used everywhere (Table 1 columns, artifact export).
+ALL_MODELS = ["alexnet_s", "vgg16_s", "vgg16bn_s", "inception_s", "resnet18_s", "squeezenet_s"]
+# Table 2 / fault-injection subset (paper: VGG16, ResNet18, SqueezeNet).
+FAULT_MODELS = ["vgg16_s", "resnet18_s", "squeezenet_s"]
+
+
+def get(name: str, num_classes: int = 10) -> ModelDef:
+    return REGISTRY[name](num_classes)

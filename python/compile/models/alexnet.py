@@ -1,0 +1,50 @@
+"""AlexNet scaled for 32x32 inputs (5 convs + 2 FC, 3x3 kernels).
+
+The original's 11x11/5x5 front-end makes no sense at 32x32; the standard
+CIFAR adaptation (all 3x3, three 2x2 pools) is used, widths ~1/8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, Params, he_conv, he_dense, maxpool
+
+CONVS = [16, 24, 32, 32, 24]  # conv widths; pools after conv0, conv1, conv4
+FC_WIDTH = 128
+
+
+class AlexNetS(ModelDef):
+    name = "alexnet_s"
+
+    def __init__(self, num_classes: int = 10):
+        super().__init__(num_classes)
+        cin = 3
+        for i, w in enumerate(CONVS):
+            self.tensors.append((f"conv{i}.w", (3, 3, cin, w)))
+            cin = w
+        # Three pools: 32 -> 16 -> 8 -> 4; final map 4x4x24 = 384.
+        self.tensors.append(("fc0.w", (4 * 4 * CONVS[-1], FC_WIDTH)))
+        self.tensors.append(("fc1.w", (FC_WIDTH, num_classes)))
+
+    def init(self, key) -> Params:
+        params: Params = {}
+        keys = iter(jax.random.split(key, len(self.tensors)))
+        for name, shape in self.tensors:
+            if name.startswith("conv"):
+                params[name] = he_conv(next(keys), *shape)
+            else:
+                params[name] = he_dense(next(keys), *shape)
+            params[name[:-2] + ".b"] = jnp.zeros((shape[-1],), jnp.float32)
+        return params
+
+    def _forward(self, params, x, wq, act, train, conv, dense_fn, updates):
+        for i in range(len(CONVS)):
+            x = conv(x, wq(params[f"conv{i}.w"])) + params[f"conv{i}.b"]
+            x = act(jax.nn.relu(x))
+            if i in (0, 1, 4):
+                x = maxpool(x)
+        x = x.reshape(x.shape[0], -1)
+        x = act(jax.nn.relu(dense_fn(x, wq(params["fc0.w"])) + params["fc0.b"]))
+        return dense_fn(x, wq(params["fc1.w"])) + params["fc1.b"]

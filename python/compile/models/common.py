@@ -1,0 +1,155 @@
+"""Functional CNN building blocks shared by the model zoo.
+
+Design:
+  * A model is a `ModelDef` with `init(key) -> params` and
+    `apply(params, x, ...) -> (logits, bn_updates)`.
+  * `params` is a flat dict name -> array. Conv / dense *weights* (names
+    ending in ".w") are the paper's protected tensors: they are the ones
+    quantized to int8, laid out in the 64-bit-block memory and covered by
+    in-place ECC. Biases / batch-norm parameters are auxiliary (the paper
+    protects weights; biases are 32-bit and conventionally protected) and
+    are baked into the exported HLO as constants.
+  * `apply` takes injection points so the same definition serves float
+    training (wq=None), QAT/WOT (wq=fake-quant variants), int8 evaluation
+    and the AOT export with either the plain-jnp ops or the L1 Pallas
+    kernels (conv=/dense=).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jnp.ndarray]
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """SAME conv, NHWC activations, HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return x @ w
+
+
+def maxpool(x: jnp.ndarray, k: int = 2, s: int = 2) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+    )
+
+
+def avgpool_global(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def he_conv(key, kh, kw, cin, cout):
+    std = np.sqrt(2.0 / (kh * kw * cin))
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def he_dense(key, cin, cout):
+    std = np.sqrt(2.0 / cin)
+    return jax.random.normal(key, (cin, cout), jnp.float32) * std
+
+
+def bn_apply(
+    params: Params,
+    name: str,
+    x: jnp.ndarray,
+    train: bool,
+    updates: Params,
+    momentum: float = 0.9,
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Standard batchnorm over NHWC channel axis with running stats.
+
+    In train mode, batch statistics normalize and the EMA-updated running
+    stats are written into `updates` (the caller merges them back).
+    """
+    g, b = params[name + ".gamma"], params[name + ".beta"]
+    if train:
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        updates[name + ".mu"] = momentum * params[name + ".mu"] + (1 - momentum) * mu
+        updates[name + ".var"] = (
+            momentum * params[name + ".var"] + (1 - momentum) * var
+        )
+    else:
+        mu, var = params[name + ".mu"], params[name + ".var"]
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def bn_init(params: Params, name: str, c: int) -> None:
+    params[name + ".gamma"] = jnp.ones((c,), jnp.float32)
+    params[name + ".beta"] = jnp.zeros((c,), jnp.float32)
+    params[name + ".mu"] = jnp.zeros((c,), jnp.float32)
+    params[name + ".var"] = jnp.ones((c,), jnp.float32)
+
+
+class ModelDef:
+    """Base class: subclasses fill `tensors` (ordered protected weights)
+    and implement `_forward`."""
+
+    name: str = "base"
+
+    def __init__(self, num_classes: int = 10):
+        self.num_classes = num_classes
+        # Ordered (name, shape) of protected tensors; populated by subclass.
+        self.tensors: List[Tuple[str, Tuple[int, ...]]] = []
+
+    # -- protected-tensor bookkeeping ---------------------------------
+    def protected_names(self) -> List[str]:
+        return [n for n, _ in self.tensors]
+
+    def protected_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        return dict(self.tensors)
+
+    def num_weights(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.tensors)
+
+    # -- to be provided by subclass -----------------------------------
+    def init(self, key) -> Params:
+        raise NotImplementedError
+
+    def _forward(
+        self,
+        params: Params,
+        x: jnp.ndarray,
+        wq: Callable,
+        act: Callable,
+        train: bool,
+        conv: Callable,
+        dense_fn: Callable,
+        updates: Params,
+    ) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # -- public entry ---------------------------------------------------
+    def apply(
+        self,
+        params: Params,
+        x: jnp.ndarray,
+        *,
+        wq: Optional[Callable] = None,
+        act: Optional[Callable] = None,
+        train: bool = False,
+        conv: Callable = conv2d,
+        dense_fn: Callable = dense,
+    ) -> Tuple[jnp.ndarray, Params]:
+        """Returns (logits, bn_updates). wq transforms each protected
+        weight before use (fake-quant etc.); act transforms activations
+        after each nonlinearity (activation quantization)."""
+        wq = wq or (lambda w: w)
+        act = act or (lambda a: a)
+        updates: Params = {}
+        logits = self._forward(params, x, wq, act, train, conv, dense_fn, updates)
+        return logits, updates

@@ -1,0 +1,81 @@
+"""Inception-style network scaled for 32x32 inputs (Inception_V3 stand-in).
+
+Two inception blocks with the canonical four branches (1x1, 1x1->3x3,
+1x1->3x3->3x3 as the 5x5 factorization, pool->1x1), pooling between,
+global average pool + FC head. Widths multiples of 8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, Params, avgpool_global, he_conv, he_dense, maxpool
+
+
+def _pool3s1(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3 stride-1 SAME maxpool (the inception pool branch)."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 1, 1, 1), "SAME"
+    )
+
+
+def _inc_tensors(prefix: str, cin: int, b1: int, b3r: int, b3: int, b5r: int, b5: int, bp: int):
+    """Tensor plan of one inception block; returns (tensors, cout)."""
+    t = [
+        (f"{prefix}.b1.w", (1, 1, cin, b1)),
+        (f"{prefix}.b3r.w", (1, 1, cin, b3r)),
+        (f"{prefix}.b3.w", (3, 3, b3r, b3)),
+        (f"{prefix}.b5r.w", (1, 1, cin, b5r)),
+        (f"{prefix}.b5a.w", (3, 3, b5r, b5)),
+        (f"{prefix}.b5b.w", (3, 3, b5, b5)),
+        (f"{prefix}.bp.w", (1, 1, cin, bp)),
+    ]
+    return t, b1 + b3 + b5 + bp
+
+
+BLOCKS = [
+    ("incA", 16, 8, 16, 8, 8, 8),  # cout = 16+16+8+8 = 48
+    ("incB", 24, 16, 32, 8, 16, 16),  # cout = 24+32+16+16 = 88
+]
+
+
+class InceptionS(ModelDef):
+    name = "inception_s"
+
+    def __init__(self, num_classes: int = 10):
+        super().__init__(num_classes)
+        self.tensors.append(("stem.w", (3, 3, 3, 16)))
+        cin = 16
+        for name, *cfg in BLOCKS:
+            t, cin = _inc_tensors(name, cin, *cfg)
+            self.tensors.extend(t)
+        self.tensors.append(("fc.w", (cin, num_classes)))
+        self._cout = cin
+
+    def init(self, key) -> Params:
+        params: Params = {}
+        keys = iter(jax.random.split(key, len(self.tensors)))
+        for name, shape in self.tensors:
+            if name == "fc.w":
+                params[name] = he_dense(next(keys), *shape)
+            else:
+                params[name] = he_conv(next(keys), *shape)
+            params[name[:-2] + ".b"] = jnp.zeros((shape[-1],), jnp.float32)
+        return params
+
+    def _forward(self, params, x, wq, act, train, conv, dense_fn, updates):
+        def c(base, x):
+            return act(jax.nn.relu(conv(x, wq(params[base + ".w"])) + params[base + ".b"]))
+
+        x = c("stem", x)
+        x = maxpool(x)  # 16x16
+        for name, *_ in BLOCKS:
+            b1 = c(f"{name}.b1", x)
+            b3 = c(f"{name}.b3", c(f"{name}.b3r", x))
+            b5 = c(f"{name}.b5b", c(f"{name}.b5a", c(f"{name}.b5r", x)))
+            bp = c(f"{name}.bp", _pool3s1(x))
+            x = jnp.concatenate([b1, b3, b5, bp], axis=-1)
+            x = maxpool(x)
+        x = avgpool_global(x)
+        return dense_fn(x, wq(params["fc.w"])) + params["fc.b"]

@@ -1,0 +1,82 @@
+"""ResNet18 scaled for 32x32 inputs (basic blocks, 4 stages x 2 blocks).
+
+Widths 8/16/32/64 (1/8 of the original 64/128/256/512); stem is the
+CIFAR-style single 3x3 conv. Downsampling shortcuts are 1x1 convs (they
+are protected tensors too — they live in weight memory like any other).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ModelDef,
+    Params,
+    avgpool_global,
+    bn_apply,
+    bn_init,
+    he_conv,
+    he_dense,
+)
+
+STAGES = [(8, 1), (16, 2), (32, 2), (64, 2)]  # (width, first-block stride)
+BLOCKS = 2
+
+
+class ResNet18S(ModelDef):
+    name = "resnet18_s"
+
+    def __init__(self, num_classes: int = 10):
+        super().__init__(num_classes)
+        self.tensors.append(("stem.w", (3, 3, 3, 8)))
+        cin = 8
+        for si, (w, _) in enumerate(STAGES):
+            for bi in range(BLOCKS):
+                p = f"s{si}b{bi}"
+                self.tensors.append((f"{p}.c1.w", (3, 3, cin, w)))
+                self.tensors.append((f"{p}.c2.w", (3, 3, w, w)))
+                if cin != w:
+                    self.tensors.append((f"{p}.ds.w", (1, 1, cin, w)))
+                cin = w
+        self.tensors.append(("fc.w", (64, num_classes)))
+
+    def init(self, key) -> Params:
+        params: Params = {}
+        keys = iter(jax.random.split(key, len(self.tensors) + 8))
+        for name, shape in self.tensors:
+            if name == "fc.w":
+                params[name] = he_dense(next(keys), *shape)
+                params["fc.b"] = jnp.zeros((shape[-1],), jnp.float32)
+            else:
+                params[name] = he_conv(next(keys), *shape)
+                bn_init(params, name[:-2] + ".bn", shape[-1])
+        return params
+
+    def _conv_bn(self, params, base, x, wq, train, conv, updates, stride=1):
+        x = conv(x, wq(params[base + ".w"]), stride)
+        return bn_apply(params, base + ".bn", x, train, updates)
+
+    def _forward(self, params, x, wq, act, train, conv, dense_fn, updates):
+        x = act(jax.nn.relu(self._conv_bn(params, "stem", x, wq, train, conv, updates)))
+        cin = 8
+        for si, (w, stride0) in enumerate(STAGES):
+            for bi in range(BLOCKS):
+                p = f"s{si}b{bi}"
+                stride = stride0 if bi == 0 else 1
+                h = act(
+                    jax.nn.relu(
+                        self._conv_bn(params, p + ".c1", x, wq, train, conv, updates, stride)
+                    )
+                )
+                h = self._conv_bn(params, p + ".c2", h, wq, train, conv, updates)
+                if cin != w:
+                    sc = self._conv_bn(params, p + ".ds", x, wq, train, conv, updates, stride)
+                elif stride != 1:
+                    sc = x[:, ::stride, ::stride, :]
+                else:
+                    sc = x
+                x = act(jax.nn.relu(h + sc))
+                cin = w
+        x = avgpool_global(x)
+        return dense_fn(x, wq(params["fc.w"])) + params["fc.b"]

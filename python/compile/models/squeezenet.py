@@ -1,0 +1,56 @@
+"""SqueezeNet scaled for 32x32 inputs (fire modules, 1/4-width).
+
+Fire(s, e): 1x1 squeeze to s channels, then parallel 1x1 and 3x3 expands
+to e channels each, concatenated. Classifier is the SqueezeNet-style
+final 1x1 conv + global average pool (no FC).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelDef, Params, avgpool_global, he_conv, maxpool
+
+FIRES = [(8, 16), (8, 16), (16, 32), (16, 32), (24, 48), (24, 48)]
+POOL_AFTER = {1, 3}  # maxpool after these fire indices
+
+
+class SqueezeNetS(ModelDef):
+    name = "squeezenet_s"
+
+    def __init__(self, num_classes: int = 10):
+        super().__init__(num_classes)
+        self.tensors.append(("stem.w", (3, 3, 3, 16)))
+        cin = 16
+        for i, (s, e) in enumerate(FIRES):
+            self.tensors.append((f"f{i}.sq.w", (1, 1, cin, s)))
+            self.tensors.append((f"f{i}.e1.w", (1, 1, s, e)))
+            self.tensors.append((f"f{i}.e3.w", (3, 3, s, e)))
+            cin = 2 * e
+        # Final classifier conv: 1x1 to num_classes, then GAP.
+        self.tensors.append(("head.w", (1, 1, cin, num_classes)))
+
+    def init(self, key) -> Params:
+        params: Params = {}
+        keys = iter(jax.random.split(key, len(self.tensors)))
+        for name, shape in self.tensors:
+            params[name] = he_conv(next(keys), *shape)
+            params[name[:-2] + ".b"] = jnp.zeros((shape[-1],), jnp.float32)
+        return params
+
+    def _forward(self, params, x, wq, act, train, conv, dense_fn, updates):
+        def c(base, x, **kw):
+            return conv(x, wq(params[base + ".w"]), **kw) + params[base + ".b"]
+
+        x = act(jax.nn.relu(c("stem", x)))
+        x = maxpool(x)
+        for i in range(len(FIRES)):
+            s = act(jax.nn.relu(c(f"f{i}.sq", x)))
+            e1 = act(jax.nn.relu(c(f"f{i}.e1", s)))
+            e3 = act(jax.nn.relu(c(f"f{i}.e3", s)))
+            x = jnp.concatenate([e1, e3], axis=-1)
+            if i in POOL_AFTER:
+                x = maxpool(x)
+        x = c("head", x)
+        return avgpool_global(x)

@@ -1,0 +1,84 @@
+"""VGG16-family scaled for 32x32 inputs (paper models: VGG16, VGG16_bn).
+
+Original VGG16 conv plan 2x64, 2x128, 3x256, 3x512, 3x512 is scaled by
+1/8 (widths stay multiples of 8 so every protected tensor tiles into
+whole 64-bit blocks); the 4096-wide FC stack becomes 128.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import (
+    ModelDef,
+    Params,
+    avgpool_global,
+    bn_apply,
+    bn_init,
+    he_conv,
+    he_dense,
+    maxpool,
+)
+
+# (layer plan) 'M' = maxpool 2x2.
+PLAN = [8, 8, "M", 16, 16, "M", 32, 32, 32, "M", 64, 64, 64, "M", 64, 64, 64, "M"]
+FC_WIDTH = 128
+
+
+class VGG16S(ModelDef):
+    name = "vgg16_s"
+    use_bn = False
+
+    def __init__(self, num_classes: int = 10):
+        super().__init__(num_classes)
+        cin = 3
+        i = 0
+        for v in PLAN:
+            if v == "M":
+                continue
+            self.tensors.append((f"conv{i}.w", (3, 3, cin, v)))
+            cin = v
+            i += 1
+        # After five 2x2 pools on 32x32 the map is 1x1 x 64.
+        self.tensors.append(("fc0.w", (64, FC_WIDTH)))
+        self.tensors.append(("fc1.w", (FC_WIDTH, FC_WIDTH)))
+        self.tensors.append(("fc2.w", (FC_WIDTH, num_classes)))
+
+    def init(self, key) -> Params:
+        params: Params = {}
+        keys = jax.random.split(key, len(self.tensors))
+        i = 0
+        for (name, shape), k in zip(self.tensors, keys):
+            if name.startswith("conv"):
+                params[name] = he_conv(k, *shape)
+                params[name[:-2] + ".b"] = jnp.zeros((shape[-1],), jnp.float32)
+                if self.use_bn:
+                    bn_init(params, name[:-2] + ".bn", shape[-1])
+            else:
+                params[name] = he_dense(k, *shape)
+                params[name[:-2] + ".b"] = jnp.zeros((shape[-1],), jnp.float32)
+            i += 1
+        return params
+
+    def _forward(self, params, x, wq, act, train, conv, dense_fn, updates):
+        i = 0
+        for v in PLAN:
+            if v == "M":
+                x = maxpool(x)
+                continue
+            name = f"conv{i}"
+            x = conv(x, wq(params[name + ".w"])) + params[name + ".b"]
+            if self.use_bn:
+                x = bn_apply(params, name + ".bn", x, train, updates)
+            x = act(jax.nn.relu(x))
+            i += 1
+        x = x.reshape(x.shape[0], -1)  # 1x1x64 -> 64
+        x = act(jax.nn.relu(dense_fn(x, wq(params["fc0.w"])) + params["fc0.b"]))
+        x = act(jax.nn.relu(dense_fn(x, wq(params["fc1.w"])) + params["fc1.b"]))
+        return dense_fn(x, wq(params["fc2.w"])) + params["fc2.b"]
+
+
+class VGG16BNS(VGG16S):
+    name = "vgg16bn_s"
+    use_bn = True

@@ -1,0 +1,156 @@
+"""Symmetric range-based linear quantization (paper Eq. 1) + WOT utilities.
+
+    X_q = round(X * (2^(n-1) - 1) / max|X|),   n = 8
+
+plus the WOT block constraint: when int8 weights are laid out in memory,
+every 8-byte (64-bit) block may have a value outside [-64, 63] **only in
+its last byte** — the first seven bytes each then carry a non-informative
+bit (bit6 == bit7) that in-place ECC reuses for check-bit storage.
+
+All functions are pure jnp so they can be jitted into both the training
+step and the exported inference graph; Pallas-kernel versions of
+fake-quant and throttle live in kernels/ and are checked against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127  # 2^(8-1) - 1
+QMIN = -128
+SMALL_LO = -64  # WOT small-weight range [-64, 63]
+SMALL_HI = 63
+BLOCK = 8  # bytes per protected 64-bit block
+FREE_POS = BLOCK - 1  # the one position allowed to hold a large weight
+
+
+def scale_of(w: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Dequantization scale max|X| / (2^(bits-1) - 1) (Eq. 1 inverted).
+
+    `bits` generalizes to the paper's future-work direction (section 6):
+    fewer-bit quantizations have fewer non-informative bits, so the
+    trade between code strength and quantization error can be studied.
+    Never zero.
+    """
+    m = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    return m / (2 ** (bits - 1) - 1)
+
+
+def quantize(w: jnp.ndarray, scale: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Float -> int grid (returned as float carrying integer values)."""
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q * scale
+
+
+def fake_quant(w: jnp.ndarray) -> jnp.ndarray:
+    """Quantize->dequantize with straight-through estimator gradient."""
+    s = scale_of(w)
+    dq = dequantize(quantize(w, s), s)
+    return w + jax.lax.stop_gradient(dq - w)
+
+
+def fake_quant_fixed(w: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Fake-quant with a *frozen* calibration scale, STE gradient.
+
+    WOT must use frozen per-layer scales: throttling clamps the large
+    weights, which can shrink max|W|; a dynamically recomputed scale then
+    re-exposes previously-small weights as 'large', and repeated
+    throttle/rescale rounds cascade into an accuracy collapse. Freezing
+    the scale at its pre-WOT calibration value (standard static-range
+    quantization) makes the throttle projection idempotent.
+    """
+    dq = dequantize(quantize(w, scale), scale)
+    return w + jax.lax.stop_gradient(dq - w)
+
+
+def throttled_fake_quant_fixed(w: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Throttled fake-quant with a frozen scale, STE gradient."""
+    q = throttle_q(quantize(w, scale).reshape(-1)).reshape(w.shape)
+    dq = dequantize(q, scale)
+    return w + jax.lax.stop_gradient(dq - w)
+
+
+def fake_quant_act(x: jnp.ndarray) -> jnp.ndarray:
+    """Activation fake-quant (dynamic per-tensor range), STE."""
+    s = scale_of(x)
+    dq = dequantize(quantize(x, s), s)
+    return x + jax.lax.stop_gradient(dq - x)
+
+
+def throttle_q(q: jnp.ndarray) -> jnp.ndarray:
+    """WOT throttling on a flat int8-grid vector (length % 8 == 0).
+
+    Clamp positions 0..6 of every 8-value block to [-64, 63]; position 7
+    is free. (Paper section 4.1, step 2 of QATT.)
+    """
+    blocks = q.reshape(-1, BLOCK)
+    pos = jnp.arange(BLOCK)
+    clamped = jnp.clip(blocks, SMALL_LO, SMALL_HI)
+    out = jnp.where(pos[None, :] < FREE_POS, clamped, blocks)
+    return out.reshape(q.shape)
+
+
+def large_count(q: jnp.ndarray) -> jnp.ndarray:
+    """Number of values outside [-64, 63] in positions 0..6 (Fig. 3 metric)."""
+    blocks = q.reshape(-1, BLOCK)
+    pos = jnp.arange(BLOCK)
+    large = (blocks < SMALL_LO) | (blocks > SMALL_HI)
+    return jnp.sum(large & (pos[None, :] < FREE_POS))
+
+
+def throttled_fake_quant(w: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quant whose quantized value respects the WOT constraint, STE.
+
+    Used in the QAT forward pass so the loss 'sees' the throttled weights.
+    """
+    s = scale_of(w)
+    q = throttle_q(quantize(w, s))
+    dq = dequantize(q, s)
+    return w + jax.lax.stop_gradient(dq - w)
+
+
+def pad_to_block(n: int) -> int:
+    """Smallest multiple of BLOCK >= n."""
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+# ---- extended constraint (BCH-16 zero-space DEC; paper section 6) ----
+
+EXT_BLOCK = 16  # bytes per 128-bit block
+EXT_LO = -32  # two non-informative bits per small weight
+EXT_HI = 31
+EXT_FREE_POS = EXT_BLOCK - 1
+
+
+def throttle_q_ext(q: jnp.ndarray) -> jnp.ndarray:
+    """Extended WOT throttling: positions 0..14 of every 16-value block
+    clamped to [-32, 31] (two free bits each -> 30 free bits per block,
+    enough for a 16-check-bit double-error-correcting BCH code)."""
+    blocks = q.reshape(-1, EXT_BLOCK)
+    pos = jnp.arange(EXT_BLOCK)
+    clamped = jnp.clip(blocks, EXT_LO, EXT_HI)
+    return jnp.where(pos[None, :] < EXT_FREE_POS, clamped, blocks).reshape(q.shape)
+
+
+def large_count_ext(q: jnp.ndarray) -> jnp.ndarray:
+    """Extended-constraint violations (Fig-3 analogue for BCH-16)."""
+    blocks = q.reshape(-1, EXT_BLOCK)
+    pos = jnp.arange(EXT_BLOCK)
+    large = (blocks < EXT_LO) | (blocks > EXT_HI)
+    return jnp.sum(large & (pos[None, :] < EXT_FREE_POS))
+
+
+def distribution_bands(q: jnp.ndarray):
+    """Fractions of |q| in [0,32), [32,64), [64,128] (Table 1 rows)."""
+    a = jnp.abs(q)
+    n = q.size
+    return (
+        jnp.sum(a < 32) / n,
+        jnp.sum((a >= 32) & (a < 64)) / n,
+        jnp.sum(a >= 64) / n,
+    )

@@ -1,0 +1,142 @@
+"""Float32 pretraining + shared train/eval machinery.
+
+Standard SGD with momentum on softmax cross-entropy. The same step
+factory serves pretraining (wq=None) and WOT/QAT (wq=fake-quant variants)
+so the two phases differ only in the weight transform and the throttling
+hook — exactly the QATT structure of paper section 4.1.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize
+from .models.common import ModelDef, Params
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_loss(
+    model: ModelDef,
+    wq: Optional[Callable],
+    act: Optional[Callable],
+    weight_decay: float,
+):
+    protected = set(model.protected_names())
+
+    def loss_fn(params: Params, x, y):
+        logits, upd = model.apply(params, x, train=True, wq=wq, act=act)
+        loss = cross_entropy(logits, y)
+        if weight_decay > 0.0:
+            # The paper's lambda * sum_l ||W_l^q||_F^2 over protected
+            # (quantized) weights; with STE the gradient passes through.
+            reg = sum(
+                jnp.sum(jnp.square(wq(params[n]) if wq else params[n]))
+                for n in protected
+            )
+            loss = loss + weight_decay * reg
+        return loss, upd
+
+    return loss_fn
+
+
+def make_step(
+    model: ModelDef,
+    lr: float,
+    momentum: float,
+    wq: Optional[Callable] = None,
+    act: Optional[Callable] = None,
+    weight_decay: float = 0.0,
+):
+    """SGD+momentum step. BN running stats (zero-gradient params) are
+    overwritten from the forward pass's `updates` after the step."""
+    loss_fn = make_loss(model, wq, act, weight_decay)
+
+    @jax.jit
+    def step(params: Params, mom: Params, x, y):
+        (loss, upd), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, y)
+        new_mom = jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_mom)
+        new_params.update(upd)
+        return new_params, new_mom, loss
+
+    return step
+
+
+def zeros_like_params(params: Params) -> Params:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def batches(x: np.ndarray, y: np.ndarray, bs: int, steps: int, seed: int = 0):
+    """Infinite shuffled batch stream, `steps` batches long."""
+    rng = np.random.default_rng(seed)
+    n = len(x)
+    idx = rng.permutation(n)
+    at = 0
+    for _ in range(steps):
+        if at + bs > n:
+            idx = rng.permutation(n)
+            at = 0
+        sel = idx[at : at + bs]
+        at += bs
+        yield x[sel], y[sel]
+
+
+def accuracy(
+    model: ModelDef,
+    params: Params,
+    x: np.ndarray,
+    y: np.ndarray,
+    bs: int = 256,
+    wq: Optional[Callable] = None,
+    act: Optional[Callable] = None,
+) -> float:
+    @jax.jit
+    def fwd(xb):
+        logits, _ = model.apply(params, xb, train=False, wq=wq, act=act)
+        return jnp.argmax(logits, axis=1)
+
+    correct = 0
+    for i in range(0, len(x), bs):
+        xb, yb = x[i : i + bs], y[i : i + bs]
+        if len(xb) < bs:  # pad the ragged tail so fwd stays one compilation
+            padn = bs - len(xb)
+            xb = np.concatenate([xb, np.zeros((padn,) + xb.shape[1:], xb.dtype)])
+            pred = np.asarray(fwd(jnp.asarray(xb)))[: len(yb)]
+        else:
+            pred = np.asarray(fwd(jnp.asarray(xb)))
+        correct += int((pred == yb).sum())
+    return correct / len(y)
+
+
+def pretrain(
+    model: ModelDef,
+    data,
+    steps: int,
+    bs: int,
+    lr: float,
+    momentum: float,
+    seed: int = 3,
+) -> Tuple[Params, float]:
+    """Train float32 from scratch; returns (params, eval_accuracy)."""
+    x_tr, y_tr, x_ev, y_ev = data
+    params = model.init(jax.random.PRNGKey(seed))
+    mom = zeros_like_params(params)
+    step = make_step(model, lr, momentum, weight_decay=1e-4)
+    for xb, yb in batches(x_tr, y_tr, bs, steps, seed):
+        params, mom, loss = step(params, mom, jnp.asarray(xb), jnp.asarray(yb))
+    acc = accuracy(model, params, x_ev, y_ev)
+    return params, acc
+
+
+def int8_accuracy(model: ModelDef, params: Params, x_ev, y_ev) -> float:
+    """Accuracy with per-layer symmetric int8 fake-quant weights."""
+    return accuracy(model, params, x_ev, y_ev, wq=quantize.fake_quant)

@@ -1,0 +1,172 @@
+"""WOT: Weight-distribution Oriented Training (paper section 4.1, QATT).
+
+Per batch:
+  1. QAT — forward with per-layer symmetric fake-quant weights (STE),
+     loss = cross-entropy + lambda * ||W_q||_F^2, SGD+momentum update of
+     the float32 masters.
+  2. Throttling — quantize the masters, clamp positions 0..6 of every
+     8-value block to [-64, 63], and write the clamped values back into
+     the float32 masters (only where clamping changed a value, so
+     sub-quantization-step gradient progress on small weights survives).
+
+Quantization scales are *frozen* at their pre-WOT calibration values
+(see quantize.fake_quant_fixed for why dynamic rescaling cascades); the
+frozen scales are exactly what the manifest records for the rust-side
+dequantizer, so training, export and serving all share one int8 grid.
+
+Logged (the paper's Fig. 3 / Fig. 4 series): the number of large values
+in positions 0..6 *before* throttling, and eval accuracy before/after
+throttling, every `log_every` steps.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantize, train
+from .models.common import ModelDef, Params
+
+
+def calibration_scales(params: Params, protected: List[str]) -> Dict[str, float]:
+    """Per-layer frozen scales from the (pretrained) masters."""
+    return {n: float(quantize.scale_of(params[n])) for n in protected}
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _throttle_writeback(w: jnp.ndarray, scale: float):
+    """Returns (new_w, n_large): throttled master weights + Fig-3 count."""
+    q = quantize.quantize(w, scale)
+    qt = quantize.throttle_q(q.reshape(-1)).reshape(q.shape)
+    n_large = jnp.sum(qt != q)
+    new_w = jnp.where(qt != q, quantize.dequantize(qt, scale), w)
+    return new_w, n_large
+
+
+def throttle_params(params: Params, scales: Dict[str, float]):
+    """Throttle every protected tensor; returns (params, total_large)."""
+    out = dict(params)
+    total = 0
+    for name, s in scales.items():
+        neww, n = _throttle_writeback(params[name], s)
+        out[name] = neww
+        total += int(n)
+    return out, total
+
+
+def qat_view(params: Params, scales: Dict[str, float], throttled: bool = False) -> Params:
+    """Masters -> params whose protected tensors are fake-quantized (STE)
+    on the frozen grid; what the QAT forward pass and all evals see."""
+    fq = quantize.throttled_fake_quant_fixed if throttled else quantize.fake_quant_fixed
+    out = dict(params)
+    for n, s in scales.items():
+        out[n] = fq(params[n], s)
+    return out
+
+
+def make_qat_step(
+    model: ModelDef,
+    scales: Dict[str, float],
+    lr: float,
+    momentum: float,
+    weight_decay: float,
+):
+    def loss_fn(params: Params, x, y):
+        qp = qat_view(params, scales)
+        logits, upd = model.apply(qp, x, train=True)
+        loss = train.cross_entropy(logits, y)
+        # lambda * sum ||W_q||_F^2 on the quantized view (paper Eq. 2).
+        reg = sum(jnp.sum(jnp.square(qp[n])) for n in scales)
+        return loss + weight_decay * reg, upd
+
+    @jax.jit
+    def step(params: Params, mom: Params, x, y):
+        (loss, upd), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, y)
+        new_mom = jax.tree.map(lambda m, g: momentum * m + g, mom, grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m, params, new_mom)
+        new_params.update(upd)
+        return new_params, new_mom, loss
+
+    return step
+
+
+def eval_acc(model: ModelDef, params, scales, x, y, throttled: bool) -> float:
+    return train.accuracy(model, qat_view(params, scales, throttled), x, y)
+
+
+def quantized_weights_flat(
+    params: Params, protected: List[str], scales: Dict[str, float]
+) -> np.ndarray:
+    """Concatenated int8 weights (frozen scales) in canonical layout —
+    the exact bytes the rust memory bank stores. Hard-clamped so the WOT
+    block constraint holds unconditionally."""
+    chunks = []
+    for name in protected:
+        q = np.asarray(quantize.quantize(params[name], scales[name]))
+        q = np.asarray(quantize.throttle_q(jnp.asarray(q.reshape(-1)))).reshape(q.shape)
+        chunks.append(q.astype(np.int8).reshape(-1))
+    return np.concatenate(chunks)
+
+
+def wot_finetune(
+    model: ModelDef,
+    params: Params,
+    data,
+    steps: int,
+    bs: int,
+    lr: float,
+    momentum: float,
+    weight_decay: float,
+    log_every: int = 25,
+    seed: int = 11,
+    eval_subset: int = 512,
+):
+    """Run QATT; returns (params, scales, log) where log carries the
+    Fig-3/Fig-4 series and the final accuracies."""
+    x_tr, y_tr, x_ev, y_ev = data
+    protected = model.protected_names()
+    scales = calibration_scales(params, protected)
+    step = make_qat_step(model, scales, lr, momentum, weight_decay)
+    mom = train.zeros_like_params(params)
+    xs, ys = x_ev[:eval_subset], y_ev[:eval_subset]
+
+    log: Dict[str, List[float]] = {
+        "step": [],
+        "n_large": [],
+        "acc_before": [],
+        "acc_after": [],
+    }
+
+    i = 0
+    for xb, yb in train.batches(x_tr, y_tr, bs, steps, seed):
+        params, mom, _ = step(params, mom, jnp.asarray(xb), jnp.asarray(yb))
+        before = params
+        params, n_large = throttle_params(params, scales)
+        if i % log_every == 0 or i == steps - 1:
+            log["step"].append(i)
+            log["n_large"].append(n_large)
+            log["acc_before"].append(eval_acc(model, before, scales, xs, ys, False))
+            log["acc_after"].append(eval_acc(model, params, scales, xs, ys, True))
+        i += 1
+
+    # Final hard throttle (idempotent with frozen scales, but guarantees
+    # the exported constraint at any step count).
+    params, _ = throttle_params(params, scales)
+    # The throttled view is the exact function of the exported int8
+    # buffer, so rust-side accuracy matches this number.
+    final_acc = eval_acc(model, params, scales, x_ev, y_ev, True)
+    log["final_acc"] = final_acc
+    return params, scales, log
+
+
+def check_constraint(qflat: np.ndarray) -> int:
+    """Number of WOT violations (large values at positions 0..6) in a flat
+    int8 buffer — must be 0 after wot_finetune."""
+    assert qflat.size % quantize.BLOCK == 0
+    blocks = qflat.reshape(-1, quantize.BLOCK).astype(np.int32)
+    large = (blocks < quantize.SMALL_LO) | (blocks > quantize.SMALL_HI)
+    return int(large[:, : quantize.FREE_POS].sum())

@@ -1,0 +1,135 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes (including non-block-multiples, which exercise
+the padding paths) and value ranges; every kernel must match its oracle
+to float32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rng_array(shape, seed, scale=1.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(0, scale, size=shape).astype(np.float32))
+
+
+# ------------------------------------------------------------- matmul --
+
+
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rng_array((m, k), seed)
+    y = rng_array((k, n), seed + 1)
+    out = kernels.matmul(x, y, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (64, 64, 64)])
+def test_matmul_block_shapes(bm, bn, bk):
+    x = rng_array((100, 60), 0)
+    y = rng_array((60, 48), 1)
+    out = kernels.matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_multiples_no_padding():
+    x = rng_array((64, 128), 2)
+    y = rng_array((128, 64), 3)
+    out = kernels.matmul(x, y, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_and_utilization():
+    assert kernels.vmem_footprint_bytes(128, 128, 128) == 3 * 128 * 128 * 4
+    assert kernels.mxu_utilization(128, 128, 128, 128, 128, 128) == 1.0
+    assert kernels.mxu_utilization(65, 128, 128, 64, 128, 128) == pytest.approx(
+        65 / 128
+    )
+
+
+# ------------------------------------------------------------- conv2d --
+
+
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([4, 7, 8, 16]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    kk=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(b, hw, cin, cout, kk, stride, seed):
+    x = rng_array((b, hw, hw, cin), seed)
+    w = rng_array((kk, kk, cin, cout), seed + 1)
+    out = kernels.conv2d_pallas(x, w, stride=stride, bm=32, bn=16, bk=16)
+    np.testing.assert_allclose(
+        out, ref.conv2d_ref(x, w, stride), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_conv2d_model_shapes():
+    # the actual first-layer shape of the zoo
+    x = rng_array((2, 32, 32, 3), 0)
+    w = rng_array((3, 3, 3, 16), 1)
+    out = kernels.conv2d_pallas(x, w)
+    assert out.shape == (2, 32, 32, 16)
+    np.testing.assert_allclose(out, ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- fake-quant --
+
+
+@given(
+    n=st.integers(1, 5000),
+    scale_pow=st.integers(-8, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_matches_ref(n, scale_pow, seed):
+    x = rng_array((n,), seed, scale=3.0)
+    s = jnp.float32(2.0**scale_pow)
+    out = kernels.fake_quant_pallas(x, s)
+    np.testing.assert_allclose(out, ref.fake_quant_ref(x, s), rtol=0, atol=1e-6)
+
+
+def test_fake_quant_clips_to_int8_range():
+    x = jnp.asarray([1000.0, -1000.0, 0.0], jnp.float32)
+    s = jnp.float32(1.0)
+    out = kernels.fake_quant_pallas(x, s)
+    np.testing.assert_allclose(out, [127.0, -128.0, 0.0])
+
+
+# ------------------------------------------------------------ throttle --
+
+
+@given(
+    nblocks=st.integers(1, 600),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_throttle_matches_ref(nblocks, seed):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.integers(-128, 128, size=nblocks * 8).astype(np.float32))
+    out = kernels.throttle_pallas(q)
+    np.testing.assert_array_equal(out, ref.throttle_ref(q))
+
+
+def test_throttle_semantics():
+    q = jnp.asarray(
+        [127.0, -128.0, 63.0, -64.0, 64.0, -65.0, 0.0, 127.0], jnp.float32
+    )
+    out = np.asarray(kernels.throttle_pallas(q))
+    assert list(out) == [63.0, -64.0, 63.0, -64.0, 63.0, -64.0, 0.0, 127.0]

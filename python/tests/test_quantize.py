@@ -1,0 +1,75 @@
+"""Quantization (paper Eq. 1) + WOT constraint machinery properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def arr(seed, n, scale=1.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(0, scale, size=n).astype(np.float32))
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 2000))
+def test_quantize_range_and_roundtrip(seed, n):
+    w = arr(seed, n)
+    s = quantize.scale_of(w)
+    q = np.asarray(quantize.quantize(w, s))
+    assert q.min() >= -128 and q.max() <= 127
+    # Eq.1: max|X| maps to ±127
+    assert np.abs(q).max() == 127 or np.allclose(w, 0)
+    # dequantization error bounded by half a step
+    dq = np.asarray(quantize.dequantize(jnp.asarray(q), s))
+    assert np.abs(dq - np.asarray(w)).max() <= float(s) / 2 + 1e-7
+
+
+def test_fake_quant_ste_gradient_passthrough():
+    w = arr(3, 64)
+    g = jax.grad(lambda w: jnp.sum(quantize.fake_quant(w) ** 2))(w)
+    # STE: gradient equals that of the dequantized values wrt w = 2*dq
+    np.testing.assert_allclose(g, 2 * quantize.fake_quant(w), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1), nblocks=st.integers(1, 200))
+def test_throttle_constraint_and_idempotence(seed, nblocks):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.integers(-128, 128, size=nblocks * 8).astype(np.float32))
+    t = quantize.throttle_q(q)
+    blocks = np.asarray(t).reshape(-1, 8)
+    assert blocks[:, :7].min() >= -64 and blocks[:, :7].max() <= 63
+    # position 7 untouched
+    np.testing.assert_array_equal(blocks[:, 7], np.asarray(q).reshape(-1, 8)[:, 7])
+    # idempotent
+    np.testing.assert_array_equal(np.asarray(quantize.throttle_q(t)), np.asarray(t))
+    # large_count after throttle is 0
+    assert int(quantize.large_count(t)) == 0
+
+
+def test_large_count_counts_only_first_seven():
+    q = np.zeros(16, np.float32)
+    q[7] = 127  # free position
+    q[8] = 127  # position 0 of block 1
+    assert int(quantize.large_count(jnp.asarray(q))) == 1
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fixed_scale_throttled_fake_quant_is_stable(seed):
+    """The frozen-scale projection must be a fixed point (the dynamic
+    rescaling cascade this guards against collapsed WOT; see wot.py)."""
+    w = arr(seed, 256, scale=2.0)
+    s = float(quantize.scale_of(w))
+    w1 = quantize.throttled_fake_quant_fixed(w, s)
+    w2 = quantize.throttled_fake_quant_fixed(w1, s)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-6)
+
+
+def test_distribution_bands_sum_to_one():
+    q = jnp.asarray(np.arange(-128, 128, dtype=np.float32))
+    a, b, c = quantize.distribution_bands(q)
+    assert float(a + b + c) == 1.0

@@ -1,0 +1,76 @@
+"""WOT (QATT) and ADMM training-scheme behaviour on tiny runs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import admm, data, models, quantize, train, wot
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    ds = data.generate(n_train=256, n_eval=128, seed=5)
+    m = models.get("inception_s")  # smallest model, fastest
+    params, _ = train.pretrain(m, ds, steps=40, bs=32, lr=0.05, momentum=0.9)
+    return m, params, ds
+
+
+def test_throttle_writeback_is_fixed_point(tiny):
+    m, params, ds = tiny
+    scales = wot.calibration_scales(params, m.protected_names())
+    p1, n1 = wot.throttle_params(params, scales)
+    p2, n2 = wot.throttle_params(p1, scales)
+    assert n2 == 0, "second throttle with frozen scales must be a no-op"
+
+
+def test_wot_satisfies_constraint_and_logs(tiny):
+    m, params, ds = tiny
+    p, scales, log = wot.wot_finetune(
+        m, params, ds, steps=8, bs=32, lr=1e-4, momentum=0.9,
+        weight_decay=1e-4, log_every=2, eval_subset=64,
+    )
+    q = wot.quantized_weights_flat(p, m.protected_names(), scales)
+    assert wot.check_constraint(q) == 0
+    assert len(log["step"]) == len(log["n_large"]) == len(log["acc_before"])
+    assert log["n_large"][-1] <= log["n_large"][0]
+    assert 0.0 <= log["final_acc"] <= 1.0
+    # exported buffer is whole blocks of int8
+    assert q.dtype == np.int8 and q.size % 8 == 0
+
+
+def test_wot_lr0_preserves_throttled_accuracy(tiny):
+    """With lr=0 the only change is the first throttle; accuracy must be
+    flat afterwards (regression test for the rescaling-cascade bug)."""
+    m, params, ds = tiny
+    p, scales, log = wot.wot_finetune(
+        m, params, ds, steps=4, bs=32, lr=0.0, momentum=0.9,
+        weight_decay=0.0, log_every=1, eval_subset=64,
+    )
+    after = log["acc_after"]
+    assert max(after) - min(after) < 1e-9
+    assert log["n_large"][1:] == [0] * (len(log["n_large"]) - 1)
+
+
+def test_qat_view_respects_scales(tiny):
+    m, params, ds = tiny
+    protected = m.protected_names()
+    scales = wot.calibration_scales(params, protected)
+    qp = wot.qat_view(params, scales)
+    for n in protected:
+        q = np.asarray(qp[n]) / scales[n]
+        np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+        assert np.abs(q).max() <= 128.01
+
+
+def test_admm_runs_and_final_constraint(tiny):
+    m, params, ds = tiny
+    p, log = admm.admm_wot(
+        m, params, ds, outer_iters=2, inner_steps=3, bs=32, eval_subset=64
+    )
+    assert len(log["n_large"]) == 2
+    assert 0.0 <= log["final_acc"] <= 1.0
+    # after the final hard clamp the constraint holds
+    scales = wot.calibration_scales(p, m.protected_names())
+    q = wot.quantized_weights_flat(p, m.protected_names(), scales)
+    assert wot.check_constraint(q) == 0

@@ -1,0 +1,23 @@
+//! Ablation benches: QATT vs ADMM, code strength (SEC-DED vs BCH-16 at
+//! zero space), burst-fault sensitivity, scrub-interval study.
+
+use zsecc::harness::ablation;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = zsecc::artifacts_dir();
+    match ablation::render_admm_vs_qatt(&artifacts) {
+        Ok(s) => println!("{s}"),
+        Err(e) => println!("(QATT-vs-ADMM skipped: {e})"),
+    }
+
+    let rates = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2];
+    let rows = ablation::code_strength(&rates, 64 * 512, 5)?;
+    println!("{}", ablation::render_code_strength(&rows));
+
+    let brows = ablation::burst(&[1, 2, 3, 4], 1e-3, 64 * 512, 5)?;
+    println!("{}", ablation::render_burst(&brows, 1e-3));
+
+    let srows = ablation::scrub_study(&[1, 2, 4, 8, 16, 32], 2e-4, 64 * 256)?;
+    println!("{}", ablation::render_scrub(&srows, 2e-4));
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Hot-path microbenchmarks: ECC block encode/decode/scrub throughput
+//! per strategy, syndrome computation, fault injection, dequantization.
+//!
+//! This is the §Perf ledger for Layer 3: the paper's latency claim is
+//! that in-place decoding adds only wiring on top of standard SEC-DED —
+//! in software that translates to "in-place decode GB/s within ~1.1x of
+//! (72,64) SEC-DED decode GB/s", checked here.
+
+use zsecc::ecc::strategy_by_name;
+use zsecc::memory::{FaultInjector, FaultModel};
+use zsecc::quant::dequantize_into;
+use zsecc::util::rng::Rng;
+use zsecc::util::timer::bench;
+
+fn wot_weights(n: usize, seed: u64) -> Vec<i8> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            if i % 8 == 7 {
+                (rng.below(256) as i64 - 128) as i8
+            } else {
+                (rng.below(128) as i64 - 64) as i8
+            }
+        })
+        .collect()
+}
+
+fn ext_weights(n: usize, seed: u64) -> Vec<i8> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            if i % 16 == 15 {
+                (rng.below(256) as i64 - 128) as i8
+            } else {
+                (rng.below(64) as i64 - 32) as i8
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    const N: usize = 1 << 20; // 1 MiB of weights — a VGG16_s-scale buffer
+    println!("== ecc_hotpath: {} weight bytes per op ==", N);
+    let w8 = wot_weights(N, 1);
+    let w16 = ext_weights(N, 2);
+    let mut out = vec![0i8; N];
+
+    for name in ["faulty", "zero", "ecc", "in-place", "bch16"] {
+        let s = strategy_by_name(name).unwrap();
+        let w = if name == "bch16" { &w16 } else { &w8 };
+        // encode
+        let r = bench(&format!("{name}: encode"), || {
+            let enc = s.encode(w).unwrap();
+            std::hint::black_box(&enc);
+        });
+        println!("    -> {}", r.throughput_str(N));
+        // decode clean
+        let enc = s.encode(w).unwrap();
+        let r = bench(&format!("{name}: decode (clean)"), || {
+            s.decode(std::hint::black_box(&enc), &mut out);
+        });
+        println!("    -> {}", r.throughput_str(N));
+        // decode with sparse faults (1e-4: the realistic scrub-path load)
+        let mut enc_f = enc.clone();
+        FaultInjector::new(FaultModel::Uniform, 3).inject(&mut enc_f, 1e-4);
+        let r = bench(&format!("{name}: decode (rate 1e-4)"), || {
+            s.decode(std::hint::black_box(&enc_f), &mut out);
+        });
+        println!("    -> {}", r.throughput_str(N));
+        // scrub
+        let r = bench(&format!("{name}: scrub (rate 1e-4)"), || {
+            let mut e = enc_f.clone();
+            s.scrub(&mut e);
+            std::hint::black_box(&e);
+        });
+        println!("    -> {}", r.throughput_str(N));
+    }
+
+    // latency-claim check: in-place vs conventional SEC-DED decode
+    {
+        let ecc = strategy_by_name("ecc").unwrap();
+        let inp = strategy_by_name("in-place").unwrap();
+        let enc_e = ecc.encode(&w8).unwrap();
+        let enc_i = inp.encode(&w8).unwrap();
+        let re = bench("claim: secded(72,64) decode", || {
+            ecc.decode(std::hint::black_box(&enc_e), &mut out);
+        });
+        let ri = bench("claim: in-place(64,57) decode", || {
+            inp.decode(std::hint::black_box(&enc_i), &mut out);
+        });
+        let ratio = ri.ns_per_iter / re.ns_per_iter;
+        println!(
+            "    -> in-place / secded decode time ratio = {ratio:.3} (paper: wiring only; target <= ~1.1)"
+        );
+    }
+
+    // fault injection + dequantization (the rest of the scrub epoch)
+    {
+        let s = strategy_by_name("in-place").unwrap();
+        let enc = s.encode(&w8).unwrap();
+        let r = bench("fault injection (rate 1e-3)", || {
+            let mut e = enc.clone();
+            let mut inj = FaultInjector::new(FaultModel::Uniform, 7);
+            inj.inject(&mut e, 1e-3);
+            std::hint::black_box(&e);
+        });
+        println!("    -> {}", r.throughput_str(N));
+        let layers = vec![zsecc::model::Layer {
+            name: "w".into(),
+            shape: vec![N],
+            offset: 0,
+            size: N,
+            scale: 0.01,
+            scale_prewot: 0.01,
+        }];
+        let mut f = vec![0f32; N];
+        let r = bench("dequantize (per-layer scale)", || {
+            dequantize_into(std::hint::black_box(&w8), &layers, &mut f);
+        });
+        println!("    -> {}", r.throughput_str(N));
+    }
+}

@@ -1,0 +1,23 @@
+//! Regenerates the paper's Figure 1 (large-weight byte-position
+//! histogram, pre-WOT ~uniform / post-WOT empty in positions 0..6).
+
+use zsecc::harness::fig1;
+use zsecc::model::manifest::list_models;
+
+fn main() {
+    let artifacts = zsecc::artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("fig1: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let models = list_models(&artifacts).unwrap();
+    let figs = fig1::run(&artifacts, &models).unwrap();
+    println!("{}", fig1::render(&figs));
+    for f in &figs {
+        println!(
+            "  {}: pre-WOT positions roughly uniform (tol 50%): {} (paper Fig 1: ~uniform)",
+            f.model,
+            fig1::is_roughly_uniform(&f.pre_wot, 0.5)
+        );
+    }
+}

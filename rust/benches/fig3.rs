@@ -1,0 +1,21 @@
+//! Regenerates the paper's Figure 3 (large-value count in positions
+//! 0..6 before throttling, per WOT training step — decays to ~0).
+
+use zsecc::harness::fig34;
+use zsecc::model::manifest::list_models;
+
+fn main() {
+    let artifacts = zsecc::artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("fig3: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let models = list_models(&artifacts).unwrap();
+    let logs = fig34::run(&artifacts, &models).unwrap();
+    println!("{}", fig34::render_fig3(&logs));
+    for (name, ok) in fig34::shape_checks(&logs) {
+        if name.contains("Fig3") {
+            println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Regenerates the paper's Figure 4 (accuracy before/after throttling
+//! during WOT — the gap closes and the int8 baseline is recovered).
+
+use zsecc::harness::fig34;
+use zsecc::model::manifest::list_models;
+
+fn main() {
+    let artifacts = zsecc::artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("fig4: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let models = list_models(&artifacts).unwrap();
+    let logs = fig34::run(&artifacts, &models).unwrap();
+    println!("{}", fig34::render_fig4(&logs));
+    for (name, ok) in fig34::shape_checks(&logs) {
+        if name.contains("Fig4") {
+            println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+        }
+    }
+}

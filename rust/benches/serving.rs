@@ -1,0 +1,144 @@
+//! Serving benchmark: coordinator throughput/latency under open-loop
+//! Poisson load, swept over the batching policy — first with a mock
+//! executor (pure coordinator overhead), then over the real PJRT model
+//! when artifacts exist.
+
+use std::time::{Duration, Instant};
+
+use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+use zsecc::coordinator::server::BatchExec;
+use zsecc::model::EvalSet;
+use zsecc::util::rng::Rng;
+use zsecc::util::stats::Series;
+
+struct Mock {
+    batch: usize,
+    dim: usize,
+    /// Simulated per-batch compute (models a fixed-cost accelerator call).
+    cost: Duration,
+}
+
+impl BatchExec for Mock {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn input_dim(&self) -> usize {
+        self.dim
+    }
+    fn exec(&mut self, _images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+        std::thread::sleep(self.cost);
+        Ok(vec![0; count])
+    }
+    fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+fn drive(srv: &Server, dim: usize, rps: f64, secs: f64, seed: u64) -> (f64, Series) {
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut lat = Series::default();
+    let mut answered = 0u64;
+    let img = vec![0f32; dim];
+    while t0.elapsed().as_secs_f64() < secs {
+        if let Ok(rx) = srv.submit(img.clone()) {
+            pending.push(rx);
+        }
+        pending.retain(|rx| match rx.try_recv() {
+            Ok(resp) => {
+                lat.push(resp.latency.as_secs_f64() * 1e3);
+                answered += 1;
+                false
+            }
+            Err(_) => true,
+        });
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rps)));
+    }
+    for rx in pending {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(60)) {
+            lat.push(resp.latency.as_secs_f64() * 1e3);
+            answered += 1;
+        }
+    }
+    (answered as f64 / t0.elapsed().as_secs_f64(), lat)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== serving bench: coordinator overhead (mock executor, 2ms/batch) ==");
+    println!(
+        "{:<32} {:>10} {:>10} {:>10} {:>10}",
+        "policy", "req/s", "mean ms", "p50 ms", "p99 ms"
+    );
+    for (max_batch, wait_ms) in [(1usize, 0u64), (8, 2), (32, 5), (32, 20), (128, 5)] {
+        let cfg = ServerConfig {
+            strategy: "faulty".into(),
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            scrub_interval: None,
+            fault_rate_per_interval: 0.0,
+            fault_seed: 0,
+        };
+        let srv = Server::start_with(
+            move || {
+                Ok(Box::new(Mock {
+                    batch: max_batch,
+                    dim: 8,
+                    cost: Duration::from_millis(2),
+                }) as Box<dyn BatchExec>)
+            },
+            8,
+            &cfg,
+            None,
+        )?;
+        let (rps, lat) = drive(&srv, 8, 2000.0, 2.0, 42);
+        println!(
+            "{:<32} {:>10.0} {:>10.2} {:>10.2} {:>10.2}",
+            format!("batch<={max_batch} wait={wait_ms}ms"),
+            rps,
+            lat.mean(),
+            lat.p(50.0),
+            lat.p(99.0)
+        );
+        srv.shutdown();
+    }
+
+    let artifacts = zsecc::artifacts_dir();
+    if artifacts.join("index.json").exists() {
+        println!("\n== serving bench: real PJRT model (squeezenet_s, in-place, live faults) ==");
+        println!(
+            "{:<32} {:>10} {:>10} {:>10} {:>10}",
+            "policy", "req/s", "mean ms", "p50 ms", "p99 ms"
+        );
+        let ds = EvalSet::load(&artifacts.join("dataset.eval.bin"))?;
+        for (max_batch, wait_ms) in [(1usize, 0u64), (32, 5), (256, 10)] {
+            let cfg = ServerConfig {
+                strategy: "in-place".into(),
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(wait_ms),
+                },
+                scrub_interval: Some(Duration::from_millis(250)),
+                fault_rate_per_interval: 1e-6,
+                fault_seed: 1,
+            };
+            let srv = Server::start_pjrt(&artifacts, "squeezenet_s", &cfg)?;
+            let (rps, lat) = drive(&srv, ds.dim, 500.0, 4.0, 7);
+            println!(
+                "{:<32} {:>10.0} {:>10.2} {:>10.2} {:>10.2}",
+                format!("batch<={max_batch} wait={wait_ms}ms"),
+                rps,
+                lat.mean(),
+                lat.p(50.0),
+                lat.p(99.0)
+            );
+            println!("  metrics: {}", srv.metrics.report());
+            srv.shutdown();
+        }
+    } else {
+        println!("\n(real-model serving bench skipped: no artifacts)");
+    }
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Regenerates the paper's Table 1 (accuracy + weight distribution of
+//! the 8-bit quantized zoo). `ZSECC_NO_REMEASURE=1` skips the PJRT
+//! re-measurement for a fast structural run.
+
+use zsecc::harness::table1;
+use zsecc::model::manifest::list_models;
+use zsecc::util::timer::time_once;
+
+fn main() {
+    let artifacts = zsecc::artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("table1: no artifacts at {} (run `make artifacts`)", artifacts.display());
+        return;
+    }
+    let models = list_models(&artifacts).unwrap();
+    let remeasure = std::env::var("ZSECC_NO_REMEASURE").is_err();
+    let (rows, secs) = time_once(|| table1::run(&artifacts, &models, remeasure).unwrap());
+    println!("{}", table1::render(&rows));
+    println!("(generated in {secs:.1}s; paper analogue: Table 1)");
+    // the paper's headline observation: small weights dominate
+    for r in &rows {
+        println!(
+            "  {}: {:.2}% of weights in [-64, 63] (paper: >99% for ImageNet CNNs)",
+            r.model,
+            (r.band0 + r.band1) * 100.0
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Regenerates the paper's Table 2 (the headline fault-injection grid).
+//!
+//! Full paper grid: 3 models x 4 strategies x 4 rates x 10 trials.
+//! Env knobs: ZSECC_TRIALS (default 10), ZSECC_MODELS (comma list),
+//! ZSECC_RATES (comma list). `cargo bench` runs the full grid.
+
+use zsecc::harness::table2;
+use zsecc::util::timer::time_once;
+
+fn main() {
+    let artifacts = zsecc::artifacts_dir();
+    if !artifacts.join("index.json").exists() {
+        println!("table2: no artifacts at {} (run `make artifacts`)", artifacts.display());
+        return;
+    }
+    let mut cfg = table2::Config::default();
+    if let Ok(t) = std::env::var("ZSECC_TRIALS") {
+        cfg.trials = t.parse().expect("ZSECC_TRIALS");
+    }
+    if let Ok(m) = std::env::var("ZSECC_MODELS") {
+        cfg.models = m.split(',').map(String::from).collect();
+    }
+    if let Ok(r) = std::env::var("ZSECC_RATES") {
+        cfg.rates = r.split(',').map(|x| x.parse().unwrap()).collect();
+    }
+    let (t2, secs) = time_once(|| table2::run(&artifacts, &cfg, true).unwrap());
+    println!("{}", t2.render(&cfg));
+    println!("shape checks (paper's qualitative claims):");
+    let mut all_ok = true;
+    for (name, ok) in t2.shape_checks(&cfg) {
+        all_ok &= ok;
+        println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+    }
+    println!(
+        "(full grid in {secs:.1}s; {} cells x {} trials; all shape checks {})",
+        t2.cells.len(),
+        cfg.trials,
+        if all_ok { "PASS" } else { "FAIL" }
+    );
+    // machine-readable dump for EXPERIMENTS.md bookkeeping
+    std::fs::write(
+        artifacts.join("table2.report.json"),
+        t2.to_json().to_string(),
+    )
+    .ok();
+}

@@ -1,0 +1,217 @@
+//! Dynamic batcher: size-or-deadline policy.
+//!
+//! Requests accumulate in a queue; a batch is released when either
+//! `max_batch` requests are waiting or the oldest request has waited
+//! `max_wait`. This is the standard serving trade-off (throughput from
+//! large batches vs. tail latency) and one of our serving-bench sweeps.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub submitted: Instant,
+    pub resp: Sender<Response>,
+}
+
+/// Completed inference.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    /// Queue + execute time.
+    pub latency: Duration,
+}
+
+/// Release policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// Thread-safe request queue with the release policy.
+pub struct Batcher {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    pub policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            policy,
+        }
+    }
+
+    /// Enqueue a request (fails after close()).
+    pub fn push(&self, req: Request) -> Result<(), Request> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(req);
+        }
+        g.queue.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Signal shutdown; wakes all waiting consumers.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until a batch is released by the policy; None on shutdown
+    /// with an empty queue. Returns at most `max_batch` requests.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.queue.len() >= self.policy.max_batch {
+                break;
+            }
+            if !g.queue.is_empty() {
+                let oldest = g.queue.front().unwrap().submitted;
+                let age = oldest.elapsed();
+                if age >= self.policy.max_wait {
+                    break;
+                }
+                let remain = self.policy.max_wait - age;
+                let (ng, _t) = self.cv.wait_timeout(g, remain).unwrap();
+                g = ng;
+                if g.closed && g.queue.is_empty() {
+                    return None;
+                }
+                continue;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        let take = g.queue.len().min(self.policy.max_batch);
+        Some(g.queue.drain(..take).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> (Request, std::sync::mpsc::Receiver<Response>) {
+        let (tx, rx) = channel();
+        (
+            Request {
+                id,
+                image: vec![0.0; 4],
+                submitted: Instant::now(),
+                resp: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn releases_on_size() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        let mut rxs = Vec::new();
+        for i in 0..3 {
+            let (r, rx) = req(i);
+            assert!(b.push(r).is_ok());
+            rxs.push(rx);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(20),
+        }));
+        let (r, _rx) = req(1);
+        assert!(b.push(r).is_ok());
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        }));
+        let (r, _rx) = req(1);
+        assert!(b.push(r).is_ok());
+        b.close();
+        assert!(b.next_batch().is_some(), "pending request still served");
+        assert!(b.next_batch().is_none(), "then shutdown");
+        let (r, _rx) = req(2);
+        assert!(b.push(r).is_err(), "push after close fails");
+    }
+
+    #[test]
+    fn concurrent_producers() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_millis(50),
+        }));
+        let mut handles = Vec::new();
+        for t in 0..5 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..4 {
+                    let (r, _rx) = req(t * 10 + i);
+                    assert!(b.push(r).is_ok());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut total = 0;
+        while total < 20 {
+            total += b.next_batch().unwrap().len();
+        }
+        assert_eq!(total, 20);
+    }
+}

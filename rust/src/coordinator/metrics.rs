@@ -1,0 +1,94 @@
+//! Serving metrics: request counters, latency series, memory-protection
+//! event counters (corrected / detected / scrub passes).
+
+use crate::util::stats::Series;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_sizes_sum: AtomicU64,
+    pub corrected: AtomicU64,
+    pub detected: AtomicU64,
+    pub scrubs: AtomicU64,
+    pub faults_injected: AtomicU64,
+    pub weight_refreshes: AtomicU64,
+    latency_us: Mutex<Series>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes_sum
+            .fetch_add(size as u64, Ordering::Relaxed);
+        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency_us(&self, us: f64) {
+        self.latency_us.lock().unwrap().push(us);
+    }
+
+    pub fn latency_summary(&self) -> (f64, f64, f64, usize) {
+        let s = self.latency_us.lock().unwrap();
+        (s.mean(), s.p(50.0), s.p(99.0), s.len())
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_sizes_sum.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn report(&self) -> String {
+        let (mean, p50, p99, n) = self.latency_summary();
+        format!(
+            "requests={} batches={} mean_batch={:.1} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}us (n={}) corrected={} detected={} scrubs={} faults={} refreshes={}",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch(),
+            mean,
+            p50,
+            p99,
+            n,
+            self.corrected.load(Ordering::Relaxed),
+            self.detected.load(Ordering::Relaxed),
+            self.scrubs.load(Ordering::Relaxed),
+            self.faults_injected.load(Ordering::Relaxed),
+            self.weight_refreshes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 12);
+        assert!((m.mean_batch() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_latency_us(i as f64);
+        }
+        let (_mean, p50, p99, n) = m.latency_summary();
+        assert_eq!(n, 100);
+        assert!((p50 - 50.5).abs() < 1.0);
+        assert!(p99 >= 99.0);
+    }
+}

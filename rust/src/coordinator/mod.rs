@@ -1,0 +1,26 @@
+//! Thread-based serving coordinator (tokio is unavailable offline; the
+//! event loop is std::thread + mpsc channels + condvar-backed queues).
+//!
+//! Topology per served model:
+//!
+//! ```text
+//!   clients --submit()--> [ Batcher queue ] --batches--> inference thread
+//!                                                        (owns PJRT: !Send)
+//!   scrub thread --(decoded f32 weights)--> inference thread (rebind)
+//!        |
+//!        `-- owns the MemoryBank: fault injection + periodic scrub
+//! ```
+//!
+//! PJRT handles wrap raw pointers and are not Send, so every PJRT object
+//! lives on the inference thread; other threads communicate through
+//! channels only.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatchPolicy, Request, Response};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::{Server, ServerConfig};

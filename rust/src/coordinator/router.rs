@@ -1,0 +1,167 @@
+//! Multi-model request router: name -> `Server` dispatch plus shared
+//! admission control (a global in-flight cap provides backpressure).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+
+use super::batcher::Response;
+use super::server::Server;
+
+pub struct Router {
+    servers: BTreeMap<String, Server>,
+    inflight: AtomicU64,
+    pub max_inflight: u64,
+    pub rejected: AtomicU64,
+}
+
+impl Router {
+    pub fn new(max_inflight: u64) -> Self {
+        Router {
+            servers: BTreeMap::new(),
+            inflight: AtomicU64::new(0),
+            max_inflight,
+            rejected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&mut self, name: &str, server: Server) {
+        self.servers.insert(name.to_string(), server);
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.servers.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn server(&self, name: &str) -> Option<&Server> {
+        self.servers.get(name)
+    }
+
+    /// Admission-controlled submit. `Ticket` decrements the in-flight
+    /// counter when the response is received (or dropped).
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> anyhow::Result<Ticket<'_>> {
+        let cur = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if cur >= self.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("router overloaded ({} in flight)", cur);
+        }
+        let srv = self
+            .servers
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))
+            .inspect_err(|_| {
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+            })?;
+        match srv.submit(image) {
+            Ok(rx) => Ok(Ticket { rx, router: self }),
+            Err(e) => {
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn shutdown(self) {
+        for (_, s) in self.servers {
+            s.shutdown();
+        }
+    }
+}
+
+/// RAII handle over a pending response.
+pub struct Ticket<'a> {
+    rx: Receiver<Response>,
+    router: &'a Router,
+}
+
+impl Ticket<'_> {
+    pub fn wait(self, timeout: std::time::Duration) -> anyhow::Result<Response> {
+        let r = self.rx.recv_timeout(timeout);
+        // inflight decremented by Drop
+        r.map_err(|e| anyhow::anyhow!("response: {e}"))
+    }
+}
+
+impl Drop for Ticket<'_> {
+    fn drop(&mut self) {
+        self.router.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::server::{BatchExec, ServerConfig};
+    use std::time::Duration;
+
+    struct Echo {
+        dim: usize,
+    }
+    impl BatchExec for Echo {
+        fn batch(&self) -> usize {
+            2
+        }
+        fn input_dim(&self) -> usize {
+            self.dim
+        }
+        fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+            Ok((0..count).map(|i| images[i * self.dim] as usize).collect())
+        }
+        fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn echo_server() -> Server {
+        let cfg = ServerConfig {
+            strategy: "faulty".into(),
+            policy: BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+            },
+            scrub_interval: None,
+            fault_rate_per_interval: 0.0,
+            fault_seed: 0,
+        };
+        Server::start_with(
+            || Ok(Box::new(Echo { dim: 1 }) as Box<dyn BatchExec>),
+            1,
+            &cfg,
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_by_name() {
+        let mut router = Router::new(64);
+        router.add("a", echo_server());
+        router.add("b", echo_server());
+        let t = router.submit("a", vec![3.0]).unwrap();
+        assert_eq!(t.wait(Duration::from_secs(5)).unwrap().pred, 3);
+        assert!(router.submit("zzz", vec![0.0]).is_err());
+        assert_eq!(router.in_flight(), 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut router = Router::new(1);
+        router.add("a", echo_server());
+        let _t1 = router.submit("a", vec![1.0]).unwrap();
+        assert!(
+            router.submit("a", vec![2.0]).is_err(),
+            "second request must be rejected at cap 1"
+        );
+        assert_eq!(router.rejected.load(Ordering::Relaxed), 1);
+        drop(_t1);
+        assert_eq!(router.in_flight(), 0);
+        router.shutdown();
+    }
+}

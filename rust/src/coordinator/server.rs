@@ -1,0 +1,435 @@
+//! Per-model serving stack: batcher + inference thread + scrub thread.
+//!
+//! The inference thread owns every PJRT object (they are not Send); it
+//! pulls batches from the `Batcher`, executes, and answers requests.
+//! The scrub thread owns the protected `MemoryBank`: it periodically
+//! injects environmental faults (when configured), scrubs the stored
+//! image, decodes + dequantizes, and ships a fresh f32 weight buffer to
+//! the inference thread over a channel — weights never cross the request
+//! path, exactly the paper's deployment model (weights live encoded in
+//! memory; the ECC decode sits between memory and compute).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, Batcher, Request, Response};
+use super::metrics::Metrics;
+use crate::ecc::strategy_by_name;
+use crate::memory::{FaultModel, MemoryBank};
+use crate::model::{load_weights, Manifest};
+use crate::quant::dequantize_into;
+use crate::runtime::{argmax_rows, Runtime};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Protection strategy name ("faulty" | "zero" | "ecc" | "in-place").
+    pub strategy: String,
+    pub policy: BatchPolicy,
+    /// Scrub period; `None` disables the scrub loop.
+    pub scrub_interval: Option<Duration>,
+    /// Fraction of stored bits flipped per scrub interval (environmental
+    /// fault simulation); 0 disables injection.
+    pub fault_rate_per_interval: f64,
+    pub fault_seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            strategy: "in-place".into(),
+            policy: BatchPolicy::default(),
+            scrub_interval: Some(Duration::from_millis(100)),
+            fault_rate_per_interval: 0.0,
+            fault_seed: 1,
+        }
+    }
+}
+
+/// Executes padded batches; implemented by the PJRT path and by mocks in
+/// tests (so coordinator logic is testable without artifacts).
+pub trait BatchExec {
+    /// Max batch size of the underlying executable.
+    fn batch(&self) -> usize;
+    fn input_dim(&self) -> usize;
+    /// Execute `count <= batch()` images (flat, padded buffer sized for
+    /// a full batch); returns `count` predictions.
+    fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>>;
+    /// Swap in freshly decoded weights.
+    fn refresh(&mut self, weights: &[f32]) -> anyhow::Result<()>;
+}
+
+/// A running server.
+pub struct Server {
+    batcher: Arc<Batcher>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    pub input_dim: usize,
+}
+
+impl Server {
+    /// Start with a custom executor factory (runs on the inference
+    /// thread — this is how the non-Send PJRT objects stay confined).
+    pub fn start_with<F>(
+        make_exec: F,
+        input_dim: usize,
+        cfg: &ServerConfig,
+        mut bank: Option<(MemoryBank, Vec<crate::model::Layer>)>,
+    ) -> anyhow::Result<Server>
+    where
+        F: FnOnce() -> anyhow::Result<Box<dyn BatchExec>> + Send + 'static,
+    {
+        let batcher = Arc::new(Batcher::new(cfg.policy));
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (weights_tx, weights_rx): (Sender<Vec<f32>>, Receiver<Vec<f32>>) = channel();
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
+
+        // ---- inference thread ----
+        let b = batcher.clone();
+        let m = metrics.clone();
+        let inf = std::thread::Builder::new()
+            .name("zsecc-infer".into())
+            .spawn(move || {
+                let mut exec = match make_exec() {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let bsz = exec.batch();
+                let dim = exec.input_dim();
+                let mut buf = vec![0f32; bsz * dim];
+                while let Some(batch) = b.next_batch() {
+                    // Non-blocking weight refresh before each batch.
+                    while let Ok(w) = weights_rx.try_recv() {
+                        if exec.refresh(&w).is_ok() {
+                            m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    let count = batch.len().min(bsz);
+                    for (i, r) in batch.iter().take(count).enumerate() {
+                        buf[i * dim..(i + 1) * dim].copy_from_slice(&r.image);
+                    }
+                    let preds = match exec.exec(&buf, count) {
+                        Ok(p) => p,
+                        Err(_) => vec![usize::MAX; count],
+                    };
+                    let now = Instant::now();
+                    m.record_batch(count);
+                    for (r, &p) in batch.iter().zip(&preds) {
+                        let lat = now.duration_since(r.submitted);
+                        m.record_latency_us(lat.as_secs_f64() * 1e6);
+                        let _ = r.resp.send(Response {
+                            id: r.id,
+                            pred: p,
+                            latency: lat,
+                        });
+                    }
+                    // Anything beyond bsz goes back through the queue.
+                    for r in batch.into_iter().skip(count) {
+                        let _ = b.push(r);
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("inference thread died during startup"))??;
+
+        let mut threads = vec![inf];
+
+        // ---- scrub thread (owns the MemoryBank) ----
+        if let (Some(interval), Some((mut mb, layers))) =
+            (cfg.scrub_interval, bank.take())
+        {
+            let m = metrics.clone();
+            let stop2 = stop.clone();
+            let rate = cfg.fault_rate_per_interval;
+            let seed0 = cfg.fault_seed;
+            let t = std::thread::Builder::new()
+                .name("zsecc-scrub".into())
+                .spawn(move || {
+                    let mut qbuf = vec![0i8; mb.n_weights()];
+                    let mut epoch = 0u64;
+                    while !stop2.load(Ordering::Relaxed) {
+                        std::thread::sleep(interval);
+                        if rate > 0.0 {
+                            let n = mb.inject(FaultModel::Uniform, rate, seed0 ^ epoch);
+                            m.faults_injected.fetch_add(n, Ordering::Relaxed);
+                        }
+                        let stats = mb.scrub();
+                        m.corrected.fetch_add(stats.corrected, Ordering::Relaxed);
+                        m.detected.fetch_add(stats.detected, Ordering::Relaxed);
+                        m.scrubs.fetch_add(1, Ordering::Relaxed);
+                        mb.read(&mut qbuf);
+                        let mut w = vec![0f32; qbuf.len()];
+                        dequantize_into(&qbuf, &layers, &mut w);
+                        if weights_tx.send(w).is_err() {
+                            break; // inference thread gone
+                        }
+                        epoch += 1;
+                    }
+                })?;
+            threads.push(t);
+        }
+
+        Ok(Server {
+            batcher,
+            metrics,
+            next_id: AtomicU64::new(0),
+            stop,
+            threads,
+            input_dim,
+        })
+    }
+
+    /// Start the real PJRT-backed server for a model in `artifacts_dir`.
+    pub fn start_pjrt(
+        artifacts_dir: &std::path::Path,
+        model: &str,
+        cfg: &ServerConfig,
+    ) -> anyhow::Result<Server> {
+        let man = Manifest::load_model(artifacts_dir, model)?;
+        let weights = load_weights(&man.weights_path(), man.num_weights)?;
+        let bank = MemoryBank::new(strategy_by_name(&cfg.strategy)?, &weights)?;
+        let layers = man.layers.clone();
+
+        // Initial decoded weights for the inference thread.
+        let batch = cfg.policy.max_batch;
+        anyhow::ensure!(
+            man.batches.contains(&batch),
+            "no exported executable for batch {batch} (have {:?})",
+            man.batches
+        );
+        let man2 = man.clone();
+        let w0 = {
+            let mut mb = MemoryBank::new(strategy_by_name(&cfg.strategy)?, &weights)?;
+            let mut q = vec![0i8; weights.len()];
+            mb.read(&mut q);
+            let mut w = vec![0f32; q.len()];
+            dequantize_into(&q, &man.layers, &mut w);
+            w
+        };
+        let input_dim = man.input_dim;
+        Server::start_with(
+            move || {
+                let rt = Runtime::cpu()?;
+                let exe = rt.load_model(&man2, batch)?;
+                let wbuf = rt.bind_weights(&w0)?;
+                Ok(Box::new(PjrtExec {
+                    rt,
+                    exe,
+                    wbuf,
+                }) as Box<dyn BatchExec>)
+            },
+            input_dim,
+            cfg,
+            Some((bank, layers)),
+        )
+    }
+
+    /// Submit one image; returns the response channel.
+    pub fn submit(&self, image: Vec<f32>) -> anyhow::Result<Receiver<Response>> {
+        let (tx, rx) = channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            image,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        self.batcher
+            .push(req)
+            .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        Ok(rx)
+    }
+
+    /// Graceful shutdown: drain the queue, stop all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.batcher.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The real PJRT executor (lives on the inference thread).
+struct PjrtExec {
+    rt: Arc<Runtime>,
+    exe: crate::runtime::Executable,
+    wbuf: crate::runtime::WeightsBuf,
+}
+
+impl BatchExec for PjrtExec {
+    fn batch(&self) -> usize {
+        self.exe.batch
+    }
+    fn input_dim(&self) -> usize {
+        self.exe.input_dim
+    }
+    fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+        let logits = self.exe.run(&self.rt, &self.wbuf, images)?;
+        let mut preds = argmax_rows(&logits, self.exe.num_classes);
+        preds.truncate(count);
+        Ok(preds)
+    }
+    fn refresh(&mut self, weights: &[f32]) -> anyhow::Result<()> {
+        self.wbuf = self.rt.bind_weights(weights)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mock executor: predicts class = round(first pixel), counts calls.
+    struct Mock {
+        batch: usize,
+        dim: usize,
+        weights_seen: usize,
+    }
+
+    impl BatchExec for Mock {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn input_dim(&self) -> usize {
+            self.dim
+        }
+        fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+            Ok((0..count)
+                .map(|i| images[i * self.dim] as usize)
+                .collect())
+        }
+        fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+            self.weights_seen += 1;
+            Ok(())
+        }
+    }
+
+    fn mock_cfg() -> ServerConfig {
+        ServerConfig {
+            strategy: "in-place".into(),
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            },
+            scrub_interval: None,
+            fault_rate_per_interval: 0.0,
+            fault_seed: 0,
+        }
+    }
+
+    #[test]
+    fn serves_and_answers() {
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 3,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            3,
+            &mock_cfg(),
+            None,
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            rxs.push(srv.submit(vec![i as f32, 0.0, 0.0]).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.pred, i);
+        }
+        assert_eq!(
+            srv.metrics.requests.load(Ordering::Relaxed),
+            10
+        );
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 2,
+                    dim: 1,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            1,
+            &mock_cfg(),
+            None,
+        )
+        .unwrap();
+        let m = srv.metrics.clone();
+        let b = srv.batcher.clone();
+        srv.shutdown();
+        let _ = (m, b);
+    }
+
+    #[test]
+    fn failed_startup_propagates() {
+        let r = Server::start_with(
+            || Err(anyhow::anyhow!("boom")),
+            1,
+            &mock_cfg(),
+            None,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn scrub_thread_refreshes_weights() {
+        use crate::ecc::strategy_by_name;
+        let weights = vec![0i8; 64];
+        let bank = MemoryBank::new(strategy_by_name("in-place").unwrap(), &weights).unwrap();
+        let layers = vec![crate::model::Layer {
+            name: "a".into(),
+            shape: vec![64],
+            offset: 0,
+            size: 64,
+            scale: 1.0,
+            scale_prewot: 1.0,
+        }];
+        let mut cfg = mock_cfg();
+        cfg.scrub_interval = Some(Duration::from_millis(5));
+        cfg.fault_rate_per_interval = 1e-3;
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 1,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            1,
+            &cfg,
+            Some((bank, layers)),
+        )
+        .unwrap();
+        // Give the scrub loop a few periods, keep traffic flowing so the
+        // inference thread drains the refresh channel.
+        for _ in 0..10 {
+            let rx = srv.submit(vec![1.0]).unwrap();
+            let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(srv.metrics.scrubs.load(Ordering::Relaxed) >= 2);
+        assert!(srv.metrics.weight_refreshes.load(Ordering::Relaxed) >= 1);
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,425 @@
+//! Future-work extension (paper section 6): double-error-correcting
+//! BCH-style protection fed entirely from non-informative bits.
+//!
+//! The paper notes that stronger codes (e.g. BCH) "require more parity
+//! bits, for which the regularized training may need to be extended to
+//! create more free bits". This module implements exactly that trade:
+//!
+//! * **Extended WOT constraint**: bytes 0..14 of every 16-byte block are
+//!   confined to [-32, 31] — a two's-complement value then has bits
+//!   5 and 6 equal to bit 7, i.e. *two* non-informative bits per small
+//!   weight (30 free bits per 128-bit block).
+//! * **Code**: a shortened binary BCH over GF(2^8) with t = 2 (16 check
+//!   bits <= 30 free bits), correcting any two bit errors and detecting
+//!   most triples, still at zero space cost.
+//!
+//! Decoding: syndromes S1 = sum a^p, S3 = sum a^{3p}; single error when
+//! S3 = S1^3; double errors located by the quadratic error-locator via
+//! Chien search. After correction the sign-copy restore runs over both
+//! free bits of every small weight.
+
+use std::sync::OnceLock;
+
+/// Block geometry.
+pub const BLOCK: usize = 16; // bytes per protected block
+pub const NBITS: usize = BLOCK * 8; // 128 codeword bits
+pub const SMALL_LO: i8 = -32;
+pub const SMALL_HI: i8 = 31;
+/// Free-bit mask within a small byte: bits 5 and 6.
+const FREE_MASK: u8 = 0b0110_0000;
+
+// ---------------------------------------------------------------- GF(2^8)
+
+const POLY: u32 = 0x11D;
+
+struct Gf {
+    exp: [u8; 512],
+    log: [u16; 256],
+}
+
+fn gf() -> &'static Gf {
+    static GF: OnceLock<Gf> = OnceLock::new();
+    GF.get_or_init(|| {
+        let mut exp = [0u8; 512];
+        let mut log = [0u16; 256];
+        let mut x: u32 = 1;
+        for i in 0..255 {
+            exp[i] = x as u8;
+            log[x as usize] = i as u16;
+            x <<= 1;
+            if x & 0x100 != 0 {
+                x ^= POLY;
+            }
+        }
+        for i in 255..512 {
+            exp[i] = exp[i - 255];
+        }
+        Gf { exp, log }
+    })
+}
+
+#[inline]
+fn gmul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let g = gf();
+    g.exp[(g.log[a as usize] + g.log[b as usize]) as usize]
+}
+
+#[inline]
+fn gdiv(a: u8, b: u8) -> u8 {
+    debug_assert!(b != 0);
+    if a == 0 {
+        return 0;
+    }
+    let g = gf();
+    g.exp[(g.log[a as usize] + 255 - g.log[b as usize]) as usize]
+}
+
+#[inline]
+fn gpow_alpha(e: usize) -> u8 {
+    gf().exp[e % 255]
+}
+
+// ----------------------------------------------------------- code tables
+
+struct BchTables {
+    /// a^p per bit position (h3 = a^{3p} is folded into `slut`/`cols`
+    /// at construction and not needed at decode time).
+    h1: [u8; NBITS],
+    /// Inverse of the 16x16 GF(2) map check-bits -> (S1 | S3 << 8).
+    minv: [u16; 16],
+    /// Per-byte syndrome LUT: slut[byte][value] = S1 | S3 << 8 of the
+    /// set bits of `value` at byte position `byte` (the decode hot path
+    /// — 16 lookups replace a per-set-bit GF walk).
+    slut: Vec<[u16; 256]>,
+    /// Encode spread tables: check-bit vector byte -> u64 mask over the
+    /// low word of the block (all 16 check positions live in bytes 0..7).
+    sp_lo: [u64; 256],
+    sp_hi: [u64; 256],
+    /// Mask of all check-bit positions within the low word.
+    check_mask_lo: u64,
+}
+
+fn check_positions() -> [usize; 16] {
+    let mut pos = [0usize; 16];
+    for byte in 0..8 {
+        pos[2 * byte] = byte * 8 + 5;
+        pos[2 * byte + 1] = byte * 8 + 6;
+    }
+    pos
+}
+
+/// Invert a 16x16 GF(2) matrix given as 16 column vectors (u16 each).
+/// Returns the inverse as column vectors. Panics if singular.
+fn invert16(cols: [u16; 16]) -> [u16; 16] {
+    // rows[i] = bits of row i across columns; augment with identity.
+    let mut a = [0u32; 16]; // low 16 bits: matrix row, high 16: identity
+    for (i, row) in a.iter_mut().enumerate() {
+        let mut r = 0u16;
+        for (j, c) in cols.iter().enumerate() {
+            if c >> i & 1 == 1 {
+                r |= 1 << j;
+            }
+        }
+        *row = r as u32 | (1u32 << (16 + i));
+    }
+    for col in 0..16 {
+        let piv = (col..16)
+            .find(|&r| a[r] >> col & 1 == 1)
+            .expect("BCH check matrix singular");
+        a.swap(col, piv);
+        for r in 0..16 {
+            if r != col && a[r] >> col & 1 == 1 {
+                a[r] ^= a[col];
+            }
+        }
+    }
+    // Extract inverse columns: inv[j] has bit i = element (i, j) of A^-1.
+    let mut inv = [0u16; 16];
+    for (i, row) in a.iter().enumerate() {
+        let r = (row >> 16) as u16;
+        for (j, c) in inv.iter_mut().enumerate() {
+            if r >> j & 1 == 1 {
+                *c |= 1 << i;
+            }
+        }
+    }
+    inv
+}
+
+fn tables() -> &'static BchTables {
+    static T: OnceLock<BchTables> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut h1 = [0u8; NBITS];
+        let mut h3 = [0u8; NBITS];
+        for p in 0..NBITS {
+            h1[p] = gpow_alpha(p);
+            h3[p] = gpow_alpha(3 * p);
+        }
+        let check_pos = check_positions();
+        let mut cols = [0u16; 16];
+        for (j, &p) in check_pos.iter().enumerate() {
+            cols[j] = (h1[p] as u16) | ((h3[p] as u16) << 8);
+        }
+        let minv = invert16(cols);
+        let mut slut = vec![[0u16; 256]; BLOCK];
+        for (byte, table) in slut.iter_mut().enumerate() {
+            for v in 0..256usize {
+                let mut s = 0u16;
+                for j in 0..8 {
+                    if v & (1 << j) != 0 {
+                        let p = byte * 8 + j;
+                        s ^= (h1[p] as u16) | ((h3[p] as u16) << 8);
+                    }
+                }
+                table[v] = s;
+            }
+        }
+        let mut sp_lo = [0u64; 256];
+        let mut sp_hi = [0u64; 256];
+        let mut check_mask_lo = 0u64;
+        for &p in &check_pos {
+            debug_assert!(p < 64);
+            check_mask_lo |= 1u64 << p;
+        }
+        for v in 0..256usize {
+            for j in 0..8 {
+                if v & (1 << j) != 0 {
+                    sp_lo[v] |= 1u64 << check_pos[j];
+                    sp_hi[v] |= 1u64 << check_pos[8 + j];
+                }
+            }
+        }
+        BchTables {
+            h1,
+            minv,
+            slut,
+            sp_lo,
+            sp_hi,
+            check_mask_lo,
+        }
+    })
+}
+
+// ------------------------------------------------------------- block ops
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BchOutcome {
+    Clean,
+    Corrected(usize), // number of bits corrected (1 or 2)
+    Detected,
+}
+
+#[inline]
+fn syndromes(block: &[u8; BLOCK]) -> (u8, u8) {
+    let t = tables();
+    let mut s = 0u16;
+    for (byte, &v) in block.iter().enumerate() {
+        s ^= t.slut[byte][v as usize];
+    }
+    ((s & 0xff) as u8, (s >> 8) as u8)
+}
+
+/// Is the extended small-weight constraint satisfied by this value?
+#[inline]
+pub fn is_small_ext(w: i8) -> bool {
+    (SMALL_LO..=SMALL_HI).contains(&w)
+}
+
+/// Branch-free extended-constraint check on a 64-bit word: a byte is in
+/// [-32, 31] iff bits 5 and 6 both equal bit 7; disagreements collect at
+/// bit 7 of each byte.
+#[inline(always)]
+fn ext_violation_mask_u64(w: u64) -> u64 {
+    ((w ^ (w << 1)) | (w ^ (w << 2))) & 0x8080_8080_8080_8080
+}
+
+/// Fast whole-buffer extended-constraint check (encode hot path).
+pub fn satisfies_constraint_ext(weights: &[i8]) -> bool {
+    weights.chunks_exact(BLOCK).all(|chunk| {
+        let mut b = [0u8; BLOCK];
+        for (d, &s) in b.iter_mut().zip(chunk) {
+            *d = s as u8;
+        }
+        let lo = u64::from_le_bytes(b[..8].try_into().unwrap());
+        let hi = u64::from_le_bytes(b[8..].try_into().unwrap());
+        // byte 15 (top byte of `hi`) is the free byte
+        ext_violation_mask_u64(lo) == 0
+            && (ext_violation_mask_u64(hi) & 0x0080_8080_8080_8080) == 0
+    })
+}
+
+/// Indices violating the extended constraint (first 15 of each 16).
+pub fn constraint_violations_ext(weights: &[i8]) -> Vec<usize> {
+    weights
+        .chunks_exact(BLOCK)
+        .enumerate()
+        .flat_map(|(bi, chunk)| {
+            chunk[..BLOCK - 1]
+                .iter()
+                .enumerate()
+                .filter(|(_, &w)| !is_small_ext(w))
+                .map(move |(j, _)| bi * BLOCK + j)
+        })
+        .collect()
+}
+
+/// Sign-copy restore of both free bits for bytes 0..14.
+#[inline]
+pub fn restore_block(block: &mut [u8; BLOCK]) {
+    for b in block.iter_mut().take(BLOCK - 1) {
+        let sign = (*b >> 7) & 1;
+        let fill = if sign == 1 { FREE_MASK } else { 0 };
+        *b = (*b & !FREE_MASK) | fill;
+    }
+}
+
+/// Encode: overwrite the 16 check positions so S1 = S3 = 0.
+pub fn encode_block(block: &mut [u8; BLOCK]) {
+    let t = tables();
+    // All check positions live in the low 8 bytes: one masked store.
+    let mut lo = u64::from_le_bytes(block[..8].try_into().unwrap());
+    lo &= !t.check_mask_lo;
+    block[..8].copy_from_slice(&lo.to_le_bytes());
+    let (s1, s3) = syndromes(block);
+    let target = (s1 as u16) | ((s3 as u16) << 8);
+    // check-bit vector c = M^-1 * target
+    let mut c = 0u16;
+    for (i, col) in t.minv.iter().enumerate() {
+        if (target >> i) & 1 == 1 {
+            c ^= col;
+        }
+    }
+    lo |= t.sp_lo[(c & 0xff) as usize] | t.sp_hi[(c >> 8) as usize];
+    block[..8].copy_from_slice(&lo.to_le_bytes());
+    debug_assert_eq!(syndromes(block), (0, 0));
+}
+
+/// Decode + sign restore. Corrects up to two bit errors.
+pub fn decode_block(block: &mut [u8; BLOCK]) -> BchOutcome {
+    let (s1, s3) = syndromes(block);
+    let out = if s1 == 0 && s3 == 0 {
+        BchOutcome::Clean
+    } else if s1 != 0 && s3 == gmul(gmul(s1, s1), s1) {
+        // single error at p = log(S1)
+        let p = gf().log[s1 as usize] as usize;
+        if p < NBITS {
+            block[p / 8] ^= 1 << (p % 8);
+            BchOutcome::Corrected(1)
+        } else {
+            BchOutcome::Detected
+        }
+    } else if s1 != 0 {
+        // two errors: e1 + e2 = S1, e1*e2 = (S3 + S1^3) / S1
+        let s1cube = gmul(gmul(s1, s1), s1);
+        let prod = gdiv(s3 ^ s1cube, s1);
+        // Chien search over the 128 shortened positions.
+        let t = tables();
+        let mut roots = [0usize; 2];
+        let mut nroots = 0;
+        for p in 0..NBITS {
+            let x = t.h1[p];
+            // x^2 + S1 x + prod == 0 ?
+            if gmul(x, x) ^ gmul(s1, x) ^ prod == 0 {
+                if nroots < 2 {
+                    roots[nroots] = p;
+                }
+                nroots += 1;
+            }
+        }
+        if nroots == 2 {
+            for &p in &roots {
+                block[p / 8] ^= 1 << (p % 8);
+            }
+            BchOutcome::Corrected(2)
+        } else {
+            BchOutcome::Detected
+        }
+    } else {
+        // S1 == 0, S3 != 0: uncorrectable.
+        BchOutcome::Detected
+    };
+    restore_block(block);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ext_block(rng: &mut Rng) -> [u8; BLOCK] {
+        let mut b = [0u8; BLOCK];
+        for (i, v) in b.iter_mut().enumerate() {
+            let w: i8 = if i < BLOCK - 1 {
+                (rng.below(64) as i64 - 32) as i8
+            } else {
+                (rng.below(256) as i64 - 128) as i8
+            };
+            *v = w as u8;
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(21);
+        for _ in 0..500 {
+            let orig = ext_block(&mut rng);
+            let mut enc = orig;
+            encode_block(&mut enc);
+            let mut dec = enc;
+            assert_eq!(decode_block(&mut dec), BchOutcome::Clean);
+            assert_eq!(dec, orig);
+        }
+    }
+
+    #[test]
+    fn corrects_all_single_flips() {
+        let mut rng = Rng::new(22);
+        for _ in 0..20 {
+            let orig = ext_block(&mut rng);
+            let mut enc = orig;
+            encode_block(&mut enc);
+            for bit in 0..NBITS {
+                let mut w = enc;
+                w[bit / 8] ^= 1 << (bit % 8);
+                let mut dec = w;
+                assert!(matches!(decode_block(&mut dec), BchOutcome::Corrected(1)));
+                assert_eq!(dec, orig, "single flip at {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn corrects_all_double_flips() {
+        let mut rng = Rng::new(23);
+        let orig = ext_block(&mut rng);
+        let mut enc = orig;
+        encode_block(&mut enc);
+        for b1 in 0..NBITS {
+            for b2 in (b1 + 1)..NBITS {
+                let mut w = enc;
+                w[b1 / 8] ^= 1 << (b1 % 8);
+                w[b2 / 8] ^= 1 << (b2 % 8);
+                let mut dec = w;
+                assert!(
+                    matches!(decode_block(&mut dec), BchOutcome::Corrected(2)),
+                    "double flip {b1},{b2}"
+                );
+                assert_eq!(dec, orig, "double flip {b1},{b2}");
+            }
+        }
+    }
+
+    #[test]
+    fn violations_ext() {
+        let mut w = vec![0i8; 32];
+        w[0] = 32; // violation
+        w[15] = 127; // free byte, fine
+        w[20] = -33; // violation in second block
+        assert_eq!(constraint_violations_ext(&w), vec![0, 20]);
+    }
+}

@@ -1,0 +1,304 @@
+//! Generic Hsiao SEC-DED codes (M. Y. Hsiao, 1970).
+//!
+//! A Hsiao code's parity-check matrix H has distinct odd-weight columns:
+//! check-bit positions carry the unit vectors, data positions carry
+//! odd-weight(>=3) vectors. Properties used here:
+//!   * minimum distance 4 => corrects any 1-bit error, detects any 2-bit
+//!     error in a codeword;
+//!   * a single-bit error yields a syndrome equal to that bit's column
+//!     (odd weight); any double error yields a nonzero even-weight
+//!     syndrome — the correct/detect discriminator is column membership.
+//!
+//! The codeword is addressed as little-endian bytes: bit position
+//! `p` = byte `p / 8`, bit `p % 8`. Syndromes are computed with a
+//! 256-entry LUT per codeword byte (the decode hot path of the whole
+//! system: Table 2 runs millions of block decodes).
+
+/// Decode outcome for one codeword.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Syndrome zero — no error (or an undetectable >=3-bit error).
+    Clean,
+    /// Single-bit error at the given bit position, already flipped back.
+    Corrected(usize),
+    /// Nonzero syndrome not matching any column: uncorrectable (double)
+    /// error detected; codeword left untouched.
+    Detected,
+}
+
+/// A concrete Hsiao code with r <= 8 check bits and n <= 256 codeword
+/// bits (we instantiate (72, 64) and (64, 57)).
+pub struct HsiaoCode {
+    /// Number of check bits.
+    pub r: usize,
+    /// Codeword length in bits (multiple of 8 here).
+    pub n: usize,
+    /// Column (syndrome signature) of every codeword bit position.
+    pub cols: Vec<u8>,
+    /// Check-bit positions, index i holds the position whose column is
+    /// the unit vector 1 << i.
+    pub check_pos: Vec<usize>,
+    /// syndrome -> bit position + 1 (0 = not a column => Detected).
+    corr: Vec<u16>,
+    /// Per-byte syndrome LUT: lut[byte_idx][byte_value] = XOR of columns
+    /// of the set bits.
+    lut: Vec<[u8; 256]>,
+}
+
+/// Enumerate odd-weight r-bit values of weight >= 3 in deterministic
+/// order (ascending weight, then ascending value) — the data columns.
+fn odd_columns(r: usize, count: usize) -> Vec<u8> {
+    let mut cols = Vec::with_capacity(count);
+    let mut weights: Vec<u32> = (3..=r as u32).filter(|w| w % 2 == 1).collect();
+    weights.sort_unstable();
+    for w in weights {
+        for v in 1u16..(1u16 << r) {
+            if (v as u8).count_ones() == w {
+                cols.push(v as u8);
+                if cols.len() == count {
+                    return cols;
+                }
+            }
+        }
+    }
+    panic!(
+        "not enough odd-weight columns: r={r} supports {} data bits, need {count}",
+        (0..(1u16 << r)).filter(|v| v.count_ones() >= 3 && v.count_ones() % 2 == 1).count()
+    );
+}
+
+impl HsiaoCode {
+    /// Build a code of `n` codeword bits (n % 8 == 0) whose check bits
+    /// sit at `check_pos` (length r, each < n); all other positions are
+    /// data bits, assigned odd-weight columns deterministically.
+    pub fn new(n: usize, check_pos: &[usize]) -> Self {
+        let r = check_pos.len();
+        assert!(r <= 8, "syndrome is carried in a u8");
+        assert!(n % 8 == 0 && n <= 2048);
+        let is_check: Vec<bool> = {
+            let mut v = vec![false; n];
+            for &p in check_pos {
+                v[p] = true;
+            }
+            v
+        };
+        let data_cols = odd_columns(r, n - r);
+        let mut cols = vec![0u8; n];
+        let mut di = 0;
+        for (p, col) in cols.iter_mut().enumerate() {
+            if is_check[p] {
+                let i = check_pos.iter().position(|&c| c == p).unwrap();
+                *col = 1 << i;
+            } else {
+                *col = data_cols[di];
+                di += 1;
+            }
+        }
+        // Correction table: syndrome -> position + 1.
+        let mut corr = vec![0u16; 1 << r];
+        for (p, &c) in cols.iter().enumerate() {
+            debug_assert_eq!(corr[c as usize], 0, "duplicate column {c:#x}");
+            corr[c as usize] = (p + 1) as u16;
+        }
+        // Per-byte syndrome LUTs.
+        let nbytes = n / 8;
+        let mut lut = vec![[0u8; 256]; nbytes];
+        for (b, table) in lut.iter_mut().enumerate() {
+            for v in 0..256usize {
+                let mut s = 0u8;
+                for j in 0..8 {
+                    if v & (1 << j) != 0 {
+                        s ^= cols[b * 8 + j];
+                    }
+                }
+                table[v] = s;
+            }
+        }
+        HsiaoCode {
+            r,
+            n,
+            cols,
+            check_pos: check_pos.to_vec(),
+            corr,
+            lut,
+        }
+    }
+
+    /// Codeword length in bytes.
+    #[inline]
+    pub fn nbytes(&self) -> usize {
+        self.n / 8
+    }
+
+    /// Syndrome of a stored codeword (`bytes.len() == self.nbytes()`).
+    #[inline]
+    pub fn syndrome(&self, bytes: &[u8]) -> u8 {
+        debug_assert_eq!(bytes.len(), self.nbytes());
+        let mut s = 0u8;
+        for (b, &v) in bytes.iter().enumerate() {
+            s ^= self.lut[b][v as usize];
+        }
+        s
+    }
+
+    /// Write the check bits of `bytes` so that its syndrome becomes zero
+    /// (check positions are overwritten; data positions untouched).
+    pub fn encode(&self, bytes: &mut [u8]) {
+        for &p in &self.check_pos {
+            bytes[p / 8] &= !(1 << (p % 8));
+        }
+        let s = self.syndrome(bytes);
+        for i in 0..self.r {
+            if s & (1 << i) != 0 {
+                let p = self.check_pos[i];
+                bytes[p / 8] ^= 1 << (p % 8);
+            }
+        }
+        debug_assert_eq!(self.syndrome(bytes), 0);
+    }
+
+    /// Correct a single-bit error in place; classify the outcome.
+    #[inline]
+    pub fn decode(&self, bytes: &mut [u8]) -> Outcome {
+        let s = self.syndrome(bytes);
+        if s == 0 {
+            return Outcome::Clean;
+        }
+        let p = self.corr[s as usize];
+        if p == 0 {
+            return Outcome::Detected;
+        }
+        let pos = (p - 1) as usize;
+        bytes[pos / 8] ^= 1 << (pos % 8);
+        Outcome::Corrected(pos)
+    }
+
+    // ---- u64 fast path (hot loop of the memory subsystem) -----------
+    //
+    // For 64-bit codewords (the in-place (64, 57) code) and for the
+    // 64-bit data half of (72, 64), the stored block is one little-
+    // endian u64; an unrolled 8-lookup syndrome and table-driven
+    // correction avoid the per-byte scatter/gather of the slice path.
+
+    /// Syndrome of a 64-bit word (valid for codes with n >= 64; covers
+    /// codeword bits 0..64 — for (72, 64) XOR `lut_oob` on top).
+    #[inline(always)]
+    pub fn syndrome_u64(&self, w: u64) -> u8 {
+        debug_assert!(self.n >= 64);
+        let l = &self.lut;
+        l[0][(w & 0xff) as usize]
+            ^ l[1][((w >> 8) & 0xff) as usize]
+            ^ l[2][((w >> 16) & 0xff) as usize]
+            ^ l[3][((w >> 24) & 0xff) as usize]
+            ^ l[4][((w >> 32) & 0xff) as usize]
+            ^ l[5][((w >> 40) & 0xff) as usize]
+            ^ l[6][((w >> 48) & 0xff) as usize]
+            ^ l[7][((w >> 56) & 0xff) as usize]
+    }
+
+    /// Syndrome contribution of the out-of-band check byte (byte 8 of a
+    /// (72, 64) codeword).
+    #[inline(always)]
+    pub fn syndrome_oob(&self, oob: u8) -> u8 {
+        debug_assert_eq!(self.nbytes(), 9);
+        self.lut[8][oob as usize]
+    }
+
+    /// Correction position for a syndrome: Some(bit) or None (detected).
+    #[inline(always)]
+    pub fn correction(&self, s: u8) -> Option<usize> {
+        let p = self.corr[s as usize];
+        if p == 0 {
+            None
+        } else {
+            Some((p - 1) as usize)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code7264() -> HsiaoCode {
+        HsiaoCode::new(72, &[64, 65, 66, 67, 68, 69, 70, 71])
+    }
+
+    fn code6457() -> HsiaoCode {
+        let checks: Vec<usize> = (0..7).map(|i| i * 8 + 6).collect();
+        HsiaoCode::new(64, &checks)
+    }
+
+    #[test]
+    fn columns_distinct_and_odd() {
+        for code in [code7264(), code6457()] {
+            let mut seen = std::collections::HashSet::new();
+            for &c in &code.cols {
+                assert!(c.count_ones() % 2 == 1, "even column {c:#x}");
+                assert!(seen.insert(c), "duplicate column {c:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_then_clean() {
+        let code = code7264();
+        let mut w = [0u8; 9];
+        w[..8].copy_from_slice(&0xDEADBEEF_12345678u64.to_le_bytes());
+        code.encode(&mut w);
+        assert_eq!(code.decode(&mut w), Outcome::Clean);
+    }
+
+    #[test]
+    fn every_single_flip_corrected() {
+        for code in [code7264(), code6457()] {
+            let mut base = vec![0u8; code.nbytes()];
+            for (i, b) in base.iter_mut().enumerate() {
+                *b = (i as u8).wrapping_mul(37).wrapping_add(11);
+            }
+            code.encode(&mut base);
+            for bit in 0..code.n {
+                let mut w = base.clone();
+                w[bit / 8] ^= 1 << (bit % 8);
+                match code.decode(&mut w) {
+                    Outcome::Corrected(p) => {
+                        assert_eq!(p, bit);
+                        assert_eq!(w, base, "correction must restore the codeword");
+                    }
+                    o => panic!("bit {bit}: expected Corrected, got {o:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_double_flip_detected() {
+        for code in [code7264(), code6457()] {
+            let mut base = vec![0u8; code.nbytes()];
+            for (i, b) in base.iter_mut().enumerate() {
+                *b = (i as u8).wrapping_mul(83).wrapping_add(5);
+            }
+            code.encode(&mut base);
+            // exhaustive over all pairs
+            for b1 in 0..code.n {
+                for b2 in (b1 + 1)..code.n {
+                    let mut w = base.clone();
+                    w[b1 / 8] ^= 1 << (b1 % 8);
+                    w[b2 / 8] ^= 1 << (b2 % 8);
+                    assert_eq!(
+                        code.decode(&mut w),
+                        Outcome::Detected,
+                        "flips at {b1},{b2} must be detected, not (mis)corrected"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough odd-weight columns")]
+    fn too_many_data_bits_panics() {
+        // r=4 supports only C(4,3)=4 data columns; ask for 12.
+        HsiaoCode::new(16, &[0, 1, 2, 3]);
+    }
+}

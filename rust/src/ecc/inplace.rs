@@ -1,0 +1,307 @@
+//! In-place zero-space ECC (paper section 4.2, Fig. 2).
+//!
+//! Storage layout of one protected 64-bit block (8 int8 weights, WOT
+//! constraint: weights 0..6 in [-64, 63], weight 7 unconstrained):
+//!
+//! ```text
+//!   byte i (i < 7):  [ s v v v v v v c ]   bit7..bit0
+//!                      |             `-- bit6 := check bit i  (in-place)
+//!                      `---------------- sign bit (informative)
+//!   byte 7:          all 8 bits informative (the free byte)
+//! ```
+//!
+//! Because a two's-complement value in [-64, 63] has bit6 == bit7, bit6
+//! is non-informative: the encoder overwrites it with a check bit of the
+//! (64, 57) Hsiao code, and the decoder — after standard SEC-DED
+//! correction over the stored 64 bits — restores it with a sign-bit copy
+//! (the "additional wiring" of the paper's Fig. 2 hardware sketch).
+
+use super::hsiao::Outcome;
+use super::secded::code_6457_inplace;
+
+/// Number of weights per protected block.
+pub const BLOCK: usize = 8;
+/// Small-weight range the WOT constraint enforces on bytes 0..6.
+pub const SMALL_LO: i8 = -64;
+pub const SMALL_HI: i8 = 63;
+
+/// Does this value fit the small-weight range (bit6 non-informative)?
+#[inline]
+pub fn is_small(w: i8) -> bool {
+    (SMALL_LO..=SMALL_HI).contains(&w)
+}
+
+/// Branch-free constraint check for one 64-bit block: a byte is small
+/// iff bit6 == bit7; `w ^ (w << 1)` puts that disagreement at bit7 of
+/// each byte, masked to bytes 0..6. Zero iff the block is encodable.
+#[inline(always)]
+pub fn violation_mask_u64(w: u64) -> u64 {
+    (w ^ (w << 1)) & 0x0080_8080_8080_8080
+}
+
+/// Fast whole-buffer constraint check (the encode hot path); the slow
+/// index-listing variant below is only used to build error messages.
+pub fn satisfies_constraint(weights: &[i8]) -> bool {
+    weights.chunks_exact(8).all(|chunk| {
+        let mut b = [0u8; 8];
+        for (d, &s) in b.iter_mut().zip(chunk) {
+            *d = s as u8;
+        }
+        violation_mask_u64(u64::from_le_bytes(b)) == 0
+    })
+}
+
+/// Check the WOT block constraint over a full weight buffer; returns the
+/// indices (into `weights`) of violating values, empty when encodable.
+pub fn constraint_violations(weights: &[i8]) -> Vec<usize> {
+    weights
+        .chunks_exact(BLOCK)
+        .enumerate()
+        .flat_map(|(bi, chunk)| {
+            chunk[..BLOCK - 1]
+                .iter()
+                .enumerate()
+                .filter(|(_, &w)| !is_small(w))
+                .map(move |(j, _)| bi * BLOCK + j)
+        })
+        .collect()
+}
+
+/// Bit mask of the seven in-place check positions (bit 6 of bytes 0..6
+/// of the little-endian u64).
+pub const CHECK_MASK: u64 = 0x0040_4040_4040_4040;
+
+/// SPREAD[s] = the check-bit word whose bit (i*8+6) is set iff bit i of
+/// the syndrome `s` is set. Because the check columns are unit vectors,
+/// `w | SPREAD[syndrome(w)]` has syndrome zero when the check positions
+/// of `w` are cleared.
+fn spread_table() -> &'static [u64; 128] {
+    use std::sync::OnceLock;
+    static T: OnceLock<[u64; 128]> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = [0u64; 128];
+        for (s, entry) in t.iter_mut().enumerate() {
+            let mut m = 0u64;
+            for i in 0..7 {
+                if s & (1 << i) != 0 {
+                    m |= 1u64 << (i * 8 + 6);
+                }
+            }
+            *entry = m;
+        }
+        t
+    })
+}
+
+/// The Fig. 2 sign-copy wire on a whole word: bit6 := bit7, bytes 0..6.
+#[inline(always)]
+pub fn restore_u64(w: u64) -> u64 {
+    (w & !CHECK_MASK) | ((w >> 1) & CHECK_MASK)
+}
+
+/// Pre-resolved code + spread table. Hot loops resolve this ONCE and
+/// call the `*_with` functions: resolving the OnceLock per block keeps
+/// the LUT base pointers out of registers and costs ~1.6x decode
+/// throughput (measured; EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy)]
+pub struct InplaceCtx {
+    code: &'static super::hsiao::HsiaoCode,
+    spread: &'static [u64; 128],
+}
+
+pub fn ctx() -> InplaceCtx {
+    InplaceCtx {
+        code: code_6457_inplace(),
+        spread: spread_table(),
+    }
+}
+
+/// Encode one 64-bit block (u64 fast path): overwrite the bit6 slots of
+/// bytes 0..6 with the (64, 57) check bits.
+#[inline(always)]
+pub fn encode_u64_with(cx: InplaceCtx, w: u64) -> u64 {
+    let cleared = w & !CHECK_MASK;
+    cleared | cx.spread[cx.code.syndrome_u64(cleared) as usize]
+}
+
+/// Decode one 64-bit block (u64 fast path): SEC-DED correct, then the
+/// sign-copy restore. Returns (weights_word, outcome).
+#[inline(always)]
+pub fn decode_u64_with(cx: InplaceCtx, mut w: u64) -> (u64, Outcome) {
+    let s = cx.code.syndrome_u64(w);
+    if s == 0 {
+        return (restore_u64(w), Outcome::Clean);
+    }
+    match cx.code.correction(s) {
+        Some(pos) => {
+            w ^= 1u64 << pos;
+            (restore_u64(w), Outcome::Corrected(pos))
+        }
+        None => (restore_u64(w), Outcome::Detected),
+    }
+}
+
+/// Scrub one 64-bit block: a corrected codeword IS the original encoded
+/// word, so no re-encode is needed; uncorrectable blocks are preserved.
+/// Returns (stored_word, outcome).
+#[inline(always)]
+pub fn scrub_u64_with(cx: InplaceCtx, w: u64) -> (u64, Outcome) {
+    let s = cx.code.syndrome_u64(w);
+    if s == 0 {
+        return (w, Outcome::Clean);
+    }
+    match cx.code.correction(s) {
+        Some(pos) => (w ^ (1u64 << pos), Outcome::Corrected(pos)),
+        None => (w, Outcome::Detected),
+    }
+}
+
+/// Convenience one-shot variants (tests, non-hot callers).
+#[inline]
+pub fn encode_u64(w: u64) -> u64 {
+    encode_u64_with(ctx(), w)
+}
+#[inline]
+pub fn decode_u64(w: u64) -> (u64, Outcome) {
+    decode_u64_with(ctx(), w)
+}
+#[inline]
+pub fn scrub_u64(w: u64) -> (u64, Outcome) {
+    scrub_u64_with(ctx(), w)
+}
+
+/// Encode one block in place: bytes 0..6 get their bit6 replaced by the
+/// Hsiao (64, 57) check bits. Caller guarantees the WOT constraint.
+#[inline]
+pub fn encode_block(block: &mut [u8; BLOCK]) {
+    *block = encode_u64(u64::from_le_bytes(*block)).to_le_bytes();
+}
+
+/// Decode one block in place: SEC-DED over the stored 64 bits, then the
+/// sign-copy restore of bit6 in bytes 0..6.
+#[inline]
+pub fn decode_block(block: &mut [u8; BLOCK]) -> Outcome {
+    let (w, out) = decode_u64(u64::from_le_bytes(*block));
+    *block = w.to_le_bytes();
+    out
+}
+
+/// The Fig. 2 sign-copy wire: bit6 := bit7 for bytes 0..6.
+#[inline]
+pub fn restore_block(block: &mut [u8; BLOCK]) {
+    *block = restore_u64(u64::from_le_bytes(*block)).to_le_bytes();
+}
+
+/// Scrub one block: correct a single error in the *stored* image (a
+/// corrected codeword is exactly the original encoded word, so no
+/// re-encode is needed). Uncorrectable (detected) blocks are left
+/// exactly as stored — rewriting them would launder the double-error
+/// evidence (same policy as SEC-DED (72,64) scrubbing).
+#[inline]
+pub fn scrub_block(block: &mut [u8; BLOCK]) -> Outcome {
+    let (w, out) = scrub_u64(u64::from_le_bytes(*block));
+    *block = w.to_le_bytes();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn wot_block(rng: &mut Rng) -> [u8; BLOCK] {
+        let mut b = [0u8; BLOCK];
+        for (i, v) in b.iter_mut().enumerate() {
+            let w: i8 = if i < BLOCK - 1 {
+                (rng.below(128) as i64 - 64) as i8 // [-64, 63]
+            } else {
+                (rng.below(256) as i64 - 128) as i8 // any int8
+            };
+            *v = w as u8;
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip_no_fault() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            let orig = wot_block(&mut rng);
+            let mut enc = orig;
+            encode_block(&mut enc);
+            // stored image differs from orig only in bit6 of bytes 0..6
+            for i in 0..BLOCK - 1 {
+                assert_eq!(enc[i] & !0x40, orig[i] & !0x40);
+            }
+            assert_eq!(enc[7], orig[7]);
+            let mut dec = enc;
+            assert_eq!(decode_block(&mut dec), Outcome::Clean);
+            assert_eq!(dec, orig, "sign-copy must reconstruct the weights");
+        }
+    }
+
+    #[test]
+    fn single_bit_flip_always_recovers_weights() {
+        let mut rng = Rng::new(8);
+        for _ in 0..200 {
+            let orig = wot_block(&mut rng);
+            let mut enc = orig;
+            encode_block(&mut enc);
+            for bit in 0..64 {
+                let mut w = enc;
+                w[bit / 8] ^= 1 << (bit % 8);
+                let mut dec = w;
+                match decode_block(&mut dec) {
+                    Outcome::Corrected(p) => assert_eq!(p, bit),
+                    o => panic!("expected Corrected, got {o:?}"),
+                }
+                assert_eq!(dec, orig, "flip at bit {bit} must be healed");
+            }
+        }
+    }
+
+    #[test]
+    fn double_flip_detected_and_signs_still_restored() {
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let orig = wot_block(&mut rng);
+            let mut enc = orig;
+            encode_block(&mut enc);
+            let b1 = rng.below(64) as usize;
+            let mut b2 = rng.below(64) as usize;
+            while b2 == b1 {
+                b2 = rng.below(64) as usize;
+            }
+            let mut w = enc;
+            w[b1 / 8] ^= 1 << (b1 % 8);
+            w[b2 / 8] ^= 1 << (b2 % 8);
+            let mut dec = w;
+            assert_eq!(decode_block(&mut dec), Outcome::Detected);
+            // even when uncorrectable, bit6 of small weights must obey
+            // the sign-copy invariant afterwards
+            for i in 0..BLOCK - 1 {
+                assert_eq!((dec[i] >> 6) & 1, (dec[i] >> 7) & 1);
+            }
+        }
+    }
+
+    #[test]
+    fn violations_found() {
+        let mut w = vec![0i8; 16];
+        w[3] = 64; // violating (position 3 of block 0)
+        w[15] = -128; // fine (free position of block 1)
+        assert_eq!(constraint_violations(&w), vec![3]);
+    }
+
+    #[test]
+    fn scrub_refreshes_check_bits() {
+        let mut rng = Rng::new(10);
+        let orig = wot_block(&mut rng);
+        let mut enc = orig;
+        encode_block(&mut enc);
+        let mut hit = enc;
+        hit[2] ^= 1 << 1; // single fault
+        assert!(matches!(scrub_block(&mut hit), Outcome::Corrected(_)));
+        assert_eq!(hit, enc, "scrub must restore the exact stored image");
+    }
+}

@@ -1,0 +1,25 @@
+//! Error-correction codes and protection strategies.
+//!
+//! * [`hsiao`] — generic Hsiao SEC-DED code machinery (odd-weight-column
+//!   H matrix, byte-LUT syndrome computation, single-correct/double-detect).
+//! * [`secded`] — the two instantiations the paper uses: the conventional
+//!   out-of-band (72, 64, 1) and the in-place (64, 57, 1).
+//! * [`inplace`] — in-place zero-space ECC: check bits live in the
+//!   non-informative bit6 of the first seven bytes of every 64-bit block
+//!   (paper section 4.2 + Fig. 2 datapath).
+//! * [`parity`] — the Parity-Zero baseline (detect + zero the weight).
+//! * [`bch`] — future-work extension (paper section 6): a double-error-
+//!   correcting BCH code fed from the *two* free bits per byte that the
+//!   extended WOT constraint provides.
+//! * [`strategy`] — the `Protection` trait unifying all of the above
+//!   (plus unprotected), with exact space-overhead accounting.
+
+pub mod bch;
+pub mod hsiao;
+pub mod inplace;
+pub mod parity;
+pub mod secded;
+pub mod strategy;
+
+pub use hsiao::{HsiaoCode, Outcome};
+pub use strategy::{DecodeStats, Encoded, Protection, strategy_by_name, all_strategies};

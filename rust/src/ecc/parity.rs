@@ -1,0 +1,100 @@
+//! Parity-Zero baseline (paper section 5.1).
+//!
+//! One even-parity bit per 8-bit weight, stored out-of-band (12.5%
+//! overhead, like conventional parity DRAM). A parity mismatch detects
+//! an odd number of flips in that byte; the recovery action is to zero
+//! the weight (the paper found this beats neighbour-averaging).
+
+/// Parity bit (even parity) of a byte.
+#[inline]
+pub fn parity(b: u8) -> u8 {
+    (b.count_ones() & 1) as u8
+}
+
+/// SWAR: the 8 per-byte parities of a little-endian u64, bit i of the
+/// result guarding byte i. Fold each byte's parity into its LSB, then
+/// gather the LSBs with a multiply.
+#[inline(always)]
+pub fn parity_word(mut w: u64) -> u8 {
+    w ^= w >> 4;
+    w ^= w >> 2;
+    w ^= w >> 1;
+    (((w & 0x0101_0101_0101_0101).wrapping_mul(0x0102_0408_1020_4080)) >> 56) as u8
+}
+
+/// Pack per-byte parity bits: bit `i % 8` of `oob[i / 8]` guards byte i.
+pub fn encode_oob(data: &[u8]) -> Vec<u8> {
+    let mut oob = vec![0u8; data.len().div_ceil(8)];
+    let mut chunks = data.chunks_exact(8);
+    let mut i = 0;
+    for chunk in &mut chunks {
+        oob[i] = parity_word(u64::from_le_bytes(chunk.try_into().unwrap()));
+        i += 1;
+    }
+    for (j, &b) in chunks.remainder().iter().enumerate() {
+        oob[i] |= parity(b) << j;
+    }
+    oob
+}
+
+/// Check byte i against its stored parity bit.
+#[inline]
+pub fn check(data_byte: u8, oob: &[u8], i: usize) -> bool {
+    parity(data_byte) == (oob[i / 8] >> (i % 8)) & 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parity_basics() {
+        assert_eq!(parity(0b0000_0000), 0);
+        assert_eq!(parity(0b0000_0001), 1);
+        assert_eq!(parity(0b1111_1111), 0);
+        assert_eq!(parity(0b1011_0010), 0);
+    }
+
+    #[test]
+    fn roundtrip_and_detection() {
+        let data: Vec<u8> = (0..100u8).map(|i| i.wrapping_mul(31)).collect();
+        let oob = encode_oob(&data);
+        for (i, &b) in data.iter().enumerate() {
+            assert!(check(b, &oob, i));
+            assert!(!check(b ^ 0x10, &oob, i), "single flip must be caught");
+            assert!(
+                check(b ^ 0x11, &oob, i),
+                "double flip in one byte escapes parity (expected weakness)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod swar_tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parity_word_matches_scalar() {
+        let mut rng = Rng::new(77);
+        for _ in 0..10_000 {
+            let w = rng.next_u64();
+            let bytes = w.to_le_bytes();
+            let mut want = 0u8;
+            for (i, &b) in bytes.iter().enumerate() {
+                want |= parity(b) << i;
+            }
+            assert_eq!(parity_word(w), want, "w={w:#x}");
+        }
+    }
+
+    #[test]
+    fn encode_oob_handles_ragged_tail() {
+        let data: Vec<u8> = (0..13).map(|i| (i * 37) as u8).collect();
+        let oob = encode_oob(&data);
+        for (i, &b) in data.iter().enumerate() {
+            assert!(check(b, &oob, i));
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! The two SEC-DED instantiations used by the paper.
+//!
+//! * `code_7264()` — the conventional DRAM code: 64 data bits + 8
+//!   out-of-band check bits (12.5% space overhead).
+//! * `code_6457_inplace()` — the in-place code: the codeword is exactly
+//!   the stored 64-bit block; the 7 check bits sit at bit 6 of bytes
+//!   0..6 (the non-informative bits WOT guarantees). 57 data bits =
+//!   7 bits x 7 small weights + 8 bits of the free byte.
+//!
+//! A pleasing arithmetic fact the paper leaves implicit: with r = 7
+//! there are exactly C(7,3) + C(7,5) + C(7,7) = 35 + 21 + 1 = 57
+//! odd-weight(>=3) columns — the (64, 57) Hsiao code uses *all* of them,
+//! so every odd syndrome is correctable and every even nonzero syndrome
+//! is a detected double error.
+
+use super::hsiao::HsiaoCode;
+use std::sync::OnceLock;
+
+/// Bit position (little-endian within the 8-byte block) of the
+/// non-informative bit of byte `i`: bit 6 (value bit just below sign).
+#[inline]
+pub const fn noninformative_bit(byte_idx: usize) -> usize {
+    byte_idx * 8 + 6
+}
+
+/// Conventional SEC-DED (72, 64): data in bytes 0..8, check bits in the
+/// out-of-band byte 8 (positions 64..72).
+pub fn code_7264() -> &'static HsiaoCode {
+    static CODE: OnceLock<HsiaoCode> = OnceLock::new();
+    CODE.get_or_init(|| HsiaoCode::new(72, &[64, 65, 66, 67, 68, 69, 70, 71]))
+}
+
+/// In-place SEC-DED (64, 57): check bits at bit 6 of bytes 0..6.
+pub fn code_6457_inplace() -> &'static HsiaoCode {
+    static CODE: OnceLock<HsiaoCode> = OnceLock::new();
+    CODE.get_or_init(|| {
+        let checks: Vec<usize> = (0..7).map(noninformative_bit).collect();
+        HsiaoCode::new(64, &checks)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inplace_code_uses_all_odd_columns() {
+        let code = code_6457_inplace();
+        // 57 data columns + 7 unit columns = all 64 odd-weight 7-bit
+        // vectors; the correction table must therefore be total over odd
+        // syndromes.
+        for s in 1u16..128 {
+            let odd = (s as u8).count_ones() % 2 == 1;
+            let correctable = code.cols.contains(&(s as u8));
+            assert_eq!(odd, correctable, "syndrome {s:#x}");
+        }
+    }
+
+    #[test]
+    fn check_positions_are_bit6() {
+        let code = code_6457_inplace();
+        assert_eq!(code.check_pos, vec![6, 14, 22, 30, 38, 46, 54]);
+    }
+
+    #[test]
+    fn codes_are_cached() {
+        assert!(std::ptr::eq(code_7264(), code_7264()));
+        assert!(std::ptr::eq(code_6457_inplace(), code_6457_inplace()));
+    }
+}

@@ -1,0 +1,547 @@
+//! The `Protection` trait: one interface over the paper's four Table-2
+//! strategies (faulty / zero / ecc / in-place) plus the BCH extension.
+//!
+//! An encoded image is `data` (what replaces the raw weight bytes) plus
+//! `oob` (out-of-band check storage, empty for zero-space schemes).
+//! Fault injection targets *all* stored bits (data + oob), matching the
+//! paper's definition of fault rate over the bits a scheme actually
+//! keeps in memory.
+
+use super::{bch, inplace, parity, secded};
+use crate::ecc::hsiao::Outcome;
+
+/// Stored image of a protected weight buffer.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    /// In-band bytes (same length as the weight buffer).
+    pub data: Vec<u8>,
+    /// Out-of-band check bytes (empty for zero-space schemes).
+    pub oob: Vec<u8>,
+    /// Number of weights represented.
+    pub n: usize,
+}
+
+impl Encoded {
+    /// Total stored bits — the denominator of the paper's fault rate.
+    pub fn total_bits(&self) -> u64 {
+        8 * (self.data.len() + self.oob.len()) as u64
+    }
+
+    /// Flip one stored bit; positions index data bits first, then oob.
+    pub fn flip_bit(&mut self, pos: u64) {
+        let byte = (pos / 8) as usize;
+        let bit = (pos % 8) as u8;
+        if byte < self.data.len() {
+            self.data[byte] ^= 1 << bit;
+        } else {
+            self.oob[byte - self.data.len()] ^= 1 << bit;
+        }
+    }
+}
+
+/// Counters reported by a decode/scrub pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Blocks with a single error corrected (bits for bch).
+    pub corrected: u64,
+    /// Blocks with an uncorrectable (detected) error.
+    pub detected: u64,
+    /// Weights zeroed by the parity-zero action.
+    pub zeroed: u64,
+}
+
+impl DecodeStats {
+    pub fn add(&mut self, o: &DecodeStats) {
+        self.corrected += o.corrected;
+        self.detected += o.detected;
+        self.zeroed += o.zeroed;
+    }
+}
+
+/// A memory-protection strategy.
+pub trait Protection: Send + Sync {
+    /// Paper name: "faulty", "zero", "ecc", "in-place", "bch16".
+    fn name(&self) -> &'static str;
+    /// Does the scheme rely on (extended) ECC hardware? (Table 2 column.)
+    fn ecc_hw(&self) -> bool;
+    /// Space overhead as a fraction of the raw weight bytes.
+    fn overhead(&self) -> f64;
+    /// Encode a weight buffer (length % block == 0) into a stored image.
+    fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded>;
+    /// Decode the stored image into weights, correcting what the scheme
+    /// can; the image itself is not modified.
+    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats;
+    /// Scrub: correct the stored image in place (decode + re-encode),
+    /// so that latent single errors do not accumulate into doubles.
+    fn scrub(&self, enc: &mut Encoded) -> DecodeStats {
+        let mut w = vec![0i8; enc.n];
+        let stats = self.decode(enc, &mut w);
+        if let Ok(re) = self.encode(&w) {
+            *enc = re;
+        }
+        stats
+    }
+}
+
+// ------------------------------------------------------------- faulty --
+
+/// No protection: raw weight bytes in memory.
+pub struct Unprotected;
+
+impl Protection for Unprotected {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+    fn ecc_hw(&self) -> bool {
+        false
+    }
+    fn overhead(&self) -> f64 {
+        0.0
+    }
+    fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
+        Ok(Encoded {
+            data: weights.iter().map(|&w| w as u8).collect(),
+            oob: Vec::new(),
+            n: weights.len(),
+        })
+    }
+    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+        for (o, &b) in out.iter_mut().zip(&enc.data) {
+            *o = b as i8;
+        }
+        DecodeStats::default()
+    }
+}
+
+// -------------------------------------------------------- parity-zero --
+
+/// Parity-Zero: 1 parity bit per weight byte; zero the weight on detect.
+pub struct ParityZero;
+
+impl Protection for ParityZero {
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+    fn ecc_hw(&self) -> bool {
+        false
+    }
+    fn overhead(&self) -> f64 {
+        0.125
+    }
+    fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
+        let data: Vec<u8> = weights.iter().map(|&w| w as u8).collect();
+        let oob = parity::encode_oob(&data);
+        Ok(Encoded {
+            data,
+            oob,
+            n: weights.len(),
+        })
+    }
+    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+        let mut stats = DecodeStats::default();
+        // u64 fast path: 8 parities per word (see parity::parity_word),
+        // branch only on the (rare) mismatching words.
+        let mut chunks = enc.data.chunks_exact(8);
+        let mut i = 0usize;
+        for chunk in &mut chunks {
+            let w = u64::from_le_bytes(chunk.try_into().unwrap());
+            let mism = parity::parity_word(w) ^ enc.oob[i / 8];
+            if mism == 0 {
+                for (o, &b) in out[i..i + 8].iter_mut().zip(chunk) {
+                    *o = b as i8;
+                }
+            } else {
+                for j in 0..8 {
+                    if mism & (1 << j) != 0 {
+                        out[i + j] = 0;
+                        stats.detected += 1;
+                        stats.zeroed += 1;
+                    } else {
+                        out[i + j] = chunk[j] as i8;
+                    }
+                }
+            }
+            i += 8;
+        }
+        for (j, &b) in chunks.remainder().iter().enumerate() {
+            if parity::check(b, &enc.oob, i + j) {
+                out[i + j] = b as i8;
+            } else {
+                out[i + j] = 0;
+                stats.detected += 1;
+                stats.zeroed += 1;
+            }
+        }
+        stats
+    }
+}
+
+// ------------------------------------------------------ SEC-DED 72/64 --
+
+/// Conventional SEC-DED (72, 64): one out-of-band check byte per 8-byte
+/// block (the paper's "ecc" row; 12.5% overhead).
+pub struct Secded7264;
+
+impl Protection for Secded7264 {
+    fn name(&self) -> &'static str {
+        "ecc"
+    }
+    fn ecc_hw(&self) -> bool {
+        true
+    }
+    fn overhead(&self) -> f64 {
+        0.125
+    }
+    fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
+        anyhow::ensure!(
+            weights.len() % 8 == 0,
+            "weight buffer must be whole 64-bit blocks"
+        );
+        let code = secded::code_7264();
+        let data: Vec<u8> = weights.iter().map(|&w| w as u8).collect();
+        let mut oob = vec![0u8; weights.len() / 8];
+        // With unit check columns, the check byte IS the data syndrome.
+        for (o, chunk) in oob.iter_mut().zip(data.chunks_exact(8)) {
+            *o = code.syndrome_u64(u64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(Encoded {
+            data,
+            oob,
+            n: weights.len(),
+        })
+    }
+    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+        let code = secded::code_7264();
+        let mut stats = DecodeStats::default();
+        for (bi, chunk) in enc.data.chunks_exact(8).enumerate() {
+            let mut w = u64::from_le_bytes(chunk.try_into().unwrap());
+            let s = code.syndrome_u64(w) ^ code.syndrome_oob(enc.oob[bi]);
+            if s != 0 {
+                match code.correction(s) {
+                    Some(pos) if pos < 64 => {
+                        w ^= 1u64 << pos;
+                        stats.corrected += 1;
+                    }
+                    Some(_) => stats.corrected += 1, // flip was in the check byte
+                    None => stats.detected += 1,
+                }
+            }
+            let bytes = w.to_le_bytes();
+            for (o, &b) in out[bi * 8..bi * 8 + 8].iter_mut().zip(&bytes) {
+                *o = b as i8;
+            }
+        }
+        stats
+    }
+    fn scrub(&self, enc: &mut Encoded) -> DecodeStats {
+        let code = secded::code_7264();
+        let mut stats = DecodeStats::default();
+        for (bi, chunk) in enc.data.chunks_exact_mut(8).enumerate() {
+            let w = u64::from_le_bytes((&*chunk).try_into().unwrap());
+            let s = code.syndrome_u64(w) ^ code.syndrome_oob(enc.oob[bi]);
+            if s == 0 {
+                continue;
+            }
+            match code.correction(s) {
+                Some(pos) if pos < 64 => {
+                    chunk.copy_from_slice(&(w ^ (1u64 << pos)).to_le_bytes());
+                    stats.corrected += 1;
+                }
+                Some(pos) => {
+                    enc.oob[bi] ^= 1 << (pos - 64);
+                    stats.corrected += 1;
+                }
+                None => stats.detected += 1, // leave stored image as-is
+            }
+        }
+        stats
+    }
+}
+
+// --------------------------------------------------- in-place (64,57) --
+
+/// The paper's contribution: in-place zero-space ECC.
+pub struct InplaceZs;
+
+impl Protection for InplaceZs {
+    fn name(&self) -> &'static str {
+        "in-place"
+    }
+    fn ecc_hw(&self) -> bool {
+        true
+    }
+    fn overhead(&self) -> f64 {
+        0.0
+    }
+    fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
+        anyhow::ensure!(
+            weights.len() % 8 == 0,
+            "weight buffer must be whole 64-bit blocks"
+        );
+        if !inplace::satisfies_constraint(weights) {
+            let viol = inplace::constraint_violations(weights);
+            anyhow::bail!(
+                "WOT constraint violated at {} positions (first: {:?}) — run WOT first",
+                viol.len(),
+                &viol[..viol.len().min(4)]
+            );
+        }
+        let mut data: Vec<u8> = weights.iter().map(|&w| w as u8).collect();
+        let cx = inplace::ctx();
+        for chunk in data.chunks_exact_mut(8) {
+            let w = u64::from_le_bytes((&*chunk).try_into().unwrap());
+            chunk.copy_from_slice(&inplace::encode_u64_with(cx, w).to_le_bytes());
+        }
+        Ok(Encoded {
+            data,
+            oob: Vec::new(),
+            n: weights.len(),
+        })
+    }
+    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+        let mut stats = DecodeStats::default();
+        let cx = inplace::ctx();
+        for (bi, chunk) in enc.data.chunks_exact(8).enumerate() {
+            let (w, outcome) =
+                inplace::decode_u64_with(cx, u64::from_le_bytes(chunk.try_into().unwrap()));
+            match outcome {
+                Outcome::Clean => {}
+                Outcome::Corrected(_) => stats.corrected += 1,
+                Outcome::Detected => stats.detected += 1,
+            }
+            let bytes = w.to_le_bytes();
+            for (o, &b) in out[bi * 8..bi * 8 + 8].iter_mut().zip(&bytes) {
+                *o = b as i8;
+            }
+        }
+        stats
+    }
+    fn scrub(&self, enc: &mut Encoded) -> DecodeStats {
+        let mut stats = DecodeStats::default();
+        let cx = inplace::ctx();
+        for chunk in enc.data.chunks_exact_mut(8) {
+            let (w, outcome) =
+                inplace::scrub_u64_with(cx, u64::from_le_bytes((&*chunk).try_into().unwrap()));
+            match outcome {
+                Outcome::Clean => {}
+                Outcome::Corrected(_) => {
+                    stats.corrected += 1;
+                    chunk.copy_from_slice(&w.to_le_bytes());
+                }
+                Outcome::Detected => stats.detected += 1,
+            }
+        }
+        stats
+    }
+}
+
+// ------------------------------------------------------ BCH extension --
+
+/// Zero-space double-error correction over 16-byte blocks (extended WOT
+/// constraint: first 15 weights of each block in [-32, 31]).
+pub struct Bch16;
+
+impl Protection for Bch16 {
+    fn name(&self) -> &'static str {
+        "bch16"
+    }
+    fn ecc_hw(&self) -> bool {
+        true
+    }
+    fn overhead(&self) -> f64 {
+        0.0
+    }
+    fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
+        anyhow::ensure!(
+            weights.len() % bch::BLOCK == 0,
+            "weight buffer must be whole 128-bit blocks"
+        );
+        if !bch::satisfies_constraint_ext(weights) {
+            let viol = bch::constraint_violations_ext(weights);
+            anyhow::bail!(
+                "extended WOT constraint violated at {} positions",
+                viol.len()
+            );
+        }
+        let mut data: Vec<u8> = weights.iter().map(|&w| w as u8).collect();
+        for chunk in data.chunks_exact_mut(bch::BLOCK) {
+            let block: &mut [u8; bch::BLOCK] = chunk.try_into().unwrap();
+            bch::encode_block(block);
+        }
+        Ok(Encoded {
+            data,
+            oob: Vec::new(),
+            n: weights.len(),
+        })
+    }
+    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+        let mut stats = DecodeStats::default();
+        let mut block = [0u8; bch::BLOCK];
+        for (bi, chunk) in enc.data.chunks_exact(bch::BLOCK).enumerate() {
+            block.copy_from_slice(chunk);
+            match bch::decode_block(&mut block) {
+                bch::BchOutcome::Clean => {}
+                bch::BchOutcome::Corrected(_) => stats.corrected += 1,
+                bch::BchOutcome::Detected => stats.detected += 1,
+            }
+            let at = bi * bch::BLOCK;
+            for (o, &b) in out[at..at + bch::BLOCK].iter_mut().zip(&block) {
+                *o = b as i8;
+            }
+        }
+        stats
+    }
+}
+
+// -------------------------------------------------------------- lookup --
+
+/// The paper's Table-2 strategy set, in row order.
+pub fn all_strategies() -> Vec<Box<dyn Protection>> {
+    vec![
+        Box::new(Unprotected),
+        Box::new(ParityZero),
+        Box::new(Secded7264),
+        Box::new(InplaceZs),
+    ]
+}
+
+/// Lookup by paper name (includes the bch16 extension).
+pub fn strategy_by_name(name: &str) -> anyhow::Result<Box<dyn Protection>> {
+    Ok(match name {
+        "faulty" => Box::new(Unprotected) as Box<dyn Protection>,
+        "zero" => Box::new(ParityZero),
+        "ecc" => Box::new(Secded7264),
+        "in-place" | "inplace" => Box::new(InplaceZs),
+        "bch16" => Box::new(Bch16),
+        _ => anyhow::bail!("unknown strategy '{name}' (faulty|zero|ecc|in-place|bch16)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn wot_weights(n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 8 == 7 {
+                    (rng.below(256) as i64 - 128) as i8
+                } else {
+                    (rng.below(128) as i64 - 64) as i8
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_strategies_roundtrip_clean() {
+        let w = wot_weights(1024, 5);
+        for s in all_strategies() {
+            let enc = s.encode(&w).unwrap();
+            let mut out = vec![0i8; w.len()];
+            let stats = s.decode(&enc, &mut out);
+            assert_eq!(out, w, "{} altered clean weights", s.name());
+            assert_eq!(stats, DecodeStats::default());
+        }
+    }
+
+    #[test]
+    fn overheads_match_paper() {
+        assert_eq!(strategy_by_name("faulty").unwrap().overhead(), 0.0);
+        assert_eq!(strategy_by_name("zero").unwrap().overhead(), 0.125);
+        assert_eq!(strategy_by_name("ecc").unwrap().overhead(), 0.125);
+        assert_eq!(strategy_by_name("in-place").unwrap().overhead(), 0.0);
+        let w = wot_weights(800, 6);
+        // overhead accounting must match actual storage
+        for s in all_strategies() {
+            let enc = s.encode(&w).unwrap();
+            let expect = (w.len() as f64 * s.overhead()).round() as usize;
+            assert_eq!(enc.oob.len(), expect, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn inplace_rejects_unthrottled() {
+        let mut w = wot_weights(64, 7);
+        w[1] = 100; // violates
+        assert!(strategy_by_name("in-place").unwrap().encode(&w).is_err());
+    }
+
+    #[test]
+    fn ecc_and_inplace_correct_single_flip_per_block() {
+        let w = wot_weights(512, 8);
+        for name in ["ecc", "in-place"] {
+            let s = strategy_by_name(name).unwrap();
+            let mut enc = s.encode(&w).unwrap();
+            let mut rng = Rng::new(9);
+            // one flip in each block's stored bits
+            let nblocks = w.len() / 8;
+            for bi in 0..nblocks {
+                let bit = rng.below(64);
+                enc.flip_bit(bi as u64 * 64 + bit);
+            }
+            let mut out = vec![0i8; w.len()];
+            let stats = s.decode(&enc, &mut out);
+            assert_eq!(out, w, "{name} must correct 1 flip/block");
+            assert_eq!(stats.corrected, nblocks as u64, "{name}");
+        }
+    }
+
+    #[test]
+    fn zero_strategy_zeroes_detected() {
+        let w = wot_weights(64, 10);
+        let s = strategy_by_name("zero").unwrap();
+        let mut enc = s.encode(&w).unwrap();
+        enc.data[5] ^= 0x04;
+        let mut out = vec![0i8; w.len()];
+        let stats = s.decode(&enc, &mut out);
+        assert_eq!(out[5], 0);
+        assert_eq!(stats.zeroed, 1);
+        for (i, (&a, &b)) in out.iter().zip(&w).enumerate() {
+            if i != 5 {
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn scrub_heals_single_then_survives_second_flip() {
+        // The scrubbing rationale: two flips separated by a scrub are
+        // both correctable; without scrub they'd be a double error.
+        let w = wot_weights(8, 11);
+        let s = strategy_by_name("in-place").unwrap();
+        let mut enc = s.encode(&w).unwrap();
+        enc.flip_bit(3);
+        let stats = s.scrub(&mut enc);
+        assert_eq!(stats.corrected, 1);
+        enc.flip_bit(40);
+        let mut out = vec![0i8; 8];
+        let stats = s.decode(&enc, &mut out);
+        assert_eq!(stats.corrected, 1);
+        assert_eq!(out, w);
+    }
+
+    #[test]
+    fn bch16_corrects_double_flip_in_block() {
+        let mut rng = Rng::new(12);
+        let w: Vec<i8> = (0..160)
+            .map(|i| {
+                if i % 16 == 15 {
+                    (rng.below(256) as i64 - 128) as i8
+                } else {
+                    (rng.below(64) as i64 - 32) as i8
+                }
+            })
+            .collect();
+        let s = strategy_by_name("bch16").unwrap();
+        let mut enc = s.encode(&w).unwrap();
+        enc.flip_bit(3);
+        enc.flip_bit(77); // same 128-bit block
+        let mut out = vec![0i8; w.len()];
+        let stats = s.decode(&enc, &mut out);
+        assert_eq!(out, w, "bch16 must correct a double flip");
+        assert_eq!(stats.corrected, 1);
+    }
+}

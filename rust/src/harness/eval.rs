@@ -1,0 +1,109 @@
+//! Shared evaluation machinery: one loaded (model, executable, dataset)
+//! context on which protected-memory accuracy experiments run.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::ecc::strategy_by_name;
+use crate::memory::{FaultModel, MemoryBank};
+use crate::model::{load_weights, EvalSet, Manifest};
+use crate::quant::dequantize_into;
+use crate::runtime::{accuracy, Executable, Runtime};
+
+/// Stable per-cell seed so every Table-2 trial is reproducible and
+/// independent across (model, strategy, rate, trial).
+pub fn cell_seed(model: &str, strategy: &str, rate: f64, trial: u64) -> u64 {
+    // FNV-1a over the cell key.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in model
+        .bytes()
+        .chain(strategy.bytes())
+        .chain(format!("{rate:e}").bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ trial.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// A loaded evaluation context for one model.
+pub struct EvalCtx {
+    pub man: Manifest,
+    pub weights: Vec<i8>,
+    pub rt: Arc<Runtime>,
+    pub exe: Executable,
+    pub ds: Arc<EvalSet>,
+    /// Fault-free accuracy of the int8 (post-WOT) model, measured
+    /// through the exact rust path; Table-2 drops subtract this.
+    pub base_acc: f64,
+    // scratch
+    qbuf: Vec<i8>,
+    fbuf: Vec<f32>,
+}
+
+impl EvalCtx {
+    pub fn load(
+        artifacts: &Path,
+        model: &str,
+        batch: usize,
+        rt: Arc<Runtime>,
+        ds: Arc<EvalSet>,
+    ) -> anyhow::Result<EvalCtx> {
+        let man = Manifest::load_model(artifacts, model)?;
+        let weights = load_weights(&man.weights_path(), man.num_weights)?;
+        let exe = rt.load_model(&man, batch)?;
+        let mut ctx = EvalCtx {
+            qbuf: vec![0i8; weights.len()],
+            fbuf: vec![0f32; weights.len()],
+            man,
+            weights,
+            rt,
+            exe,
+            ds,
+            base_acc: 0.0,
+        };
+        ctx.base_acc = ctx.accuracy_of(&ctx.weights.clone())?;
+        Ok(ctx)
+    }
+
+    /// Accuracy of an arbitrary int8 weight buffer through PJRT.
+    pub fn accuracy_of(&mut self, q: &[i8]) -> anyhow::Result<f64> {
+        dequantize_into(q, &self.man.layers, &mut self.fbuf);
+        let wbuf = self.rt.bind_weights(&self.fbuf)?;
+        accuracy(&self.rt, &self.exe, &wbuf, &self.ds)
+    }
+
+    /// One Table-2 trial: encode with `strategy`, inject `rate` faults,
+    /// decode, measure accuracy. Returns (accuracy, corrected, detected).
+    pub fn faulty_trial(
+        &mut self,
+        strategy: &str,
+        model: FaultModel,
+        rate: f64,
+        seed: u64,
+    ) -> anyhow::Result<(f64, u64, u64)> {
+        let strat = strategy_by_name(strategy)?;
+        let mut bank = MemoryBank::new(strat, &self.weights)?;
+        bank.inject(model, rate, seed);
+        let mut q = std::mem::take(&mut self.qbuf);
+        let stats = bank.read(&mut q);
+        let acc = self.accuracy_of(&q)?;
+        self.qbuf = q;
+        Ok((acc, stats.corrected, stats.detected))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_seed_varies_per_axis() {
+        let s0 = cell_seed("m", "ecc", 1e-4, 0);
+        assert_ne!(s0, cell_seed("m", "ecc", 1e-4, 1));
+        assert_ne!(s0, cell_seed("m", "ecc", 1e-3, 0));
+        assert_ne!(s0, cell_seed("m", "zero", 1e-4, 0));
+        assert_ne!(s0, cell_seed("n", "ecc", 1e-4, 0));
+        assert_eq!(s0, cell_seed("m", "ecc", 1e-4, 0), "stable");
+    }
+}

@@ -1,0 +1,91 @@
+//! Figure 1: distribution of large weights (outside [-64, 63]) over the
+//! byte positions of 8-byte blocks, computed on the *pre-WOT* buffers.
+//! The paper's point: the distribution is close to uniform, so in-place
+//! ECC cannot rely on large weights landing at a fixed position — which
+//! is exactly what WOT then enforces.
+
+use std::path::Path;
+
+use crate::model::{load_weights, Manifest};
+use crate::quant::large_position_histogram;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::plot;
+
+#[derive(Clone, Debug)]
+pub struct Fig1 {
+    pub model: String,
+    pub pre_wot: [u64; 8],
+    pub post_wot: [u64; 8],
+}
+
+pub fn run(artifacts: &Path, models: &[String]) -> anyhow::Result<Vec<Fig1>> {
+    let mut out = Vec::new();
+    for model in models {
+        let man = Manifest::load_model(artifacts, model)?;
+        let pre = load_weights(&man.prewot_path(), man.num_weights)?;
+        let post = load_weights(&man.weights_path(), man.num_weights)?;
+        out.push(Fig1 {
+            model: model.clone(),
+            pre_wot: large_position_histogram(&pre),
+            post_wot: large_position_histogram(&post),
+        });
+    }
+    Ok(out)
+}
+
+pub fn render(figs: &[Fig1]) -> String {
+    let mut out = String::new();
+    for f in figs {
+        let labels: Vec<String> = (0..8).map(|i| format!("byte {i}")).collect();
+        out.push_str(&plot::bar_chart(
+            &format!("Fig 1 ({}): large-weight positions, pre-WOT", f.model),
+            &labels,
+            &f.pre_wot.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            40,
+        ));
+        out.push_str(&plot::bar_chart(
+            &format!("Fig 1 ({}): after WOT (positions 0..6 must be 0)", f.model),
+            &labels,
+            &f.post_wot.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            40,
+        ));
+        let viol: u64 = f.post_wot[..7].iter().sum();
+        out.push_str(&format!(
+            "   post-WOT violations in positions 0..6: {viol} (must be 0)\n\n"
+        ));
+    }
+    out
+}
+
+/// Uniformity check: is each pre-WOT position within `tol` relative
+/// deviation of the mean? (The paper's "close to uniform".)
+pub fn is_roughly_uniform(h: &[u64; 8], tol: f64) -> bool {
+    let mean = h.iter().sum::<u64>() as f64 / 8.0;
+    if mean == 0.0 {
+        return true;
+    }
+    h.iter()
+        .all(|&v| ((v as f64) - mean).abs() / mean <= tol)
+}
+
+pub fn to_json(figs: &[Fig1]) -> Json {
+    arr(figs.iter().map(|f| {
+        obj(vec![
+            ("model", s(&f.model)),
+            ("pre_wot", arr(f.pre_wot.iter().map(|&v| num(v as f64)))),
+            ("post_wot", arr(f.post_wot.iter().map(|&v| num(v as f64)))),
+        ])
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniformity_check() {
+        assert!(is_roughly_uniform(&[10, 11, 9, 10, 10, 12, 9, 10], 0.3));
+        assert!(!is_roughly_uniform(&[0, 0, 0, 0, 0, 0, 0, 80], 0.3));
+        assert!(is_roughly_uniform(&[0; 8], 0.3), "empty is fine");
+    }
+}

@@ -1,0 +1,126 @@
+//! Figures 3 and 4: the WOT training dynamics, from `<m>.wot_log.json`
+//! (written by python/compile/wot.py at build time).
+//!
+//! Fig 3 — number of large values in positions 0..6 of 8-byte blocks
+//! *before* each throttling step (decays toward 0 as training adapts).
+//! Fig 4 — eval accuracy before vs after throttling (the gap closes and
+//! the post-throttle accuracy recovers the int8 baseline).
+
+use std::path::Path;
+
+use crate::model::Manifest;
+use crate::util::json::Json;
+use crate::util::plot;
+
+#[derive(Clone, Debug)]
+pub struct WotLog {
+    pub model: String,
+    pub steps: Vec<f64>,
+    pub n_large: Vec<f64>,
+    pub acc_before: Vec<f64>,
+    pub acc_after: Vec<f64>,
+    pub final_acc: f64,
+    pub int8_acc: f64,
+}
+
+pub fn load_log(path: &Path) -> anyhow::Result<WotLog> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    let nums = |key: &str| -> anyhow::Result<Vec<f64>> {
+        Ok(j.req(key)?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .collect())
+    };
+    Ok(WotLog {
+        model: j
+            .get("model")
+            .and_then(|m| m.as_str())
+            .unwrap_or("?")
+            .to_string(),
+        steps: nums("step")?,
+        n_large: nums("n_large")?,
+        acc_before: nums("acc_before")?,
+        acc_after: nums("acc_after")?,
+        final_acc: j.req("final_acc")?.as_f64().unwrap_or(0.0),
+        int8_acc: j
+            .get("int8_acc")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN),
+    })
+}
+
+pub fn run(artifacts: &Path, models: &[String]) -> anyhow::Result<Vec<WotLog>> {
+    models
+        .iter()
+        .map(|m| {
+            let man = Manifest::load_model(artifacts, m)?;
+            load_log(&man.wot_log_path())
+        })
+        .collect()
+}
+
+pub fn render_fig3(logs: &[WotLog]) -> String {
+    let mut out = String::new();
+    for l in logs {
+        out.push_str(&plot::line_plot(
+            &format!(
+                "Fig 3 ({}): large values in positions 0..6 before throttling",
+                l.model
+            ),
+            &l.steps,
+            &[("n_large", l.n_large.clone())],
+            10,
+            60,
+        ));
+        out.push_str(&format!(
+            "   start={} end={} (paper: thousands -> ~0)\n\n",
+            l.n_large.first().unwrap_or(&0.0),
+            l.n_large.last().unwrap_or(&0.0)
+        ));
+    }
+    out
+}
+
+pub fn render_fig4(logs: &[WotLog]) -> String {
+    let mut out = String::new();
+    for l in logs {
+        out.push_str(&plot::line_plot(
+            &format!("Fig 4 ({}): accuracy before/after throttling", l.model),
+            &l.steps,
+            &[
+                ("before", l.acc_before.clone()),
+                ("after", l.acc_after.clone()),
+            ],
+            12,
+            60,
+        ));
+        out.push_str(&format!(
+            "   int8 baseline={:.4}  final (after WOT, throttled)={:.4}\n\n",
+            l.int8_acc, l.final_acc
+        ));
+    }
+    out
+}
+
+/// Machine-checkable shape claims for the integration test.
+pub fn shape_checks(logs: &[WotLog]) -> Vec<(String, bool)> {
+    let mut checks = Vec::new();
+    for l in logs {
+        let first = *l.n_large.first().unwrap_or(&0.0);
+        let last = *l.n_large.last().unwrap_or(&0.0);
+        checks.push((
+            format!("{}: Fig3 large-count decays (start {first} -> end {last})", l.model),
+            last <= first * 0.2 || last <= 16.0,
+        ));
+        checks.push((
+            format!(
+                "{}: Fig4 final acc recovers int8 within 3 points ({:.3} vs {:.3})",
+                l.model, l.final_acc, l.int8_acc
+            ),
+            l.final_acc >= l.int8_acc - 0.03,
+        ));
+    }
+    checks
+}

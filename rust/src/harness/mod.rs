@@ -1,0 +1,15 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md section 4 for the experiment index).
+//!
+//! Each module exposes a `run(...) -> Report` used both by the `zsecc`
+//! CLI subcommands and by the corresponding bench binaries; reports
+//! print the paper-shaped rows and can be dumped as JSON.
+
+pub mod ablation;
+pub mod eval;
+pub mod fig1;
+pub mod fig34;
+pub mod table1;
+pub mod table2;
+
+pub use eval::EvalCtx;

@@ -1,0 +1,123 @@
+//! Table 1: accuracy and weight-magnitude distribution of the 8-bit
+//! quantized model zoo — the observation motivating in-place ECC
+//! (>99% of weights in [-64, 63] for well-trained CNNs).
+//!
+//! Accuracies (float32 / int8) come from the manifest (python measured
+//! them at train time); the int8 accuracy is *re-measured* through the
+//! rust PJRT path on the pre-WOT artifact as a cross-language check, and
+//! the distribution bands are computed from the pre-WOT int8 buffer.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::model::{load_weights, EvalSet, Manifest};
+use crate::quant::{distribution_bands, dequantize_into};
+use crate::runtime::{accuracy, Runtime};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::plot;
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub model: String,
+    pub n_weights: usize,
+    pub float_acc: f64,
+    pub int8_acc: f64,
+    /// int8 accuracy re-measured via the rust PJRT path (pre-WOT HLO).
+    pub int8_acc_rust: Option<f64>,
+    pub band0: f64, // |q| in [0, 32)
+    pub band1: f64, // [32, 64)
+    pub band2: f64, // [64, 128]
+}
+
+pub fn run(
+    artifacts: &Path,
+    models: &[String],
+    remeasure: bool,
+) -> anyhow::Result<Vec<Row>> {
+    let rt = if remeasure { Some(Runtime::cpu()?) } else { None };
+    let ds = if remeasure {
+        Some(Arc::new(EvalSet::load(&artifacts.join("dataset.eval.bin"))?))
+    } else {
+        None
+    };
+    let mut rows = Vec::new();
+    for model in models {
+        let man = Manifest::load_model(artifacts, model)?;
+        let q = load_weights(&man.prewot_path(), man.num_weights)?;
+        let (b0, b1, b2) = distribution_bands(&q);
+        let int8_acc_rust = match (&rt, &ds) {
+            (Some(rt), Some(ds)) => {
+                let batch = *man.batches.iter().max().unwrap();
+                let exe = rt.load(&man.hlo_prewot_path(batch)?, batch, &man)?;
+                let mut f = vec![0f32; q.len()];
+                dequantize_into(&q, &man.layers_prewot(), &mut f);
+                let wbuf = rt.bind_weights(&f)?;
+                Some(accuracy(rt, &exe, &wbuf, ds)?)
+            }
+            _ => None,
+        };
+        rows.push(Row {
+            model: model.clone(),
+            n_weights: man.num_weights,
+            float_acc: man.float_acc,
+            int8_acc: man.int8_acc,
+            int8_acc_rust,
+            band0: b0,
+            band1: b1,
+            band2: b2,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let headers = [
+        "Model",
+        "#weights",
+        "Float32 acc",
+        "Int8 acc",
+        "Int8 acc (rust)",
+        "[0,32) %",
+        "[32,64) %",
+        "[64,128] %",
+    ];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                format!("{}", r.n_weights),
+                format!("{:.2}", r.float_acc * 100.0),
+                format!("{:.2}", r.int8_acc * 100.0),
+                r.int8_acc_rust
+                    .map(|a| format!("{:.2}", a * 100.0))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.2}", r.band0 * 100.0),
+                format!("{:.2}", r.band1 * 100.0),
+                format!("{:.2}", r.band2 * 100.0),
+            ]
+        })
+        .collect();
+    format!(
+        "Table 1: accuracy and weight distribution of 8-bit quantized models\n{}",
+        plot::table(&headers, &body)
+    )
+}
+
+pub fn to_json(rows: &[Row]) -> Json {
+    arr(rows.iter().map(|r| {
+        obj(vec![
+            ("model", s(&r.model)),
+            ("n_weights", num(r.n_weights as f64)),
+            ("float_acc", num(r.float_acc)),
+            ("int8_acc", num(r.int8_acc)),
+            (
+                "int8_acc_rust",
+                r.int8_acc_rust.map(num).unwrap_or(Json::Null),
+            ),
+            ("band_0_32", num(r.band0)),
+            ("band_32_64", num(r.band1)),
+            ("band_64_128", num(r.band2)),
+        ])
+    }))
+}

@@ -1,0 +1,223 @@
+//! Table 2: accuracy drop under memory fault rates x protection
+//! strategies (the paper's headline experiment).
+//!
+//! For every (model, strategy, fault-rate) cell we run `trials`
+//! independent fault injections and report mean ± std of the accuracy
+//! drop relative to the fault-free int8 model, plus the ECC-HW column
+//! and the exact space overhead of the stored image.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::ecc::strategy_by_name;
+use crate::harness::eval::{cell_seed, EvalCtx};
+use crate::memory::{FaultModel, MemoryBank};
+use crate::model::EvalSet;
+use crate::runtime::Runtime;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::plot;
+use crate::util::stats;
+
+pub const PAPER_RATES: [f64; 4] = [1e-6, 1e-5, 1e-4, 1e-3];
+pub const PAPER_STRATEGIES: [&str; 4] = ["faulty", "zero", "ecc", "in-place"];
+pub const PAPER_MODELS: [&str; 3] = ["vgg16_s", "resnet18_s", "squeezenet_s"];
+
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub model: String,
+    pub strategy: String,
+    pub rate: f64,
+    pub drops: Vec<f64>, // percentage points, one per trial
+    pub corrected: u64,
+    pub detected: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Table2 {
+    pub cells: Vec<Cell>,
+    pub base_acc: std::collections::BTreeMap<String, f64>,
+    pub trials: usize,
+}
+
+pub struct Config {
+    pub models: Vec<String>,
+    pub strategies: Vec<String>,
+    pub rates: Vec<f64>,
+    pub trials: usize,
+    pub batch: usize,
+    pub fault_model: FaultModel,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            models: PAPER_MODELS.iter().map(|s| s.to_string()).collect(),
+            strategies: PAPER_STRATEGIES.iter().map(|s| s.to_string()).collect(),
+            rates: PAPER_RATES.to_vec(),
+            trials: 10,
+            batch: 256,
+            fault_model: FaultModel::Uniform,
+        }
+    }
+}
+
+pub fn run(artifacts: &Path, cfg: &Config, verbose: bool) -> anyhow::Result<Table2> {
+    let rt = Runtime::cpu()?;
+    let ds = Arc::new(EvalSet::load(&artifacts.join("dataset.eval.bin"))?);
+    let mut cells = Vec::new();
+    let mut base_acc = std::collections::BTreeMap::new();
+    for model in &cfg.models {
+        let mut ctx = EvalCtx::load(artifacts, model, cfg.batch, rt.clone(), ds.clone())?;
+        base_acc.insert(model.clone(), ctx.base_acc);
+        if verbose {
+            eprintln!("[{model}] fault-free int8 acc = {:.4}", ctx.base_acc);
+        }
+        for strategy in &cfg.strategies {
+            for &rate in &cfg.rates {
+                let mut cell = Cell {
+                    model: model.clone(),
+                    strategy: strategy.clone(),
+                    rate,
+                    drops: Vec::with_capacity(cfg.trials),
+                    corrected: 0,
+                    detected: 0,
+                };
+                for t in 0..cfg.trials {
+                    let seed = cell_seed(model, strategy, rate, t as u64);
+                    let (acc, corr, det) =
+                        ctx.faulty_trial(strategy, cfg.fault_model, rate, seed)?;
+                    cell.drops.push((ctx.base_acc - acc) * 100.0);
+                    cell.corrected += corr;
+                    cell.detected += det;
+                }
+                if verbose {
+                    eprintln!(
+                        "[{model}] {strategy:>8} rate={rate:>7.0e} drop={}",
+                        stats::mean_std_str(&cell.drops)
+                    );
+                }
+                cells.push(cell);
+            }
+        }
+    }
+    Ok(Table2 {
+        cells,
+        base_acc,
+        trials: cfg.trials,
+    })
+}
+
+impl Table2 {
+    /// Render the paper-shaped table.
+    pub fn render(&self, cfg: &Config) -> String {
+        let mut rows = Vec::new();
+        for model in &cfg.models {
+            for strategy in &cfg.strategies {
+                let strat = strategy_by_name(strategy).unwrap();
+                // measured overhead straight from a real encode
+                let image = MemoryBank::new(
+                    strategy_by_name(strategy).unwrap(),
+                    &vec![0i8; 64],
+                )
+                .unwrap();
+                let mut row = vec![
+                    model.clone(),
+                    strategy.clone(),
+                    if strat.ecc_hw() { "Y" } else { "N" }.to_string(),
+                    format!("{:.1}", image.overhead() * 100.0),
+                ];
+                for &rate in &cfg.rates {
+                    let cell = self
+                        .cells
+                        .iter()
+                        .find(|c| {
+                            &c.model == model && &c.strategy == strategy && c.rate == rate
+                        })
+                        .unwrap();
+                    row.push(stats::mean_std_str(&cell.drops));
+                }
+                rows.push(row);
+            }
+        }
+        let mut headers = vec!["Model", "Strategy", "ECC HW", "Overhead %"];
+        let rate_hdrs: Vec<String> = cfg.rates.iter().map(|r| format!("{r:.0e}")).collect();
+        headers.extend(rate_hdrs.iter().map(|s| s.as_str()));
+        format!(
+            "Table 2: accuracy drop (%) under memory fault rates ({} trials)\n{}",
+            self.trials,
+            plot::table(&headers, &rows)
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("trials", num(self.trials as f64)),
+            (
+                "base_acc",
+                Json::Obj(
+                    self.base_acc
+                        .iter()
+                        .map(|(k, v)| (k.clone(), num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "cells",
+                arr(self.cells.iter().map(|c| {
+                    obj(vec![
+                        ("model", s(&c.model)),
+                        ("strategy", s(&c.strategy)),
+                        ("rate", num(c.rate)),
+                        ("drop_mean", num(stats::mean(&c.drops))),
+                        ("drop_std", num(stats::std(&c.drops))),
+                        ("drops", arr(c.drops.iter().map(|d| num(*d)))),
+                        ("corrected", num(c.corrected as f64)),
+                        ("detected", num(c.detected as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// The paper's qualitative claims, as machine-checkable predicates —
+    /// used by the integration test and printed after the table.
+    pub fn shape_checks(&self, cfg: &Config) -> Vec<(String, bool)> {
+        let mean_drop = |m: &str, st: &str, r: f64| -> f64 {
+            self.cells
+                .iter()
+                .find(|c| c.model == m && c.strategy == st && c.rate == r)
+                .map(|c| stats::mean(&c.drops))
+                .unwrap_or(f64::NAN)
+        };
+        let mut checks = Vec::new();
+        let hi = *cfg
+            .rates
+            .last()
+            .unwrap_or(&1e-3);
+        for m in &cfg.models {
+            // 1. at the highest rate protection helps: faulty >> ecc
+            checks.push((
+                format!("{m}: faulty drop > ecc drop at {hi:.0e}"),
+                mean_drop(m, "faulty", hi) > mean_drop(m, "ecc", hi),
+            ));
+            // 2. in-place ≈ ecc at every rate (within 2 percentage points
+            //    or both tiny) — the headline equivalence
+            let mut ok = true;
+            for &r in &cfg.rates {
+                let a = mean_drop(m, "in-place", r);
+                let b = mean_drop(m, "ecc", r);
+                if (a - b).abs() > 2.0 && a.max(b) > 0.5 {
+                    ok = false;
+                }
+            }
+            checks.push((format!("{m}: in-place ≈ ecc at all rates"), ok));
+            // 3. zero is between faulty and ecc at the highest rate
+            checks.push((
+                format!("{m}: ecc <= zero <= faulty ordering at {hi:.0e}"),
+                mean_drop(m, "ecc", hi) <= mean_drop(m, "zero", hi) + 0.5
+                    && mean_drop(m, "zero", hi) <= mean_drop(m, "faulty", hi) + 0.5,
+            ));
+        }
+        checks
+    }
+}

@@ -1,0 +1,51 @@
+//! zsecc — In-Place Zero-Space Memory Protection for CNN (NeurIPS 2019).
+//!
+//! Three-layer reproduction: this crate is Layer 3 — the memory-protection
+//! subsystem (ECC codes, fault injection, scrubbing), the model/artifact
+//! loaders, the PJRT runtime that executes the AOT-compiled JAX/Pallas
+//! inference graphs, a thread-based serving coordinator, and the harness
+//! that regenerates every table and figure of the paper's evaluation.
+//!
+//! Layout:
+//! * [`ecc`] — the paper's contribution: in-place zero-space ECC plus the
+//!   baselines (SEC-DED (72,64), parity-zero, unprotected) and the
+//!   future-work BCH-style extension.
+//! * [`memory`] — encoded weight memory: fault injection + scrubbing.
+//! * [`quant`] — int8 weight buffers and per-layer dequantization.
+//! * [`model`] — artifact manifests, weight/dataset loaders.
+//! * [`runtime`] — PJRT CPU client wrapper (HLO text -> executable).
+//! * [`coordinator`] — request router, dynamic batcher, protected
+//!   weight store, metrics.
+//! * [`harness`] — Table 1 / Table 2 / Fig 1 / Fig 3 / Fig 4 + ablations.
+//! * [`util`] — substrates the offline build denies us as crates: JSON,
+//!   PRNG, CLI parsing, stats, ASCII plots, a bench timer.
+
+pub mod coordinator;
+pub mod ecc;
+pub mod harness;
+pub mod memory;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: honours `ZSECC_ARTIFACTS`, else walks
+/// up from the current dir looking for `artifacts/index.json`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("ZSECC_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("index.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

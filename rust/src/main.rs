@@ -1,0 +1,218 @@
+//! zsecc CLI — the Layer-3 leader binary.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//!   table1, table2, fig1, fig3, fig4   reproduce the paper's numbers
+//!   ablation                           QATT-vs-ADMM, BCH, burst, scrub
+//!   serve                              protected inference serving demo
+//!   info                               artifact inventory
+//!
+//! `--artifacts <dir>` overrides discovery (default: walk up for
+//! ./artifacts with index.json, or $ZSECC_ARTIFACTS).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+use zsecc::harness::{ablation, fig1, fig34, table1, table2};
+use zsecc::model::manifest::list_models;
+use zsecc::util::cli::Args;
+use zsecc::util::rng::Rng;
+
+fn artifacts_from(args: &Args) -> PathBuf {
+    args.str_opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(zsecc::artifacts_dir)
+}
+
+fn parse_rates(args: &Args) -> anyhow::Result<Vec<f64>> {
+    match args.str_opt("rates") {
+        None => Ok(table2::PAPER_RATES.to_vec()),
+        Some(s) => s
+            .split(',')
+            .map(|r| {
+                r.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad rate '{r}'"))
+            })
+            .collect(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = artifacts_from(&args);
+    match args.cmd.as_deref() {
+        Some("info") => {
+            println!("artifacts: {}", artifacts.display());
+            for m in list_models(&artifacts)? {
+                let man = zsecc::model::Manifest::load_model(&artifacts, &m)?;
+                println!(
+                    "  {:<14} {:>9} weights  float={:.3} int8={:.3} wot={:.3}  batches={:?}",
+                    man.model, man.num_weights, man.float_acc, man.int8_acc, man.wot_acc, man.batches
+                );
+            }
+        }
+        Some("table1") => {
+            let models = args.list_or("models", &[]);
+            let models = if models.is_empty() {
+                list_models(&artifacts)?
+            } else {
+                models
+            };
+            let remeasure = !args.bool("no-remeasure");
+            let rows = table1::run(&artifacts, &models, remeasure)?;
+            println!("{}", table1::render(&rows));
+            if args.bool("json") {
+                println!("{}", table1::to_json(&rows).to_string());
+            }
+        }
+        Some("table2") => {
+            let mut cfg = table2::Config {
+                trials: args.usize_or("trials", 10)?,
+                batch: args.usize_or("batch", 256)?,
+                rates: parse_rates(&args)?,
+                ..Default::default()
+            };
+            let models = args.list_or("models", &[]);
+            if !models.is_empty() {
+                cfg.models = models;
+            }
+            let strategies = args.list_or("strategies", &[]);
+            if !strategies.is_empty() {
+                cfg.strategies = strategies;
+            }
+            let t2 = table2::run(&artifacts, &cfg, args.bool("verbose"))?;
+            println!("{}", t2.render(&cfg));
+            println!("shape checks (paper's qualitative claims):");
+            for (name, ok) in t2.shape_checks(&cfg) {
+                println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+            }
+            if args.bool("json") {
+                println!("{}", t2.to_json().to_string());
+            }
+        }
+        Some("fig1") => {
+            let models = args.list_or("models", &["squeezenet_s"]);
+            let figs = fig1::run(&artifacts, &models)?;
+            println!("{}", fig1::render(&figs));
+            if args.bool("json") {
+                println!("{}", fig1::to_json(&figs).to_string());
+            }
+        }
+        Some("fig3") | Some("fig4") => {
+            let models = args.list_or("models", &[]);
+            let models = if models.is_empty() {
+                list_models(&artifacts)?
+            } else {
+                models
+            };
+            let logs = fig34::run(&artifacts, &models)?;
+            if args.cmd.as_deref() == Some("fig3") {
+                println!("{}", fig34::render_fig3(&logs));
+            } else {
+                println!("{}", fig34::render_fig4(&logs));
+            }
+            for (name, ok) in fig34::shape_checks(&logs) {
+                println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
+            }
+        }
+        Some("ablation") => {
+            match ablation::render_admm_vs_qatt(&artifacts) {
+                Ok(s) => println!("{s}"),
+                Err(e) => println!("(admm log unavailable: {e})"),
+            }
+            let rates = [1e-4, 1e-3, 3e-3, 1e-2];
+            let rows = ablation::code_strength(&rates, 64 * 256, 5)?;
+            println!("{}", ablation::render_code_strength(&rows));
+            let brows = ablation::burst(&[1, 2, 4], 1e-3, 64 * 256, 5)?;
+            println!("{}", ablation::render_burst(&brows, 1e-3));
+            let srows = ablation::scrub_study(&[1, 4, 16], 2e-4, 64 * 128)?;
+            println!("{}", ablation::render_scrub(&srows, 2e-4));
+        }
+        Some("serve") => {
+            let model = args.str_or("model", "squeezenet_s");
+            let secs = args.f64_or("seconds", 5.0)?;
+            let rps = args.f64_or("rps", 200.0)?;
+            let cfg = ServerConfig {
+                strategy: args.str_or("strategy", "in-place"),
+                policy: BatchPolicy {
+                    max_batch: args.usize_or("batch", 32)?,
+                    max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)?),
+                },
+                scrub_interval: Some(Duration::from_millis(
+                    args.u64_or("scrub-ms", 200)?,
+                )),
+                fault_rate_per_interval: args.f64_or("fault-rate", 1e-7)?,
+                fault_seed: args.u64_or("seed", 1)?,
+            };
+            serve_demo(&artifacts, &model, cfg, secs, rps)?;
+        }
+        _ => {
+            println!(
+                "zsecc — In-Place Zero-Space Memory Protection for CNN (NeurIPS'19 reproduction)\n\
+                 usage: zsecc <info|table1|table2|fig1|fig3|fig4|ablation|serve> [flags]\n\
+                 common flags: --artifacts DIR --models a,b --json\n\
+                 table2: --trials N --rates 1e-6,1e-5 --strategies faulty,ecc --batch B --verbose\n\
+                 serve:  --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS --fault-rate F"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Poisson open-loop serving demo: drives the coordinator at `rps` for
+/// `secs`, prints throughput / latency / protection counters.
+fn serve_demo(
+    artifacts: &std::path::Path,
+    model: &str,
+    cfg: ServerConfig,
+    secs: f64,
+    rps: f64,
+) -> anyhow::Result<()> {
+    let ds = zsecc::model::EvalSet::load(&artifacts.join("dataset.eval.bin"))?;
+    println!(
+        "serving {model} with strategy={} batch={} scrub={:?} fault-rate={}/interval",
+        cfg.strategy, cfg.policy.max_batch, cfg.scrub_interval, cfg.fault_rate_per_interval
+    );
+    let srv = Server::start_pjrt(artifacts, model, &cfg)?;
+    let mut rng = Rng::new(7);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    let mut sent = 0u64;
+    let mut correct = 0u64;
+    let mut answered = 0u64;
+    while t0.elapsed().as_secs_f64() < secs {
+        let idx = rng.below(ds.n as u64) as usize;
+        let rx = srv.submit(ds.image(idx).to_vec())?;
+        pending.push((rx, ds.labels[idx] as usize));
+        sent += 1;
+        // Drain ready responses opportunistically.
+        pending.retain(|(rx, label)| match rx.try_recv() {
+            Ok(resp) => {
+                answered += 1;
+                if resp.pred == *label {
+                    correct += 1;
+                }
+                false
+            }
+            Err(_) => true,
+        });
+        std::thread::sleep(Duration::from_secs_f64(rng.exp(rps)));
+    }
+    for (rx, label) in pending {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(30)) {
+            answered += 1;
+            if resp.pred == label {
+                correct += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "sent={sent} answered={answered} accuracy={:.4} throughput={:.1} req/s",
+        correct as f64 / answered.max(1) as f64,
+        answered as f64 / wall
+    );
+    println!("metrics: {}", srv.metrics.report());
+    srv.shutdown();
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! `MemoryBank`: the stored, protected weight memory of one model.
+//!
+//! Owns the encoded image plus its protection strategy; the coordinator
+//! holds one bank per served model. Reads decode into an int8 weight
+//! buffer (correcting what the code allows); `scrub` heals the stored
+//! image in place; `inject` lets the environment (or the Table-2
+//! harness) flip stored bits.
+
+use crate::ecc::{DecodeStats, Encoded, Protection};
+use crate::memory::fault::{FaultInjector, FaultModel};
+
+pub struct MemoryBank {
+    strategy: Box<dyn Protection>,
+    image: Encoded,
+    /// Pristine copy for trial resets (Table 2 runs 10 trials/cell).
+    pristine: Encoded,
+    /// Cumulative decode statistics (reported by the coordinator).
+    pub lifetime: DecodeStats,
+    /// Cumulative bits injected.
+    pub faults_injected: u64,
+}
+
+impl MemoryBank {
+    pub fn new(strategy: Box<dyn Protection>, weights: &[i8]) -> anyhow::Result<Self> {
+        let image = strategy.encode(weights)?;
+        Ok(MemoryBank {
+            pristine: image.clone(),
+            image,
+            strategy,
+            lifetime: DecodeStats::default(),
+            faults_injected: 0,
+        })
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.image.n
+    }
+
+    /// Stored bits (data + check storage) — fault-rate denominator.
+    pub fn total_bits(&self) -> u64 {
+        self.image.total_bits()
+    }
+
+    /// Space overhead actually incurred by the stored image.
+    pub fn overhead(&self) -> f64 {
+        self.image.oob.len() as f64 / self.image.data.len() as f64
+    }
+
+    /// Inject faults at `rate` with the given model and seed.
+    pub fn inject(&mut self, model: FaultModel, rate: f64, seed: u64) -> u64 {
+        let mut inj = FaultInjector::new(model, seed);
+        let n = inj.inject(&mut self.image, rate);
+        self.faults_injected += n;
+        n
+    }
+
+    /// Protected read: decode the stored image into `out`.
+    pub fn read(&mut self, out: &mut [i8]) -> DecodeStats {
+        assert_eq!(out.len(), self.image.n);
+        let stats = self.strategy.decode(&self.image, out);
+        self.lifetime.add(&stats);
+        stats
+    }
+
+    /// Scrub pass: correct latent errors in the stored image.
+    pub fn scrub(&mut self) -> DecodeStats {
+        let stats = self.strategy.scrub(&mut self.image);
+        self.lifetime.add(&stats);
+        stats
+    }
+
+    /// Reset the image to its pristine (fault-free) state.
+    pub fn reset(&mut self) {
+        self.image = self.pristine.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ecc::strategy_by_name;
+    use crate::util::rng::Rng;
+
+    fn wot_weights(n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 8 == 7 {
+                    (rng.below(256) as i64 - 128) as i8
+                } else {
+                    (rng.below(128) as i64 - 64) as i8
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn read_after_reset_is_exact() {
+        let w = wot_weights(256, 1);
+        let mut bank =
+            MemoryBank::new(strategy_by_name("in-place").unwrap(), &w).unwrap();
+        bank.inject(FaultModel::Uniform, 0.01, 3);
+        bank.reset();
+        let mut out = vec![0i8; w.len()];
+        let stats = bank.read(&mut out);
+        assert_eq!(out, w);
+        assert_eq!(stats.corrected + stats.detected, 0);
+    }
+
+    #[test]
+    fn low_rate_faults_fully_corrected() {
+        let w = wot_weights(8192, 2);
+        for name in ["ecc", "in-place"] {
+            let mut bank = MemoryBank::new(strategy_by_name(name).unwrap(), &w).unwrap();
+            // rate so low that two flips in one 64-bit block are unlikely
+            bank.inject(FaultModel::Uniform, 1e-4, 7);
+            let mut out = vec![0i8; w.len()];
+            let stats = bank.read(&mut out);
+            assert_eq!(out, w, "{name} at 1e-4 must fully correct");
+            assert!(stats.corrected >= 1);
+            assert_eq!(stats.detected, 0);
+        }
+    }
+
+    #[test]
+    fn scrub_then_clean_read() {
+        let w = wot_weights(1024, 3);
+        let mut bank = MemoryBank::new(strategy_by_name("in-place").unwrap(), &w).unwrap();
+        bank.inject(FaultModel::Uniform, 1e-4, 11);
+        bank.scrub();
+        let mut out = vec![0i8; w.len()];
+        let stats = bank.read(&mut out);
+        assert_eq!(stats.corrected, 0, "scrub must have healed the image");
+        assert_eq!(out, w);
+    }
+
+    #[test]
+    fn overhead_accounting() {
+        let w = wot_weights(1024, 4);
+        for (name, ov) in [("faulty", 0.0), ("zero", 0.125), ("ecc", 0.125), ("in-place", 0.0)] {
+            let bank = MemoryBank::new(strategy_by_name(name).unwrap(), &w).unwrap();
+            assert!((bank.overhead() - ov).abs() < 1e-9, "{name}");
+        }
+    }
+}

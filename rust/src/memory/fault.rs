@@ -1,0 +1,157 @@
+//! Fault models.
+//!
+//! Paper section 5.3: "The fault model is random bit flip. ... The
+//! number of faulty bits is the product of the number of bits used to
+//! represent weights of a CNN and the memory fault rate." We implement
+//! that exactly: `n_flips = round(rate * total_bits)` *distinct* bit
+//! positions drawn uniformly over the stored image (data + out-of-band
+//! check storage — a scheme's own redundancy is equally exposed).
+//!
+//! The burst model (ablation, not in the paper) flips runs of adjacent
+//! bits — the failure signature of multi-cell upsets — to probe where
+//! SEC-DED's single-error assumption breaks down.
+
+use crate::ecc::Encoded;
+use crate::util::rng::Rng;
+
+/// Fault model selector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultModel {
+    /// Independent uniform bit flips (the paper's model).
+    Uniform,
+    /// Bursts of `len` adjacent flipped bits; the *total* flipped-bit
+    /// budget still follows the rate (n_bursts = n_flips / len).
+    Burst { len: u32 },
+}
+
+/// Deterministic fault injector.
+pub struct FaultInjector {
+    pub model: FaultModel,
+    rng: Rng,
+}
+
+impl FaultInjector {
+    pub fn new(model: FaultModel, seed: u64) -> Self {
+        FaultInjector {
+            model,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Number of faulty bits for a stored image at `rate` (paper
+    /// semantics; rounds to nearest).
+    pub fn flip_count(total_bits: u64, rate: f64) -> u64 {
+        (total_bits as f64 * rate).round() as u64
+    }
+
+    /// Inject faults at `rate` into the image; returns bits flipped.
+    pub fn inject(&mut self, enc: &mut Encoded, rate: f64) -> u64 {
+        let total = enc.total_bits();
+        let n = Self::flip_count(total, rate);
+        self.inject_count(enc, n)
+    }
+
+    /// Inject exactly `n` flipped bits (distinct positions).
+    pub fn inject_count(&mut self, enc: &mut Encoded, n: u64) -> u64 {
+        let total = enc.total_bits();
+        match self.model {
+            FaultModel::Uniform => {
+                let n = n.min(total);
+                for pos in self.rng.distinct(total, n) {
+                    enc.flip_bit(pos);
+                }
+                n
+            }
+            FaultModel::Burst { len } => {
+                let len = len.max(1) as u64;
+                let bursts = n / len;
+                let mut flipped = 0;
+                for _ in 0..bursts {
+                    let start = self.rng.below(total);
+                    for k in 0..len {
+                        // bursts wrap within the image, stay distinct per burst
+                        enc.flip_bit((start + k) % total);
+                        flipped += 1;
+                    }
+                }
+                flipped
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn image(nbytes: usize) -> Encoded {
+        Encoded {
+            data: vec![0u8; nbytes],
+            oob: vec![0u8; nbytes / 8],
+            n: nbytes,
+        }
+    }
+
+    #[test]
+    fn count_semantics_match_paper() {
+        // 1e6 weight bits at 1e-3 -> exactly 1000 flips.
+        assert_eq!(FaultInjector::flip_count(1_000_000, 1e-3), 1000);
+        // sub-one expectation rounds: 1e4 bits at 1e-5 -> 0 flips.
+        assert_eq!(FaultInjector::flip_count(10_000, 1e-5), 0);
+        assert_eq!(FaultInjector::flip_count(10_000, 6e-5), 1);
+    }
+
+    #[test]
+    fn uniform_flips_exact_distinct_count() {
+        let mut enc = image(1024);
+        let mut inj = FaultInjector::new(FaultModel::Uniform, 42);
+        let n = inj.inject(&mut enc, 1e-2); // 1024*8*1.125 bits * 1e-2 ≈ 92
+        let ones: u32 = enc
+            .data
+            .iter()
+            .chain(&enc.oob)
+            .map(|b| b.count_ones())
+            .sum();
+        assert_eq!(ones as u64, n, "flips must hit distinct bits");
+    }
+
+    #[test]
+    fn oob_bits_are_exposed_too() {
+        let mut hit_oob = false;
+        for seed in 0..50 {
+            let mut enc = image(64);
+            let mut inj = FaultInjector::new(FaultModel::Uniform, seed);
+            inj.inject_count(&mut enc, 40);
+            if enc.oob.iter().any(|&b| b != 0) {
+                hit_oob = true;
+                break;
+            }
+        }
+        assert!(hit_oob, "faults must be able to land in check storage");
+    }
+
+    #[test]
+    fn burst_flips_adjacent() {
+        let mut enc = image(1024);
+        let mut inj = FaultInjector::new(FaultModel::Burst { len: 4 }, 7);
+        let flipped = inj.inject_count(&mut enc, 8);
+        assert_eq!(flipped, 8); // two bursts of 4
+        let ones: u32 = enc
+            .data
+            .iter()
+            .chain(&enc.oob)
+            .map(|b| b.count_ones())
+            .sum();
+        assert!(ones <= 8 && ones >= 5, "bursts may self-overlap only rarely");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = image(256);
+        let mut b = image(256);
+        FaultInjector::new(FaultModel::Uniform, 99).inject_count(&mut a, 50);
+        FaultInjector::new(FaultModel::Uniform, 99).inject_count(&mut b, 50);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.oob, b.oob);
+    }
+}

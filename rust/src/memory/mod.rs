@@ -1,0 +1,13 @@
+//! The simulated memory subsystem holding encoded CNN weights.
+//!
+//! * [`fault`] — fault models: uniform random bit flips with the paper's
+//!   exact count semantics, plus a burst model (adjacent-bit upsets) for
+//!   the ablation study.
+//! * [`bank`] — `MemoryBank`: an encoded weight image + its protection
+//!   strategy; supports fault injection, protected reads and scrubbing.
+
+pub mod bank;
+pub mod fault;
+
+pub use bank::MemoryBank;
+pub use fault::{FaultModel, FaultInjector};

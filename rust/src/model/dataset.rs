@@ -1,0 +1,88 @@
+//! `dataset.eval.bin` loader — the shared evaluation split.
+//!
+//! Layout (little-endian): u32 N, u32 D, f32[N*D] images, u8[N] labels.
+//! Written by python/compile/data.py::write_eval_bin.
+
+use std::path::Path;
+
+pub struct EvalSet {
+    pub n: usize,
+    pub dim: usize,
+    /// Row-major images, n x dim.
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl EvalSet {
+    pub fn load(path: &Path) -> anyhow::Result<EvalSet> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        anyhow::ensure!(bytes.len() >= 8, "dataset file truncated");
+        let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        let dim = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+        let img_bytes = n * dim * 4;
+        anyhow::ensure!(
+            bytes.len() == 8 + img_bytes + n,
+            "dataset file size mismatch: n={n} d={dim} len={}",
+            bytes.len()
+        );
+        let mut images = vec![0f32; n * dim];
+        for (i, chunk) in bytes[8..8 + img_bytes].chunks_exact(4).enumerate() {
+            images[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        let labels = bytes[8 + img_bytes..].to_vec();
+        Ok(EvalSet {
+            n,
+            dim,
+            images,
+            labels,
+        })
+    }
+
+    /// Image row i.
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Contiguous batch of images [at, at+batch) as a flat slice.
+    pub fn batch(&self, at: usize, batch: usize) -> &[f32] {
+        &self.images[at * self.dim..(at + batch) * self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_synthetic_file() {
+        let dir = std::env::temp_dir().join("zsecc_ds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("eval.bin");
+        let n = 3usize;
+        let d = 4usize;
+        let mut bytes = Vec::new();
+        bytes.extend((n as u32).to_le_bytes());
+        bytes.extend((d as u32).to_le_bytes());
+        for i in 0..(n * d) {
+            bytes.extend((i as f32 * 0.5).to_le_bytes());
+        }
+        bytes.extend([7u8, 8, 9]);
+        std::fs::write(&p, &bytes).unwrap();
+        let ds = EvalSet::load(&p).unwrap();
+        assert_eq!(ds.n, 3);
+        assert_eq!(ds.dim, 4);
+        assert_eq!(ds.image(1), &[2.0, 2.5, 3.0, 3.5]);
+        assert_eq!(ds.labels, vec![7, 8, 9]);
+        assert_eq!(ds.batch(1, 2).len(), 8);
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join("zsecc_ds_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("eval.bin");
+        std::fs::write(&p, [1, 0, 0, 0, 2, 0, 0, 0, 9]).unwrap();
+        assert!(EvalSet::load(&p).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! `<model>.manifest.json` — the contract between the python build path
+//! and the rust runtime: layer table (offsets into the flat int8 buffer,
+//! shapes, frozen dequantization scales), reference accuracies, and the
+//! artifact file index.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One protected tensor (conv/dense weight) in the flat buffer.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Element offset into the flat int8 buffer.
+    pub offset: usize,
+    /// Element count (always a multiple of 8: whole 64-bit blocks).
+    pub size: usize,
+    /// Frozen dequantization scale (post-WOT grid).
+    pub scale: f32,
+    /// Dequantization scale of the pre-WOT buffer (Table-1 path).
+    pub scale_prewot: f32,
+}
+
+/// Parsed `<model>.manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub num_classes: usize,
+    pub input_dim: usize,
+    pub num_weights: usize,
+    pub float_acc: f64,
+    pub int8_acc: f64,
+    pub wot_acc: f64,
+    pub batches: Vec<usize>,
+    pub pallas_batch: usize,
+    pub layers: Vec<Layer>,
+    /// File names relative to the artifacts dir.
+    pub weights_file: String,
+    pub prewot_file: String,
+    pub wot_log_file: String,
+    pub hlo: BTreeMap<usize, String>,
+    pub hlo_pallas: BTreeMap<usize, String>,
+    pub hlo_prewot: BTreeMap<usize, String>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+fn batch_map(j: &Json) -> anyhow::Result<BTreeMap<usize, String>> {
+    let mut out = BTreeMap::new();
+    if let Some(obj) = j.as_obj() {
+        for (k, v) in obj {
+            out.insert(
+                k.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad batch key '{k}'"))?,
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("file name must be a string"))?
+                    .to_string(),
+            );
+        }
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let layers_j = j.req("layers")?.as_arr().unwrap_or(&[]);
+        let mut layers = Vec::with_capacity(layers_j.len());
+        for l in layers_j {
+            layers.push(Layer {
+                name: l.req("name")?.as_str().unwrap_or("").to_string(),
+                shape: l
+                    .req("shape")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                offset: l.req("offset")?.as_usize().unwrap_or(0),
+                size: l.req("size")?.as_usize().unwrap_or(0),
+                scale: l.req("scale")?.as_f64().unwrap_or(0.0) as f32,
+                scale_prewot: l.req("scale_prewot")?.as_f64().unwrap_or(0.0) as f32,
+            });
+        }
+        let files = j.req("files")?;
+        let man = Manifest {
+            model: j.req("model")?.as_str().unwrap_or("").to_string(),
+            num_classes: j.req("num_classes")?.as_usize().unwrap_or(0),
+            input_dim: j.req("input_dim")?.as_usize().unwrap_or(0),
+            num_weights: j.req("num_weights")?.as_usize().unwrap_or(0),
+            float_acc: j.req("float_acc")?.as_f64().unwrap_or(0.0),
+            int8_acc: j.req("int8_acc")?.as_f64().unwrap_or(0.0),
+            wot_acc: j.req("wot_acc")?.as_f64().unwrap_or(0.0),
+            batches: j
+                .req("batches")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|b| b.as_usize())
+                .collect(),
+            pallas_batch: j.req("pallas_batch")?.as_usize().unwrap_or(0),
+            layers,
+            weights_file: files.req("weights")?.as_str().unwrap_or("").to_string(),
+            prewot_file: files.req("prewot")?.as_str().unwrap_or("").to_string(),
+            wot_log_file: files.req("wot_log")?.as_str().unwrap_or("").to_string(),
+            hlo: batch_map(files.req("hlo")?)?,
+            hlo_pallas: batch_map(files.req("hlo_pallas")?)?,
+            hlo_prewot: batch_map(files.req("hlo_prewot")?)?,
+            dir: path.parent().unwrap_or(Path::new(".")).to_path_buf(),
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Load by model name from an artifacts directory.
+    pub fn load_model(dir: &Path, model: &str) -> anyhow::Result<Manifest> {
+        Self::load(&dir.join(format!("{model}.manifest.json")))
+    }
+
+    /// Structural invariants the python exporter guarantees.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut at = 0usize;
+        for l in &self.layers {
+            anyhow::ensure!(
+                l.offset == at,
+                "layer {} offset {} != running total {at}",
+                l.name,
+                l.offset
+            );
+            anyhow::ensure!(l.size % 8 == 0, "layer {} size not block-aligned", l.name);
+            anyhow::ensure!(
+                l.size == l.shape.iter().product::<usize>(),
+                "layer {} size/shape mismatch",
+                l.name
+            );
+            anyhow::ensure!(l.scale > 0.0, "layer {} scale must be positive", l.name);
+            at += l.size;
+        }
+        anyhow::ensure!(
+            at == self.num_weights,
+            "layers tile {} weights, manifest says {}",
+            at,
+            self.num_weights
+        );
+        Ok(())
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+    pub fn prewot_path(&self) -> PathBuf {
+        self.dir.join(&self.prewot_file)
+    }
+    pub fn wot_log_path(&self) -> PathBuf {
+        self.dir.join(&self.wot_log_file)
+    }
+    pub fn hlo_path(&self, batch: usize) -> anyhow::Result<PathBuf> {
+        self.hlo
+            .get(&batch)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("no HLO artifact for batch {batch}"))
+    }
+    pub fn hlo_pallas_path(&self, batch: usize) -> anyhow::Result<PathBuf> {
+        self.hlo_pallas
+            .get(&batch)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("no pallas HLO artifact for batch {batch}"))
+    }
+    pub fn hlo_prewot_path(&self, batch: usize) -> anyhow::Result<PathBuf> {
+        self.hlo_prewot
+            .get(&batch)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("no prewot HLO artifact for batch {batch}"))
+    }
+
+    /// Layers with prewot scales substituted (Table-1 path).
+    pub fn layers_prewot(&self) -> Vec<Layer> {
+        self.layers
+            .iter()
+            .map(|l| Layer {
+                scale: l.scale_prewot,
+                ..l.clone()
+            })
+            .collect()
+    }
+}
+
+/// List model names from `index.json` in the artifacts dir.
+pub fn list_models(dir: &Path) -> anyhow::Result<Vec<String>> {
+    let text = std::fs::read_to_string(dir.join("index.json"))?;
+    let j = Json::parse(&text)?;
+    Ok(j.req("models")?
+        .as_obj()
+        .map(|m| m.keys().cloned().collect())
+        .unwrap_or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "model": "m", "num_classes": 10, "img_size": 32, "input_dim": 3072,
+      "num_weights": 16, "float_acc": 0.9, "int8_acc": 0.89, "wot_acc": 0.88,
+      "batches": [1, 32], "pallas_batch": 32,
+      "layers": [
+        {"name": "a.w", "shape": [8], "offset": 0, "size": 8, "scale": 0.5, "scale_prewot": 0.6},
+        {"name": "b.w", "shape": [2, 4], "offset": 8, "size": 8, "scale": 0.25, "scale_prewot": 0.3}
+      ],
+      "files": {"weights": "m.weights.bin", "prewot": "m.prewot.bin",
+                "wot_log": "m.wot_log.json",
+                "hlo": {"1": "m.b1.hlo.txt", "32": "m.b32.hlo.txt"},
+                "hlo_pallas": {"32": "m.b32.pallas.hlo.txt"},
+                "hlo_prewot": {"32": "m.prewot.b32.hlo.txt"}}
+    }"#;
+
+    #[test]
+    fn parse_mini_manifest() {
+        let dir = std::env::temp_dir().join("zsecc_man_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.manifest.json");
+        std::fs::write(&p, MINI).unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.model, "m");
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[1].offset, 8);
+        assert_eq!(m.hlo[&32], "m.b32.hlo.txt");
+        assert!(m.hlo_path(1).unwrap().ends_with("m.b1.hlo.txt"));
+        assert!(m.hlo_path(7).is_err());
+        assert_eq!(m.layers_prewot()[0].scale, 0.6);
+    }
+
+    #[test]
+    fn validation_rejects_gaps() {
+        let bad = MINI.replace("\"offset\": 8", "\"offset\": 16");
+        let dir = std::env::temp_dir().join("zsecc_man_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.manifest.json");
+        std::fs::write(&p, bad).unwrap();
+        assert!(Manifest::load(&p).is_err());
+    }
+}

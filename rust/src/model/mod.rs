@@ -1,0 +1,23 @@
+//! Artifact loaders: model manifests, int8 weight buffers, eval dataset.
+
+pub mod dataset;
+pub mod manifest;
+
+pub use dataset::EvalSet;
+pub use manifest::{Layer, Manifest};
+
+use std::path::Path;
+
+/// Read a raw int8 weight buffer (`<model>.weights.bin` / `.prewot.bin`).
+pub fn load_weights(path: &Path, expect_len: usize) -> anyhow::Result<Vec<i8>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() == expect_len,
+        "{}: expected {} weights, found {} bytes",
+        path.display(),
+        expect_len,
+        bytes.len()
+    );
+    Ok(bytes.into_iter().map(|b| b as i8).collect())
+}

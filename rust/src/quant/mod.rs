@@ -1,0 +1,126 @@
+//! Int8 weight buffers and per-layer dequantization.
+//!
+//! Mirrors python/compile/quantize.py (Eq. 1 of the paper, frozen
+//! calibration scales): the stored int8 value `q` dequantizes to
+//! `q * scale_l` for its layer's scale. The rust side only ever
+//! *dequantizes* — quantization happened at build time.
+
+use crate::model::manifest::Layer;
+
+/// WOT block geometry (must match python/compile/quantize.py).
+pub const BLOCK: usize = 8;
+pub const SMALL_LO: i8 = -64;
+pub const SMALL_HI: i8 = 63;
+
+/// Dequantize a flat int8 buffer into f32 using per-layer scales.
+/// `out.len() == q.len()`; layers must tile the buffer exactly.
+pub fn dequantize_into(q: &[i8], layers: &[Layer], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for l in layers {
+        let s = l.scale;
+        let (a, b) = (l.offset, l.offset + l.size);
+        for (o, &v) in out[a..b].iter_mut().zip(&q[a..b]) {
+            *o = v as f32 * s;
+        }
+    }
+}
+
+/// Weight-magnitude distribution over the paper's Table-1 bands:
+/// fractions of |q| in [0,32), [32,64), [64,128].
+pub fn distribution_bands(q: &[i8]) -> (f64, f64, f64) {
+    let mut bands = [0u64; 3];
+    for &v in q {
+        let a = (v as i32).unsigned_abs();
+        let idx = if a < 32 {
+            0
+        } else if a < 64 {
+            1
+        } else {
+            2
+        };
+        bands[idx] += 1;
+    }
+    let n = q.len() as f64;
+    (
+        bands[0] as f64 / n,
+        bands[1] as f64 / n,
+        bands[2] as f64 / n,
+    )
+}
+
+/// Histogram of large-value byte positions within 8-byte blocks — the
+/// paper's Fig. 1 (computed over the pre-WOT buffer).
+pub fn large_position_histogram(q: &[i8]) -> [u64; BLOCK] {
+    let mut h = [0u64; BLOCK];
+    for chunk in q.chunks_exact(BLOCK) {
+        for (j, &v) in chunk.iter().enumerate() {
+            if !(SMALL_LO..=SMALL_HI).contains(&v) {
+                h[j] += 1;
+            }
+        }
+    }
+    h
+}
+
+/// WOT-constraint violations (large values at positions 0..6).
+pub fn wot_violations(q: &[i8]) -> u64 {
+    large_position_histogram(q)[..BLOCK - 1].iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers2() -> Vec<Layer> {
+        vec![
+            Layer {
+                name: "a".into(),
+                shape: vec![8],
+                offset: 0,
+                size: 8,
+                scale: 0.5,
+                scale_prewot: 0.5,
+            },
+            Layer {
+                name: "b".into(),
+                shape: vec![8],
+                offset: 8,
+                size: 8,
+                scale: 2.0,
+                scale_prewot: 2.0,
+            },
+        ]
+    }
+
+    #[test]
+    fn dequant_per_layer_scale() {
+        let q: Vec<i8> = (0..16).map(|i| i as i8).collect();
+        let mut out = vec![0f32; 16];
+        dequantize_into(&q, &layers2(), &mut out);
+        assert_eq!(out[2], 1.0); // 2 * 0.5
+        assert_eq!(out[10], 20.0); // 10 * 2.0
+    }
+
+    #[test]
+    fn bands_sum_to_one() {
+        let q: Vec<i8> = (-128..=127).map(|v| v as i8).collect();
+        let (a, b, c) = distribution_bands(&q);
+        assert!((a + b + c - 1.0).abs() < 1e-12);
+        // [0,32): values -31..=31 -> 63; [32,64): 64; rest: 129
+        assert!((a - 63.0 / 256.0).abs() < 1e-12);
+        assert!((b - 64.0 / 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig1_histogram_counts_positions() {
+        let mut q = vec![0i8; 24];
+        q[0] = 127; // block 0 pos 0
+        q[15] = -100; // block 1 pos 7
+        q[17] = 64; // block 2 pos 1
+        let h = large_position_histogram(&q);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 1);
+        assert_eq!(h[7], 1);
+        assert_eq!(wot_violations(&q), 2);
+    }
+}

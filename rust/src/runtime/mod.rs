@@ -1,0 +1,203 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile on the CPU client,
+//! execute inference batches from the L3 hot path.
+//!
+//! Interchange is HLO *text* (see DESIGN.md section 3); weights arrive
+//! as one flat dequantized f32 buffer that is uploaded to the device
+//! once per scrub epoch (`bind_weights`) and shared across all batches
+//! executed against it — the request path uploads only images.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::model::{EvalSet, Manifest};
+
+/// Shared PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled inference executable for one (model, batch) pair:
+/// `(weights f32[P], images f32[B, D]) -> (logits f32[B, C],)`.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub num_weights: usize,
+}
+
+/// Device-resident weights, reusable across batches.
+pub struct WeightsBuf {
+    buf: xla::PjRtBuffer,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Arc<Runtime>> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Arc::new(Runtime { client }))
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load(
+        &self,
+        path: &Path,
+        batch: usize,
+        man: &Manifest,
+    ) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable {
+            exe,
+            batch,
+            input_dim: man.input_dim,
+            num_classes: man.num_classes,
+            num_weights: man.num_weights,
+        })
+    }
+
+    /// Convenience: the standard ("fast") executable for a batch size.
+    pub fn load_model(&self, man: &Manifest, batch: usize) -> anyhow::Result<Executable> {
+        self.load(&man.hlo_path(batch)?, batch, man)
+    }
+
+    /// Upload a flat f32 weight buffer to the device.
+    pub fn bind_weights(&self, weights: &[f32]) -> anyhow::Result<WeightsBuf> {
+        let buf = self
+            .client
+            .buffer_from_host_buffer(weights, &[weights.len()], None)
+            .map_err(|e| anyhow::anyhow!("uploading weights: {e:?}"))?;
+        Ok(WeightsBuf { buf })
+    }
+
+    /// Upload an image batch (flat, batch * dim elements).
+    fn bind_images(
+        &self,
+        images: &[f32],
+        batch: usize,
+        dim: usize,
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(images, &[batch, dim], None)
+            .map_err(|e| anyhow::anyhow!("uploading images: {e:?}"))
+    }
+}
+
+impl Executable {
+    /// Run one batch; returns logits, row-major batch x num_classes.
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        weights: &WeightsBuf,
+        images: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            images.len() == self.batch * self.input_dim,
+            "expected {}x{} image elements, got {}",
+            self.batch,
+            self.input_dim,
+            images.len()
+        );
+        let img_buf = rt.bind_images(images, self.batch, self.input_dim)?;
+        let out = self
+            .exe
+            .execute_b(&[&weights.buf, &img_buf])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        // The AOT path lowers with return_tuple=True: unwrap the 1-tuple.
+        let logits = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        logits
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("logits to_vec: {e:?}"))
+    }
+
+    /// Argmax predictions for one batch.
+    pub fn predict(
+        &self,
+        rt: &Runtime,
+        weights: &WeightsBuf,
+        images: &[f32],
+    ) -> anyhow::Result<Vec<usize>> {
+        let logits = self.run(rt, weights, images)?;
+        Ok(argmax_rows(&logits, self.num_classes))
+    }
+}
+
+/// Row-wise argmax over a flat logits buffer.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = 0;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Accuracy of an executable over the whole eval set (ragged tail padded
+/// with copies of an in-range image; pad rows are not scored).
+pub fn accuracy(
+    rt: &Runtime,
+    exe: &Executable,
+    weights: &WeightsBuf,
+    ds: &EvalSet,
+) -> anyhow::Result<f64> {
+    let b = exe.batch;
+    let mut correct = 0usize;
+    let mut at = 0usize;
+    let mut padded = vec![0f32; b * exe.input_dim];
+    while at < ds.n {
+        let take = b.min(ds.n - at);
+        let preds = if take == b {
+            exe.predict(rt, weights, ds.batch(at, b))?
+        } else {
+            padded[..take * exe.input_dim].copy_from_slice(ds.batch(at, take));
+            for i in take..b {
+                let src = ds.image(at);
+                padded[i * exe.input_dim..(i + 1) * exe.input_dim].copy_from_slice(src);
+            }
+            exe.predict(rt, weights, &padded)?
+        };
+        for i in 0..take {
+            if preds[i] == ds.labels[at + i] as usize {
+                correct += 1;
+            }
+        }
+        at += take;
+    }
+    Ok(correct as f64 / ds.n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_basic() {
+        let l = [0.1, 0.9, 0.0, 3.0, -1.0, 2.0];
+        assert_eq!(argmax_rows(&l, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_rows_ties_pick_first() {
+        let l = [1.0, 1.0, 0.5, 0.5];
+        assert_eq!(argmax_rows(&l, 2), vec![0, 0]);
+    }
+}

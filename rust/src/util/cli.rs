@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `zsecc <subcommand> [--flag] [--key value]...`
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub cmd: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    // (then it's a boolean switch).
+                    match it.peek() {
+                        Some(n) if !n.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else if out.cmd.is_none() {
+                out.cmd = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.str_opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a float, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["table2", "--rates", "1e-4,1e-3", "--trials=5", "--verbose"]);
+        assert_eq!(a.cmd.as_deref(), Some("table2"));
+        assert_eq!(a.str_opt("rates"), Some("1e-4,1e-3"));
+        assert_eq!(a.usize_or("trials", 10).unwrap(), 5);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn boolean_before_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.bool("a"));
+        assert_eq!(a.str_opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--models", "vgg16_s,resnet18_s"]);
+        assert_eq!(a.list_or("models", &[]), vec!["vgg16_s", "resnet18_s"]);
+        assert_eq!(a.list_or("other", &["d"]), vec!["d"]);
+    }
+}

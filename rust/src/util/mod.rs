@@ -1,0 +1,10 @@
+//! In-tree substrates replacing unavailable crates (offline build):
+//! JSON codec (serde), PRNG (rand), CLI parsing (clap), statistics and
+//! timing (criterion), ASCII plotting.
+
+pub mod cli;
+pub mod json;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,145 @@
+//! ASCII rendering of the paper's figures (bar charts + line series).
+//!
+//! The harness prints figures to stdout and writes the raw series to
+//! JSON next to them, so both a human and a plotting script can consume
+//! the reproduction.
+
+/// Horizontal bar chart (Fig. 1 style: one bar per category).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let max = values.iter().cloned().fold(f64::MIN, f64::max).max(1e-12);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("== {title} ==\n");
+    for (l, v) in labels.iter().zip(values) {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:>lw$} | {}{} {:.1}\n",
+            l,
+            "#".repeat(n),
+            " ".repeat(width - n),
+            v,
+            lw = lw
+        ));
+    }
+    out
+}
+
+/// Multi-series line plot on a character grid (Fig. 3 / Fig. 4 style).
+/// Each series is (name, points); x is the shared index of the points.
+pub fn line_plot(
+    title: &str,
+    xs: &[f64],
+    series: &[(&str, Vec<f64>)],
+    height: usize,
+    width: usize,
+) -> String {
+    let marks = ['*', 'o', '+', 'x', '@', '%'];
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::MAX, f64::min);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::MIN, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+    let xmin = xs.first().cloned().unwrap_or(0.0);
+    let xmax = xs.last().cloned().unwrap_or(1.0);
+    let xspan = (xmax - xmin).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, y) in xs.iter().zip(ys) {
+            let c = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let r = (((ymax - y) / span) * (height - 1) as f64).round() as usize;
+            grid[r.min(height - 1)][c.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax - span * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{:>10.3} |{}\n", yval, row.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n{:>10}  x: {:.0} .. {:.0}\n",
+        "",
+        "-".repeat(width),
+        "",
+        xmin,
+        xmax
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+/// Fixed-width table printer (Table 1 / Table 2 style).
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(widths) {
+            line.push_str(&format!(" {:<w$} |", c, w = w));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_renders() {
+        let s = bar_chart(
+            "t",
+            &["a".into(), "bb".into()],
+            &[1.0, 2.0],
+            10,
+        );
+        assert!(s.contains("bb | ##########"));
+        assert!(s.contains("a | #####"));
+    }
+
+    #[test]
+    fn line_plot_renders() {
+        let xs = [0.0, 1.0, 2.0];
+        let s = line_plot("t", &xs, &[("up", vec![0.0, 1.0, 2.0])], 5, 20);
+        assert!(s.contains("*"));
+        assert!(s.contains("up"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let s = table(
+            &["model", "acc"],
+            &[vec!["vgg".into(), "0.9".into()], vec!["rn".into(), "0.85".into()]],
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+}

@@ -1,0 +1,172 @@
+//! xoshiro256++ PRNG (Blackman & Vigna) — fast, high-quality, seedable.
+//!
+//! Used by the fault injector and the workload generators. Determinism
+//! matters: every experiment cell records its seed so Table-2 trials are
+//! exactly reproducible.
+
+/// xoshiro256++ generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+/// splitmix64, the recommended seeder for xoshiro.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponential with rate `lambda` (Poisson inter-arrival times).
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0, 1]
+        -u.ln() / lambda
+    }
+
+    /// `k` distinct indices in [0, n), k <= n. O(k) expected when k << n
+    /// (hash-set rejection), O(n) partial Fisher-Yates otherwise.
+    pub fn distinct(&mut self, n: u64, k: u64) -> Vec<u64> {
+        assert!(k <= n, "cannot draw {k} distinct from {n}");
+        if k == 0 {
+            return Vec::new();
+        }
+        if k * 4 <= n {
+            let mut seen = std::collections::HashSet::with_capacity(k as usize);
+            let mut out = Vec::with_capacity(k as usize);
+            while out.len() < k as usize {
+                let v = self.below(n);
+                if seen.insert(v) {
+                    out.push(v);
+                }
+            }
+            out
+        } else {
+            // Partial Fisher-Yates over a dense index vector.
+            let mut idx: Vec<u64> = (0..n).collect();
+            for i in 0..k as usize {
+                let j = i as u64 + self.below(n - i as u64);
+                idx.swap(i, j as usize);
+            }
+            idx.truncate(k as usize);
+            idx
+        }
+    }
+
+    /// Standard normal via Box-Muller (used by workload generators).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.f64();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn distinct_unique_and_complete() {
+        let mut r = Rng::new(3);
+        // sparse regime
+        let v = r.distinct(1_000_000, 100);
+        let s: std::collections::HashSet<_> = v.iter().collect();
+        assert_eq!(s.len(), 100);
+        // dense regime: k == n must be a permutation
+        let mut v = r.distinct(64, 64);
+        v.sort_unstable();
+        assert_eq!(v, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_roughly_uniform() {
+        let mut r = Rng::new(17);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {c}");
+        }
+    }
+}

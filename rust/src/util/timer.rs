@@ -1,0 +1,94 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `bench(name, iters_hint, f)` warms up, auto-scales the iteration
+//! count toward a target measurement time, reports ns/iter with spread,
+//! and returns the stats so bench binaries can also emit JSON/CSV.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub ns_per_iter: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn throughput_str(&self, bytes_per_iter: usize) -> String {
+        let gbps = bytes_per_iter as f64 / self.ns_per_iter; // bytes/ns == GB/s
+        format!("{:.2} GB/s", gbps)
+    }
+}
+
+/// Run `f` repeatedly; auto-calibrate so each sample takes >= ~20ms,
+/// collect `samples` samples, report median ns/iter.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let mut iters: u64 = 1;
+    loop {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t.elapsed().as_nanos() as f64;
+        if el > 20_000_000.0 || iters >= 1 << 24 {
+            break;
+        }
+        iters *= 4;
+    }
+    let samples = 7;
+    let mut per_iter = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        ns_per_iter: per_iter[samples / 2],
+        min_ns: per_iter[0],
+        max_ns: per_iter[samples - 1],
+        samples,
+    };
+    println!(
+        "{:<48} {:>12.1} ns/iter  (min {:.1}, max {:.1}, {} iters)",
+        res.name, res.ns_per_iter, res.min_ns, res.max_ns, res.iters
+    );
+    res
+}
+
+/// One-shot wall-clock measurement for expensive end-to-end cells.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let v = f();
+    (v, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.ns_per_iter >= 0.0);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

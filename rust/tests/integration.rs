@@ -1,0 +1,223 @@
+//! Integration tests across modules that do NOT need the PJRT runtime or
+//! built artifacts: manifest/weights/dataset loaders against a synthetic
+//! artifact directory, memory-bank + strategy + fault-injection flows,
+//! the ablation studies' qualitative outcomes, and the coordinator under
+//! a mock executor with live fault injection and scrubbing.
+
+use std::path::PathBuf;
+
+use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+use zsecc::ecc::strategy_by_name;
+use zsecc::harness::ablation;
+use zsecc::memory::{FaultModel, MemoryBank};
+use zsecc::model::{load_weights, EvalSet, Manifest};
+use zsecc::quant::{dequantize_into, wot_violations};
+use zsecc::util::rng::Rng;
+
+/// Build a synthetic artifact directory: manifest + weights + dataset.
+fn synth_artifacts(tag: &str) -> (PathBuf, Vec<i8>) {
+    let dir = std::env::temp_dir().join(format!("zsecc_it_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(42);
+    let n = 512usize;
+    let weights: Vec<i8> = (0..n)
+        .map(|i| {
+            if i % 8 == 7 {
+                (rng.below(256) as i64 - 128) as i8
+            } else {
+                (rng.below(128) as i64 - 64) as i8
+            }
+        })
+        .collect();
+    let bytes: Vec<u8> = weights.iter().map(|&w| w as u8).collect();
+    std::fs::write(dir.join("m.weights.bin"), &bytes).unwrap();
+    std::fs::write(dir.join("m.prewot.bin"), &bytes).unwrap();
+    std::fs::write(
+        dir.join("m.wot_log.json"),
+        r#"{"model":"m","step":[0,1],"n_large":[100,0],"acc_before":[0.5,0.9],
+           "acc_after":[0.4,0.9],"final_acc":0.9,"int8_acc":0.9}"#,
+    )
+    .unwrap();
+    let manifest = format!(
+        r#"{{"model":"m","num_classes":10,"img_size":32,"input_dim":3072,
+          "num_weights":{n},"float_acc":0.91,"int8_acc":0.9,"wot_acc":0.9,
+          "batches":[4],"pallas_batch":4,
+          "layers":[
+            {{"name":"a.w","shape":[256],"offset":0,"size":256,"scale":0.01,"scale_prewot":0.01}},
+            {{"name":"b.w","shape":[2,128],"offset":256,"size":256,"scale":0.02,"scale_prewot":0.02}}],
+          "files":{{"weights":"m.weights.bin","prewot":"m.prewot.bin",
+                   "wot_log":"m.wot_log.json","hlo":{{"4":"m.b4.hlo.txt"}},
+                   "hlo_pallas":{{}},"hlo_prewot":{{}}}}}}"#
+    );
+    std::fs::write(dir.join("m.manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("index.json"), r#"{"models":{"m":"m.manifest.json"}}"#).unwrap();
+    // dataset: 8 images of dim 4
+    let mut ds = Vec::new();
+    ds.extend(8u32.to_le_bytes());
+    ds.extend(4u32.to_le_bytes());
+    for i in 0..32 {
+        ds.extend((i as f32).to_le_bytes());
+    }
+    ds.extend([0u8, 1, 2, 3, 4, 5, 6, 7]);
+    std::fs::write(dir.join("dataset.eval.bin"), ds).unwrap();
+    (dir, weights)
+}
+
+#[test]
+fn manifest_weights_dataset_load_and_agree() {
+    let (dir, weights) = synth_artifacts("load");
+    let man = Manifest::load_model(&dir, "m").unwrap();
+    assert_eq!(man.num_weights, 512);
+    assert_eq!(man.layers.len(), 2);
+    let w = load_weights(&man.weights_path(), man.num_weights).unwrap();
+    assert_eq!(w, weights);
+    assert_eq!(wot_violations(&w), 0);
+    let ds = EvalSet::load(&dir.join("dataset.eval.bin")).unwrap();
+    assert_eq!((ds.n, ds.dim), (8, 4));
+    // per-layer dequantization uses each layer's scale
+    let mut f = vec![0f32; w.len()];
+    dequantize_into(&w, &man.layers, &mut f);
+    assert!((f[0] - w[0] as f32 * 0.01).abs() < 1e-7);
+    assert!((f[300] - w[300] as f32 * 0.02).abs() < 1e-7);
+    let models = zsecc::model::manifest::list_models(&dir).unwrap();
+    assert_eq!(models, vec!["m".to_string()]);
+}
+
+#[test]
+fn wot_log_parses_and_passes_shape_checks() {
+    let (dir, _) = synth_artifacts("wotlog");
+    let logs = vec![zsecc::harness::fig34::load_log(&dir.join("m.wot_log.json")).unwrap()];
+    for (name, ok) in zsecc::harness::fig34::shape_checks(&logs) {
+        assert!(ok, "{name}");
+    }
+}
+
+#[test]
+fn end_to_end_memory_protection_flow() {
+    // The full Table-2 cell mechanics without PJRT: encode -> inject ->
+    // decode -> compare weight corruption across strategies.
+    let (_dir, weights) = synth_artifacts("flow");
+    let corrupted = |name: &str, rate: f64| -> usize {
+        let mut bank = MemoryBank::new(strategy_by_name(name).unwrap(), &weights).unwrap();
+        bank.inject(FaultModel::Uniform, rate, 7);
+        let mut out = vec![0i8; weights.len()];
+        bank.read(&mut out);
+        out.iter().zip(&weights).filter(|(a, b)| a != b).count()
+    };
+    // at 1e-3, protection ordering must hold on raw weight corruption
+    let f = corrupted("faulty", 1e-3);
+    let e = corrupted("ecc", 1e-3);
+    let i = corrupted("in-place", 1e-3);
+    assert!(e <= f, "ecc {e} vs faulty {f}");
+    assert!(i <= f, "in-place {i} vs faulty {f}");
+    // at 1e-4 on 4096 bits we expect ~0 corrupted weights for ecc classes
+    assert_eq!(corrupted("ecc", 1e-4), 0);
+    assert_eq!(corrupted("in-place", 1e-4), 0);
+}
+
+#[test]
+fn ablation_qualitative_outcomes() {
+    // BCH-16 beats SEC-DED under double-error pressure...
+    let rows = ablation::code_strength(&[3e-3], 64 * 64, 3).unwrap();
+    assert!(rows[0].bch_err <= rows[0].inplace_err);
+    // ...and under 2-bit bursts.
+    let b = ablation::burst(&[2], 1e-3, 64 * 64, 3).unwrap();
+    assert!(b[0].bch_err <= b[0].inplace_err);
+    // scrubbing never hurts
+    let s = ablation::scrub_study(&[8], 2e-4, 64 * 32).unwrap();
+    assert!(s[0].with_scrub_err <= s[0].without_scrub_err);
+}
+
+#[test]
+fn loaders_reject_corrupt_artifacts() {
+    // Failure injection on the artifact surface: every loader must fail
+    // loudly (never panic, never silently truncate).
+    let (dir, _) = synth_artifacts("corrupt");
+    // truncated weights
+    std::fs::write(dir.join("m.weights.bin"), [0u8; 10]).unwrap();
+    let man = Manifest::load_model(&dir, "m").unwrap();
+    assert!(load_weights(&man.weights_path(), man.num_weights).is_err());
+    // manifest with a layer gap
+    let text = std::fs::read_to_string(dir.join("m.manifest.json")).unwrap();
+    std::fs::write(
+        dir.join("m.manifest.json"),
+        text.replace("\"offset\":256", "\"offset\":264"),
+    )
+    .unwrap();
+    assert!(Manifest::load_model(&dir, "m").is_err());
+    // garbage JSON
+    std::fs::write(dir.join("m.manifest.json"), "{not json").unwrap();
+    assert!(Manifest::load_model(&dir, "m").is_err());
+    // truncated dataset
+    std::fs::write(dir.join("dataset.eval.bin"), [9u8; 11]).unwrap();
+    assert!(EvalSet::load(&dir.join("dataset.eval.bin")).is_err());
+    // missing files
+    assert!(Manifest::load_model(&dir, "nope").is_err());
+}
+
+#[test]
+fn bank_rejects_unthrottled_weights_for_zero_space_codes() {
+    let mut w = vec![0i8; 64];
+    w[0] = 127; // violates standard WOT
+    assert!(MemoryBank::new(strategy_by_name("in-place").unwrap(), &w).is_err());
+    assert!(MemoryBank::new(strategy_by_name("bch16").unwrap(), &w).is_err());
+    // but out-of-band schemes accept anything
+    assert!(MemoryBank::new(strategy_by_name("ecc").unwrap(), &w).is_ok());
+    assert!(MemoryBank::new(strategy_by_name("zero").unwrap(), &w).is_ok());
+    // and non-block-multiple buffers are rejected by block codes
+    let w9 = vec![0i8; 9];
+    assert!(MemoryBank::new(strategy_by_name("ecc").unwrap(), &w9).is_err());
+}
+
+#[test]
+fn coordinator_with_protected_bank_and_live_faults() {
+    struct Mock;
+    impl zsecc::coordinator::server::BatchExec for Mock {
+        fn batch(&self) -> usize {
+            4
+        }
+        fn input_dim(&self) -> usize {
+            2
+        }
+        fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+            Ok((0..count).map(|i| images[i * 2] as usize).collect())
+        }
+        fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+            Ok(())
+        }
+    }
+    let (_dir, weights) = synth_artifacts("coord");
+    let bank = MemoryBank::new(strategy_by_name("in-place").unwrap(), &weights).unwrap();
+    let man = Manifest::load_model(&_dir, "m").unwrap();
+    let cfg = ServerConfig {
+        strategy: "in-place".into(),
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        scrub_interval: Some(std::time::Duration::from_millis(5)),
+        fault_rate_per_interval: 1e-4,
+        fault_seed: 3,
+    };
+    let srv = Server::start_with(
+        || Ok(Box::new(Mock) as Box<dyn zsecc::coordinator::server::BatchExec>),
+        2,
+        &cfg,
+        Some((bank, man.layers.clone())),
+    )
+    .unwrap();
+    for round in 0..20 {
+        let rx = srv.submit(vec![round as f32 % 4.0, 0.0]).unwrap();
+        let resp = rx
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(resp.pred, (round % 4) as usize);
+        std::thread::sleep(std::time::Duration::from_millis(3));
+    }
+    let scrubs = srv
+        .metrics
+        .scrubs
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(scrubs >= 2, "scrub loop must have run (got {scrubs})");
+    srv.shutdown();
+}

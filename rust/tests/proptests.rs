@@ -1,0 +1,355 @@
+//! Property-based tests (proptest is unavailable offline; this file
+//! carries a small in-tree property-testing harness: seeded random case
+//! generation with on-failure seed reporting, plus a shrink-lite retry
+//! at smaller sizes).
+//!
+//! Properties covered: Hsiao/in-place/BCH code laws (roundtrip, single-
+//! correct, double-detect/correct), parity detection, strategy encode/
+//! decode laws over arbitrary WOT-satisfying buffers, JSON roundtrip for
+//! arbitrary values, PRNG distinct-sampling laws.
+
+use zsecc::ecc::{all_strategies, strategy_by_name, Encoded};
+use zsecc::util::json::Json;
+use zsecc::util::rng::Rng;
+
+// ------------------------------------------------------ mini-framework --
+
+/// Run `prop` on `cases` random inputs; on failure, retry the same seed
+/// at smaller sizes to report a smaller counterexample.
+fn check<F: Fn(&mut Rng, usize) -> Result<(), String>>(name: &str, cases: u64, prop: F) {
+    let base = 0xC0FFEE ^ cases;
+    for c in 0..cases {
+        let seed = base.wrapping_add(c.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, 64) {
+            // shrink-lite: same seed, smaller sizes
+            for size in [1usize, 2, 4, 8, 16, 32] {
+                let mut r2 = Rng::new(seed);
+                if let Err(m2) = prop(&mut r2, size) {
+                    panic!("property '{name}' failed (seed {seed:#x}, size {size}): {m2}");
+                }
+            }
+            panic!("property '{name}' failed (seed {seed:#x}, size 64): {msg}");
+        }
+    }
+}
+
+fn wot_weights(rng: &mut Rng, nblocks: usize) -> Vec<i8> {
+    (0..nblocks * 8)
+        .map(|i| {
+            if i % 8 == 7 {
+                (rng.below(256) as i64 - 128) as i8
+            } else {
+                (rng.below(128) as i64 - 64) as i8
+            }
+        })
+        .collect()
+}
+
+fn ext_weights(rng: &mut Rng, nblocks: usize) -> Vec<i8> {
+    (0..nblocks * 16)
+        .map(|i| {
+            if i % 16 == 15 {
+                (rng.below(256) as i64 - 128) as i8
+            } else {
+                (rng.below(64) as i64 - 32) as i8
+            }
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ properties --
+
+#[test]
+fn prop_all_strategies_identity_without_faults() {
+    check("identity without faults", 40, |rng, size| {
+        let w = wot_weights(rng, size.max(1));
+        for s in all_strategies() {
+            let enc = s.encode(&w).map_err(|e| e.to_string())?;
+            let mut out = vec![0i8; w.len()];
+            s.decode(&enc, &mut out);
+            if out != w {
+                return Err(format!("{} altered clean weights", s.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_flip_per_block_always_corrected() {
+    check("single flip corrected", 40, |rng, size| {
+        let w = wot_weights(rng, size.max(1));
+        for name in ["ecc", "in-place"] {
+            let s = strategy_by_name(name).unwrap();
+            let mut enc = s.encode(&w).map_err(|e| e.to_string())?;
+            let block_bits = 64u64;
+            let nblocks = (w.len() / 8) as u64;
+            // flip one random bit in every block (data side)
+            for bi in 0..nblocks {
+                enc.flip_bit(bi * block_bits + rng.below(block_bits));
+            }
+            let mut out = vec![0i8; w.len()];
+            let stats = s.decode(&enc, &mut out);
+            if out != w {
+                return Err(format!("{name}: weights not recovered"));
+            }
+            if stats.corrected != nblocks {
+                return Err(format!(
+                    "{name}: corrected {} != {} blocks",
+                    stats.corrected, nblocks
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_double_flip_detected_never_miscorrected() {
+    check("double flip detected", 40, |rng, size| {
+        let w = wot_weights(rng, size.max(1));
+        for name in ["ecc", "in-place"] {
+            let s = strategy_by_name(name).unwrap();
+            let base = s.encode(&w).map_err(|e| e.to_string())?;
+            let bits_per_block = if name == "ecc" { 72 } else { 64 };
+            let mut enc = base.clone();
+            // two distinct flips within block 0 (oob positions mapped)
+            let b1 = rng.below(bits_per_block);
+            let mut b2 = rng.below(bits_per_block);
+            while b2 == b1 {
+                b2 = rng.below(bits_per_block);
+            }
+            let data_bits = (enc.data.len() as u64) * 8;
+            let map = |b: u64| -> u64 {
+                if b < 64 {
+                    b
+                } else {
+                    // block 0's check byte lives at oob byte 0
+                    data_bits + (b - 64)
+                }
+            };
+            enc.flip_bit(map(b1));
+            enc.flip_bit(map(b2));
+            let mut out = vec![0i8; w.len()];
+            let stats = s.decode(&enc, &mut out);
+            if stats.detected != 1 {
+                return Err(format!(
+                    "{name}: double flip at {b1},{b2} -> detected={} (miscorrection?)",
+                    stats.detected
+                ));
+            }
+            // all blocks except 0 must decode exactly
+            if out[8..] != w[8..] {
+                return Err(format!("{name}: damage leaked outside block 0"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bch_corrects_any_two_flips_per_block() {
+    check("bch double correction", 30, |rng, size| {
+        let w = ext_weights(rng, size.max(1));
+        let s = strategy_by_name("bch16").unwrap();
+        let mut enc = s.encode(&w).map_err(|e| e.to_string())?;
+        let nblocks = (w.len() / 16) as u64;
+        for bi in 0..nblocks {
+            let b1 = rng.below(128);
+            let mut b2 = rng.below(128);
+            while b2 == b1 {
+                b2 = rng.below(128);
+            }
+            enc.flip_bit(bi * 128 + b1);
+            enc.flip_bit(bi * 128 + b2);
+        }
+        let mut out = vec![0i8; w.len()];
+        s.decode(&enc, &mut out);
+        if out != w {
+            return Err("bch16 failed to correct 2 flips/block".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parity_zero_zeroes_every_odd_corruption() {
+    check("parity zeroes odd corruption", 40, |rng, size| {
+        let w = wot_weights(rng, size.max(1));
+        let s = strategy_by_name("zero").unwrap();
+        let mut enc = s.encode(&w).map_err(|e| e.to_string())?;
+        let victim = rng.below(w.len() as u64) as usize;
+        // odd number of flips in the victim byte
+        let nflips = 1 + 2 * rng.below(4);
+        let bits: Vec<u64> = {
+            let mut r2 = Rng::new(rng.next_u64());
+            r2.distinct(8, nflips)
+        };
+        for b in bits {
+            enc.flip_bit(victim as u64 * 8 + b);
+        }
+        let mut out = vec![0i8; w.len()];
+        let stats = s.decode(&enc, &mut out);
+        if out[victim] != 0 {
+            return Err(format!("victim byte not zeroed ({})", out[victim]));
+        }
+        if stats.zeroed != 1 {
+            return Err(format!("zeroed={} != 1", stats.zeroed));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scrub_equals_decode_reencode() {
+    // Valid precondition: at most one flip per block (uncorrectable
+    // blocks are deliberately left as stored by scrub, while a
+    // decode+reencode would launder them — see inplace::scrub_block).
+    check("scrub == decode+reencode", 30, |rng, size| {
+        let w = wot_weights(rng, size.max(1));
+        for name in ["ecc", "in-place"] {
+            let s = strategy_by_name(name).unwrap();
+            let mut enc = s.encode(&w).map_err(|e| e.to_string())?;
+            // at most one data-bit flip per 64-bit block
+            let nblocks = (w.len() / 8) as u64;
+            for bi in 0..nblocks {
+                if rng.below(3) == 0 {
+                    enc.flip_bit(bi * 64 + rng.below(64));
+                }
+            }
+            let mut via_scrub = enc.clone();
+            s.scrub(&mut via_scrub);
+            // reference: decode then re-encode
+            let mut out = vec![0i8; w.len()];
+            s.decode(&enc, &mut out);
+            let reref = s.encode(&out).map_err(|e| e.to_string())?;
+            if via_scrub.data != reref.data || via_scrub.oob != reref.oob {
+                return Err(format!("{name}: scrub image != decode+reencode image"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overhead_invariant() {
+    check("overhead accounting", 20, |rng, size| {
+        let w = wot_weights(rng, size.max(1));
+        for s in all_strategies() {
+            let enc = s.encode(&w).map_err(|e| e.to_string())?;
+            let want = (w.len() as f64 * s.overhead()).round() as usize;
+            if enc.oob.len() != want {
+                return Err(format!(
+                    "{}: oob {} != {} (overhead {})",
+                    s.name(),
+                    enc.oob.len(),
+                    want,
+                    s.overhead()
+                ));
+            }
+            if enc.data.len() != w.len() {
+                return Err(format!("{}: data len changed", s.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------- json laws --
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 1),
+        2 => Json::Num((rng.next_u64() % 100_000) as f64 / 8.0 - 1000.0),
+        3 => {
+            let n = rng.below(8) as usize;
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        let chars = ['a', 'Z', '"', '\\', '\n', 'é', '😀', ' '];
+                        chars[rng.below(chars.len() as u64) as usize]
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr(
+            (0..rng.below(5))
+                .map(|_| random_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json roundtrip", 200, |rng, _size| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let re = Json::parse(&text).map_err(|e| format!("reparse failed: {e}\n{text}"))?;
+        if re != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ rng laws --
+
+#[test]
+fn prop_distinct_is_distinct_and_in_range() {
+    check("rng distinct", 100, |rng, size| {
+        let n = 1 + rng.below(1000 * size as u64);
+        let k = rng.below(n + 1);
+        let v = Rng::new(rng.next_u64()).distinct(n, k);
+        if v.len() != k as usize {
+            return Err(format!("len {} != k {k}", v.len()));
+        }
+        let set: std::collections::HashSet<_> = v.iter().collect();
+        if set.len() != v.len() {
+            return Err("duplicates".into());
+        }
+        if v.iter().any(|&x| x >= n) {
+            return Err("out of range".into());
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------- fault-rate semantics --
+
+#[test]
+fn prop_fault_rate_exact_count() {
+    use zsecc::memory::{FaultInjector, FaultModel};
+    check("fault count semantics", 50, |rng, size| {
+        let nbytes = 8 * size.max(1);
+        let mut enc = Encoded {
+            data: vec![0u8; nbytes],
+            oob: vec![0u8; nbytes / 8],
+            n: nbytes,
+        };
+        let rate = [1e-3, 1e-2, 5e-2][rng.below(3) as usize];
+        let mut inj = FaultInjector::new(FaultModel::Uniform, rng.next_u64());
+        let n = inj.inject(&mut enc, rate);
+        let expect = (enc.total_bits() as f64 * rate).round() as u64;
+        if n != expect {
+            return Err(format!("injected {n}, expected {expect}"));
+        }
+        let ones: u32 = enc
+            .data
+            .iter()
+            .chain(&enc.oob)
+            .map(|b| b.count_ones())
+            .sum();
+        if ones as u64 != n {
+            return Err("flips not distinct".into());
+        }
+        Ok(())
+    });
+}

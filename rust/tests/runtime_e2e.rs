@@ -1,0 +1,170 @@
+//! End-to-end tests over the real AOT artifacts + PJRT runtime.
+//!
+//! These need `make artifacts` to have run; if the artifacts directory
+//! is absent (e.g. a bare checkout), every test is skipped with a
+//! message rather than failing — `make test` builds artifacts first.
+
+use std::sync::Arc;
+
+use zsecc::harness::eval::EvalCtx;
+use zsecc::memory::FaultModel;
+use zsecc::model::{load_weights, EvalSet, Manifest};
+use zsecc::quant::{dequantize_into, wot_violations};
+use zsecc::runtime::Runtime;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = zsecc::artifacts_dir();
+    if dir.join("index.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        None
+    }
+}
+
+#[test]
+fn exported_weights_satisfy_wot_constraint() {
+    let Some(dir) = artifacts() else { return };
+    for model in zsecc::model::manifest::list_models(&dir).unwrap() {
+        let man = Manifest::load_model(&dir, &model).unwrap();
+        let w = load_weights(&man.weights_path(), man.num_weights).unwrap();
+        assert_eq!(
+            wot_violations(&w),
+            0,
+            "{model}: exported weights violate the WOT constraint"
+        );
+        // pre-WOT buffers generally do NOT satisfy it (that's the point)
+        let pre = load_weights(&man.prewot_path(), man.num_weights).unwrap();
+        let _ = wot_violations(&pre); // just must load & parse
+    }
+}
+
+#[test]
+fn rust_accuracy_matches_python_within_tolerance() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let ds = Arc::new(EvalSet::load(&dir.join("dataset.eval.bin")).unwrap());
+    for model in ["squeezenet_s", "resnet18_s"] {
+        let mut ctx = EvalCtx::load(&dir, model, 256, rt.clone(), ds.clone()).unwrap();
+        let man = &ctx.man;
+        // Cross-language check: the accuracy of the exported int8 buffer
+        // through rust-PJRT must match python's wot_acc closely (same
+        // weights, same eval split, same math modulo op ordering).
+        assert!(
+            (ctx.base_acc - man.wot_acc).abs() < 0.02,
+            "{model}: rust acc {} vs python wot_acc {}",
+            ctx.base_acc,
+            man.wot_acc
+        );
+        // In-place ECC at 1e-6 must be indistinguishable from fault-free.
+        let (acc, _, _) = ctx.faulty_trial("in-place", FaultModel::Uniform, 1e-6, 1).unwrap();
+        assert!(
+            (acc - ctx.base_acc).abs() < 0.005,
+            "{model}: in-place at 1e-6 dropped {} -> {}",
+            ctx.base_acc,
+            acc
+        );
+    }
+}
+
+#[test]
+fn pallas_variant_matches_fast_variant() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let ds = EvalSet::load(&dir.join("dataset.eval.bin")).unwrap();
+    let model = "inception_s"; // smallest pallas artifact
+    let man = Manifest::load_model(&dir, model).unwrap();
+    let b = man.pallas_batch;
+    let fast = rt.load_model(&man, b).unwrap();
+    let pallas = rt.load(&man.hlo_pallas_path(b).unwrap(), b, &man).unwrap();
+    let q = load_weights(&man.weights_path(), man.num_weights).unwrap();
+    let mut f = vec![0f32; q.len()];
+    dequantize_into(&q, &man.layers, &mut f);
+    let wb = rt.bind_weights(&f).unwrap();
+    let imgs = ds.batch(0, b);
+    let a = fast.run(&rt, &wb, imgs).unwrap();
+    let p = pallas.run(&rt, &wb, imgs).unwrap();
+    assert_eq!(a.len(), p.len());
+    let max_diff = a
+        .iter()
+        .zip(&p)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    assert!(
+        max_diff < 1e-3,
+        "pallas HLO diverges from fast HLO: max diff {max_diff}"
+    );
+}
+
+#[test]
+fn table2_mini_grid_shape_holds() {
+    let Some(dir) = artifacts() else { return };
+    use zsecc::harness::table2;
+    let cfg = table2::Config {
+        models: vec!["squeezenet_s".into()],
+        strategies: ["faulty", "zero", "ecc", "in-place"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        rates: vec![1e-4, 1e-3],
+        trials: 3,
+        batch: 256,
+        fault_model: FaultModel::Uniform,
+    };
+    let t2 = table2::run(&dir, &cfg, false).unwrap();
+    for (name, ok) in t2.shape_checks(&cfg) {
+        assert!(ok, "shape check failed: {name}");
+    }
+}
+
+#[test]
+fn fig_series_pass_shape_checks() {
+    let Some(dir) = artifacts() else { return };
+    let models = zsecc::model::manifest::list_models(&dir).unwrap();
+    let logs = zsecc::harness::fig34::run(&dir, &models).unwrap();
+    for (name, ok) in zsecc::harness::fig34::shape_checks(&logs) {
+        assert!(ok, "{name}");
+    }
+    // Fig 1: pre-WOT large positions roughly uniform; post-WOT zero in 0..6
+    let figs = zsecc::harness::fig1::run(&dir, &models).unwrap();
+    for f in &figs {
+        let viol: u64 = f.post_wot[..7].iter().sum();
+        assert_eq!(viol, 0, "{}: post-WOT violations", f.model);
+    }
+}
+
+#[test]
+fn serving_stack_over_real_model() {
+    let Some(dir) = artifacts() else { return };
+    use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+    let cfg = ServerConfig {
+        strategy: "in-place".into(),
+        policy: BatchPolicy {
+            max_batch: 32,
+            max_wait: std::time::Duration::from_millis(4),
+        },
+        scrub_interval: Some(std::time::Duration::from_millis(50)),
+        fault_rate_per_interval: 1e-6,
+        fault_seed: 5,
+    };
+    let ds = EvalSet::load(&dir.join("dataset.eval.bin")).unwrap();
+    let srv = Server::start_pjrt(&dir, "inception_s", &cfg).unwrap();
+    let mut correct = 0usize;
+    let n = 64;
+    let mut rxs = Vec::new();
+    for i in 0..n {
+        rxs.push((srv.submit(ds.image(i).to_vec()).unwrap(), ds.labels[i] as usize));
+    }
+    for (rx, label) in rxs {
+        let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+        correct += (resp.pred == label) as usize;
+    }
+    let man = Manifest::load_model(&dir, "inception_s").unwrap();
+    let acc = correct as f64 / n as f64;
+    assert!(
+        acc > man.wot_acc - 0.15,
+        "served accuracy {acc} too far below {}",
+        man.wot_acc
+    );
+    srv.shutdown();
+}
