@@ -30,6 +30,8 @@ fn main() -> anyhow::Result<()> {
         scrub_interval: Some(Duration::from_millis(args.u64_or("scrub-ms", 250)?)),
         fault_rate_per_interval: args.f64_or("fault-rate", 1e-6)?,
         fault_seed: args.u64_or("seed", 1)?,
+        shards: args.usize_or("shards", 8)?,
+        scrub_workers: args.usize_or("scrub-workers", 4)?,
     };
     println!(
         "serving {model}: strategy={} batch<={} max_wait={:?} scrub={:?} fault={}/interval",

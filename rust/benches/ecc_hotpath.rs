@@ -1,14 +1,22 @@
 //! Hot-path microbenchmarks: ECC block encode/decode/scrub throughput
-//! per strategy, syndrome computation, fault injection, dequantization.
+//! per strategy, syndrome computation, fault injection, dequantization,
+//! and the sharded store's parallel scrub+decode scaling.
 //!
 //! This is the §Perf ledger for Layer 3: the paper's latency claim is
 //! that in-place decoding adds only wiring on top of standard SEC-DED —
 //! in software that translates to "in-place decode GB/s within ~1.1x of
-//! (72,64) SEC-DED decode GB/s", checked here.
+//! (72,64) SEC-DED decode GB/s", checked here. The sharded section
+//! checks the serving claim instead: with >= 4 workers the sharded
+//! store's scrub+decode epoch must run >= 2x the single-worker rate.
+//!
+//! `--json` appends one machine-readable record (for the BENCH_*.json
+//! trajectory) after the human-readable output.
 
 use zsecc::ecc::strategy_by_name;
-use zsecc::memory::{FaultInjector, FaultModel};
+use zsecc::memory::{FaultInjector, FaultModel, ShardedBank};
 use zsecc::quant::dequantize_into;
+use zsecc::util::cli::Args;
+use zsecc::util::json::{arr, num, obj, s};
 use zsecc::util::rng::Rng;
 use zsecc::util::timer::bench;
 
@@ -39,11 +47,15 @@ fn ext_weights(n: usize, seed: u64) -> Vec<i8> {
 }
 
 fn main() {
+    let args = Args::from_env().unwrap_or_default();
     const N: usize = 1 << 20; // 1 MiB of weights — a VGG16_s-scale buffer
     println!("== ecc_hotpath: {} weight bytes per op ==", N);
     let w8 = wot_weights(N, 1);
     let w16 = ext_weights(N, 2);
     let mut out = vec![0i8; N];
+    // (name, GB/s) pairs for the --json record
+    let mut records: Vec<(String, f64)> = Vec::new();
+    let gbps = |ns_per_iter: f64| N as f64 / ns_per_iter;
 
     for name in ["faulty", "zero", "ecc", "in-place", "bch16"] {
         let s = strategy_by_name(name).unwrap();
@@ -54,12 +66,14 @@ fn main() {
             std::hint::black_box(&enc);
         });
         println!("    -> {}", r.throughput_str(N));
+        records.push((format!("{name}/encode"), gbps(r.ns_per_iter)));
         // decode clean
         let enc = s.encode(w).unwrap();
         let r = bench(&format!("{name}: decode (clean)"), || {
             s.decode(std::hint::black_box(&enc), &mut out);
         });
         println!("    -> {}", r.throughput_str(N));
+        records.push((format!("{name}/decode_clean"), gbps(r.ns_per_iter)));
         // decode with sparse faults (1e-4: the realistic scrub-path load)
         let mut enc_f = enc.clone();
         FaultInjector::new(FaultModel::Uniform, 3).inject(&mut enc_f, 1e-4);
@@ -67,6 +81,7 @@ fn main() {
             s.decode(std::hint::black_box(&enc_f), &mut out);
         });
         println!("    -> {}", r.throughput_str(N));
+        records.push((format!("{name}/decode_1e-4"), gbps(r.ns_per_iter)));
         // scrub
         let r = bench(&format!("{name}: scrub (rate 1e-4)"), || {
             let mut e = enc_f.clone();
@@ -74,10 +89,11 @@ fn main() {
             std::hint::black_box(&e);
         });
         println!("    -> {}", r.throughput_str(N));
+        records.push((format!("{name}/scrub_1e-4"), gbps(r.ns_per_iter)));
     }
 
     // latency-claim check: in-place vs conventional SEC-DED decode
-    {
+    let claim_ratio = {
         let ecc = strategy_by_name("ecc").unwrap();
         let inp = strategy_by_name("in-place").unwrap();
         let enc_e = ecc.encode(&w8).unwrap();
@@ -92,7 +108,8 @@ fn main() {
         println!(
             "    -> in-place / secded decode time ratio = {ratio:.3} (paper: wiring only; target <= ~1.1)"
         );
-    }
+        ratio
+    };
 
     // fault injection + dequantization (the rest of the scrub epoch)
     {
@@ -118,5 +135,64 @@ fn main() {
             dequantize_into(std::hint::black_box(&w8), &layers, &mut f);
         });
         println!("    -> {}", r.throughput_str(N));
+        records.push(("dequantize".into(), gbps(r.ns_per_iter)));
+    }
+
+    // sharded store: one scrub+decode epoch over the 1 MiB in-place
+    // image, swept over the worker-pool size (32 shards).
+    const SHARDS: usize = 32;
+    println!("== sharded store: in-place, {SHARDS} shards, scrub+decode epoch ==");
+    let mut sharded: Vec<(usize, f64)> = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let mut sb =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &w8, SHARDS, workers)
+                .unwrap();
+        sb.inject(FaultModel::Uniform, 1e-4, 5);
+        let r = bench(&format!("sharded scrub+decode ({workers} workers)"), || {
+            sb.scrub();
+            sb.read(&mut out);
+        });
+        // 2 passes over the image per iteration (scrub + decode)
+        println!("    -> {}", r.throughput_str(2 * N));
+        sharded.push((workers, 2.0 * N as f64 / r.ns_per_iter));
+    }
+    let base = sharded[0].1;
+    for &(workers, g) in &sharded {
+        records.push((format!("sharded_scrub_decode/{workers}w"), g));
+        if workers >= 4 {
+            println!(
+                "    -> {workers} workers vs 1: {:.2}x (target >= 2x at 4 workers)",
+                g / base
+            );
+        }
+    }
+
+    if args.bool("json") {
+        let rec = obj(vec![
+            ("bench", s("ecc_hotpath")),
+            ("bytes_per_op", num(N as f64)),
+            ("inplace_vs_secded_decode_ratio", num(claim_ratio)),
+            ("shards", num(SHARDS as f64)),
+            (
+                "sharded_speedup_4w",
+                num(sharded.iter().find(|r| r.0 == 4).map(|r| r.1 / base).unwrap_or(0.0)),
+            ),
+            (
+                "gbps",
+                obj(records
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), num(*v)))
+                    .collect()),
+            ),
+            (
+                "sharded_workers",
+                arr(sharded.iter().map(|&(w, _)| num(w as f64))),
+            ),
+            (
+                "sharded_gbps",
+                arr(sharded.iter().map(|&(_, g)| num(g))),
+            ),
+        ]);
+        println!("{}", rec.to_string());
     }
 }

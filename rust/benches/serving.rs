@@ -80,6 +80,7 @@ fn main() -> anyhow::Result<()> {
             scrub_interval: None,
             fault_rate_per_interval: 0.0,
             fault_seed: 0,
+            ..ServerConfig::default()
         };
         let srv = Server::start_with(
             move || {
@@ -123,6 +124,7 @@ fn main() -> anyhow::Result<()> {
                 scrub_interval: Some(Duration::from_millis(250)),
                 fault_rate_per_interval: 1e-6,
                 fault_seed: 1,
+                ..ServerConfig::default()
             };
             let srv = Server::start_pjrt(&artifacts, "squeezenet_s", &cfg)?;
             let (rps, lat) = drive(&srv, ds.dim, 500.0, 4.0, 7);

@@ -1,9 +1,22 @@
 //! Serving metrics: request counters, latency series, memory-protection
-//! event counters (corrected / detected / scrub passes).
+//! event counters (corrected / detected / scrub passes), execution
+//! failures, and per-shard scrub/refresh counters for the sharded store.
 
+use crate::ecc::DecodeStats;
 use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Per-shard counter snapshot (scrub loop + refresh channel activity).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardCounters {
+    pub scrubs: u64,
+    pub corrected: u64,
+    pub detected: u64,
+    pub zeroed: u64,
+    /// Weight deltas shipped for this shard over the refresh channel.
+    pub refreshes: u64,
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -14,8 +27,20 @@ pub struct Metrics {
     pub detected: AtomicU64,
     pub scrubs: AtomicU64,
     pub faults_injected: AtomicU64,
+    /// Refresh *messages* applied by the inference thread (one per
+    /// `WeightUpdate`, whether full or a delta batch).
     pub weight_refreshes: AtomicU64,
+    /// Whole-buffer weight refreshes shipped by the scrub loop.
+    pub full_refreshes: AtomicU64,
+    /// Individual per-shard weight deltas shipped by the scrub loop —
+    /// counts shards, not messages (one Deltas message carrying 3 dirty
+    /// shards adds 3 here and 1 to `weight_refreshes` when applied).
+    pub delta_refreshes: AtomicU64,
+    /// Batches whose executor call failed (requests were answered with
+    /// `pred == usize::MAX`) — previously invisible to operators.
+    pub exec_failures: AtomicU64,
     latency_us: Mutex<Series>,
+    shards: Mutex<Vec<ShardCounters>>,
 }
 
 impl Metrics {
@@ -47,10 +72,39 @@ impl Metrics {
         self.batch_sizes_sum.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    fn shard_slot(shards: &mut Vec<ShardCounters>, idx: usize) -> &mut ShardCounters {
+        if shards.len() <= idx {
+            shards.resize(idx + 1, ShardCounters::default());
+        }
+        &mut shards[idx]
+    }
+
+    /// Record one scrub pass over shard `idx`.
+    pub fn record_shard_scrub(&self, idx: usize, stats: &DecodeStats) {
+        let mut shards = self.shards.lock().unwrap();
+        let c = Self::shard_slot(&mut shards, idx);
+        c.scrubs += 1;
+        c.corrected += stats.corrected;
+        c.detected += stats.detected;
+        c.zeroed += stats.zeroed;
+    }
+
+    /// Record one weight delta shipped for shard `idx`.
+    pub fn record_shard_refresh(&self, idx: usize) {
+        self.delta_refreshes.fetch_add(1, Ordering::Relaxed);
+        let mut shards = self.shards.lock().unwrap();
+        Self::shard_slot(&mut shards, idx).refreshes += 1;
+    }
+
+    /// Snapshot of the per-shard counters.
+    pub fn shard_counters(&self) -> Vec<ShardCounters> {
+        self.shards.lock().unwrap().clone()
+    }
+
     pub fn report(&self) -> String {
         let (mean, p50, p99, n) = self.latency_summary();
-        format!(
-            "requests={} batches={} mean_batch={:.1} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}us (n={}) corrected={} detected={} scrubs={} faults={} refreshes={}",
+        let mut s = format!(
+            "requests={} batches={} mean_batch={:.1} latency(mean/p50/p99)={:.0}/{:.0}/{:.0}us (n={}) corrected={} detected={} scrubs={} faults={} refresh_msgs_applied={} full_sent={} shard_deltas_sent={} exec_failures={}",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch(),
@@ -63,7 +117,21 @@ impl Metrics {
             self.scrubs.load(Ordering::Relaxed),
             self.faults_injected.load(Ordering::Relaxed),
             self.weight_refreshes.load(Ordering::Relaxed),
-        )
+            self.full_refreshes.load(Ordering::Relaxed),
+            self.delta_refreshes.load(Ordering::Relaxed),
+            self.exec_failures.load(Ordering::Relaxed),
+        );
+        let shards = self.shards.lock().unwrap();
+        if !shards.is_empty() {
+            s.push_str("\n  shard  scrubs corrected detected zeroed refreshes");
+            for (i, c) in shards.iter().enumerate() {
+                s.push_str(&format!(
+                    "\n  {:>5} {:>7} {:>9} {:>8} {:>6} {:>9}",
+                    i, c.scrubs, c.corrected, c.detected, c.zeroed, c.refreshes
+                ));
+            }
+        }
+        s
     }
 }
 
@@ -90,5 +158,27 @@ mod tests {
         assert_eq!(n, 100);
         assert!((p50 - 50.5).abs() < 1.0);
         assert!(p99 >= 99.0);
+    }
+
+    #[test]
+    fn shard_counters_grow_on_demand() {
+        let m = Metrics::new();
+        let stats = DecodeStats {
+            corrected: 2,
+            detected: 1,
+            zeroed: 0,
+        };
+        m.record_shard_scrub(3, &stats);
+        m.record_shard_refresh(3);
+        m.record_shard_refresh(0);
+        let c = m.shard_counters();
+        assert_eq!(c.len(), 4);
+        assert_eq!(c[3].scrubs, 1);
+        assert_eq!(c[3].corrected, 2);
+        assert_eq!(c[3].detected, 1);
+        assert_eq!(c[3].refreshes, 1);
+        assert_eq!(c[0].refreshes, 1);
+        assert_eq!(m.delta_refreshes.load(Ordering::Relaxed), 2);
+        assert!(m.report().contains("shard"));
     }
 }

@@ -6,14 +6,18 @@
 //! ```text
 //!   clients --submit()--> [ Batcher queue ] --batches--> inference thread
 //!                                                        (owns PJRT: !Send)
-//!   scrub thread --(decoded f32 weights)--> inference thread (rebind)
-//!        |
-//!        `-- owns the MemoryBank: fault injection + periodic scrub
+//!   scrub thread --(WeightUpdate: full | dirty-shard deltas)--> inference
+//!        |                                                thread (rebind)
+//!        `-- owns the ShardedBank: fault injection + parallel per-shard
+//!            scrub on a scoped worker pool + dirty tracking
 //! ```
 //!
 //! PJRT handles wrap raw pointers and are not Send, so every PJRT object
 //! lives on the inference thread; other threads communicate through
-//! channels only.
+//! channels only. The refresh channel carries incremental updates: only
+//! shards whose stored bytes changed since the last refresh are decoded
+//! (fused decode + dequantize) and shipped as `offset + f32 window`
+//! deltas; a full buffer crosses only when every shard is dirty.
 
 pub mod batcher;
 pub mod metrics;
@@ -21,6 +25,6 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy, Request, Response};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, ShardCounters};
 pub use router::Router;
-pub use server::{Server, ServerConfig};
+pub use server::{BatchExec, Server, ServerConfig, WeightDelta, WeightUpdate};

@@ -128,6 +128,7 @@ mod tests {
             scrub_interval: None,
             fault_rate_per_interval: 0.0,
             fault_seed: 0,
+            ..ServerConfig::default()
         };
         Server::start_with(
             || Ok(Box::new(Echo { dim: 1 }) as Box<dyn BatchExec>),

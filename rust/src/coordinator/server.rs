@@ -2,12 +2,16 @@
 //!
 //! The inference thread owns every PJRT object (they are not Send); it
 //! pulls batches from the `Batcher`, executes, and answers requests.
-//! The scrub thread owns the protected `MemoryBank`: it periodically
+//! The scrub thread owns the protected `ShardedBank`: it periodically
 //! injects environmental faults (when configured), scrubs the stored
-//! image, decodes + dequantizes, and ships a fresh f32 weight buffer to
-//! the inference thread over a channel — weights never cross the request
-//! path, exactly the paper's deployment model (weights live encoded in
-//! memory; the ECC decode sits between memory and compute).
+//! image shard-by-shard on a worker pool, and ships *incremental*
+//! weight updates to the inference thread over a channel — only the
+//! shards whose stored bytes changed are decoded (fused decode +
+//! dequantize, no full-buffer i8 pass) and sent as `offset + f32 slice`
+//! deltas; the full buffer crosses the channel only when every shard is
+//! dirty. Weights never cross the request path, exactly the paper's
+//! deployment model (weights live encoded in memory; the ECC decode
+//! sits between memory and compute).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -18,7 +22,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatchPolicy, Batcher, Request, Response};
 use super::metrics::Metrics;
 use crate::ecc::strategy_by_name;
-use crate::memory::{FaultModel, MemoryBank};
+use crate::memory::{FaultModel, ShardedBank};
 use crate::model::{load_weights, Manifest};
 use crate::quant::dequantize_into;
 use crate::runtime::{argmax_rows, Runtime};
@@ -35,6 +39,10 @@ pub struct ServerConfig {
     /// fault simulation); 0 disables injection.
     pub fault_rate_per_interval: f64,
     pub fault_seed: u64,
+    /// Shard count of the protected weight store.
+    pub shards: usize,
+    /// Worker threads the scrub loop fans shards out over.
+    pub scrub_workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -45,8 +53,26 @@ impl Default for ServerConfig {
             scrub_interval: Some(Duration::from_millis(100)),
             fault_rate_per_interval: 0.0,
             fault_seed: 1,
+            shards: 8,
+            scrub_workers: 4,
         }
     }
+}
+
+/// One incremental weight update: `values` replaces the flat f32 weight
+/// window starting at element `offset`.
+#[derive(Clone, Debug)]
+pub struct WeightDelta {
+    pub offset: usize,
+    pub values: Vec<f32>,
+}
+
+/// What the scrub loop ships over the refresh channel.
+pub enum WeightUpdate {
+    /// Whole-buffer refresh (startup fallback / every shard dirty).
+    Full(Vec<f32>),
+    /// Dirty shards only.
+    Deltas(Vec<WeightDelta>),
 }
 
 /// Executes padded batches; implemented by the PJRT path and by mocks in
@@ -58,8 +84,15 @@ pub trait BatchExec {
     /// Execute `count <= batch()` images (flat, padded buffer sized for
     /// a full batch); returns `count` predictions.
     fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>>;
-    /// Swap in freshly decoded weights.
+    /// Swap in freshly decoded weights (whole buffer).
     fn refresh(&mut self, weights: &[f32]) -> anyhow::Result<()>;
+    /// Patch in freshly decoded weight windows (the delta variant of
+    /// `refresh`). Executors that keep device-resident weights apply
+    /// every delta to their host copy and re-upload once. The default is
+    /// a no-op so weight-free mock executors stay trivial.
+    fn refresh_delta(&mut self, _deltas: &[WeightDelta]) -> anyhow::Result<()> {
+        Ok(())
+    }
 }
 
 /// A running server.
@@ -79,7 +112,7 @@ impl Server {
         make_exec: F,
         input_dim: usize,
         cfg: &ServerConfig,
-        mut bank: Option<(MemoryBank, Vec<crate::model::Layer>)>,
+        mut bank: Option<(ShardedBank, Vec<crate::model::Layer>)>,
     ) -> anyhow::Result<Server>
     where
         F: FnOnce() -> anyhow::Result<Box<dyn BatchExec>> + Send + 'static,
@@ -87,7 +120,7 @@ impl Server {
         let batcher = Arc::new(Batcher::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
-        let (weights_tx, weights_rx): (Sender<Vec<f32>>, Receiver<Vec<f32>>) = channel();
+        let (weights_tx, weights_rx): (Sender<WeightUpdate>, Receiver<WeightUpdate>) = channel();
         let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
 
         // ---- inference thread ----
@@ -109,11 +142,33 @@ impl Server {
                 let bsz = exec.batch();
                 let dim = exec.input_dim();
                 let mut buf = vec![0f32; bsz * dim];
+                // An update whose application failed (e.g. a transient
+                // device error on re-upload): retried before the next
+                // batch rather than dropped — the bank has already
+                // cleared those shards' dirty bits and will not resend.
+                let mut pending: Option<WeightUpdate> = None;
+                let apply = |exec: &mut Box<dyn BatchExec>, update: &WeightUpdate| match update {
+                    WeightUpdate::Full(w) => exec.refresh(w).is_ok(),
+                    WeightUpdate::Deltas(d) => exec.refresh_delta(d).is_ok(),
+                };
                 while let Some(batch) = b.next_batch() {
-                    // Non-blocking weight refresh before each batch.
-                    while let Ok(w) = weights_rx.try_recv() {
-                        if exec.refresh(&w).is_ok() {
+                    // Non-blocking weight refresh before each batch;
+                    // stop draining on failure to keep updates ordered.
+                    if let Some(update) = pending.take() {
+                        if apply(&mut exec, &update) {
                             m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            pending = Some(update);
+                        }
+                    }
+                    while pending.is_none() {
+                        let Ok(update) = weights_rx.try_recv() else {
+                            break;
+                        };
+                        if apply(&mut exec, &update) {
+                            m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            pending = Some(update);
                         }
                     }
                     let count = batch.len().min(bsz);
@@ -122,7 +177,10 @@ impl Server {
                     }
                     let preds = match exec.exec(&buf, count) {
                         Ok(p) => p,
-                        Err(_) => vec![usize::MAX; count],
+                        Err(_) => {
+                            m.exec_failures.fetch_add(1, Ordering::Relaxed);
+                            vec![usize::MAX; count]
+                        }
                     };
                     let now = Instant::now();
                     m.record_batch(count);
@@ -147,10 +205,8 @@ impl Server {
 
         let mut threads = vec![inf];
 
-        // ---- scrub thread (owns the MemoryBank) ----
-        if let (Some(interval), Some((mut mb, layers))) =
-            (cfg.scrub_interval, bank.take())
-        {
+        // ---- scrub thread (owns the ShardedBank) ----
+        if let (Some(interval), Some((mut sb, layers))) = (cfg.scrub_interval, bank.take()) {
             let m = metrics.clone();
             let stop2 = stop.clone();
             let rate = cfg.fault_rate_per_interval;
@@ -158,25 +214,50 @@ impl Server {
             let t = std::thread::Builder::new()
                 .name("zsecc-scrub".into())
                 .spawn(move || {
-                    let mut qbuf = vec![0i8; mb.n_weights()];
+                    let nshards = sb.num_shards();
+                    let mut qbuf = vec![0i8; sb.n_weights()];
+                    let mut scratch: Vec<i8> = Vec::new();
                     let mut epoch = 0u64;
                     while !stop2.load(Ordering::Relaxed) {
                         std::thread::sleep(interval);
                         if rate > 0.0 {
-                            let n = mb.inject(FaultModel::Uniform, rate, seed0 ^ epoch);
+                            let n = sb.inject(FaultModel::Uniform, rate, seed0 ^ epoch);
                             m.faults_injected.fetch_add(n, Ordering::Relaxed);
                         }
-                        let stats = mb.scrub();
+                        let stats = sb.scrub();
                         m.corrected.fetch_add(stats.corrected, Ordering::Relaxed);
                         m.detected.fetch_add(stats.detected, Ordering::Relaxed);
                         m.scrubs.fetch_add(1, Ordering::Relaxed);
-                        mb.read(&mut qbuf);
-                        let mut w = vec![0f32; qbuf.len()];
-                        dequantize_into(&qbuf, &layers, &mut w);
-                        if weights_tx.send(w).is_err() {
+                        for (i, s) in sb.shard_states().iter().enumerate() {
+                            m.record_shard_scrub(i, &s.last_scrub);
+                        }
+                        let dirty = sb.take_dirty();
+                        epoch += 1;
+                        if dirty.is_empty() {
+                            continue; // nothing decoded, nothing sent
+                        }
+                        let update = if dirty.len() == nshards {
+                            // Whole image dirty: one full buffer beats
+                            // nshards deltas.
+                            sb.read(&mut qbuf);
+                            let mut w = vec![0f32; qbuf.len()];
+                            dequantize_into(&qbuf, &layers, &mut w);
+                            m.full_refreshes.fetch_add(1, Ordering::Relaxed);
+                            WeightUpdate::Full(w)
+                        } else {
+                            let mut deltas = Vec::with_capacity(dirty.len());
+                            for i in dirty {
+                                let (s, e) = sb.shard_range(i);
+                                let mut values = vec![0f32; e - s];
+                                sb.decode_dequant_shard(i, &layers, &mut scratch, &mut values);
+                                m.record_shard_refresh(i);
+                                deltas.push(WeightDelta { offset: s, values });
+                            }
+                            WeightUpdate::Deltas(deltas)
+                        };
+                        if weights_tx.send(update).is_err() {
                             break; // inference thread gone
                         }
-                        epoch += 1;
                     }
                 })?;
             threads.push(t);
@@ -200,25 +281,29 @@ impl Server {
     ) -> anyhow::Result<Server> {
         let man = Manifest::load_model(artifacts_dir, model)?;
         let weights = load_weights(&man.weights_path(), man.num_weights)?;
-        let bank = MemoryBank::new(strategy_by_name(&cfg.strategy)?, &weights)?;
         let layers = man.layers.clone();
 
-        // Initial decoded weights for the inference thread.
         let batch = cfg.policy.max_batch;
         anyhow::ensure!(
             man.batches.contains(&batch),
             "no exported executable for batch {batch} (have {:?})",
             man.batches
         );
+
+        // Encode once; the initial f32 weights are decoded from the same
+        // bank the scrub thread will own.
+        let mut bank = ShardedBank::new(
+            strategy_by_name(&cfg.strategy)?,
+            &weights,
+            cfg.shards,
+            cfg.scrub_workers,
+        )?;
+        let mut q = vec![0i8; weights.len()];
+        bank.read(&mut q);
+        let mut w0 = vec![0f32; q.len()];
+        dequantize_into(&q, &man.layers, &mut w0);
+
         let man2 = man.clone();
-        let w0 = {
-            let mut mb = MemoryBank::new(strategy_by_name(&cfg.strategy)?, &weights)?;
-            let mut q = vec![0i8; weights.len()];
-            mb.read(&mut q);
-            let mut w = vec![0f32; q.len()];
-            dequantize_into(&q, &man.layers, &mut w);
-            w
-        };
         let input_dim = man.input_dim;
         Server::start_with(
             move || {
@@ -229,6 +314,7 @@ impl Server {
                     rt,
                     exe,
                     wbuf,
+                    host: w0,
                 }) as Box<dyn BatchExec>)
             },
             input_dim,
@@ -262,11 +348,14 @@ impl Server {
     }
 }
 
-/// The real PJRT executor (lives on the inference thread).
+/// The real PJRT executor (lives on the inference thread). Keeps a host
+/// copy of the flat f32 weights so delta refreshes patch windows and
+/// re-upload once.
 struct PjrtExec {
     rt: Arc<Runtime>,
     exe: crate::runtime::Executable,
     wbuf: crate::runtime::WeightsBuf,
+    host: Vec<f32>,
 }
 
 impl BatchExec for PjrtExec {
@@ -283,7 +372,23 @@ impl BatchExec for PjrtExec {
         Ok(preds)
     }
     fn refresh(&mut self, weights: &[f32]) -> anyhow::Result<()> {
-        self.wbuf = self.rt.bind_weights(weights)?;
+        self.host.clear();
+        self.host.extend_from_slice(weights);
+        self.wbuf = self.rt.bind_weights(&self.host)?;
+        Ok(())
+    }
+    fn refresh_delta(&mut self, deltas: &[WeightDelta]) -> anyhow::Result<()> {
+        for d in deltas {
+            anyhow::ensure!(
+                d.offset + d.values.len() <= self.host.len(),
+                "delta [{}, {}) outside weight buffer of {}",
+                d.offset,
+                d.offset + d.values.len(),
+                self.host.len()
+            );
+            self.host[d.offset..d.offset + d.values.len()].copy_from_slice(&d.values);
+        }
+        self.wbuf = self.rt.bind_weights(&self.host)?;
         Ok(())
     }
 }
@@ -291,6 +396,7 @@ impl BatchExec for PjrtExec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
 
     /// Mock executor: predicts class = round(first pixel), counts calls.
     struct Mock {
@@ -327,7 +433,20 @@ mod tests {
             scrub_interval: None,
             fault_rate_per_interval: 0.0,
             fault_seed: 0,
+            shards: 4,
+            scrub_workers: 2,
         }
+    }
+
+    fn test_layers(n: usize) -> Vec<crate::model::Layer> {
+        vec![crate::model::Layer {
+            name: "a".into(),
+            shape: vec![n],
+            offset: 0,
+            size: n,
+            scale: 1.0,
+            scale_prewot: 1.0,
+        }]
     }
 
     #[test]
@@ -393,18 +512,42 @@ mod tests {
     }
 
     #[test]
+    fn exec_failures_are_counted() {
+        struct Flaky;
+        impl BatchExec for Flaky {
+            fn batch(&self) -> usize {
+                2
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn exec(&mut self, _images: &[f32], _count: usize) -> anyhow::Result<Vec<usize>> {
+                Err(anyhow::anyhow!("device lost"))
+            }
+            fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+        let srv = Server::start_with(
+            || Ok(Box::new(Flaky) as Box<dyn BatchExec>),
+            1,
+            &mock_cfg(),
+            None,
+        )
+        .unwrap();
+        let rx = srv.submit(vec![1.0]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.pred, usize::MAX, "failed batch answers with MAX");
+        assert!(srv.metrics.exec_failures.load(Ordering::Relaxed) >= 1);
+        srv.shutdown();
+    }
+
+    #[test]
     fn scrub_thread_refreshes_weights() {
         use crate::ecc::strategy_by_name;
         let weights = vec![0i8; 64];
-        let bank = MemoryBank::new(strategy_by_name("in-place").unwrap(), &weights).unwrap();
-        let layers = vec![crate::model::Layer {
-            name: "a".into(),
-            shape: vec![64],
-            offset: 0,
-            size: 64,
-            scale: 1.0,
-            scale_prewot: 1.0,
-        }];
+        let bank =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &weights, 4, 2).unwrap();
         let mut cfg = mock_cfg();
         cfg.scrub_interval = Some(Duration::from_millis(5));
         cfg.fault_rate_per_interval = 1e-3;
@@ -418,7 +561,7 @@ mod tests {
             },
             1,
             &cfg,
-            Some((bank, layers)),
+            Some((bank, test_layers(64))),
         )
         .unwrap();
         // Give the scrub loop a few periods, keep traffic flowing so the
@@ -431,5 +574,95 @@ mod tests {
         assert!(srv.metrics.scrubs.load(Ordering::Relaxed) >= 2);
         assert!(srv.metrics.weight_refreshes.load(Ordering::Relaxed) >= 1);
         srv.shutdown();
+    }
+
+    /// The acceptance check for incremental refresh: with some (but not
+    /// all) shards dirty, the scrub epoch ships per-shard deltas — never
+    /// a full-buffer `Vec<f32>` — and the deltas are exactly the dirty
+    /// shards' windows.
+    #[test]
+    fn refresh_deltas_ship_only_dirty_shards() {
+        use crate::ecc::strategy_by_name;
+        #[derive(Default)]
+        struct Log {
+            fulls: usize,
+            deltas: Vec<(usize, usize)>,
+        }
+        struct DeltaMock {
+            log: Arc<Mutex<Log>>,
+        }
+        impl BatchExec for DeltaMock {
+            fn batch(&self) -> usize {
+                4
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn exec(&mut self, _images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+                Ok(vec![0; count])
+            }
+            fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+                self.log.lock().unwrap().fulls += 1;
+                Ok(())
+            }
+            fn refresh_delta(&mut self, deltas: &[WeightDelta]) -> anyhow::Result<()> {
+                let mut l = self.log.lock().unwrap();
+                for d in deltas {
+                    l.deltas.push((d.offset, d.values.len()));
+                }
+                Ok(())
+            }
+        }
+
+        let weights = vec![0i8; 256];
+        let mut bank =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &weights, 4, 2).unwrap();
+        // Pre-inject a couple of flips: at most 2 of the 4 shards dirty.
+        let flipped = bank.inject(FaultModel::Uniform, 1e-3, 42);
+        assert!(flipped >= 1);
+        let shard_ranges: Vec<(usize, usize)> =
+            (0..bank.num_shards()).map(|i| bank.shard_range(i)).collect();
+
+        let log = Arc::new(Mutex::new(Log::default()));
+        let log2 = log.clone();
+        let mut cfg = mock_cfg();
+        cfg.scrub_interval = Some(Duration::from_millis(5));
+        cfg.fault_rate_per_interval = 0.0; // no live injection
+        let srv = Server::start_with(
+            move || Ok(Box::new(DeltaMock { log: log2 }) as Box<dyn BatchExec>),
+            1,
+            &cfg,
+            Some((bank, test_layers(256))),
+        )
+        .unwrap();
+        for _ in 0..100 {
+            let rx = srv.submit(vec![0.0]).unwrap();
+            let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            if srv.metrics.weight_refreshes.load(Ordering::Relaxed) >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            srv.metrics.delta_refreshes.load(Ordering::Relaxed) >= 1,
+            "dirty shards must have shipped as deltas"
+        );
+        srv.shutdown();
+        let l = log.lock().unwrap();
+        assert_eq!(l.fulls, 0, "no full-buffer refresh may be sent");
+        assert!(!l.deltas.is_empty());
+        let mut shards_hit = std::collections::BTreeSet::new();
+        for &(off, len) in &l.deltas {
+            assert!(
+                shard_ranges.contains(&(off, off + len)),
+                "delta [{off}, {}) is not a shard window",
+                off + len
+            );
+            shards_hit.insert(off);
+        }
+        assert!(
+            shards_hit.len() <= 2,
+            "at most 2 shards can be dirty from 2 flips, saw {shards_hit:?}"
+        );
     }
 }

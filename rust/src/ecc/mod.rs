@@ -22,4 +22,6 @@ pub mod secded;
 pub mod strategy;
 
 pub use hsiao::{HsiaoCode, Outcome};
-pub use strategy::{DecodeStats, Encoded, Protection, strategy_by_name, all_strategies};
+pub use strategy::{
+    all_strategies, all_strategies_ext, strategy_by_name, DecodeStats, Encoded, Protection,
+};

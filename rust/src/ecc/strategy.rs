@@ -6,6 +6,15 @@
 //! Fault injection targets *all* stored bits (data + oob), matching the
 //! paper's definition of fault rate over the bits a scheme actually
 //! keeps in memory.
+//!
+//! Every scheme here is a *per-block* code, which the trait exposes as
+//! block-range APIs: `decode_span`/`scrub_span` operate on a
+//! block-aligned window of the stored image and are the primitive every
+//! strategy implements natively; `decode_range`/`scrub_range` address a
+//! window of an [`Encoded`] by `[start, end)` byte offsets; the classic
+//! whole-buffer `decode`/`scrub` are the `[0, len)` special case. The
+//! sharded memory bank leans on this to scrub disjoint shards of one
+//! stored image from parallel workers.
 
 use super::{bch, inplace, parity, secded};
 use crate::ecc::hsiao::Outcome;
@@ -56,9 +65,20 @@ impl DecodeStats {
         self.detected += o.detected;
         self.zeroed += o.zeroed;
     }
+
+    /// True when the pass saw no error of any kind.
+    pub fn is_clean(&self) -> bool {
+        *self == DecodeStats::default()
+    }
 }
 
 /// A memory-protection strategy.
+///
+/// `decode_span` is the one required decode primitive; `scrub_span`,
+/// the `*_range` addressing forms and the whole-buffer `decode`/`scrub`
+/// all have defaults derived from it (plus `encode` for the scrub
+/// fallback). The built-in strategies override `scrub_span` natively so
+/// scrubbing never round-trips through a weight re-encode.
 pub trait Protection: Send + Sync {
     /// Paper name: "faulty", "zero", "ecc", "in-place", "bch16".
     fn name(&self) -> &'static str;
@@ -66,20 +86,79 @@ pub trait Protection: Send + Sync {
     fn ecc_hw(&self) -> bool;
     /// Space overhead as a fraction of the raw weight bytes.
     fn overhead(&self) -> f64;
-    /// Encode a weight buffer (length % block == 0) into a stored image.
+    /// Data bytes per independent code block. Range/span windows must be
+    /// aligned to this (1 = byte-granular, no alignment constraint).
+    fn block_bytes(&self) -> usize;
+    /// Out-of-band check bytes per code block (0 for zero-space schemes).
+    fn oob_bytes_per_block(&self) -> usize;
+    /// Encode a weight buffer (length % block_bytes == 0) into a stored
+    /// image.
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded>;
-    /// Decode the stored image into weights, correcting what the scheme
-    /// can; the image itself is not modified.
-    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats;
-    /// Scrub: correct the stored image in place (decode + re-encode),
-    /// so that latent single errors do not accumulate into doubles.
-    fn scrub(&self, enc: &mut Encoded) -> DecodeStats {
-        let mut w = vec![0i8; enc.n];
-        let stats = self.decode(enc, &mut w);
+
+    /// Decode a block-aligned window of a stored image. `data`/`oob` are
+    /// the window's slices (`oob` covers exactly `data`'s blocks) and
+    /// `out.len() == data.len()`; the stored bytes are not modified.
+    fn decode_span(&self, data: &[u8], oob: &[u8], out: &mut [i8]) -> DecodeStats;
+
+    /// Scrub a block-aligned window: correct the stored bytes in place
+    /// (so latent single errors do not accumulate into doubles).
+    /// Default: decode the span, re-encode, write back — uncorrectable
+    /// spans are left as stored when the re-encode fails.
+    fn scrub_span(&self, data: &mut [u8], oob: &mut [u8]) -> DecodeStats {
+        let mut w = vec![0i8; data.len()];
+        let stats = self.decode_span(data, oob, &mut w);
         if let Ok(re) = self.encode(&w) {
-            *enc = re;
+            data.copy_from_slice(&re.data);
+            oob.copy_from_slice(&re.oob);
         }
         stats
+    }
+
+    /// Map a block-aligned `[start, end)` data-byte window to its
+    /// out-of-band check window.
+    fn oob_window(
+        &self,
+        start: usize,
+        end: usize,
+        data_len: usize,
+        oob_len: usize,
+    ) -> (usize, usize) {
+        let (b, o) = (self.block_bytes(), self.oob_bytes_per_block());
+        if o == 0 {
+            return (0, 0);
+        }
+        let os = start / b * o;
+        let oe = if end == data_len { oob_len } else { end / b * o };
+        (os, oe)
+    }
+
+    /// Decode the window `[start, end)` (block-aligned byte offsets into
+    /// `enc.data`) into `out` (`out.len() == end - start`). The whole
+    /// buffer is `decode_range(enc, 0, enc.data.len(), out)`.
+    fn decode_range(&self, enc: &Encoded, start: usize, end: usize, out: &mut [i8]) -> DecodeStats {
+        let b = self.block_bytes();
+        debug_assert!(start % b == 0 && (end % b == 0 || end == enc.data.len()));
+        let (os, oe) = self.oob_window(start, end, enc.data.len(), enc.oob.len());
+        self.decode_span(&enc.data[start..end], &enc.oob[os..oe], out)
+    }
+
+    /// Scrub the window `[start, end)` of the stored image in place.
+    fn scrub_range(&self, enc: &mut Encoded, start: usize, end: usize) -> DecodeStats {
+        let b = self.block_bytes();
+        debug_assert!(start % b == 0 && (end % b == 0 || end == enc.data.len()));
+        let (os, oe) = self.oob_window(start, end, enc.data.len(), enc.oob.len());
+        self.scrub_span(&mut enc.data[start..end], &mut enc.oob[os..oe])
+    }
+
+    /// Decode the whole stored image into weights, correcting what the
+    /// scheme can; the image itself is not modified.
+    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+        self.decode_range(enc, 0, enc.data.len(), out)
+    }
+
+    /// Scrub the whole stored image in place.
+    fn scrub(&self, enc: &mut Encoded) -> DecodeStats {
+        self.scrub_range(enc, 0, enc.data.len())
     }
 }
 
@@ -98,6 +177,12 @@ impl Protection for Unprotected {
     fn overhead(&self) -> f64 {
         0.0
     }
+    fn block_bytes(&self) -> usize {
+        1
+    }
+    fn oob_bytes_per_block(&self) -> usize {
+        0
+    }
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
         Ok(Encoded {
             data: weights.iter().map(|&w| w as u8).collect(),
@@ -105,11 +190,14 @@ impl Protection for Unprotected {
             n: weights.len(),
         })
     }
-    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
-        for (o, &b) in out.iter_mut().zip(&enc.data) {
+    fn decode_span(&self, data: &[u8], _oob: &[u8], out: &mut [i8]) -> DecodeStats {
+        for (o, &b) in out.iter_mut().zip(data) {
             *o = b as i8;
         }
         DecodeStats::default()
+    }
+    fn scrub_span(&self, _data: &mut [u8], _oob: &mut [u8]) -> DecodeStats {
+        DecodeStats::default() // nothing to correct, nothing to re-encode
     }
 }
 
@@ -128,6 +216,12 @@ impl Protection for ParityZero {
     fn overhead(&self) -> f64 {
         0.125
     }
+    fn block_bytes(&self) -> usize {
+        8
+    }
+    fn oob_bytes_per_block(&self) -> usize {
+        1
+    }
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
         let data: Vec<u8> = weights.iter().map(|&w| w as u8).collect();
         let oob = parity::encode_oob(&data);
@@ -137,15 +231,15 @@ impl Protection for ParityZero {
             n: weights.len(),
         })
     }
-    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+    fn decode_span(&self, data: &[u8], oob: &[u8], out: &mut [i8]) -> DecodeStats {
         let mut stats = DecodeStats::default();
         // u64 fast path: 8 parities per word (see parity::parity_word),
         // branch only on the (rare) mismatching words.
-        let mut chunks = enc.data.chunks_exact(8);
+        let mut chunks = data.chunks_exact(8);
         let mut i = 0usize;
         for chunk in &mut chunks {
             let w = u64::from_le_bytes(chunk.try_into().unwrap());
-            let mism = parity::parity_word(w) ^ enc.oob[i / 8];
+            let mism = parity::parity_word(w) ^ oob[i / 8];
             if mism == 0 {
                 for (o, &b) in out[i..i + 8].iter_mut().zip(chunk) {
                     *o = b as i8;
@@ -164,13 +258,34 @@ impl Protection for ParityZero {
             i += 8;
         }
         for (j, &b) in chunks.remainder().iter().enumerate() {
-            if parity::check(b, &enc.oob, i + j) {
+            if parity::check(b, oob, i + j) {
                 out[i + j] = b as i8;
             } else {
                 out[i + j] = 0;
                 stats.detected += 1;
                 stats.zeroed += 1;
             }
+        }
+        stats
+    }
+    fn scrub_span(&self, data: &mut [u8], oob: &mut [u8]) -> DecodeStats {
+        // Zero the weight on mismatch and clear its parity bit (the
+        // parity of 0 is 0) — bit-identical to decode + re-encode, minus
+        // the intermediate weight buffer.
+        let mut stats = DecodeStats::default();
+        for (i, b) in data.iter_mut().enumerate() {
+            if !parity::check(*b, oob, i) {
+                *b = 0;
+                oob[i / 8] &= !(1 << (i % 8));
+                stats.detected += 1;
+                stats.zeroed += 1;
+            }
+        }
+        // Re-encode also launders flips in the padding bits of a ragged
+        // final check byte; mirror that so scrub images stay canonical.
+        if data.len() % 8 != 0 {
+            let mask = (1u16 << (data.len() % 8)) as u8 - 1;
+            oob[data.len() / 8] &= mask;
         }
         stats
     }
@@ -192,6 +307,12 @@ impl Protection for Secded7264 {
     fn overhead(&self) -> f64 {
         0.125
     }
+    fn block_bytes(&self) -> usize {
+        8
+    }
+    fn oob_bytes_per_block(&self) -> usize {
+        1
+    }
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
         anyhow::ensure!(
             weights.len() % 8 == 0,
@@ -210,12 +331,12 @@ impl Protection for Secded7264 {
             n: weights.len(),
         })
     }
-    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+    fn decode_span(&self, data: &[u8], oob: &[u8], out: &mut [i8]) -> DecodeStats {
         let code = secded::code_7264();
         let mut stats = DecodeStats::default();
-        for (bi, chunk) in enc.data.chunks_exact(8).enumerate() {
+        for (bi, chunk) in data.chunks_exact(8).enumerate() {
             let mut w = u64::from_le_bytes(chunk.try_into().unwrap());
-            let s = code.syndrome_u64(w) ^ code.syndrome_oob(enc.oob[bi]);
+            let s = code.syndrome_u64(w) ^ code.syndrome_oob(oob[bi]);
             if s != 0 {
                 match code.correction(s) {
                     Some(pos) if pos < 64 => {
@@ -233,12 +354,12 @@ impl Protection for Secded7264 {
         }
         stats
     }
-    fn scrub(&self, enc: &mut Encoded) -> DecodeStats {
+    fn scrub_span(&self, data: &mut [u8], oob: &mut [u8]) -> DecodeStats {
         let code = secded::code_7264();
         let mut stats = DecodeStats::default();
-        for (bi, chunk) in enc.data.chunks_exact_mut(8).enumerate() {
+        for (bi, chunk) in data.chunks_exact_mut(8).enumerate() {
             let w = u64::from_le_bytes((&*chunk).try_into().unwrap());
-            let s = code.syndrome_u64(w) ^ code.syndrome_oob(enc.oob[bi]);
+            let s = code.syndrome_u64(w) ^ code.syndrome_oob(oob[bi]);
             if s == 0 {
                 continue;
             }
@@ -248,7 +369,7 @@ impl Protection for Secded7264 {
                     stats.corrected += 1;
                 }
                 Some(pos) => {
-                    enc.oob[bi] ^= 1 << (pos - 64);
+                    oob[bi] ^= 1 << (pos - 64);
                     stats.corrected += 1;
                 }
                 None => stats.detected += 1, // leave stored image as-is
@@ -272,6 +393,12 @@ impl Protection for InplaceZs {
     }
     fn overhead(&self) -> f64 {
         0.0
+    }
+    fn block_bytes(&self) -> usize {
+        8
+    }
+    fn oob_bytes_per_block(&self) -> usize {
+        0
     }
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
         anyhow::ensure!(
@@ -298,10 +425,10 @@ impl Protection for InplaceZs {
             n: weights.len(),
         })
     }
-    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+    fn decode_span(&self, data: &[u8], _oob: &[u8], out: &mut [i8]) -> DecodeStats {
         let mut stats = DecodeStats::default();
         let cx = inplace::ctx();
-        for (bi, chunk) in enc.data.chunks_exact(8).enumerate() {
+        for (bi, chunk) in data.chunks_exact(8).enumerate() {
             let (w, outcome) =
                 inplace::decode_u64_with(cx, u64::from_le_bytes(chunk.try_into().unwrap()));
             match outcome {
@@ -316,10 +443,10 @@ impl Protection for InplaceZs {
         }
         stats
     }
-    fn scrub(&self, enc: &mut Encoded) -> DecodeStats {
+    fn scrub_span(&self, data: &mut [u8], _oob: &mut [u8]) -> DecodeStats {
         let mut stats = DecodeStats::default();
         let cx = inplace::ctx();
-        for chunk in enc.data.chunks_exact_mut(8) {
+        for chunk in data.chunks_exact_mut(8) {
             let (w, outcome) =
                 inplace::scrub_u64_with(cx, u64::from_le_bytes((&*chunk).try_into().unwrap()));
             match outcome {
@@ -351,6 +478,12 @@ impl Protection for Bch16 {
     fn overhead(&self) -> f64 {
         0.0
     }
+    fn block_bytes(&self) -> usize {
+        bch::BLOCK
+    }
+    fn oob_bytes_per_block(&self) -> usize {
+        0
+    }
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
         anyhow::ensure!(
             weights.len() % bch::BLOCK == 0,
@@ -374,10 +507,10 @@ impl Protection for Bch16 {
             n: weights.len(),
         })
     }
-    fn decode(&self, enc: &Encoded, out: &mut [i8]) -> DecodeStats {
+    fn decode_span(&self, data: &[u8], _oob: &[u8], out: &mut [i8]) -> DecodeStats {
         let mut stats = DecodeStats::default();
         let mut block = [0u8; bch::BLOCK];
-        for (bi, chunk) in enc.data.chunks_exact(bch::BLOCK).enumerate() {
+        for (bi, chunk) in data.chunks_exact(bch::BLOCK).enumerate() {
             block.copy_from_slice(chunk);
             match bch::decode_block(&mut block) {
                 bch::BchOutcome::Clean => {}
@@ -387,6 +520,27 @@ impl Protection for Bch16 {
             let at = bi * bch::BLOCK;
             for (o, &b) in out[at..at + bch::BLOCK].iter_mut().zip(&block) {
                 *o = b as i8;
+            }
+        }
+        stats
+    }
+    fn scrub_span(&self, data: &mut [u8], _oob: &mut [u8]) -> DecodeStats {
+        // Per-block scrub: heal correctable blocks in place, leave
+        // uncorrectable blocks exactly as stored (the old whole-buffer
+        // decode+re-encode default abandoned the entire pass when any
+        // block was uncorrectable).
+        let mut stats = DecodeStats::default();
+        let mut block = [0u8; bch::BLOCK];
+        for chunk in data.chunks_exact_mut(bch::BLOCK) {
+            block.copy_from_slice(chunk);
+            match bch::decode_block(&mut block) {
+                bch::BchOutcome::Clean => {}
+                bch::BchOutcome::Corrected(_) => {
+                    stats.corrected += 1;
+                    bch::encode_block(&mut block);
+                    chunk.copy_from_slice(&block);
+                }
+                bch::BchOutcome::Detected => stats.detected += 1,
             }
         }
         stats
@@ -403,6 +557,14 @@ pub fn all_strategies() -> Vec<Box<dyn Protection>> {
         Box::new(Secded7264),
         Box::new(InplaceZs),
     ]
+}
+
+/// Every strategy including the bch16 extension (shard-equivalence tests
+/// and benches sweep this).
+pub fn all_strategies_ext() -> Vec<Box<dyn Protection>> {
+    let mut v = all_strategies();
+    v.push(Box::new(Bch16));
+    v
 }
 
 /// Lookup by paper name (includes the bch16 extension).
@@ -459,6 +621,21 @@ mod tests {
             let enc = s.encode(&w).unwrap();
             let expect = (w.len() as f64 * s.overhead()).round() as usize;
             assert_eq!(enc.oob.len(), expect, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn oob_geometry_matches_encode() {
+        let w = wot_weights(512, 13);
+        for s in all_strategies_ext() {
+            let enc = s.encode(&w).unwrap();
+            assert_eq!(enc.data.len() % s.block_bytes(), 0, "{}", s.name());
+            assert_eq!(
+                enc.oob.len(),
+                enc.data.len() / s.block_bytes() * s.oob_bytes_per_block(),
+                "{}: oob length must be blocks * oob_bytes_per_block",
+                s.name()
+            );
         }
     }
 
@@ -521,6 +698,58 @@ mod tests {
         let stats = s.decode(&enc, &mut out);
         assert_eq!(stats.corrected, 1);
         assert_eq!(out, w);
+    }
+
+    #[test]
+    fn decode_range_matches_window_of_full_decode() {
+        let w = wot_weights(64 * 8, 21);
+        for s in all_strategies() {
+            let mut enc = s.encode(&w).unwrap();
+            let mut rng = Rng::new(22);
+            let total = enc.total_bits();
+            for _ in 0..24 {
+                enc.flip_bit(rng.below(total));
+            }
+            let mut full = vec![0i8; w.len()];
+            let full_stats = s.decode(&enc, &mut full);
+            // window = the middle half, aligned to the largest block size
+            let (a, b) = (w.len() / 4 / 16 * 16, 3 * w.len() / 4 / 16 * 16);
+            let mut win = vec![0i8; b - a];
+            s.decode_range(&enc, a, b, &mut win);
+            assert_eq!(win, full[a..b], "{}: window mismatch", s.name());
+            // ranges tile the buffer: stats must sum to the full pass
+            let mut sum = DecodeStats::default();
+            let mut out3 = vec![0i8; w.len()];
+            for (lo, hi) in [(0, a), (a, b), (b, w.len())] {
+                sum.add(&s.decode_range(&enc, lo, hi, &mut out3[lo..hi]));
+            }
+            assert_eq!(sum, full_stats, "{}: stats must tile", s.name());
+            assert_eq!(out3, full, "{}: tiled decode mismatch", s.name());
+        }
+    }
+
+    #[test]
+    fn scrub_range_tiles_like_full_scrub() {
+        let w = wot_weights(64 * 8, 31);
+        for s in all_strategies() {
+            let mut enc = s.encode(&w).unwrap();
+            let mut rng = Rng::new(32);
+            let total = enc.total_bits();
+            for _ in 0..24 {
+                enc.flip_bit(rng.below(total));
+            }
+            let mut whole = enc.clone();
+            let whole_stats = s.scrub(&mut whole);
+            let mut tiled = enc.clone();
+            let mut sum = DecodeStats::default();
+            let (a, b) = (w.len() / 4 / 16 * 16, 3 * w.len() / 4 / 16 * 16);
+            for (lo, hi) in [(0, a), (a, b), (b, w.len())] {
+                sum.add(&s.scrub_range(&mut tiled, lo, hi));
+            }
+            assert_eq!(sum, whole_stats, "{}: scrub stats must tile", s.name());
+            assert_eq!(tiled.data, whole.data, "{}: scrub data mismatch", s.name());
+            assert_eq!(tiled.oob, whole.oob, "{}: scrub oob mismatch", s.name());
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::ecc::strategy_by_name;
-use crate::memory::{FaultModel, MemoryBank};
+use crate::memory::{FaultModel, ShardedBank};
 use crate::model::{load_weights, EvalSet, Manifest};
 use crate::quant::dequantize_into;
 use crate::runtime::{accuracy, Executable, Runtime};
@@ -36,6 +36,10 @@ pub struct EvalCtx {
     /// Fault-free accuracy of the int8 (post-WOT) model, measured
     /// through the exact rust path; Table-2 drops subtract this.
     pub base_acc: f64,
+    /// Shard/worker geometry of the per-trial protected store (decode
+    /// output is identical for every setting; workers only add speed).
+    pub shards: usize,
+    pub decode_workers: usize,
     // scratch
     qbuf: Vec<i8>,
     fbuf: Vec<f32>,
@@ -61,6 +65,8 @@ impl EvalCtx {
             exe,
             ds,
             base_acc: 0.0,
+            shards: 8,
+            decode_workers: ShardedBank::auto_workers(),
         };
         ctx.base_acc = ctx.accuracy_of(&ctx.weights.clone())?;
         Ok(ctx)
@@ -83,7 +89,7 @@ impl EvalCtx {
         seed: u64,
     ) -> anyhow::Result<(f64, u64, u64)> {
         let strat = strategy_by_name(strategy)?;
-        let mut bank = MemoryBank::new(strat, &self.weights)?;
+        let mut bank = ShardedBank::new(strat, &self.weights, self.shards, self.decode_workers)?;
         bank.inject(model, rate, seed);
         let mut q = std::mem::take(&mut self.qbuf);
         let stats = bank.read(&mut q);

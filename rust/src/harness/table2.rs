@@ -46,6 +46,11 @@ pub struct Config {
     pub trials: usize,
     pub batch: usize,
     pub fault_model: FaultModel,
+    /// Shard/worker geometry of the per-trial protected store. Purely a
+    /// decode-throughput knob: every setting produces bit-identical
+    /// trial outputs (the shard-equivalence proptests pin this down).
+    pub shards: usize,
+    pub decode_workers: usize,
 }
 
 impl Default for Config {
@@ -57,6 +62,8 @@ impl Default for Config {
             trials: 10,
             batch: 256,
             fault_model: FaultModel::Uniform,
+            shards: 8,
+            decode_workers: 4,
         }
     }
 }
@@ -68,6 +75,8 @@ pub fn run(artifacts: &Path, cfg: &Config, verbose: bool) -> anyhow::Result<Tabl
     let mut base_acc = std::collections::BTreeMap::new();
     for model in &cfg.models {
         let mut ctx = EvalCtx::load(artifacts, model, cfg.batch, rt.clone(), ds.clone())?;
+        ctx.shards = cfg.shards;
+        ctx.decode_workers = cfg.decode_workers;
         base_acc.insert(model.clone(), ctx.base_acc);
         if verbose {
             eprintln!("[{model}] fault-free int8 acc = {:.4}", ctx.base_acc);

@@ -9,13 +9,25 @@
 //! Layout:
 //! * [`ecc`] — the paper's contribution: in-place zero-space ECC plus the
 //!   baselines (SEC-DED (72,64), parity-zero, unprotected) and the
-//!   future-work BCH-style extension.
+//!   future-work BCH-style extension. The `Protection` trait exposes
+//!   block-range decode/scrub (`decode_span`/`scrub_span`,
+//!   `decode_range`/`scrub_range`) so disjoint windows of one stored
+//!   image can be processed independently — and in parallel.
 //! * [`memory`] — encoded weight memory: fault injection + scrubbing.
-//! * [`quant`] — int8 weight buffers and per-layer dequantization.
+//!   `MemoryBank` is the whole-buffer store (Table-2 render, examples);
+//!   `ShardedBank` splits the same stored image into S block-aligned
+//!   shards scrubbed/decoded by a scoped-thread worker pool, with
+//!   per-shard `DecodeStats` and dirty tracking for incremental refresh.
+//! * [`quant`] — int8 weight buffers and per-layer dequantization,
+//!   including the fused `decode_dequant_range` used by the scrub
+//!   epoch's per-shard delta path (no full-buffer i8 intermediate).
 //! * [`model`] — artifact manifests, weight/dataset loaders.
 //! * [`runtime`] — PJRT CPU client wrapper (HLO text -> executable).
-//! * [`coordinator`] — request router, dynamic batcher, protected
-//!   weight store, metrics.
+//! * [`coordinator`] — request router, dynamic batcher, sharded
+//!   protected weight store, metrics (global + per-shard). The scrub
+//!   loop ships `WeightUpdate::Deltas` (offset + f32 window per dirty
+//!   shard) over the refresh channel; a full buffer crosses only when
+//!   every shard is dirty. See rust/README.md for the data-flow diagram.
 //! * [`harness`] — Table 1 / Table 2 / Fig 1 / Fig 3 / Fig 4 + ablations.
 //! * [`util`] — substrates the offline build denies us as crates: JSON,
 //!   PRNG, CLI parsing, stats, ASCII plots, a bench timer.

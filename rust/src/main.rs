@@ -70,6 +70,8 @@ fn main() -> anyhow::Result<()> {
                 trials: args.usize_or("trials", 10)?,
                 batch: args.usize_or("batch", 256)?,
                 rates: parse_rates(&args)?,
+                shards: args.usize_or("shards", 8)?,
+                decode_workers: args.usize_or("workers", 4)?,
                 ..Default::default()
             };
             let models = args.list_or("models", &[]);
@@ -143,6 +145,8 @@ fn main() -> anyhow::Result<()> {
                 )),
                 fault_rate_per_interval: args.f64_or("fault-rate", 1e-7)?,
                 fault_seed: args.u64_or("seed", 1)?,
+                shards: args.usize_or("shards", 8)?,
+                scrub_workers: args.usize_or("scrub-workers", 4)?,
             };
             serve_demo(&artifacts, &model, cfg, secs, rps)?;
         }
@@ -152,7 +156,7 @@ fn main() -> anyhow::Result<()> {
                  usage: zsecc <info|table1|table2|fig1|fig3|fig4|ablation|serve> [flags]\n\
                  common flags: --artifacts DIR --models a,b --json\n\
                  table2: --trials N --rates 1e-6,1e-5 --strategies faulty,ecc --batch B --verbose\n\
-                 serve:  --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS --fault-rate F"
+                 serve:  --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS --fault-rate F --shards S --scrub-workers W"
             );
         }
     }

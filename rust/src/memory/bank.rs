@@ -77,6 +77,18 @@ impl MemoryBank {
     pub fn reset(&mut self) {
         self.image = self.pristine.clone();
     }
+
+    /// The stored image (shard-equivalence tests compare it against the
+    /// sharded path's image).
+    pub fn image(&self) -> &Encoded {
+        &self.image
+    }
+
+    /// Re-wrap this bank's stored image as a [`ShardedBank`] with the
+    /// given shard/worker counts — no re-encode, the image moves as-is.
+    pub fn into_sharded(self, shards: usize, workers: usize) -> crate::memory::ShardedBank {
+        crate::memory::ShardedBank::from_encoded(self.strategy, self.image, shards, workers)
+    }
 }
 
 #[cfg(test)]

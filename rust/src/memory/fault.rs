@@ -53,28 +53,36 @@ impl FaultInjector {
 
     /// Inject exactly `n` flipped bits (distinct positions).
     pub fn inject_count(&mut self, enc: &mut Encoded, n: u64) -> u64 {
-        let total = enc.total_bits();
+        let positions = self.draw_positions(enc.total_bits(), n);
+        let flipped = positions.len() as u64;
+        for pos in positions {
+            enc.flip_bit(pos);
+        }
+        flipped
+    }
+
+    /// Draw the bit positions an `inject_count` call would flip, without
+    /// flipping them — the sharded bank uses this to both flip and mark
+    /// the shards the faults land in. For a given (model, seed) the
+    /// sequence is identical to what `inject`/`inject_count` consume.
+    pub fn draw_positions(&mut self, total_bits: u64, n: u64) -> Vec<u64> {
         match self.model {
             FaultModel::Uniform => {
-                let n = n.min(total);
-                for pos in self.rng.distinct(total, n) {
-                    enc.flip_bit(pos);
-                }
-                n
+                let n = n.min(total_bits);
+                self.rng.distinct(total_bits, n)
             }
             FaultModel::Burst { len } => {
                 let len = len.max(1) as u64;
                 let bursts = n / len;
-                let mut flipped = 0;
+                let mut positions = Vec::with_capacity((bursts * len) as usize);
                 for _ in 0..bursts {
-                    let start = self.rng.below(total);
+                    let start = self.rng.below(total_bits);
                     for k in 0..len {
                         // bursts wrap within the image, stay distinct per burst
-                        enc.flip_bit((start + k) % total);
-                        flipped += 1;
+                        positions.push((start + k) % total_bits);
                     }
                 }
-                flipped
+                positions
             }
         }
     }

@@ -5,9 +5,15 @@
 //!   the ablation study.
 //! * [`bank`] — `MemoryBank`: an encoded weight image + its protection
 //!   strategy; supports fault injection, protected reads and scrubbing.
+//! * [`shard`] — `ShardedBank`: the same stored image split into S
+//!   block-aligned shards, scrubbed/decoded by a scoped-thread worker
+//!   pool with per-shard stats and dirty tracking — the serving path's
+//!   store, enabling incremental (delta) weight refresh.
 
 pub mod bank;
 pub mod fault;
+pub mod shard;
 
 pub use bank::MemoryBank;
-pub use fault::{FaultModel, FaultInjector};
+pub use fault::{FaultInjector, FaultModel};
+pub use shard::{plan_shards, ShardState, ShardedBank};

@@ -1,0 +1,534 @@
+//! `ShardedBank`: the protected weight memory of one model, split into S
+//! independently scrubbable, block-aligned shards.
+//!
+//! The stored image stays contiguous (it models one region of physical
+//! memory), but every decode/scrub pass runs per shard through the
+//! `Protection` range APIs, fanned out over a scoped-thread worker pool.
+//! Each shard carries its own `DecodeStats` and a dirty bit: fault
+//! injection marks the shards its flips land in, scrubbing marks shards
+//! whose stored bytes it modified, and the serving scrub loop ships
+//! *only* dirty shards to the inference thread as weight deltas.
+//!
+//! A `ShardedBank` with one shard and one worker behaves bit-identically
+//! to the whole-buffer [`MemoryBank`](crate::memory::MemoryBank) path
+//! (same fault-position sequence per seed, same decode output, same
+//! stats) — the shard-equivalence proptests pin this down.
+
+use crate::ecc::{DecodeStats, Encoded, Protection};
+use crate::memory::fault::{FaultInjector, FaultModel};
+use crate::model::manifest::Layer;
+
+/// Per-shard bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct ShardState {
+    /// Byte window `[start, end)` into the stored image's data bytes.
+    pub range: (usize, usize),
+    /// Cumulative decode/scrub statistics for this shard.
+    pub lifetime: DecodeStats,
+    /// Statistics of the most recent scrub pass.
+    pub last_scrub: DecodeStats,
+    /// Number of scrub passes over this shard.
+    pub scrubs: u64,
+    /// Stored bytes (or decode output) may differ from what the serving
+    /// layer last refreshed: set by injection/scrub, cleared by
+    /// [`ShardedBank::take_dirty`].
+    pub dirty: bool,
+}
+
+/// Plan block-aligned shard byte ranges over `data_len` data bytes.
+/// Returns at most `shards` contiguous ranges tiling `[0, data_len)`;
+/// fewer when there are not enough blocks to go around. A ragged final
+/// block (only possible for byte-granular codes) lands in the last shard.
+pub fn plan_shards(data_len: usize, block_bytes: usize, shards: usize) -> Vec<(usize, usize)> {
+    let block = block_bytes.max(1);
+    let nblocks = data_len.div_ceil(block).max(1);
+    let s = shards.max(1).min(nblocks);
+    let per = nblocks.div_ceil(s);
+    let mut ranges = Vec::with_capacity(s);
+    for i in 0..s {
+        let lo = (i * per * block).min(data_len);
+        let hi = ((i + 1) * per * block).min(data_len);
+        if lo >= hi && i > 0 {
+            break;
+        }
+        ranges.push((lo, hi));
+    }
+    ranges
+}
+
+pub struct ShardedBank {
+    strategy: Box<dyn Protection>,
+    image: Encoded,
+    /// Pristine copy for trial resets (Table 2 runs 10 trials/cell).
+    pristine: Encoded,
+    shards: Vec<ShardState>,
+    workers: usize,
+    /// Cumulative decode statistics across all shards.
+    pub lifetime: DecodeStats,
+    /// Cumulative bits injected.
+    pub faults_injected: u64,
+}
+
+impl ShardedBank {
+    /// Encode `weights` once and split the stored image into (at most)
+    /// `shards` block-aligned shards scrubbed by `workers` threads.
+    pub fn new(
+        strategy: Box<dyn Protection>,
+        weights: &[i8],
+        shards: usize,
+        workers: usize,
+    ) -> anyhow::Result<Self> {
+        let image = strategy.encode(weights)?;
+        Ok(Self::from_encoded(strategy, image, shards, workers))
+    }
+
+    /// Wrap an already-encoded image (used by `MemoryBank::into_sharded`).
+    pub fn from_encoded(
+        strategy: Box<dyn Protection>,
+        image: Encoded,
+        shards: usize,
+        workers: usize,
+    ) -> Self {
+        let ranges = plan_shards(image.data.len(), strategy.block_bytes(), shards);
+        let shards = ranges
+            .into_iter()
+            .map(|range| ShardState {
+                range,
+                ..ShardState::default()
+            })
+            .collect();
+        ShardedBank {
+            pristine: image.clone(),
+            image,
+            strategy,
+            shards,
+            workers: workers.max(1),
+            lifetime: DecodeStats::default(),
+            faults_injected: 0,
+        }
+    }
+
+    /// A sensible worker count for this machine (capped: scrubbing is
+    /// memory-bound well before it is core-bound).
+    pub fn auto_workers() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    }
+
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    pub fn strategy(&self) -> &dyn Protection {
+        self.strategy.as_ref()
+    }
+
+    pub fn n_weights(&self) -> usize {
+        self.image.n
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn shard_states(&self) -> &[ShardState] {
+        &self.shards
+    }
+
+    /// Byte window `[start, end)` of shard `idx`.
+    pub fn shard_range(&self, idx: usize) -> (usize, usize) {
+        self.shards[idx].range
+    }
+
+    /// The stored image (tests compare it against the monolithic path).
+    pub fn image(&self) -> &Encoded {
+        &self.image
+    }
+
+    /// Stored bits (data + check storage) — fault-rate denominator.
+    pub fn total_bits(&self) -> u64 {
+        self.image.total_bits()
+    }
+
+    /// Space overhead actually incurred by the stored image.
+    pub fn overhead(&self) -> f64 {
+        self.image.oob.len() as f64 / self.image.data.len() as f64
+    }
+
+    /// Shard index owning a stored-bit position (data bits first, then
+    /// oob bits mapped back through their code block).
+    fn shard_of_bit(&self, pos: u64) -> usize {
+        let byte = (pos / 8) as usize;
+        let data_byte = if byte < self.image.data.len() {
+            byte
+        } else {
+            let opb = self.strategy.oob_bytes_per_block(); // > 0: oob exists
+            (byte - self.image.data.len()) / opb * self.strategy.block_bytes()
+        };
+        self.shards
+            .partition_point(|s| s.range.1 <= data_byte)
+            .min(self.shards.len() - 1)
+    }
+
+    /// Inject faults at `rate` with the given model and seed; flips the
+    /// same bit sequence as the monolithic bank and marks the shards
+    /// those bits land in dirty.
+    pub fn inject(&mut self, model: FaultModel, rate: f64, seed: u64) -> u64 {
+        let mut inj = FaultInjector::new(model, seed);
+        let n = FaultInjector::flip_count(self.image.total_bits(), rate);
+        let positions = inj.draw_positions(self.image.total_bits(), n);
+        let flipped = positions.len() as u64;
+        for pos in positions {
+            let shard = self.shard_of_bit(pos);
+            self.image.flip_bit(pos);
+            self.shards[shard].dirty = true;
+        }
+        self.faults_injected += flipped;
+        flipped
+    }
+
+    /// Protected read: decode every shard (in parallel) into `out`.
+    pub fn read(&mut self, out: &mut [i8]) -> DecodeStats {
+        assert_eq!(out.len(), self.image.n);
+        let per_shard = decode_shards(
+            self.strategy.as_ref(),
+            &self.image,
+            &ranges_of(&self.shards),
+            out,
+            self.workers,
+        );
+        self.merge_pass(&per_shard, false)
+    }
+
+    /// Decode one shard's window into `out` (`out.len()` == window size).
+    pub fn read_shard(&mut self, idx: usize, out: &mut [i8]) -> DecodeStats {
+        let (s, e) = self.shards[idx].range;
+        assert_eq!(out.len(), e - s);
+        let stats = self.strategy.decode_range(&self.image, s, e, out);
+        self.shards[idx].lifetime.add(&stats);
+        self.lifetime.add(&stats);
+        stats
+    }
+
+    /// Fused decode + dequantize of one shard's window: decodes into the
+    /// reusable `scratch` buffer and dequantizes into `out` with the
+    /// layer scales that cover the window — the scrub epoch's delta path
+    /// (no full-buffer i8 intermediate).
+    pub fn decode_dequant_shard(
+        &mut self,
+        idx: usize,
+        layers: &[Layer],
+        scratch: &mut Vec<i8>,
+        out: &mut [f32],
+    ) -> DecodeStats {
+        let (s, e) = self.shards[idx].range;
+        let stats = crate::quant::decode_dequant_range(
+            self.strategy.as_ref(),
+            &self.image,
+            s,
+            e,
+            layers,
+            scratch,
+            out,
+        );
+        self.shards[idx].lifetime.add(&stats);
+        self.lifetime.add(&stats);
+        stats
+    }
+
+    /// Scrub pass: correct latent errors shard-by-shard in parallel.
+    /// Shards whose pass saw any error are marked dirty.
+    pub fn scrub(&mut self) -> DecodeStats {
+        let ranges = ranges_of(&self.shards);
+        let per_shard = scrub_shards(
+            self.strategy.as_ref(),
+            &mut self.image,
+            &ranges,
+            self.workers,
+        );
+        self.merge_pass(&per_shard, true)
+    }
+
+    /// Indices of dirty shards, clearing the flags.
+    pub fn take_dirty(&mut self) -> Vec<usize> {
+        let mut dirty = Vec::new();
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            if s.dirty {
+                s.dirty = false;
+                dirty.push(i);
+            }
+        }
+        dirty
+    }
+
+    /// Reset the image to its pristine (fault-free) state.
+    pub fn reset(&mut self) {
+        self.image = self.pristine.clone();
+        for s in &mut self.shards {
+            s.dirty = false;
+            s.last_scrub = DecodeStats::default();
+        }
+    }
+
+    fn merge_pass(&mut self, per_shard: &[(usize, DecodeStats)], is_scrub: bool) -> DecodeStats {
+        let mut total = DecodeStats::default();
+        for &(idx, stats) in per_shard {
+            total.add(&stats);
+            let shard = &mut self.shards[idx];
+            shard.lifetime.add(&stats);
+            if is_scrub {
+                shard.last_scrub = stats;
+                shard.scrubs += 1;
+                // Dirty only when the pass *modified* stored bytes
+                // (corrected / zeroed). Detected-but-uncorrectable
+                // blocks leave the image as stored — decode output is
+                // unchanged, so re-shipping the shard every epoch would
+                // send identical deltas forever.
+                if stats.corrected + stats.zeroed > 0 {
+                    shard.dirty = true;
+                }
+            }
+        }
+        self.lifetime.add(&total);
+        total
+    }
+}
+
+fn ranges_of(shards: &[ShardState]) -> Vec<(usize, usize)> {
+    shards.iter().map(|s| s.range).collect()
+}
+
+/// Fan `jobs` out over at most `workers` scoped threads (round-robin so
+/// the ragged last shard does not serialize behind a full bucket);
+/// returns each job's result. Serial when one worker or one job.
+fn run_jobs<J, R>(jobs: Vec<J>, workers: usize, f: impl Fn(J) -> R + Sync) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+{
+    if workers <= 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let nw = workers.min(jobs.len());
+    let mut buckets: Vec<Vec<J>> = (0..nw).map(|_| Vec::new()).collect();
+    for (k, job) in jobs.into_iter().enumerate() {
+        buckets[k % nw].push(job);
+    }
+    let f = &f;
+    let mut results = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| scope.spawn(move || bucket.into_iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            results.extend(h.join().expect("shard worker panicked"));
+        }
+    });
+    results
+}
+
+/// Decode every shard window of `image` into the matching window of
+/// `out`, in parallel; returns per-shard stats.
+fn decode_shards(
+    strategy: &dyn Protection,
+    image: &Encoded,
+    ranges: &[(usize, usize)],
+    out: &mut [i8],
+    workers: usize,
+) -> Vec<(usize, DecodeStats)> {
+    // Split `out` into disjoint &mut windows, one per shard.
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    let mut off = 0usize;
+    for (i, &(s, e)) in ranges.iter().enumerate() {
+        debug_assert_eq!(s, off);
+        let (win, next) = rest.split_at_mut(e - s);
+        jobs.push((i, s, e, win));
+        rest = next;
+        off = e;
+    }
+    run_jobs(jobs, workers, |(i, s, e, win)| {
+        (i, strategy.decode_range(image, s, e, win))
+    })
+}
+
+/// Scrub every shard window of `image` in place, in parallel: the data
+/// and oob byte ranges of distinct shards are disjoint, so the stored
+/// image is split into per-shard &mut spans handed to the workers.
+fn scrub_shards(
+    strategy: &dyn Protection,
+    image: &mut Encoded,
+    ranges: &[(usize, usize)],
+    workers: usize,
+) -> Vec<(usize, DecodeStats)> {
+    let (data_len, oob_len) = (image.data.len(), image.oob.len());
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut d_rest: &mut [u8] = &mut image.data;
+    let mut o_rest: &mut [u8] = &mut image.oob;
+    let (mut d_off, mut o_off) = (0usize, 0usize);
+    for (i, &(s, e)) in ranges.iter().enumerate() {
+        debug_assert_eq!(s, d_off);
+        let (os, oe) = strategy.oob_window(s, e, data_len, oob_len);
+        debug_assert_eq!(os, o_off);
+        let (d_win, d_next) = d_rest.split_at_mut(e - d_off);
+        let (o_win, o_next) = o_rest.split_at_mut(oe - o_off);
+        jobs.push((i, d_win, o_win));
+        d_rest = d_next;
+        o_rest = o_next;
+        d_off = e;
+        o_off = oe;
+    }
+    run_jobs(jobs, workers, |(i, d_win, o_win)| {
+        (i, strategy.scrub_span(d_win, o_win))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ecc::strategy_by_name;
+    use crate::memory::MemoryBank;
+    use crate::util::rng::Rng;
+
+    fn wot_weights(n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 8 == 7 {
+                    (rng.below(256) as i64 - 128) as i8
+                } else {
+                    (rng.below(128) as i64 - 64) as i8
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_tiles_and_aligns() {
+        // 7 blocks of 8 bytes over 3 shards: 3 + 3 + 1 blocks.
+        assert_eq!(
+            plan_shards(56, 8, 3),
+            vec![(0, 24), (24, 48), (48, 56)]
+        );
+        // more shards than blocks collapses to one shard per block
+        assert_eq!(plan_shards(16, 8, 64), vec![(0, 8), (8, 16)]);
+        // byte-granular code with a ragged tail
+        assert_eq!(plan_shards(10, 1, 4), vec![(0, 3), (3, 6), (6, 9), (9, 10)]);
+        // empty image still yields one (empty) shard
+        assert_eq!(plan_shards(0, 8, 4), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn sharded_matches_monolithic_decode_and_scrub() {
+        let w = wot_weights(8 * 56, 3);
+        for name in ["faulty", "zero", "ecc", "in-place"] {
+            for shards in [1usize, 2, 7, 64] {
+                for workers in [1usize, 4] {
+                    let mut mono =
+                        MemoryBank::new(strategy_by_name(name).unwrap(), &w).unwrap();
+                    let mut sb = ShardedBank::new(
+                        strategy_by_name(name).unwrap(),
+                        &w,
+                        shards,
+                        workers,
+                    )
+                    .unwrap();
+                    assert_eq!(mono.total_bits(), sb.total_bits());
+                    mono.inject(FaultModel::Uniform, 2e-3, 99);
+                    sb.inject(FaultModel::Uniform, 2e-3, 99);
+                    let mut a = vec![0i8; w.len()];
+                    let mut b = vec![0i8; w.len()];
+                    let sa = mono.read(&mut a);
+                    let sb_stats = sb.read(&mut b);
+                    assert_eq!(a, b, "{name} x{shards} w{workers}: decode");
+                    assert_eq!(sa, sb_stats, "{name} x{shards} w{workers}: stats");
+                    let sc_a = mono.scrub();
+                    let sc_b = sb.scrub();
+                    assert_eq!(sc_a, sc_b, "{name} x{shards} w{workers}: scrub stats");
+                    assert_eq!(
+                        mono.image().data,
+                        sb.image().data,
+                        "{name} x{shards} w{workers}: scrubbed data"
+                    );
+                    assert_eq!(mono.image().oob, sb.image().oob);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn injection_marks_hit_shards_dirty() {
+        let w = wot_weights(1024, 5);
+        let mut sb =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &w, 8, 2).unwrap();
+        assert!(sb.take_dirty().is_empty(), "fresh bank must be clean");
+        sb.inject(FaultModel::Uniform, 1e-3, 7);
+        let dirty = sb.take_dirty();
+        assert!(!dirty.is_empty());
+        // flags are consumed
+        assert!(sb.take_dirty().is_empty());
+        // a scrub that corrects something re-marks exactly the hit shard
+        sb.reset();
+        sb.image.flip_bit(5); // one data-bit flip, lands in shard 0
+        let stats = sb.scrub();
+        assert_eq!(stats.corrected, 1);
+        assert_eq!(sb.take_dirty(), vec![0]);
+        // and a scrub over the healed image marks nothing
+        let stats = sb.scrub();
+        assert!(stats.is_clean());
+        assert!(sb.take_dirty().is_empty());
+    }
+
+    #[test]
+    fn oob_faults_mark_owning_shard() {
+        // ecc: every oob byte belongs to one 8-byte block; flipping only
+        // oob bits must still dirty exactly the owning shards.
+        let w = wot_weights(512, 6);
+        let mut sb = ShardedBank::new(strategy_by_name("ecc").unwrap(), &w, 4, 1).unwrap();
+        let data_bits = 512 * 8;
+        // oob byte 0 -> block 0 -> shard 0; last oob byte -> last shard
+        sb.image.flip_bit(data_bits);
+        sb.shards[sb.shard_of_bit(data_bits)].dirty = true;
+        let last = sb.total_bits() - 1;
+        let idx = sb.shard_of_bit(last);
+        assert_eq!(idx, sb.num_shards() - 1);
+        assert_eq!(sb.shard_of_bit(data_bits), 0);
+    }
+
+    #[test]
+    fn reset_restores_pristine() {
+        let w = wot_weights(256, 9);
+        let mut sb =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &w, 4, 2).unwrap();
+        sb.inject(FaultModel::Uniform, 1e-2, 3);
+        sb.reset();
+        let mut out = vec![0i8; w.len()];
+        let stats = sb.read(&mut out);
+        assert_eq!(out, w);
+        assert_eq!(stats.corrected + stats.detected, 0);
+        assert!(sb.take_dirty().is_empty());
+    }
+
+    #[test]
+    fn per_shard_stats_sum_to_lifetime() {
+        let w = wot_weights(2048, 11);
+        let mut sb = ShardedBank::new(strategy_by_name("ecc").unwrap(), &w, 7, 3).unwrap();
+        sb.inject(FaultModel::Uniform, 1e-3, 13);
+        let mut out = vec![0i8; w.len()];
+        sb.read(&mut out);
+        sb.scrub();
+        let mut sum = DecodeStats::default();
+        for s in sb.shard_states() {
+            sum.add(&s.lifetime);
+        }
+        assert_eq!(sum, sb.lifetime);
+        assert!(sb.shard_states().iter().all(|s| s.scrubs == 1));
+    }
+}

@@ -5,6 +5,7 @@
 //! `q * scale_l` for its layer's scale. The rust side only ever
 //! *dequantizes* — quantization happened at build time.
 
+use crate::ecc::{DecodeStats, Encoded, Protection};
 use crate::model::manifest::Layer;
 
 /// WOT block geometry (must match python/compile/quantize.py).
@@ -23,6 +24,47 @@ pub fn dequantize_into(q: &[i8], layers: &[Layer], out: &mut [f32]) {
             *o = v as f32 * s;
         }
     }
+}
+
+/// Dequantize the window `[base, base + q.len())` of the flat weight
+/// buffer: `q`/`out` hold only the window, `base` is its global element
+/// offset, and each element uses the scale of the layer that owns it.
+pub fn dequantize_range(q: &[i8], layers: &[Layer], base: usize, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    let end = base + q.len();
+    for l in layers {
+        let (a, b) = (l.offset.max(base), (l.offset + l.size).min(end));
+        if a >= b {
+            continue;
+        }
+        let s = l.scale;
+        let (la, lb) = (a - base, b - base);
+        for (o, &v) in out[la..lb].iter_mut().zip(&q[la..lb]) {
+            *o = v as f32 * s;
+        }
+    }
+}
+
+/// Fused ECC decode + dequantize of the block-aligned window
+/// `[start, end)` of a stored image: decodes into the reusable
+/// `scratch` buffer (resized to the window, no full-buffer i8 pass) and
+/// dequantizes into `out` (`out.len() == end - start`). This is the
+/// scrub epoch's per-shard refresh path.
+pub fn decode_dequant_range(
+    strategy: &dyn Protection,
+    enc: &Encoded,
+    start: usize,
+    end: usize,
+    layers: &[Layer],
+    scratch: &mut Vec<i8>,
+    out: &mut [f32],
+) -> DecodeStats {
+    debug_assert_eq!(out.len(), end - start);
+    scratch.clear();
+    scratch.resize(end - start, 0);
+    let stats = strategy.decode_range(enc, start, end, scratch);
+    dequantize_range(scratch, layers, start, out);
+    stats
 }
 
 /// Weight-magnitude distribution over the paper's Table-1 bands:
@@ -99,6 +141,46 @@ mod tests {
         dequantize_into(&q, &layers2(), &mut out);
         assert_eq!(out[2], 1.0); // 2 * 0.5
         assert_eq!(out[10], 20.0); // 10 * 2.0
+    }
+
+    #[test]
+    fn dequant_range_matches_full_pass() {
+        let q: Vec<i8> = (0..16).map(|i| i as i8).collect();
+        let mut full = vec![0f32; 16];
+        dequantize_into(&q, &layers2(), &mut full);
+        // every window [a, b) must reproduce the matching slice, layer
+        // boundary (at 8) included
+        for (a, b) in [(0usize, 16usize), (0, 8), (8, 16), (4, 12), (6, 10)] {
+            let mut win = vec![0f32; b - a];
+            dequantize_range(&q[a..b], &layers2(), a, &mut win);
+            assert_eq!(win, full[a..b], "window [{a},{b})");
+        }
+    }
+
+    #[test]
+    fn fused_decode_dequant_matches_two_pass() {
+        use crate::ecc::strategy_by_name;
+        let q: Vec<i8> = (0..16).map(|i| (i - 8) as i8).collect();
+        let s = strategy_by_name("ecc").unwrap();
+        let mut enc = s.encode(&q).unwrap();
+        enc.flip_bit(3); // correctable single flip in block 0
+        // reference: full decode then full dequantize
+        let mut dec = vec![0i8; 16];
+        s.decode(&enc, &mut dec);
+        let mut full = vec![0f32; 16];
+        dequantize_into(&dec, &layers2(), &mut full);
+        // fused path over the two halves
+        let mut scratch = Vec::new();
+        let mut out = vec![0f32; 16];
+        let mut stats = DecodeStats::default();
+        stats.add(&decode_dequant_range(
+            s.as_ref(), &enc, 0, 8, &layers2(), &mut scratch, &mut out[0..8],
+        ));
+        stats.add(&decode_dequant_range(
+            s.as_ref(), &enc, 8, 16, &layers2(), &mut scratch, &mut out[8..16],
+        ));
+        assert_eq!(out, full);
+        assert_eq!(stats.corrected, 1);
     }
 
     #[test]

@@ -187,7 +187,11 @@ fn coordinator_with_protected_bank_and_live_faults() {
         }
     }
     let (_dir, weights) = synth_artifacts("coord");
-    let bank = MemoryBank::new(strategy_by_name("in-place").unwrap(), &weights).unwrap();
+    // 512 weights across 4 shards, scrubbed by 2 workers: the serving
+    // path's store (built from the whole-buffer bank, no re-encode).
+    let bank = MemoryBank::new(strategy_by_name("in-place").unwrap(), &weights)
+        .unwrap()
+        .into_sharded(4, 2);
     let man = Manifest::load_model(&_dir, "m").unwrap();
     let cfg = ServerConfig {
         strategy: "in-place".into(),
@@ -198,6 +202,8 @@ fn coordinator_with_protected_bank_and_live_faults() {
         scrub_interval: Some(std::time::Duration::from_millis(5)),
         fault_rate_per_interval: 1e-4,
         fault_seed: 3,
+        shards: 4,
+        scrub_workers: 2,
     };
     let srv = Server::start_with(
         || Ok(Box::new(Mock) as Box<dyn zsecc::coordinator::server::BatchExec>),

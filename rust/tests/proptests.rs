@@ -256,6 +256,65 @@ fn prop_overhead_invariant() {
     });
 }
 
+// --------------------------------------------------- shard equivalence --
+
+#[test]
+fn prop_sharded_bank_equals_whole_buffer_path() {
+    use zsecc::memory::{FaultModel, MemoryBank, ShardedBank};
+    // For every strategy and every shard count (ragged last shards
+    // included via the random block count), the sharded store must be
+    // bit-identical to the monolithic path: same decode output, same
+    // DecodeStats totals, same scrubbed image.
+    check("sharded == monolithic", 25, |rng, size| {
+        let nblocks = 1 + rng.below(size.max(1) as u64) as usize;
+        let w8 = wot_weights(rng, nblocks);
+        let w16 = ext_weights(rng, nblocks);
+        let seed = rng.next_u64();
+        for name in ["faulty", "zero", "ecc", "in-place", "bch16"] {
+            let w: &[i8] = if name == "bch16" { &w16 } else { &w8 };
+            for shards in [1usize, 2, 7, 64] {
+                let mut mono = MemoryBank::new(strategy_by_name(name).unwrap(), w)
+                    .map_err(|e| e.to_string())?;
+                let mut sb =
+                    ShardedBank::new(strategy_by_name(name).unwrap(), w, shards, 4)
+                        .map_err(|e| e.to_string())?;
+                mono.inject(FaultModel::Uniform, 2e-3, seed);
+                sb.inject(FaultModel::Uniform, 2e-3, seed);
+                if mono.image().data != sb.image().data
+                    || mono.image().oob != sb.image().oob
+                {
+                    return Err(format!("{name} x{shards}: injected images differ"));
+                }
+                let mut a = vec![0i8; w.len()];
+                let mut b = vec![0i8; w.len()];
+                let stats_a = mono.read(&mut a);
+                let stats_b = sb.read(&mut b);
+                if a != b {
+                    return Err(format!("{name} x{shards}: decode outputs differ"));
+                }
+                if stats_a != stats_b {
+                    return Err(format!(
+                        "{name} x{shards}: decode stats {stats_a:?} != {stats_b:?}"
+                    ));
+                }
+                let scr_a = mono.scrub();
+                let scr_b = sb.scrub();
+                if scr_a != scr_b {
+                    return Err(format!(
+                        "{name} x{shards}: scrub stats {scr_a:?} != {scr_b:?}"
+                    ));
+                }
+                if mono.image().data != sb.image().data
+                    || mono.image().oob != sb.image().oob
+                {
+                    return Err(format!("{name} x{shards}: scrubbed images differ"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 // ----------------------------------------------------------- json laws --
 
 fn random_json(rng: &mut Rng, depth: usize) -> Json {

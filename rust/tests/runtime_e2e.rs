@@ -146,6 +146,7 @@ fn serving_stack_over_real_model() {
         scrub_interval: Some(std::time::Duration::from_millis(50)),
         fault_rate_per_interval: 1e-6,
         fault_seed: 5,
+        ..ServerConfig::default()
     };
     let ds = EvalSet::load(&dir.join("dataset.eval.bin")).unwrap();
     let srv = Server::start_pjrt(&dir, "inception_s", &cfg).unwrap();

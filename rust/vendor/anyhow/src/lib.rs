@@ -1,0 +1,132 @@
+//! Offline shim for the `anyhow` crate: just enough of the API surface for
+//! this workspace (the registry is unreachable in the build environment).
+//!
+//! Provides `anyhow::Error`, `anyhow::Result`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Like the real crate, `Error` deliberately does NOT
+//! implement `std::error::Error`, so the blanket `From<E: std::error::Error>`
+//! conversion and `?`-propagation of `Error` itself (via the reflexive
+//! `From<T> for T`) can coexist.
+
+use std::fmt;
+
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (mirror of `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Root cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut cur: Option<&(dyn std::error::Error + 'static)> =
+            self.source.as_deref().map(|e| e as _);
+        std::iter::from_fn(move || {
+            let e = cur?;
+            cur = e.source();
+            Some(e)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        for cause in self.chain() {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("fmt", args...)` — construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// `bail!(...)` — early-return `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, ...)` — `bail!` unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 7);
+    }
+
+    fn propagates() -> Result<u32> {
+        fails()?;
+        Ok(1)
+    }
+
+    fn from_std() -> Result<u32> {
+        let n: u32 = "not a number".parse()?;
+        Ok(n)
+    }
+
+    #[test]
+    fn macros_and_propagation() {
+        assert_eq!(propagates().unwrap_err().to_string(), "boom 7");
+        assert!(from_std().is_err());
+        let e: Error = anyhow!("x={}", 3);
+        assert_eq!(format!("{e}"), "x=3");
+        let r: Result<()> = (|| {
+            ensure!(1 + 1 == 3, "math is broken: {}", 2);
+            Ok(())
+        })();
+        assert_eq!(r.unwrap_err().to_string(), "math is broken: 2");
+    }
+}
