@@ -19,5 +19,10 @@ fn main() -> anyhow::Result<()> {
 
     let srows = ablation::scrub_study(&[1, 2, 4, 8, 16, 32], 2e-4, 64 * 256)?;
     println!("{}", ablation::render_scrub(&srows, 2e-4));
+
+    // Campaign engine over the full fault-model set (adaptive trials,
+    // parallel cells) — also a wall-clock smoke of the worker fan-out.
+    let sweep = ablation::fault_model_campaign(1e-3, 64 * 512, 4)?;
+    println!("{}", ablation::render_fault_models(&sweep, 1e-3));
     Ok(())
 }

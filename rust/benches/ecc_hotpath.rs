@@ -193,6 +193,6 @@ fn main() {
                 arr(sharded.iter().map(|&(_, g)| num(g))),
             ),
         ]);
-        println!("{}", rec.to_string());
+        println!("{rec}");
     }
 }

@@ -46,6 +46,19 @@ impl Encoded {
             self.oob[byte - self.data.len()] ^= 1 << bit;
         }
     }
+
+    /// Read one stored bit (same position indexing as `flip_bit`) —
+    /// the stuck-at fault model needs the value a cell currently holds.
+    pub fn get_bit(&self, pos: u64) -> bool {
+        let byte = (pos / 8) as usize;
+        let bit = (pos % 8) as u8;
+        let v = if byte < self.data.len() {
+            self.data[byte]
+        } else {
+            self.oob[byte - self.data.len()]
+        };
+        v >> bit & 1 == 1
+    }
 }
 
 /// Counters reported by a decode/scrub pass.

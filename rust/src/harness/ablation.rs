@@ -11,14 +11,20 @@
 //!    assumption; BCH-16 survives 2-bit bursts.
 //! 4. **Scrub interval** — latent-error accumulation: k injection rounds
 //!    with/without scrubbing between them.
+//! 5. **Fault-model sweep** — the campaign engine driving every
+//!    deterministic fault model (uniform / burst / row-burst / stuck-at
+//!    / hotspot) across strategies on synthetic buffers, with adaptive
+//!    (confidence-targeted) trial counts.
 
 use std::path::Path;
 
 use crate::ecc::{strategy_by_name, Protection};
+use crate::harness::campaign::{self, SyntheticRunner, TrialPolicy};
 use crate::harness::fig34::{load_log, WotLog};
 use crate::memory::{FaultInjector, FaultModel};
 use crate::util::plot;
 use crate::util::rng::Rng;
+use crate::util::stats;
 
 // ---------------------------------------------------------- synthetic --
 
@@ -251,6 +257,82 @@ pub fn render_scrub(rows: &[ScrubRow], rate: f64) -> String {
     )
 }
 
+/// Campaign-driven sweep: every fault model x every strategy at one
+/// rate, on the synthetic corruption proxy, with adaptive trial counts
+/// (stop once the 95% CI half-width on the mean corruption reaches
+/// 0.05 pp, between 4 and 24 trials per cell).
+pub fn fault_model_campaign(
+    rate: f64,
+    n_weights: usize,
+    jobs: usize,
+) -> anyhow::Result<campaign::Report> {
+    let cfg = campaign::Config {
+        models: vec!["synthetic".to_string()],
+        strategies: ["faulty", "ecc", "in-place", "bch16"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        rates: vec![rate],
+        fault_models: vec![
+            FaultModel::Uniform,
+            FaultModel::Burst { len: 4 },
+            FaultModel::RowBurst {
+                row_bits: 512,
+                len: 4,
+            },
+            FaultModel::StuckAt { bit: 1 },
+            FaultModel::Hotspot { frac: 0.05 },
+        ],
+        policy: TrialPolicy::adaptive(4, 24, 0.05, 0.95),
+        jobs,
+        ledger: None,
+        resume: false,
+        stop_after: None,
+        runner_tag: format!("synthetic:n{n_weights}"),
+        verbose: false,
+    };
+    campaign::run(&cfg, &SyntheticRunner::new(n_weights, 8, 2))
+}
+
+/// Pivot the campaign report: strategies down, fault models across,
+/// "mean ± std (n=trials)" in each cell.
+pub fn render_fault_models(report: &campaign::Report, rate: f64) -> String {
+    let mut faults: Vec<String> = Vec::new();
+    let mut strategies: Vec<String> = Vec::new();
+    for c in &report.cells {
+        let tag = c.spec.fault.tag();
+        if !faults.contains(&tag) {
+            faults.push(tag);
+        }
+        if !strategies.contains(&c.spec.strategy) {
+            strategies.push(c.spec.strategy.clone());
+        }
+    }
+    let mut headers = vec!["strategy"];
+    headers.extend(faults.iter().map(|f| f.as_str()));
+    let rows: Vec<Vec<String>> = strategies
+        .iter()
+        .map(|strategy| {
+            let mut row = vec![strategy.clone()];
+            for fault in &faults {
+                let cell = report
+                    .cells
+                    .iter()
+                    .find(|c| &c.spec.strategy == strategy && c.spec.fault.tag() == *fault);
+                row.push(match cell {
+                    Some(c) => format!("{} (n={})", stats::mean_std_str(&c.drops), c.trials()),
+                    None => "-".to_string(),
+                });
+            }
+            row
+        })
+        .collect();
+    format!(
+        "== Ablation: weight corruption (pp) by fault model at rate {rate:.0e} (adaptive trials) ==\n{}",
+        plot::table(&headers, &rows)
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +349,39 @@ mod tests {
     fn burst2_kills_secded_not_bch() {
         let rows = burst(&[2], 1e-3, 64 * 128, 4).unwrap();
         assert!(rows[0].bch_err < rows[0].inplace_err * 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn fault_model_campaign_covers_grid_within_bounds() {
+        let report = fault_model_campaign(1e-3, 64 * 16, 2).unwrap();
+        assert!(report.complete);
+        assert_eq!(report.cells.len(), 4 * 5, "4 strategies x 5 fault models");
+        for c in &report.cells {
+            assert!(
+                (4..=24).contains(&c.trials()),
+                "{}: {} trials outside bounds",
+                c.spec.key(),
+                c.trials()
+            );
+            // adaptive stop means: either the target was met or the cell
+            // exhausted its budget
+            if c.trials() < 24 {
+                assert!(c.half_width <= 0.05 + 1e-12, "{}", c.spec.key());
+            }
+        }
+        // unprotected uniform damage must exceed SEC-DED-protected damage
+        let faulty = report
+            .cell("synthetic", "faulty", 1e-3, &FaultModel::Uniform)
+            .unwrap();
+        let inplace = report
+            .cell("synthetic", "in-place", 1e-3, &FaultModel::Uniform)
+            .unwrap();
+        assert!(stats::mean(&faulty.drops) > stats::mean(&inplace.drops));
+        // the render pivots without panicking and names every model
+        let table = render_fault_models(&report, 1e-3);
+        for tag in ["uniform", "burst:4", "rowburst:512:4", "stuckat:1", "hotspot:0.05"] {
+            assert!(table.contains(tag), "missing column {tag}");
+        }
     }
 
     #[test]

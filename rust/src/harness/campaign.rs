@@ -1,0 +1,835 @@
+//! Parallel Monte-Carlo fault-injection campaign engine.
+//!
+//! A campaign is a grid of cells — (model × strategy × fault-rate ×
+//! fault-model) — evaluated by independent fault-injection trials.
+//! Instead of a fixed trial count, each cell runs until the Student-t
+//! confidence interval on its mean accuracy drop is tight enough
+//! (`ci_target` half-width at `confidence`), bounded by
+//! `[min_trials, max_trials]`; with no target set it runs exactly
+//! `min_trials` trials (the classic Table-2 mode).
+//!
+//! Cells fan out over the same scoped-thread worker pool the sharded
+//! store uses ([`run_jobs`](crate::memory::run_jobs)); each completed
+//! cell is checkpointed to a JSON ledger, so an interrupted campaign
+//! resumed with the same configuration replays nothing — and its final
+//! report is **byte-identical** to an uninterrupted run: trial seeds
+//! derive only from the cell key and trial index, early stopping
+//! depends only on the (deterministic) drop sequence, and the
+//! canonical report excludes wall-clock. `tests/campaign.rs` pins the
+//! identity down.
+//!
+//! Two [`TrialRunner`]s ship: [`EvalRunner`] executes real models
+//! through PJRT (one `EvalCtx` per model, mutex-serialized), and
+//! [`SyntheticRunner`] uses decoded-weight corruption on synthetic WOT
+//! buffers as the drop proxy — artifact-free, which is what the CI
+//! smoke campaign and the integration tests run.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::harness::eval::EvalCtx;
+use crate::memory::{run_jobs, FaultModel, ShardedBank};
+use crate::model::EvalSet;
+use crate::runtime::Runtime;
+use crate::util::json::{arr, num, num_or_null, obj, s, Json};
+use crate::util::plot;
+use crate::util::stats;
+
+// ---------------------------------------------------------------- grid --
+
+/// One grid cell: a (model, strategy, rate, fault-model) combination.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellSpec {
+    pub model: String,
+    pub strategy: String,
+    pub rate: f64,
+    pub fault: FaultModel,
+}
+
+impl CellSpec {
+    /// Stable ledger key; also the seed domain of the cell's trials.
+    pub fn key(&self) -> String {
+        format!(
+            "{}|{}|{:e}|{}",
+            self.model,
+            self.strategy,
+            self.rate,
+            self.fault.tag()
+        )
+    }
+}
+
+/// Stable per-trial seed: FNV-1a over the cell key, whitened by the
+/// trial index. Depends on nothing else — the backbone of resume
+/// identity and cross-cell independence.
+pub fn trial_seed(spec: &CellSpec, trial: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in spec.key().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ trial.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// When a cell's trial loop stops.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialPolicy {
+    pub min_trials: usize,
+    pub max_trials: usize,
+    /// Target CI half-width on the mean drop (percentage points); with
+    /// `None` every cell runs exactly `min_trials` trials.
+    pub ci_target: Option<f64>,
+    /// Confidence level of the interval (see `stats::t_critical`).
+    pub confidence: f64,
+}
+
+impl TrialPolicy {
+    /// The classic fixed-count mode (Table 2's 10 trials/cell).
+    pub fn fixed(n: usize) -> TrialPolicy {
+        TrialPolicy {
+            min_trials: n.max(1),
+            max_trials: n.max(1),
+            ci_target: None,
+            confidence: 0.95,
+        }
+    }
+
+    /// Adaptive mode: stop once the half-width reaches `target`, never
+    /// before `min` trials, never after `max`.
+    pub fn adaptive(min: usize, max: usize, target: f64, confidence: f64) -> TrialPolicy {
+        let min = min.max(1);
+        TrialPolicy {
+            min_trials: min,
+            max_trials: max.max(min),
+            ci_target: Some(target),
+            confidence,
+        }
+    }
+}
+
+/// Campaign configuration: the grid, the stopping policy, and the
+/// execution/checkpoint knobs.
+pub struct Config {
+    pub models: Vec<String>,
+    pub strategies: Vec<String>,
+    pub rates: Vec<f64>,
+    pub fault_models: Vec<FaultModel>,
+    pub policy: TrialPolicy,
+    /// Parallel cell workers (1 = serial in grid order).
+    pub jobs: usize,
+    /// Checkpoint ledger path; `None` disables checkpointing.
+    pub ledger: Option<PathBuf>,
+    /// Load completed cells from the ledger instead of re-running them.
+    pub resume: bool,
+    /// Stop after computing this many *new* cells — the interruption
+    /// hook the resume tests and smoke runs use; the report is then
+    /// marked incomplete.
+    pub stop_after: Option<usize>,
+    /// Names the trial runner (and its salient parameters); a ledger
+    /// written under a different tag refuses to resume.
+    pub runner_tag: String,
+    /// Log per-cell completion lines to stderr.
+    pub verbose: bool,
+}
+
+impl Config {
+    /// The cell grid in canonical (reporting) order.
+    pub fn grid(&self) -> Vec<CellSpec> {
+        let mut cells = Vec::new();
+        for model in &self.models {
+            for strategy in &self.strategies {
+                for &rate in &self.rates {
+                    for &fault in &self.fault_models {
+                        cells.push(CellSpec {
+                            model: model.clone(),
+                            strategy: strategy.clone(),
+                            rate,
+                            fault,
+                        });
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Everything that must match for a ledger to be resumable into
+    /// this campaign. Execution knobs (jobs, stop_after, verbose,
+    /// ledger path) deliberately excluded: they cannot change results.
+    fn fingerprint(&self) -> String {
+        let rates: Vec<String> = self.rates.iter().map(|r| format!("{r:e}")).collect();
+        let faults: Vec<String> = self.fault_models.iter().map(|f| f.tag()).collect();
+        format!(
+            "v1|runner={}|models={}|strategies={}|rates={}|faults={}|min={}|max={}|ci={:?}|conf={}",
+            self.runner_tag,
+            self.models.join(","),
+            self.strategies.join(","),
+            rates.join(","),
+            faults.join(","),
+            self.policy.min_trials,
+            self.policy.max_trials,
+            self.policy.ci_target,
+            self.policy.confidence,
+        )
+    }
+}
+
+// -------------------------------------------------------------- runner --
+
+/// One trial's measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct TrialOutcome {
+    /// Accuracy drop vs the fault-free baseline, percentage points.
+    pub drop_pp: f64,
+    pub corrected: u64,
+    pub detected: u64,
+}
+
+/// Runs one fault-injection trial of a cell. Implementations must be
+/// deterministic in `(spec, seed)` — resume identity depends on it —
+/// and `Sync`: trials of *different* cells run concurrently.
+pub trait TrialRunner: Sync {
+    fn run_trial(&self, spec: &CellSpec, trial: u64, seed: u64) -> anyhow::Result<TrialOutcome>;
+}
+
+/// PJRT-backed runner: one loaded [`EvalCtx`] per model. Each context
+/// is mutex-serialized (PJRT execution stays on one thread at a time),
+/// so campaign parallelism pays off across models; the injection/decode
+/// half of a trial is already parallel inside `ShardedBank`.
+pub struct EvalRunner {
+    ctxs: BTreeMap<String, Mutex<EvalCtx>>,
+    base_acc: BTreeMap<String, f64>,
+}
+
+impl EvalRunner {
+    pub fn load(
+        artifacts: &Path,
+        models: &[String],
+        batch: usize,
+        shards: usize,
+        decode_workers: usize,
+    ) -> anyhow::Result<EvalRunner> {
+        let rt = Runtime::cpu()?;
+        let ds = Arc::new(EvalSet::load(&artifacts.join("dataset.eval.bin"))?);
+        let mut ctxs = BTreeMap::new();
+        let mut base_acc = BTreeMap::new();
+        for model in models {
+            let mut ctx = EvalCtx::load(artifacts, model, batch, rt.clone(), ds.clone())?;
+            ctx.shards = shards;
+            ctx.decode_workers = decode_workers;
+            base_acc.insert(model.clone(), ctx.base_acc);
+            ctxs.insert(model.clone(), Mutex::new(ctx));
+        }
+        Ok(EvalRunner { ctxs, base_acc })
+    }
+
+    /// Fault-free int8 accuracy per loaded model.
+    pub fn base_acc(&self) -> &BTreeMap<String, f64> {
+        &self.base_acc
+    }
+}
+
+impl TrialRunner for EvalRunner {
+    fn run_trial(&self, spec: &CellSpec, _trial: u64, seed: u64) -> anyhow::Result<TrialOutcome> {
+        let ctx = self
+            .ctxs
+            .get(&spec.model)
+            .ok_or_else(|| anyhow::anyhow!("model '{}' not loaded in this campaign", spec.model))?;
+        let mut ctx = ctx.lock().unwrap();
+        let base = ctx.base_acc;
+        let (acc, corrected, detected) =
+            ctx.faulty_trial(&spec.strategy, spec.fault, spec.rate, seed)?;
+        Ok(TrialOutcome {
+            drop_pp: (base - acc) * 100.0,
+            corrected,
+            detected,
+        })
+    }
+}
+
+/// Artifact-free runner for tests, CI smoke campaigns and ablations:
+/// the "accuracy drop" proxy is the percentage of weights decoded
+/// wrong from a [`ShardedBank`] after injection. Deterministic per
+/// seed, no PJRT, no artifacts. The two synthetic weight buffers (WOT
+/// for the paper strategies, extended-WOT for `bch16`) are generated
+/// once and shared across all trials.
+pub struct SyntheticRunner {
+    n_weights: usize,
+    shards: usize,
+    workers: usize,
+    wot: OnceLock<Vec<i8>>,
+    ext: OnceLock<Vec<i8>>,
+}
+
+impl SyntheticRunner {
+    /// `n_weights` should be a multiple of 16 so `bch16` cells work too.
+    pub fn new(n_weights: usize, shards: usize, workers: usize) -> SyntheticRunner {
+        SyntheticRunner {
+            n_weights,
+            shards,
+            workers,
+            wot: OnceLock::new(),
+            ext: OnceLock::new(),
+        }
+    }
+}
+
+impl Default for SyntheticRunner {
+    fn default() -> Self {
+        SyntheticRunner::new(64 * 64, 8, 2)
+    }
+}
+
+impl TrialRunner for SyntheticRunner {
+    fn run_trial(&self, spec: &CellSpec, _trial: u64, seed: u64) -> anyhow::Result<TrialOutcome> {
+        use crate::harness::ablation::{synth_ext, synth_wot};
+        let w: &[i8] = if spec.strategy == "bch16" {
+            self.ext.get_or_init(|| synth_ext(self.n_weights, 42))
+        } else {
+            self.wot.get_or_init(|| synth_wot(self.n_weights, 42))
+        };
+        let strat = crate::ecc::strategy_by_name(&spec.strategy)?;
+        let mut bank = ShardedBank::new(strat, w, self.shards, self.workers)?;
+        bank.inject(spec.fault, spec.rate, seed);
+        let mut out = vec![0i8; w.len()];
+        let st = bank.read(&mut out);
+        let wrong = out.iter().zip(w).filter(|(a, b)| a != b).count();
+        Ok(TrialOutcome {
+            drop_pp: 100.0 * wrong as f64 / w.len() as f64,
+            corrected: st.corrected,
+            detected: st.detected,
+        })
+    }
+}
+
+// ------------------------------------------------------------- results --
+
+/// One completed cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub spec: CellSpec,
+    /// Accuracy drop per trial (percentage points).
+    pub drops: Vec<f64>,
+    pub corrected: u64,
+    pub detected: u64,
+    /// CI half-width on the mean drop at the policy's confidence
+    /// (infinite when a single trial cannot bound it).
+    pub half_width: f64,
+    /// Wall-clock of the cell's trial loop (excluded from canonical
+    /// JSON — timing is not part of resume identity).
+    pub wall_ms: f64,
+}
+
+impl CellResult {
+    pub fn trials(&self) -> usize {
+        self.drops.len()
+    }
+
+    fn to_json(&self, timing: bool) -> Json {
+        let mut fields = vec![
+            ("model", s(&self.spec.model)),
+            ("strategy", s(&self.spec.strategy)),
+            ("rate", num(self.spec.rate)),
+            ("fault_model", s(&self.spec.fault.tag())),
+            ("trials", num(self.drops.len() as f64)),
+            ("drop_mean", num(stats::mean(&self.drops))),
+            ("drop_std", num(stats::std(&self.drops))),
+            ("ci_half_width", num_or_null(self.half_width)),
+            ("drops", arr(self.drops.iter().map(|d| num(*d)))),
+            ("corrected", num(self.corrected as f64)),
+            ("detected", num(self.detected as f64)),
+        ];
+        if timing {
+            fields.push(("wall_ms", num(self.wall_ms)));
+        }
+        obj(fields)
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<CellResult> {
+        let f = |k: &str| -> anyhow::Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("ledger cell field '{k}' must be a number"))
+        };
+        let st = |k: &str| -> anyhow::Result<String> {
+            Ok(v.req(k)?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("ledger cell field '{k}' must be a string"))?
+                .to_string())
+        };
+        let drops = v
+            .req("drops")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("ledger cell field 'drops' must be an array"))?
+            .iter()
+            .map(|d| {
+                d.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("ledger drop entries must be numbers"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        let half_width = match v.req("ci_half_width")? {
+            Json::Null => f64::INFINITY,
+            other => other
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'ci_half_width' must be a number or null"))?,
+        };
+        Ok(CellResult {
+            spec: CellSpec {
+                model: st("model")?,
+                strategy: st("strategy")?,
+                rate: f("rate")?,
+                fault: FaultModel::parse(&st("fault_model")?)?,
+            },
+            drops,
+            corrected: f("corrected")? as u64,
+            detected: f("detected")? as u64,
+            half_width,
+            wall_ms: v.get("wall_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
+        })
+    }
+}
+
+/// A finished (or interrupted) campaign, cells in canonical grid order.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub cells: Vec<CellResult>,
+    pub policy: TrialPolicy,
+    /// False when the campaign stopped (`stop_after`) before every
+    /// grid cell completed; resume to finish.
+    pub complete: bool,
+    pub wall_secs: f64,
+}
+
+impl Report {
+    pub fn cell(
+        &self,
+        model: &str,
+        strategy: &str,
+        rate: f64,
+        fault: &FaultModel,
+    ) -> Option<&CellResult> {
+        self.cells.iter().find(|c| {
+            c.spec.model == model
+                && c.spec.strategy == strategy
+                && c.spec.rate == rate
+                && c.spec.fault == *fault
+        })
+    }
+
+    pub fn total_trials(&self) -> usize {
+        self.cells.iter().map(|c| c.trials()).sum()
+    }
+
+    /// Canonical JSON: deterministic for a given (config, runner) —
+    /// the resume-identity surface. Excludes all wall-clock fields.
+    pub fn canonical_json(&self) -> Json {
+        self.json_inner(false)
+    }
+
+    /// Full JSON including per-cell and total wall-clock.
+    pub fn to_json(&self) -> Json {
+        self.json_inner(true)
+    }
+
+    fn json_inner(&self, timing: bool) -> Json {
+        let mut fields = vec![
+            ("complete", Json::Bool(self.complete)),
+            ("confidence", num(self.policy.confidence)),
+            (
+                "ci_target",
+                num_or_null(self.policy.ci_target.unwrap_or(f64::INFINITY)),
+            ),
+            ("min_trials", num(self.policy.min_trials as f64)),
+            ("max_trials", num(self.policy.max_trials as f64)),
+            ("total_trials", num(self.total_trials() as f64)),
+            ("cells", arr(self.cells.iter().map(|c| c.to_json(timing)))),
+        ];
+        if timing {
+            fields.push(("wall_secs", num(self.wall_secs)));
+        }
+        obj(fields)
+    }
+
+    /// Paper-shaped summary table.
+    pub fn render(&self) -> String {
+        let headers = [
+            "model", "strategy", "fault", "rate", "trials", "drop (pp)", "ci-hw", "corrected",
+            "detected",
+        ];
+        let rows: Vec<Vec<String>> = self
+            .cells
+            .iter()
+            .map(|c| {
+                vec![
+                    c.spec.model.clone(),
+                    c.spec.strategy.clone(),
+                    c.spec.fault.tag(),
+                    format!("{:.0e}", c.spec.rate),
+                    c.trials().to_string(),
+                    stats::mean_std_str(&c.drops),
+                    if c.half_width.is_finite() {
+                        format!("{:.3}", c.half_width)
+                    } else {
+                        "n/a".to_string()
+                    },
+                    c.corrected.to_string(),
+                    c.detected.to_string(),
+                ]
+            })
+            .collect();
+        format!(
+            "Campaign: {} cells, {} trials, {:.1}s{}\n{}",
+            self.cells.len(),
+            self.total_trials(),
+            self.wall_secs,
+            if self.complete {
+                ""
+            } else {
+                " (INCOMPLETE — rerun with --resume to finish)"
+            },
+            plot::table(&headers, &rows)
+        )
+    }
+}
+
+// -------------------------------------------------------------- ledger --
+
+struct Ledger {
+    fingerprint: String,
+    cells: BTreeMap<String, CellResult>,
+}
+
+impl Ledger {
+    fn load(path: &Path, fingerprint: &str) -> anyhow::Result<Ledger> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading ledger {}: {e}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing ledger {}: {e}", path.display()))?;
+        let fp = v
+            .req("fingerprint")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("ledger 'fingerprint' must be a string"))?;
+        anyhow::ensure!(
+            fp == fingerprint,
+            "ledger {} belongs to a different campaign (fingerprint mismatch:\n  ledger: {fp}\n  config: {fingerprint})",
+            path.display()
+        );
+        let mut cells = BTreeMap::new();
+        for (k, cv) in v
+            .req("cells")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("ledger 'cells' must be an object"))?
+        {
+            cells.insert(k.clone(), CellResult::from_json(cv)?);
+        }
+        Ok(Ledger {
+            fingerprint: fingerprint.to_string(),
+            cells,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("fingerprint", s(&self.fingerprint)),
+            (
+                "cells",
+                Json::Obj(
+                    self.cells
+                        .iter()
+                        .map(|(k, c)| (k.clone(), c.to_json(true)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write-to-temp + rename so an interruption mid-write never
+    /// leaves a truncated ledger behind.
+    fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing ledger {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("publishing ledger {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- engine --
+
+/// Run one cell's trial loop until the policy says stop.
+fn run_cell(
+    spec: &CellSpec,
+    policy: &TrialPolicy,
+    runner: &dyn TrialRunner,
+) -> anyhow::Result<CellResult> {
+    let t0 = std::time::Instant::now();
+    let mut drops = Vec::with_capacity(policy.min_trials);
+    let (mut corrected, mut detected) = (0u64, 0u64);
+    loop {
+        let t = drops.len() as u64;
+        let out = runner.run_trial(spec, t, trial_seed(spec, t))?;
+        drops.push(out.drop_pp);
+        corrected += out.corrected;
+        detected += out.detected;
+        let n = drops.len();
+        if n >= policy.max_trials {
+            break;
+        }
+        if n >= policy.min_trials {
+            match policy.ci_target {
+                None => break,
+                Some(target) => {
+                    if stats::mean_ci_half_width(&drops, policy.confidence) <= target {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    Ok(CellResult {
+        spec: spec.clone(),
+        half_width: stats::mean_ci_half_width(&drops, policy.confidence),
+        drops,
+        corrected,
+        detected,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+    })
+}
+
+/// Run a campaign: fan pending cells over `jobs` workers, checkpoint
+/// each completed cell to the ledger, and assemble the report in grid
+/// order. With `resume`, cells already in the ledger are loaded, not
+/// re-run.
+pub fn run(cfg: &Config, runner: &dyn TrialRunner) -> anyhow::Result<Report> {
+    let t0 = std::time::Instant::now();
+    let grid = cfg.grid();
+    anyhow::ensure!(!grid.is_empty(), "campaign grid is empty");
+    let fingerprint = cfg.fingerprint();
+    let mut done: BTreeMap<String, CellResult> = BTreeMap::new();
+    if cfg.resume {
+        let path = cfg
+            .ledger
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("resume requires a ledger path"))?;
+        if path.exists() {
+            done = Ledger::load(path, &fingerprint)?.cells;
+        }
+    }
+    let pending: Vec<CellSpec> = grid
+        .iter()
+        .filter(|c| !done.contains_key(&c.key()))
+        .take(cfg.stop_after.unwrap_or(usize::MAX))
+        .cloned()
+        .collect();
+
+    let shared = Mutex::new(Ledger {
+        fingerprint,
+        cells: done,
+    });
+    let policy = cfg.policy;
+    let outcomes = run_jobs(pending, cfg.jobs.max(1), |spec| -> anyhow::Result<()> {
+        let cell = run_cell(&spec, &policy, runner)?;
+        if cfg.verbose {
+            eprintln!(
+                "[campaign] {:<12} {:>8} rate={:>7.0e} {:<14} trials={:<3} drop={} hw={:.3}",
+                spec.model,
+                spec.strategy,
+                spec.rate,
+                spec.fault.tag(),
+                cell.trials(),
+                stats::mean_std_str(&cell.drops),
+                cell.half_width,
+            );
+        }
+        let mut ledger = shared.lock().unwrap();
+        ledger.cells.insert(spec.key(), cell);
+        if let Some(path) = &cfg.ledger {
+            ledger.save(path)?;
+        }
+        Ok(())
+    });
+    for outcome in outcomes {
+        outcome?;
+    }
+
+    let ledger = shared.into_inner().unwrap();
+    let mut cells = Vec::with_capacity(grid.len());
+    let mut complete = true;
+    for spec in &grid {
+        match ledger.cells.get(&spec.key()) {
+            Some(c) => cells.push(c.clone()),
+            None => complete = false,
+        }
+    }
+    Ok(Report {
+        cells,
+        policy: cfg.policy,
+        complete,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(policy: TrialPolicy) -> Config {
+        Config {
+            models: vec!["m".into()],
+            strategies: vec!["a".into(), "b".into()],
+            rates: vec![1e-3],
+            fault_models: vec![FaultModel::Uniform, FaultModel::Burst { len: 2 }],
+            policy,
+            jobs: 1,
+            ledger: None,
+            resume: false,
+            stop_after: None,
+            runner_tag: "test".into(),
+            verbose: false,
+        }
+    }
+
+    /// Zero-variance runner: every trial reports the same drop.
+    struct ConstRunner(f64);
+    impl TrialRunner for ConstRunner {
+        fn run_trial(&self, _s: &CellSpec, _t: u64, _seed: u64) -> anyhow::Result<TrialOutcome> {
+            Ok(TrialOutcome {
+                drop_pp: self.0,
+                corrected: 1,
+                detected: 0,
+            })
+        }
+    }
+
+    /// High-variance runner: drops alternate 0 / 10 pp, so no sane CI
+    /// target is ever met.
+    struct AlternatingRunner;
+    impl TrialRunner for AlternatingRunner {
+        fn run_trial(&self, _s: &CellSpec, t: u64, _seed: u64) -> anyhow::Result<TrialOutcome> {
+            Ok(TrialOutcome {
+                drop_pp: (t % 2) as f64 * 10.0,
+                corrected: 0,
+                detected: 0,
+            })
+        }
+    }
+
+    #[test]
+    fn grid_is_canonical_order() {
+        let g = cfg(TrialPolicy::fixed(1)).grid();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g[0].strategy, "a");
+        assert_eq!(g[0].fault, FaultModel::Uniform);
+        assert_eq!(g[1].fault, FaultModel::Burst { len: 2 });
+        assert_eq!(g[2].strategy, "b");
+    }
+
+    #[test]
+    fn trial_seed_varies_per_axis_and_is_stable() {
+        let spec = CellSpec {
+            model: "m".into(),
+            strategy: "ecc".into(),
+            rate: 1e-4,
+            fault: FaultModel::Uniform,
+        };
+        let s0 = trial_seed(&spec, 0);
+        assert_eq!(s0, trial_seed(&spec, 0));
+        assert_ne!(s0, trial_seed(&spec, 1));
+        let mut other = spec.clone();
+        other.fault = FaultModel::Burst { len: 2 };
+        assert_ne!(s0, trial_seed(&other, 0), "fault model is in the seed");
+        let mut other = spec.clone();
+        other.rate = 1e-3;
+        assert_ne!(s0, trial_seed(&other, 0));
+    }
+
+    #[test]
+    fn fixed_policy_runs_exact_trial_count() {
+        let report = run(&cfg(TrialPolicy::fixed(5)), &ConstRunner(1.0)).unwrap();
+        assert!(report.complete);
+        for c in &report.cells {
+            assert_eq!(c.trials(), 5);
+            assert_eq!(c.corrected, 5);
+            assert_eq!(c.half_width, 0.0, "zero-variance sample");
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_stops_at_min_on_zero_variance() {
+        let report = run(
+            &cfg(TrialPolicy::adaptive(3, 50, 0.5, 0.95)),
+            &ConstRunner(2.0),
+        )
+        .unwrap();
+        for c in &report.cells {
+            assert_eq!(c.trials(), 3, "zero variance meets any target at min");
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_runs_to_max_when_target_unreachable() {
+        let report = run(
+            &cfg(TrialPolicy::adaptive(3, 7, 0.5, 0.95)),
+            &AlternatingRunner,
+        )
+        .unwrap();
+        for c in &report.cells {
+            assert_eq!(c.trials(), 7, "unreachable target must hit the max bound");
+            assert!(c.half_width > 0.5);
+        }
+    }
+
+    #[test]
+    fn cell_json_roundtrip() {
+        let cell = CellResult {
+            spec: CellSpec {
+                model: "m".into(),
+                strategy: "in-place".into(),
+                rate: 1e-3,
+                fault: FaultModel::RowBurst {
+                    row_bits: 512,
+                    len: 4,
+                },
+            },
+            drops: vec![0.0, 0.125, 3.5],
+            corrected: 17,
+            detected: 3,
+            half_width: 1.25,
+            wall_ms: 12.5,
+        };
+        let back = CellResult::from_json(&cell.to_json(true)).unwrap();
+        assert_eq!(back.spec, cell.spec);
+        assert_eq!(back.drops, cell.drops);
+        assert_eq!((back.corrected, back.detected), (17, 3));
+        assert_eq!(back.half_width, 1.25);
+        // infinite half-width survives as null
+        let single = CellResult {
+            half_width: f64::INFINITY,
+            drops: vec![1.0],
+            ..cell
+        };
+        let back = CellResult::from_json(&single.to_json(false)).unwrap();
+        assert!(back.half_width.is_infinite());
+        assert_eq!(back.wall_ms, 0.0, "canonical cell carries no timing");
+    }
+
+    #[test]
+    fn fingerprint_ignores_execution_knobs_only() {
+        let a = cfg(TrialPolicy::fixed(5));
+        let mut b = cfg(TrialPolicy::fixed(5));
+        b.jobs = 7;
+        b.stop_after = Some(1);
+        b.verbose = true;
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = cfg(TrialPolicy::fixed(6));
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        c = cfg(TrialPolicy::fixed(5));
+        c.rates = vec![1e-4];
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        c = cfg(TrialPolicy::fixed(5));
+        c.runner_tag = "other".into();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

@@ -10,8 +10,12 @@ use crate::model::{load_weights, EvalSet, Manifest};
 use crate::quant::dequantize_into;
 use crate::runtime::{accuracy, Executable, Runtime};
 
-/// Stable per-cell seed so every Table-2 trial is reproducible and
-/// independent across (model, strategy, rate, trial).
+/// Stable per-cell seed so every trial is reproducible and independent
+/// across (model, strategy, rate, trial). Kept for the examples and
+/// ad-hoc drivers; campaign cells seed trials from their own cell key
+/// — fault model included — via
+/// [`campaign::trial_seed`](crate::harness::campaign::trial_seed), so
+/// the two sequences are unrelated.
 pub fn cell_seed(model: &str, strategy: &str, rate: f64, trial: u64) -> u64 {
     // FNV-1a over the cell key.
     let mut h: u64 = 0xcbf29ce484222325;

@@ -4,8 +4,16 @@
 //! Each module exposes a `run(...) -> Report` used both by the `zsecc`
 //! CLI subcommands and by the corresponding bench binaries; reports
 //! print the paper-shaped rows and can be dumped as JSON.
+//!
+//! [`campaign`] is the shared engine under the fault-injection
+//! experiments: a parallel Monte-Carlo campaign over (model × strategy
+//! × rate × fault-model) cells with adaptive (confidence-targeted)
+//! trial counts and a resumable checkpoint ledger. `table2` is a thin
+//! consumer of it; `ablation` drives it over the expanded fault-model
+//! set on synthetic buffers.
 
 pub mod ablation;
+pub mod campaign;
 pub mod eval;
 pub mod fig1;
 pub mod fig34;

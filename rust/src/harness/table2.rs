@@ -1,19 +1,21 @@
 //! Table 2: accuracy drop under memory fault rates x protection
 //! strategies (the paper's headline experiment).
 //!
-//! For every (model, strategy, fault-rate) cell we run `trials`
-//! independent fault injections and report mean ± std of the accuracy
-//! drop relative to the fault-free int8 model, plus the ECC-HW column
-//! and the exact space overhead of the stored image.
+//! Since the campaign engine landed, this module is a thin consumer of
+//! [`harness::campaign`](crate::harness::campaign): it builds a
+//! fixed-trial-count campaign over the paper grid (one fault model),
+//! runs it through the PJRT-backed [`campaign::EvalRunner`], and
+//! reshapes the report into the paper's table. For every (model,
+//! strategy, fault-rate) cell the campaign runs `trials` independent
+//! fault injections; we report mean ± std of the accuracy drop
+//! relative to the fault-free int8 model, plus the ECC-HW column and
+//! the exact space overhead of the stored image.
 
 use std::path::Path;
-use std::sync::Arc;
 
 use crate::ecc::strategy_by_name;
-use crate::harness::eval::{cell_seed, EvalCtx};
+use crate::harness::campaign::{self, TrialPolicy};
 use crate::memory::{FaultModel, MemoryBank};
-use crate::model::EvalSet;
-use crate::runtime::Runtime;
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::plot;
 use crate::util::stats;
@@ -51,6 +53,9 @@ pub struct Config {
     /// trial outputs (the shard-equivalence proptests pin this down).
     pub shards: usize,
     pub decode_workers: usize,
+    /// Parallel campaign cell workers. Each model's PJRT context is
+    /// mutex-serialized, so values > 1 pay off across models.
+    pub jobs: usize,
 }
 
 impl Default for Config {
@@ -64,54 +69,53 @@ impl Default for Config {
             fault_model: FaultModel::Uniform,
             shards: 8,
             decode_workers: 4,
+            jobs: 1,
         }
     }
 }
 
 pub fn run(artifacts: &Path, cfg: &Config, verbose: bool) -> anyhow::Result<Table2> {
-    let rt = Runtime::cpu()?;
-    let ds = Arc::new(EvalSet::load(&artifacts.join("dataset.eval.bin"))?);
-    let mut cells = Vec::new();
-    let mut base_acc = std::collections::BTreeMap::new();
-    for model in &cfg.models {
-        let mut ctx = EvalCtx::load(artifacts, model, cfg.batch, rt.clone(), ds.clone())?;
-        ctx.shards = cfg.shards;
-        ctx.decode_workers = cfg.decode_workers;
-        base_acc.insert(model.clone(), ctx.base_acc);
-        if verbose {
-            eprintln!("[{model}] fault-free int8 acc = {:.4}", ctx.base_acc);
-        }
-        for strategy in &cfg.strategies {
-            for &rate in &cfg.rates {
-                let mut cell = Cell {
-                    model: model.clone(),
-                    strategy: strategy.clone(),
-                    rate,
-                    drops: Vec::with_capacity(cfg.trials),
-                    corrected: 0,
-                    detected: 0,
-                };
-                for t in 0..cfg.trials {
-                    let seed = cell_seed(model, strategy, rate, t as u64);
-                    let (acc, corr, det) =
-                        ctx.faulty_trial(strategy, cfg.fault_model, rate, seed)?;
-                    cell.drops.push((ctx.base_acc - acc) * 100.0);
-                    cell.corrected += corr;
-                    cell.detected += det;
-                }
-                if verbose {
-                    eprintln!(
-                        "[{model}] {strategy:>8} rate={rate:>7.0e} drop={}",
-                        stats::mean_std_str(&cell.drops)
-                    );
-                }
-                cells.push(cell);
-            }
+    let runner = campaign::EvalRunner::load(
+        artifacts,
+        &cfg.models,
+        cfg.batch,
+        cfg.shards,
+        cfg.decode_workers,
+    )?;
+    if verbose {
+        for (model, acc) in runner.base_acc() {
+            eprintln!("[{model}] fault-free int8 acc = {acc:.4}");
         }
     }
+    let ccfg = campaign::Config {
+        models: cfg.models.clone(),
+        strategies: cfg.strategies.clone(),
+        rates: cfg.rates.clone(),
+        fault_models: vec![cfg.fault_model],
+        policy: TrialPolicy::fixed(cfg.trials),
+        jobs: cfg.jobs,
+        ledger: None,
+        resume: false,
+        stop_after: None,
+        runner_tag: format!("pjrt:batch{}", cfg.batch),
+        verbose,
+    };
+    let report = campaign::run(&ccfg, &runner)?;
+    let cells = report
+        .cells
+        .iter()
+        .map(|c| Cell {
+            model: c.spec.model.clone(),
+            strategy: c.spec.strategy.clone(),
+            rate: c.spec.rate,
+            drops: c.drops.clone(),
+            corrected: c.corrected,
+            detected: c.detected,
+        })
+        .collect();
     Ok(Table2 {
         cells,
-        base_acc,
+        base_acc: runner.base_acc().clone(),
         trials: cfg.trials,
     })
 }
@@ -119,21 +123,27 @@ pub fn run(artifacts: &Path, cfg: &Config, verbose: bool) -> anyhow::Result<Tabl
 impl Table2 {
     /// Render the paper-shaped table.
     pub fn render(&self, cfg: &Config) -> String {
+        // Static per-strategy columns (ECC-HW flag, measured overhead of
+        // a real encode) computed once per strategy, not once per row.
+        let mut strat_cols = std::collections::BTreeMap::new();
+        for strategy in &cfg.strategies {
+            let strat = strategy_by_name(strategy).unwrap();
+            let ecc_hw = if strat.ecc_hw() { "Y" } else { "N" }.to_string();
+            let image = MemoryBank::new(strat, &[0i8; 64]).unwrap();
+            strat_cols.insert(
+                strategy.clone(),
+                (ecc_hw, format!("{:.1}", image.overhead() * 100.0)),
+            );
+        }
         let mut rows = Vec::new();
         for model in &cfg.models {
             for strategy in &cfg.strategies {
-                let strat = strategy_by_name(strategy).unwrap();
-                // measured overhead straight from a real encode
-                let image = MemoryBank::new(
-                    strategy_by_name(strategy).unwrap(),
-                    &vec![0i8; 64],
-                )
-                .unwrap();
+                let (ecc_hw, overhead) = &strat_cols[strategy];
                 let mut row = vec![
                     model.clone(),
                     strategy.clone(),
-                    if strat.ecc_hw() { "Y" } else { "N" }.to_string(),
-                    format!("{:.1}", image.overhead() * 100.0),
+                    ecc_hw.clone(),
+                    overhead.clone(),
                 ];
                 for &rate in &cfg.rates {
                     let cell = self

@@ -28,7 +28,11 @@
 //!   loop ships `WeightUpdate::Deltas` (offset + f32 window per dirty
 //!   shard) over the refresh channel; a full buffer crosses only when
 //!   every shard is dirty. See rust/README.md for the data-flow diagram.
-//! * [`harness`] — Table 1 / Table 2 / Fig 1 / Fig 3 / Fig 4 + ablations.
+//! * [`harness`] — Table 1 / Table 2 / Fig 1 / Fig 3 / Fig 4 + ablations,
+//!   all fault-injection experiments riding on `harness::campaign`: a
+//!   parallel Monte-Carlo campaign engine with adaptive
+//!   (confidence-targeted) trial counts, five deterministic fault
+//!   models, and a resumable checkpoint ledger (bit-identical resume).
 //! * [`util`] — substrates the offline build denies us as crates: JSON,
 //!   PRNG, CLI parsing, stats, ASCII plots, a bench timer.
 

@@ -13,7 +13,8 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
-use zsecc::harness::{ablation, fig1, fig34, table1, table2};
+use zsecc::harness::{ablation, campaign, fig1, fig34, table1, table2};
+use zsecc::memory::FaultModel;
 use zsecc::model::manifest::list_models;
 use zsecc::util::cli::Args;
 use zsecc::util::rng::Rng;
@@ -62,7 +63,7 @@ fn main() -> anyhow::Result<()> {
             let rows = table1::run(&artifacts, &models, remeasure)?;
             println!("{}", table1::render(&rows));
             if args.bool("json") {
-                println!("{}", table1::to_json(&rows).to_string());
+                println!("{}", table1::to_json(&rows));
             }
         }
         Some("table2") => {
@@ -72,6 +73,8 @@ fn main() -> anyhow::Result<()> {
                 rates: parse_rates(&args)?,
                 shards: args.usize_or("shards", 8)?,
                 decode_workers: args.usize_or("workers", 4)?,
+                jobs: args.usize_or("jobs", 1)?,
+                fault_model: FaultModel::parse(&args.str_or("fault-model", "uniform"))?,
                 ..Default::default()
             };
             let models = args.list_or("models", &[]);
@@ -89,7 +92,7 @@ fn main() -> anyhow::Result<()> {
                 println!("  [{}] {}", if ok { "ok" } else { "FAIL" }, name);
             }
             if args.bool("json") {
-                println!("{}", t2.to_json().to_string());
+                println!("{}", t2.to_json());
             }
         }
         Some("fig1") => {
@@ -97,7 +100,7 @@ fn main() -> anyhow::Result<()> {
             let figs = fig1::run(&artifacts, &models)?;
             println!("{}", fig1::render(&figs));
             if args.bool("json") {
-                println!("{}", fig1::to_json(&figs).to_string());
+                println!("{}", fig1::to_json(&figs));
             }
         }
         Some("fig3") | Some("fig4") => {
@@ -129,7 +132,11 @@ fn main() -> anyhow::Result<()> {
             println!("{}", ablation::render_burst(&brows, 1e-3));
             let srows = ablation::scrub_study(&[1, 4, 16], 2e-4, 64 * 128)?;
             println!("{}", ablation::render_scrub(&srows, 2e-4));
+            let sweep =
+                ablation::fault_model_campaign(1e-3, 64 * 256, args.usize_or("jobs", 2)?)?;
+            println!("{}", ablation::render_fault_models(&sweep, 1e-3));
         }
+        Some("campaign") => run_campaign(&args, &artifacts)?,
         Some("serve") => {
             let model = args.str_or("model", "squeezenet_s");
             let secs = args.f64_or("seconds", 5.0)?;
@@ -153,12 +160,99 @@ fn main() -> anyhow::Result<()> {
         _ => {
             println!(
                 "zsecc — In-Place Zero-Space Memory Protection for CNN (NeurIPS'19 reproduction)\n\
-                 usage: zsecc <info|table1|table2|fig1|fig3|fig4|ablation|serve> [flags]\n\
+                 usage: zsecc <info|table1|table2|campaign|fig1|fig3|fig4|ablation|serve> [flags]\n\
                  common flags: --artifacts DIR --models a,b --json\n\
-                 table2: --trials N --rates 1e-6,1e-5 --strategies faulty,ecc --batch B --verbose\n\
-                 serve:  --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS --fault-rate F --shards S --scrub-workers W"
+                 table2:   --trials N --rates 1e-6,1e-5 --strategies faulty,ecc --batch B --jobs J --fault-model M --verbose\n\
+                 campaign: --fault-model uniform,burst:4,stuckat:1,rowburst:8192:4,hotspot:0.05\n\
+                 \x20         --ci-target HW --confidence C --min-trials N --max-trials N --jobs J\n\
+                 \x20         --ledger FILE --resume --out FILE --synthetic --n WEIGHTS --verbose\n\
+                 serve:    --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS --fault-rate F --shards S --scrub-workers W"
             );
         }
+    }
+    Ok(())
+}
+
+/// The `campaign` subcommand: a Monte-Carlo fault-injection campaign
+/// over (model x strategy x rate x fault-model) cells with adaptive
+/// trial counts and a resumable ledger. `--synthetic` swaps the
+/// PJRT-backed runner for the artifact-free corruption proxy (what CI
+/// smoke runs use).
+fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> {
+    let policy = {
+        let min = args.usize_or("min-trials", 4)?;
+        let max = args.usize_or("max-trials", 32)?;
+        match args.f64_opt("ci-target")? {
+            Some(target) => {
+                anyhow::ensure!(
+                    args.str_opt("trials").is_none(),
+                    "--trials is the fixed-count mode; with --ci-target use --min-trials/--max-trials"
+                );
+                campaign::TrialPolicy::adaptive(min, max, target, args.f64_or("confidence", 0.95)?)
+            }
+            None => {
+                anyhow::ensure!(
+                    args.str_opt("min-trials").is_none() && args.str_opt("max-trials").is_none(),
+                    "--min-trials/--max-trials only apply with --ci-target; \
+                     use --trials N for a fixed count"
+                );
+                campaign::TrialPolicy::fixed(args.usize_or("trials", 10)?)
+            }
+        }
+    };
+    let fault_models = args
+        .list_or("fault-model", &["uniform"])
+        .iter()
+        .map(|m| FaultModel::parse(m.as_str()))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let synthetic = args.bool("synthetic");
+    let n_weights = args.usize_or("n", 64 * 256)?;
+    let batch = args.usize_or("batch", 256)?;
+    let shards = args.usize_or("shards", 8)?;
+    let workers = args.usize_or("workers", if synthetic { 2 } else { 4 })?;
+    let mut models = args.list_or("models", &[]);
+    if models.is_empty() {
+        models = if synthetic {
+            vec!["synthetic".to_string()]
+        } else {
+            list_models(artifacts)?
+        };
+    }
+    let stop_after = match args.usize_or("stop-after", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let cfg = campaign::Config {
+        models,
+        strategies: args.list_or("strategies", &table2::PAPER_STRATEGIES),
+        rates: parse_rates(args)?,
+        fault_models,
+        policy,
+        jobs: args.usize_or("jobs", 2)?,
+        ledger: args.str_opt("ledger").map(PathBuf::from),
+        resume: args.bool("resume"),
+        stop_after,
+        runner_tag: if synthetic {
+            format!("synthetic:n{n_weights}")
+        } else {
+            format!("pjrt:batch{batch}")
+        },
+        verbose: args.bool("verbose"),
+    };
+    let report = if synthetic {
+        let runner = campaign::SyntheticRunner::new(n_weights, shards, workers);
+        campaign::run(&cfg, &runner)?
+    } else {
+        let runner = campaign::EvalRunner::load(artifacts, &cfg.models, batch, shards, workers)?;
+        campaign::run(&cfg, &runner)?
+    };
+    println!("{}", report.render());
+    if let Some(out) = args.str_opt("out") {
+        std::fs::write(out, report.canonical_json().to_string())?;
+        println!("(canonical JSON written to {out})");
+    }
+    if args.bool("json") {
+        println!("{}", report.to_json());
     }
     Ok(())
 }

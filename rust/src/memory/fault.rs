@@ -7,9 +7,23 @@
 //! positions drawn uniformly over the stored image (data + out-of-band
 //! check storage — a scheme's own redundancy is equally exposed).
 //!
-//! The burst model (ablation, not in the paper) flips runs of adjacent
-//! bits — the failure signature of multi-cell upsets — to probe where
-//! SEC-DED's single-error assumption breaks down.
+//! Beyond the paper's uniform model the injector knows four more
+//! deterministic models used by the ablations and the campaign engine:
+//!
+//! * [`FaultModel::Burst`] — non-overlapping runs of adjacent flipped
+//!   bits, the failure signature of multi-cell upsets; probes where
+//!   SEC-DED's single-error assumption breaks down.
+//! * [`FaultModel::StuckAt`] — cells pinned to 0 or 1 rather than
+//!   flipped: only cells whose stored value differs from the stuck
+//!   value change, so the effective flip count depends on the image.
+//! * [`FaultModel::RowBurst`] — bursts confined to length-aligned slots
+//!   inside a configurable row stride, modelling DRAM row upsets.
+//! * [`FaultModel::Hotspot`] — flips concentrated in one contiguous
+//!   window covering a fraction of the image (localized damage, e.g. a
+//!   failing bank region).
+//!
+//! Every model draws through [`FaultInjector::draw_positions`], so the
+//! sharded bank's dirty tracking works unchanged for all of them.
 
 use crate::ecc::Encoded;
 use crate::util::rng::Rng;
@@ -19,9 +33,90 @@ use crate::util::rng::Rng;
 pub enum FaultModel {
     /// Independent uniform bit flips (the paper's model).
     Uniform,
-    /// Bursts of `len` adjacent flipped bits; the *total* flipped-bit
-    /// budget still follows the rate (n_bursts = n_flips / len).
+    /// Non-overlapping bursts of `len` adjacent flipped bits; the
+    /// *total* flipped-bit budget still follows the rate
+    /// (n_bursts = n_flips / len).
     Burst { len: u32 },
+    /// Cells pinned to `bit` (0 or 1): drawn cells already storing
+    /// `bit` are unaffected, so fewer than the budgeted bits may flip.
+    StuckAt { bit: u8 },
+    /// Bursts of `len` bits confined to len-aligned slots within rows
+    /// of `row_bits` stored bits (DRAM row-upset signature). A trailing
+    /// partial row keeps its whole slots exposed.
+    RowBurst { row_bits: u64, len: u32 },
+    /// Flips concentrated in one contiguous window covering `frac` of
+    /// the stored image (window start is drawn per seed). The flip
+    /// budget saturates at the window capacity — the window never
+    /// widens to fit the budget.
+    Hotspot { frac: f64 },
+}
+
+impl FaultModel {
+    /// Stable tag naming the model — ledger keys, JSON reports, seeds.
+    /// `parse` accepts every string `tag` produces.
+    pub fn tag(&self) -> String {
+        match *self {
+            FaultModel::Uniform => "uniform".to_string(),
+            FaultModel::Burst { len } => format!("burst:{len}"),
+            FaultModel::StuckAt { bit } => format!("stuckat:{bit}"),
+            FaultModel::RowBurst { row_bits, len } => format!("rowburst:{row_bits}:{len}"),
+            FaultModel::Hotspot { frac } => format!("hotspot:{frac}"),
+        }
+    }
+
+    /// Parse a model tag (CLI `--fault-model`): `uniform`, `burst:LEN`,
+    /// `stuckat:BIT`, `rowburst:ROWBITS:LEN`, `hotspot:FRAC`. Parameters
+    /// may be omitted for defaults (`burst` = `burst:4`).
+    pub fn parse(text: &str) -> anyhow::Result<FaultModel> {
+        let (head, rest) = match text.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (text, None),
+        };
+        let bad = |what: &str| anyhow::anyhow!("bad {what} in fault model '{text}'");
+        let model = match head {
+            "uniform" => {
+                anyhow::ensure!(rest.is_none(), "uniform takes no parameter (got '{text}')");
+                FaultModel::Uniform
+            }
+            "burst" => FaultModel::Burst {
+                len: rest.unwrap_or("4").parse().map_err(|_| bad("burst length"))?,
+            },
+            "stuckat" => {
+                let bit: u8 = rest.unwrap_or("0").parse().map_err(|_| bad("stuck bit"))?;
+                anyhow::ensure!(bit <= 1, "stuckat bit must be 0 or 1, got {bit}");
+                FaultModel::StuckAt { bit }
+            }
+            "rowburst" => {
+                let (row_bits, len) = match rest {
+                    None => (8192, 4),
+                    Some(r) => match r.split_once(':') {
+                        Some((a, b)) => (
+                            a.parse().map_err(|_| bad("row stride"))?,
+                            b.parse().map_err(|_| bad("burst length"))?,
+                        ),
+                        None => (r.parse().map_err(|_| bad("row stride"))?, 4),
+                    },
+                };
+                FaultModel::RowBurst { row_bits, len }
+            }
+            "hotspot" => {
+                let frac: f64 = rest
+                    .unwrap_or("0.05")
+                    .parse()
+                    .map_err(|_| bad("hotspot fraction"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&frac),
+                    "hotspot fraction must be in [0, 1], got {frac}"
+                );
+                FaultModel::Hotspot { frac }
+            }
+            _ => anyhow::bail!(
+                "unknown fault model '{text}' \
+                 (uniform | burst:LEN | stuckat:BIT | rowburst:ROWBITS:LEN | hotspot:FRAC)"
+            ),
+        };
+        Ok(model)
+    }
 }
 
 /// Deterministic fault injector.
@@ -46,14 +141,15 @@ impl FaultInjector {
 
     /// Inject faults at `rate` into the image; returns bits flipped.
     pub fn inject(&mut self, enc: &mut Encoded, rate: f64) -> u64 {
-        let total = enc.total_bits();
-        let n = Self::flip_count(total, rate);
+        let n = Self::flip_count(enc.total_bits(), rate);
         self.inject_count(enc, n)
     }
 
-    /// Inject exactly `n` flipped bits (distinct positions).
+    /// Inject a budget of `n` faulty bits (distinct positions; models
+    /// may flip fewer — bursts round down to whole bursts, stuck-at
+    /// skips cells already at the stuck value). Returns bits flipped.
     pub fn inject_count(&mut self, enc: &mut Encoded, n: u64) -> u64 {
-        let positions = self.draw_positions(enc.total_bits(), n);
+        let positions = self.draw_positions(enc, n);
         let flipped = positions.len() as u64;
         for pos in positions {
             enc.flip_bit(pos);
@@ -61,31 +157,90 @@ impl FaultInjector {
         flipped
     }
 
-    /// Draw the bit positions an `inject_count` call would flip, without
-    /// flipping them — the sharded bank uses this to both flip and mark
-    /// the shards the faults land in. For a given (model, seed) the
-    /// sequence is identical to what `inject`/`inject_count` consume.
-    pub fn draw_positions(&mut self, total_bits: u64, n: u64) -> Vec<u64> {
+    /// Draw the distinct bit positions an `inject_count` call would
+    /// flip, without flipping them — the sharded bank uses this to both
+    /// flip and mark the shards the faults land in. For a given (model,
+    /// seed, image) the sequence is identical to what
+    /// `inject`/`inject_count` consume.
+    pub fn draw_positions(&mut self, enc: &Encoded, n: u64) -> Vec<u64> {
+        let total = enc.total_bits();
+        if total == 0 || n == 0 {
+            return Vec::new();
+        }
         match self.model {
-            FaultModel::Uniform => {
-                let n = n.min(total_bits);
-                self.rng.distinct(total_bits, n)
-            }
+            FaultModel::Uniform => self.rng.distinct(total, n.min(total)),
             FaultModel::Burst { len } => {
-                let len = len.max(1) as u64;
-                let bursts = n / len;
+                let len = u64::from(len.max(1));
+                let bursts = (n / len).min(total / len);
+                burst_positions(&mut self.rng, total, bursts, len)
+            }
+            FaultModel::StuckAt { bit } => {
+                let stuck = bit != 0;
+                self.rng
+                    .distinct(total, n.min(total))
+                    .into_iter()
+                    .filter(|&pos| enc.get_bit(pos) != stuck)
+                    .collect()
+            }
+            FaultModel::RowBurst { row_bits, len } => {
+                let len = u64::from(len.max(1));
+                let row = row_bits.max(len).min(total);
+                let slots_per_row = row / len;
+                let rows = total / row;
+                // the trailing partial row is a (shorter) row too — its
+                // whole slots stay exposed, or the rate would silently
+                // undershoot on images that do not tile exactly
+                let tail_slots = (total % row) / len;
+                let total_slots = rows * slots_per_row + tail_slots;
+                let bursts = (n / len).min(total_slots);
+                if bursts == 0 {
+                    return Vec::new();
+                }
                 let mut positions = Vec::with_capacity((bursts * len) as usize);
-                for _ in 0..bursts {
-                    let start = self.rng.below(total_bits);
-                    for k in 0..len {
-                        // bursts wrap within the image, stay distinct per burst
-                        positions.push((start + k) % total_bits);
-                    }
+                for slot in self.rng.distinct(total_slots, bursts) {
+                    let start = if slot < rows * slots_per_row {
+                        slot / slots_per_row * row + slot % slots_per_row * len
+                    } else {
+                        rows * row + (slot - rows * slots_per_row) * len
+                    };
+                    positions.extend(start..start + len);
                 }
                 positions
             }
+            FaultModel::Hotspot { frac } => {
+                // The budget saturates at the window capacity — the
+                // window never widens to fit the budget, otherwise the
+                // model would silently degenerate into a solid burst.
+                let window =
+                    ((total as f64 * frac.clamp(0.0, 1.0)).ceil() as u64).clamp(1, total);
+                let n = n.min(window);
+                let start = self.rng.below(total);
+                self.rng
+                    .distinct(window, n)
+                    .into_iter()
+                    .map(|off| (start + off) % total)
+                    .collect()
+            }
         }
     }
+}
+
+/// `bursts` non-overlapping runs of `len` adjacent bits in `[0, total)`
+/// (requires `bursts * len <= total`). Sorted-gap construction: distinct
+/// anchors drawn from the shrunken space `[0, total - bursts*(len-1))`
+/// map to pairwise-disjoint intervals, so the flipped count is exact.
+fn burst_positions(rng: &mut Rng, total: u64, bursts: u64, len: u64) -> Vec<u64> {
+    if bursts == 0 {
+        return Vec::new();
+    }
+    let mut anchors = rng.distinct(total - bursts * (len - 1), bursts);
+    anchors.sort_unstable();
+    let mut positions = Vec::with_capacity((bursts * len) as usize);
+    for (i, anchor) in anchors.into_iter().enumerate() {
+        let start = anchor + i as u64 * (len - 1);
+        positions.extend(start..start + len);
+    }
+    positions
 }
 
 #[cfg(test)]
@@ -98,6 +253,14 @@ mod tests {
             oob: vec![0u8; nbytes / 8],
             n: nbytes,
         }
+    }
+
+    fn ones_of(enc: &Encoded) -> u64 {
+        enc.data
+            .iter()
+            .chain(&enc.oob)
+            .map(|b| u64::from(b.count_ones()))
+            .sum()
     }
 
     #[test]
@@ -114,13 +277,7 @@ mod tests {
         let mut enc = image(1024);
         let mut inj = FaultInjector::new(FaultModel::Uniform, 42);
         let n = inj.inject(&mut enc, 1e-2); // 1024*8*1.125 bits * 1e-2 ≈ 92
-        let ones: u32 = enc
-            .data
-            .iter()
-            .chain(&enc.oob)
-            .map(|b| b.count_ones())
-            .sum();
-        assert_eq!(ones as u64, n, "flips must hit distinct bits");
+        assert_eq!(ones_of(&enc), n, "flips must hit distinct bits");
     }
 
     #[test]
@@ -139,27 +296,170 @@ mod tests {
     }
 
     #[test]
-    fn burst_flips_adjacent() {
-        let mut enc = image(1024);
+    fn burst_flips_exact_adjacent_runs() {
+        for seed in 0..20 {
+            let mut enc = image(1024);
+            let mut inj = FaultInjector::new(FaultModel::Burst { len: 4 }, seed);
+            let flipped = inj.inject_count(&mut enc, 8);
+            assert_eq!(flipped, 8, "two bursts of 4, never fewer");
+            assert_eq!(ones_of(&enc), 8, "bursts must not self-overlap");
+        }
+        // and the drawn positions are two disjoint runs of 4 adjacent bits
+        let enc = image(1024);
         let mut inj = FaultInjector::new(FaultModel::Burst { len: 4 }, 7);
-        let flipped = inj.inject_count(&mut enc, 8);
-        assert_eq!(flipped, 8); // two bursts of 4
-        let ones: u32 = enc
-            .data
-            .iter()
-            .chain(&enc.oob)
-            .map(|b| b.count_ones())
-            .sum();
-        assert!(ones <= 8 && ones >= 5, "bursts may self-overlap only rarely");
+        let mut pos = inj.draw_positions(&enc, 8);
+        pos.sort_unstable();
+        assert_eq!(pos.len(), 8);
+        for run in pos.chunks(4) {
+            for k in 1..4 {
+                assert_eq!(run[k], run[0] + k as u64, "burst must be adjacent bits");
+            }
+        }
+        assert!(pos[4] > pos[3], "bursts must be distinct");
+    }
+
+    #[test]
+    fn burst_saturates_at_image_capacity() {
+        // 8 data bytes + 1 oob byte = 72 bits; a 720-bit budget of
+        // 8-bit bursts clamps to 9 whole bursts tiling the image.
+        let mut enc = image(8);
+        let mut inj = FaultInjector::new(FaultModel::Burst { len: 8 }, 3);
+        let flipped = inj.inject_count(&mut enc, 720);
+        assert_eq!(flipped, 72);
+        assert_eq!(ones_of(&enc), 72);
+    }
+
+    #[test]
+    fn stuckat_pins_cells_instead_of_flipping() {
+        // all-zero image: stuck-at-1 flips the full budget...
+        let mut enc = image(256);
+        let mut inj = FaultInjector::new(FaultModel::StuckAt { bit: 1 }, 9);
+        assert_eq!(inj.inject_count(&mut enc, 40), 40);
+        assert_eq!(ones_of(&enc), 40);
+        // ...stuck-at-0 flips nothing.
+        let mut enc = image(256);
+        let mut inj = FaultInjector::new(FaultModel::StuckAt { bit: 0 }, 9);
+        assert_eq!(inj.inject_count(&mut enc, 40), 0);
+        assert_eq!(ones_of(&enc), 0);
+        // all-ones image: stuck-at-0 clears exactly the budget.
+        let mut enc = image(256);
+        enc.data.iter_mut().for_each(|b| *b = 0xFF);
+        enc.oob.iter_mut().for_each(|b| *b = 0xFF);
+        let total = enc.total_bits();
+        let mut inj = FaultInjector::new(FaultModel::StuckAt { bit: 0 }, 11);
+        assert_eq!(inj.inject_count(&mut enc, 40), 40);
+        assert_eq!(ones_of(&enc), total - 40);
+    }
+
+    #[test]
+    fn rowburst_stays_inside_aligned_row_slots() {
+        let enc = image(1024); // 9216 stored bits
+        let (row_bits, len) = (256u64, 4u64);
+        let mut inj = FaultInjector::new(
+            FaultModel::RowBurst { row_bits, len: len as u32 },
+            13,
+        );
+        let pos = inj.draw_positions(&enc, 32);
+        assert_eq!(pos.len(), 32, "8 bursts of 4");
+        let distinct: std::collections::HashSet<_> = pos.iter().collect();
+        assert_eq!(distinct.len(), 32, "slots are disjoint");
+        for run in pos.chunks(len as usize) {
+            assert_eq!(run[0] % len, 0, "burst start is slot-aligned");
+            let row = run[0] / row_bits;
+            for (k, &p) in run.iter().enumerate() {
+                assert_eq!(p, run[0] + k as u64, "burst is adjacent bits");
+                assert_eq!(p / row_bits, row, "burst never crosses a row");
+            }
+        }
+    }
+
+    #[test]
+    fn rowburst_tail_partial_row_stays_exposed() {
+        // 72 stored bits, 32-bit rows: 2 full rows (16 slots of 4) plus
+        // an 8-bit tail holding 2 more slots. A saturating budget must
+        // reach all 18 slots = every bit of the image.
+        let mut enc = image(8);
+        let mut inj = FaultInjector::new(FaultModel::RowBurst { row_bits: 32, len: 4 }, 5);
+        let flipped = inj.inject_count(&mut enc, 720);
+        assert_eq!(flipped, 72, "tail slots must be drawable");
+        assert_eq!(ones_of(&enc), 72);
+    }
+
+    #[test]
+    fn hotspot_confines_flips_to_one_window() {
+        let enc = image(4096); // 36864 stored bits
+        let total = enc.total_bits();
+        let frac = 0.05;
+        let mut inj = FaultInjector::new(FaultModel::Hotspot { frac }, 17);
+        let pos = inj.draw_positions(&enc, 64);
+        assert_eq!(pos.len(), 64);
+        let window = (total as f64 * frac).ceil() as u64;
+        // All positions fit inside one circular window of `window` bits
+        // iff the largest circular gap between consecutive positions
+        // leaves a covering arc no wider than the window.
+        let mut sorted = pos.clone();
+        sorted.sort_unstable();
+        let mut max_gap = sorted[0] + total - sorted[sorted.len() - 1];
+        for pair in sorted.windows(2) {
+            max_gap = max_gap.max(pair[1] - pair[0]);
+        }
+        assert!(
+            total - max_gap < window,
+            "hotspot flips span {} bits, window is {}",
+            total - max_gap,
+            window
+        );
+    }
+
+    #[test]
+    fn hotspot_budget_saturates_at_window_capacity() {
+        // 1152 stored bits, 2% window = 24 bits: a 100-bit budget must
+        // not widen the window — it flips exactly the 24 window bits.
+        let mut enc = image(128);
+        let mut inj = FaultInjector::new(FaultModel::Hotspot { frac: 0.02 }, 21);
+        let flipped = inj.inject_count(&mut enc, 100);
+        assert_eq!(flipped, 24);
+        assert_eq!(ones_of(&enc), 24);
+    }
+
+    #[test]
+    fn tags_roundtrip_through_parse() {
+        let models = [
+            FaultModel::Uniform,
+            FaultModel::Burst { len: 4 },
+            FaultModel::StuckAt { bit: 1 },
+            FaultModel::RowBurst { row_bits: 8192, len: 2 },
+            FaultModel::Hotspot { frac: 0.05 },
+        ];
+        for m in models {
+            assert_eq!(FaultModel::parse(&m.tag()).unwrap(), m, "{}", m.tag());
+        }
+        assert_eq!(FaultModel::parse("burst").unwrap(), FaultModel::Burst { len: 4 });
+        assert!(FaultModel::parse("stuckat:2").is_err());
+        assert!(FaultModel::parse("nope").is_err());
+        assert!(FaultModel::parse("burst:x").is_err());
+        assert!(
+            FaultModel::parse("uniform:0.01").is_err(),
+            "stray parameters must not be silently discarded"
+        );
     }
 
     #[test]
     fn deterministic_in_seed() {
-        let mut a = image(256);
-        let mut b = image(256);
-        FaultInjector::new(FaultModel::Uniform, 99).inject_count(&mut a, 50);
-        FaultInjector::new(FaultModel::Uniform, 99).inject_count(&mut b, 50);
-        assert_eq!(a.data, b.data);
-        assert_eq!(a.oob, b.oob);
+        let models = [
+            FaultModel::Uniform,
+            FaultModel::Burst { len: 3 },
+            FaultModel::StuckAt { bit: 1 },
+            FaultModel::RowBurst { row_bits: 128, len: 2 },
+            FaultModel::Hotspot { frac: 0.1 },
+        ];
+        for m in models {
+            let mut a = image(256);
+            let mut b = image(256);
+            FaultInjector::new(m, 99).inject_count(&mut a, 50);
+            FaultInjector::new(m, 99).inject_count(&mut b, 50);
+            assert_eq!(a.data, b.data, "{}", m.tag());
+            assert_eq!(a.oob, b.oob, "{}", m.tag());
+        }
     }
 }

@@ -1,14 +1,20 @@
 //! The simulated memory subsystem holding encoded CNN weights.
 //!
-//! * [`fault`] — fault models: uniform random bit flips with the paper's
-//!   exact count semantics, plus a burst model (adjacent-bit upsets) for
-//!   the ablation study.
+//! * [`fault`] — deterministic fault models: uniform random bit flips
+//!   with the paper's exact count semantics, plus burst (adjacent-bit
+//!   upsets), stuck-at (cells pinned to 0/1), row-burst (DRAM row
+//!   upsets) and hotspot (localized damage) models for the ablations
+//!   and the campaign engine. All models draw through
+//!   `FaultInjector::draw_positions`, so shard dirty tracking works
+//!   unchanged for every one of them.
 //! * [`bank`] — `MemoryBank`: an encoded weight image + its protection
 //!   strategy; supports fault injection, protected reads and scrubbing.
 //! * [`shard`] — `ShardedBank`: the same stored image split into S
 //!   block-aligned shards, scrubbed/decoded by a scoped-thread worker
 //!   pool with per-shard stats and dirty tracking — the serving path's
-//!   store, enabling incremental (delta) weight refresh.
+//!   store, enabling incremental (delta) weight refresh. Its `run_jobs`
+//!   pool is reused by `harness::campaign` to fan experiment cells out
+//!   over workers.
 
 pub mod bank;
 pub mod fault;
@@ -16,4 +22,4 @@ pub mod shard;
 
 pub use bank::MemoryBank;
 pub use fault::{FaultInjector, FaultModel};
-pub use shard::{plan_shards, ShardState, ShardedBank};
+pub use shard::{plan_shards, run_jobs, ShardState, ShardedBank};

@@ -182,7 +182,7 @@ impl ShardedBank {
     pub fn inject(&mut self, model: FaultModel, rate: f64, seed: u64) -> u64 {
         let mut inj = FaultInjector::new(model, seed);
         let n = FaultInjector::flip_count(self.image.total_bits(), rate);
-        let positions = inj.draw_positions(self.image.total_bits(), n);
+        let positions = inj.draw_positions(&self.image, n);
         let flipped = positions.len() as u64;
         for pos in positions {
             let shard = self.shard_of_bit(pos);
@@ -306,8 +306,11 @@ fn ranges_of(shards: &[ShardState]) -> Vec<(usize, usize)> {
 
 /// Fan `jobs` out over at most `workers` scoped threads (round-robin so
 /// the ragged last shard does not serialize behind a full bucket);
-/// returns each job's result. Serial when one worker or one job.
-fn run_jobs<J, R>(jobs: Vec<J>, workers: usize, f: impl Fn(J) -> R + Sync) -> Vec<R>
+/// returns each job's result (bucket order, not submission order).
+/// Serial on the calling thread when one worker or one job. This is the
+/// worker pool behind shard scrub/decode passes and the fault-injection
+/// campaign engine (`harness::campaign`).
+pub fn run_jobs<J, R>(jobs: Vec<J>, workers: usize, f: impl Fn(J) -> R + Sync) -> Vec<R>
 where
     J: Send,
     R: Send,

@@ -81,6 +81,18 @@ impl Args {
         }
     }
 
+    /// Optional float flag: absent is `None`, malformed is an error
+    /// (distinguishes "no target" from "bad target" for `--ci-target`).
+    pub fn f64_opt(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key} expects a float, got '{v}'")),
+        }
+    }
+
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
     }
@@ -123,6 +135,15 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["x", "--n", "abc"]);
         assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn optional_float() {
+        let a = parse(&["x", "--ci-target", "0.25"]);
+        assert_eq!(a.f64_opt("ci-target").unwrap(), Some(0.25));
+        assert_eq!(a.f64_opt("absent").unwrap(), None);
+        let b = parse(&["x", "--ci-target", "abc"]);
+        assert!(b.f64_opt("ci-target").is_err());
     }
 
     #[test]

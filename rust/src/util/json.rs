@@ -41,6 +41,12 @@ impl Json {
             _ => None,
         }
     }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -72,12 +78,6 @@ impl Json {
             anyhow::bail!("trailing garbage at byte {}", p.at);
         }
         Ok(v)
-    }
-
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
     }
 
     fn write(&self, out: &mut String) {
@@ -115,6 +115,18 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialization goes through `Display` (so `.to_string()` works via
+/// the blanket `ToString`); output is canonical — object keys sorted
+/// (BTreeMap), no whitespace — which the campaign ledger relies on for
+/// byte-identical resume comparisons.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -341,6 +353,15 @@ pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
+/// Finite numbers serialize as numbers; NaN/inf (not representable in
+/// JSON) become null. Used for optional statistics like CI half-widths.
+pub fn num_or_null(n: f64) -> Json {
+    if n.is_finite() {
+        Json::Num(n)
+    } else {
+        Json::Null
+    }
+}
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
@@ -368,6 +389,15 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{} extra").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_become_null() {
+        assert_eq!(num_or_null(f64::INFINITY), Json::Null);
+        assert_eq!(num_or_null(f64::NAN), Json::Null);
+        assert_eq!(num_or_null(2.5), Json::Num(2.5));
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Null.as_bool(), None);
     }
 
     #[test]

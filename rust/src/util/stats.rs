@@ -39,6 +39,77 @@ pub fn mean_std_str(xs: &[f64]) -> String {
     format!("{:.2} ± {:.2}", mean(xs), std(xs))
 }
 
+// ------------------------------------------------- confidence intervals --
+
+/// Two-sided Student-t critical values for df 1..=30, then anchors at
+/// df 40/60/120 and the normal quantile; standard table values.
+const T_TABLE_90: [f64; 30] = [
+    6.314, 2.920, 2.353, 2.132, 2.015, 1.943, 1.895, 1.860, 1.833, 1.812, 1.796, 1.782, 1.771,
+    1.761, 1.753, 1.746, 1.740, 1.734, 1.729, 1.725, 1.721, 1.717, 1.714, 1.711, 1.708, 1.706,
+    1.703, 1.701, 1.699, 1.697,
+];
+const T_TAIL_90: [(f64, f64); 4] =
+    [(40.0, 1.684), (60.0, 1.671), (120.0, 1.658), (f64::INFINITY, 1.645)];
+const T_TABLE_95: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179, 2.160,
+    2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056,
+    2.052, 2.048, 2.045, 2.042,
+];
+const T_TAIL_95: [(f64, f64); 4] =
+    [(40.0, 2.021), (60.0, 2.000), (120.0, 1.980), (f64::INFINITY, 1.960)];
+const T_TABLE_99: [f64; 30] = [
+    63.657, 9.925, 5.841, 4.604, 4.032, 3.707, 3.499, 3.355, 3.250, 3.169, 3.106, 3.055, 3.012,
+    2.977, 2.947, 2.921, 2.898, 2.878, 2.861, 2.845, 2.831, 2.819, 2.807, 2.797, 2.787, 2.779,
+    2.771, 2.763, 2.756, 2.750,
+];
+const T_TAIL_99: [(f64, f64); 4] =
+    [(40.0, 2.704), (60.0, 2.660), (120.0, 2.617), (f64::INFINITY, 2.576)];
+
+/// Two-sided Student-t critical value `t*` such that a t-distributed
+/// variable with `df` degrees of freedom lies in `[-t*, t*]` with the
+/// given probability. Supported confidence levels: 0.90, 0.95, 0.99
+/// (the nearest supported level is used). Exact table values for
+/// df 1..=30; linear interpolation in 1/df against the 40/60/120/normal
+/// anchors beyond (error < 1e-3 there).
+pub fn t_critical(df: usize, confidence: f64) -> f64 {
+    let (table, tail) = if confidence >= 0.97 {
+        (&T_TABLE_99, &T_TAIL_99)
+    } else if confidence >= 0.925 {
+        (&T_TABLE_95, &T_TAIL_95)
+    } else {
+        (&T_TABLE_90, &T_TAIL_90)
+    };
+    let df = df.max(1);
+    if df <= 30 {
+        return table[df - 1];
+    }
+    // interpolate in x = 1/df between (30, t30) and the tail anchors
+    let x = 1.0 / df as f64;
+    let mut prev = (30.0, table[29]);
+    for &(d, t) in tail {
+        let (x0, x1) = (1.0 / prev.0, 1.0 / d);
+        if x >= x1 {
+            return t + (prev.1 - t) * (x - x1) / (x0 - x1);
+        }
+        prev = (d, t);
+    }
+    tail[tail.len() - 1].1
+}
+
+/// Half-width of the two-sided `confidence` Student-t interval on the
+/// mean of `xs`: `t* · s / sqrt(n)`. A single sample (or none) cannot
+/// bound the mean — returns infinity; a zero-variance sample returns 0.
+pub fn mean_ci_half_width(xs: &[f64], confidence: f64) -> f64 {
+    if xs.len() < 2 {
+        return f64::INFINITY;
+    }
+    let s = std(xs);
+    if s == 0.0 {
+        return 0.0;
+    }
+    t_critical(xs.len() - 1, confidence) * s / (xs.len() as f64).sqrt()
+}
+
 /// Online accumulator for latency series (keeps raw samples; our series
 /// are small enough that exact percentiles beat streaming sketches).
 #[derive(Default, Clone)]
@@ -92,5 +163,46 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std(&[1.0]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn t_critical_matches_table_fixtures() {
+        // classic two-sided table values, exact in the df<=30 regime
+        assert_eq!(t_critical(1, 0.95), 12.706);
+        assert_eq!(t_critical(4, 0.95), 2.776);
+        assert_eq!(t_critical(7, 0.95), 2.365);
+        assert_eq!(t_critical(30, 0.95), 2.042);
+        assert_eq!(t_critical(4, 0.90), 2.132);
+        assert_eq!(t_critical(10, 0.99), 3.169);
+        // df 0 is clamped to 1
+        assert_eq!(t_critical(0, 0.95), 12.706);
+        // tail interpolation: monotone, bracketed by its anchors
+        let t45 = t_critical(45, 0.95);
+        assert!(t45 > 2.000 && t45 < 2.021, "t(45) = {t45}");
+        // ...and converges to the normal quantile for huge df
+        assert!((t_critical(1_000_000, 0.95) - 1.960).abs() < 1e-3);
+        assert!((t_critical(1_000_000, 0.99) - 2.576).abs() < 1e-3);
+        // unsupported levels snap to the nearest supported one
+        assert_eq!(t_critical(5, 0.94), t_critical(5, 0.95));
+    }
+
+    #[test]
+    fn ci_half_width_known_value() {
+        // n=8, s=2.13809..., t(7, 95%)=2.365 -> hw = t*s/sqrt(8) ≈ 1.7878
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let hw = mean_ci_half_width(&xs, 0.95);
+        assert!((hw - 1.7878).abs() < 1e-3, "hw = {hw}");
+        // wider at higher confidence
+        assert!(mean_ci_half_width(&xs, 0.99) > hw);
+        assert!(mean_ci_half_width(&xs, 0.90) < hw);
+    }
+
+    #[test]
+    fn ci_half_width_degenerate() {
+        // one sample (or none) cannot bound the mean
+        assert!(mean_ci_half_width(&[3.0], 0.95).is_infinite());
+        assert!(mean_ci_half_width(&[], 0.95).is_infinite());
+        // zero variance pins the mean exactly
+        assert_eq!(mean_ci_half_width(&[2.0, 2.0, 2.0], 0.95), 0.0);
     }
 }

@@ -1,0 +1,152 @@
+//! Campaign-engine integration tests — all on the synthetic
+//! (artifact-free) runner: ledger checkpoint/resume bit-identity,
+//! early-stopping bounds, and fingerprint safety.
+
+use std::path::PathBuf;
+
+use zsecc::harness::campaign::{self, Config, SyntheticRunner, TrialPolicy};
+use zsecc::memory::FaultModel;
+use zsecc::util::json::Json;
+
+fn base_cfg(ledger: Option<PathBuf>, jobs: usize) -> Config {
+    Config {
+        models: vec!["synthetic".to_string()],
+        strategies: vec![
+            "faulty".to_string(),
+            "ecc".to_string(),
+            "in-place".to_string(),
+        ],
+        rates: vec![1e-9, 5e-3],
+        fault_models: vec![FaultModel::Uniform, FaultModel::Burst { len: 2 }],
+        policy: TrialPolicy::adaptive(3, 8, 0.05, 0.95),
+        jobs,
+        ledger,
+        resume: false,
+        stop_after: None,
+        runner_tag: "synthetic:n2048".to_string(),
+        verbose: false,
+    }
+}
+
+fn runner() -> SyntheticRunner {
+    SyntheticRunner::new(2048, 4, 2)
+}
+
+fn temp_ledger(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("zsecc_campaign_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}.ledger.json"));
+    let _ = std::fs::remove_file(&path);
+    path
+}
+
+#[test]
+fn interrupted_campaign_resumes_bit_identically() {
+    let ledger = temp_ledger("resume");
+
+    // one-shot reference run, no ledger at all
+    let oneshot = campaign::run(&base_cfg(None, 1), &runner()).unwrap();
+    assert!(oneshot.complete);
+    assert_eq!(oneshot.cells.len(), 12, "3 strategies x 2 rates x 2 faults");
+
+    // the same campaign interrupted after 5 cells
+    let mut cfg = base_cfg(Some(ledger.clone()), 1);
+    cfg.stop_after = Some(5);
+    let partial = campaign::run(&cfg, &runner()).unwrap();
+    assert!(!partial.complete, "interrupted run must say so");
+    assert_eq!(partial.cells.len(), 5);
+
+    // resumed under different parallelism: completes, and the canonical
+    // JSON is byte-identical to the uninterrupted run
+    let mut cfg = base_cfg(Some(ledger.clone()), 3);
+    cfg.resume = true;
+    let resumed = campaign::run(&cfg, &runner()).unwrap();
+    assert!(resumed.complete);
+    assert_eq!(
+        resumed.canonical_json().to_string(),
+        oneshot.canonical_json().to_string(),
+        "resume must be bit-identical to a one-shot run"
+    );
+
+    // resuming the now-complete ledger computes nothing new (stop_after
+    // forbids any fresh cell) and still reproduces the same bytes
+    let mut cfg = base_cfg(Some(ledger.clone()), 2);
+    cfg.resume = true;
+    cfg.stop_after = Some(0);
+    let replay = campaign::run(&cfg, &runner()).unwrap();
+    assert!(replay.complete, "every cell must come from the ledger");
+    assert_eq!(
+        replay.canonical_json().to_string(),
+        oneshot.canonical_json().to_string()
+    );
+
+    // and the ledger file itself is valid JSON holding the full grid
+    let text = std::fs::read_to_string(&ledger).unwrap();
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(v.req("cells").unwrap().as_obj().unwrap().len(), 12);
+}
+
+#[test]
+fn early_stopping_never_violates_trial_bounds() {
+    let report = campaign::run(&base_cfg(None, 2), &runner()).unwrap();
+    assert!(report.complete);
+    for c in &report.cells {
+        assert!(
+            (3..=8).contains(&c.trials()),
+            "{}: {} trials outside [3, 8]",
+            c.spec.key(),
+            c.trials()
+        );
+        // a cell that stopped early must have met the CI target
+        if c.trials() < 8 {
+            assert!(
+                c.half_width <= 0.05 + 1e-12,
+                "{}: stopped at {} trials with hw {}",
+                c.spec.key(),
+                c.trials(),
+                c.half_width
+            );
+        }
+    }
+    // at rate 1e-9 the flip budget rounds to zero: deterministically
+    // zero drop and zero variance, so every such cell stops at the
+    // minimum bound — early stopping at work, and never below min
+    for c in report.cells.iter().filter(|c| c.spec.rate == 1e-9) {
+        assert_eq!(c.trials(), 3, "{}", c.spec.key());
+        assert_eq!(c.half_width, 0.0);
+        assert!(c.drops.iter().all(|&d| d == 0.0));
+    }
+}
+
+#[test]
+fn ledger_refuses_a_foreign_campaign() {
+    let ledger = temp_ledger("foreign");
+    let mut cfg = base_cfg(Some(ledger.clone()), 1);
+    cfg.stop_after = Some(2);
+    campaign::run(&cfg, &runner()).unwrap();
+
+    // same ledger, different grid -> fingerprint mismatch, hard error
+    let mut other = base_cfg(Some(ledger), 1);
+    other.rates = vec![1e-4];
+    other.resume = true;
+    let err = campaign::run(&other, &runner()).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
+}
+
+#[test]
+fn jobs_and_shard_geometry_do_not_change_results() {
+    // worker count is an execution knob; shard/worker geometry of the
+    // synthetic bank is decode plumbing — neither may leak into results
+    let serial = campaign::run(&base_cfg(None, 1), &runner()).unwrap();
+    let parallel = campaign::run(&base_cfg(None, 8), &runner()).unwrap();
+    assert_eq!(
+        serial.canonical_json().to_string(),
+        parallel.canonical_json().to_string()
+    );
+    let other_geometry =
+        campaign::run(&base_cfg(None, 2), &SyntheticRunner::new(2048, 7, 4)).unwrap();
+    assert_eq!(
+        serial.canonical_json().to_string(),
+        other_geometry.canonical_json().to_string()
+    );
+}

@@ -381,6 +381,157 @@ fn prop_distinct_is_distinct_and_in_range() {
     });
 }
 
+// ------------------------------------------------ fault-model laws --
+
+/// A representative draw of every fault model, parameters randomized.
+fn fault_model_menagerie(rng: &mut Rng) -> Vec<zsecc::memory::FaultModel> {
+    use zsecc::memory::FaultModel;
+    vec![
+        FaultModel::Uniform,
+        FaultModel::Burst {
+            len: 1 + rng.below(5) as u32,
+        },
+        FaultModel::RowBurst {
+            row_bits: 32 * (1 + rng.below(8)),
+            len: 1 + rng.below(4) as u32,
+        },
+        FaultModel::StuckAt { bit: 1 },
+        FaultModel::Hotspot {
+            frac: 0.01 + rng.f64() * 0.5,
+        },
+    ]
+}
+
+#[test]
+fn prop_fault_models_deterministic_and_exact_count() {
+    use zsecc::memory::{FaultInjector, FaultModel};
+    check("fault models det/exact", 30, |rng, size| {
+        let nbytes = 8 * size.max(1);
+        let zero = Encoded {
+            data: vec![0u8; nbytes],
+            oob: vec![0u8; nbytes / 8],
+            n: nbytes,
+        };
+        let total = zero.total_bits();
+        let budget = 1 + rng.below(total / 4 + 1);
+        for model in fault_model_menagerie(rng) {
+            let seed = rng.next_u64();
+            // (a) deterministic per seed
+            let mut a = zero.clone();
+            let mut b = zero.clone();
+            let fa = FaultInjector::new(model, seed).inject_count(&mut a, budget);
+            let fb = FaultInjector::new(model, seed).inject_count(&mut b, budget);
+            if a.data != b.data || a.oob != b.oob || fa != fb {
+                return Err(format!("{}: same seed, different injection", model.tag()));
+            }
+            // (b) every reported flip is a distinct bit...
+            let ones: u64 = a
+                .data
+                .iter()
+                .chain(&a.oob)
+                .map(|x| u64::from(x.count_ones()))
+                .sum();
+            if ones != fa {
+                return Err(format!(
+                    "{}: {} set bits vs {} reported flips",
+                    model.tag(),
+                    ones,
+                    fa
+                ));
+            }
+            // ...and on an all-zero image the count is exactly what the
+            // model promises for the budget
+            let expect = match model {
+                FaultModel::Uniform | FaultModel::StuckAt { .. } => budget.min(total),
+                FaultModel::Hotspot { frac } => {
+                    // budget saturates at the window capacity
+                    let window = ((total as f64 * frac.clamp(0.0, 1.0)).ceil() as u64)
+                        .clamp(1, total);
+                    budget.min(window)
+                }
+                FaultModel::Burst { len } => {
+                    let len = u64::from(len.max(1));
+                    (budget / len).min(total / len) * len
+                }
+                FaultModel::RowBurst { row_bits, len } => {
+                    let len = u64::from(len.max(1));
+                    let row = row_bits.max(len).min(total);
+                    let slots = (total / row) * (row / len) + (total % row) / len;
+                    (budget / len).min(slots) * len
+                }
+            };
+            if fa != expect {
+                return Err(format!(
+                    "{}: flipped {} of a {} budget, promised {}",
+                    model.tag(),
+                    fa,
+                    budget,
+                    expect
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fault_models_mark_exactly_the_hit_shards() {
+    use zsecc::memory::ShardedBank;
+    check("fault models dirty shards", 15, |rng, size| {
+        let nblocks = 1 + rng.below(size.max(1) as u64) as usize;
+        let w = wot_weights(rng, nblocks);
+        for model in fault_model_menagerie(rng) {
+            let seed = rng.next_u64();
+            for name in ["ecc", "in-place"] {
+                for shards in [1usize, 3, 16] {
+                    let mut sb = ShardedBank::new(strategy_by_name(name).unwrap(), &w, shards, 2)
+                        .map_err(|e| e.to_string())?;
+                    let before_data = sb.image().data.clone();
+                    let before_oob = sb.image().oob.clone();
+                    sb.inject(model, 2e-2, seed);
+                    // ground truth: shards owning a changed stored byte
+                    let ranges: Vec<(usize, usize)> =
+                        (0..sb.num_shards()).map(|i| sb.shard_range(i)).collect();
+                    let shard_of_byte = |data_byte: usize| -> usize {
+                        ranges
+                            .iter()
+                            .position(|&(s, e)| data_byte >= s && data_byte < e)
+                            .unwrap_or(ranges.len() - 1)
+                    };
+                    let opb = sb.strategy().oob_bytes_per_block();
+                    let block = sb.strategy().block_bytes();
+                    let mut expect = Vec::new();
+                    for (i, (a, b)) in before_data.iter().zip(&sb.image().data).enumerate() {
+                        if a != b {
+                            expect.push(shard_of_byte(i));
+                        }
+                    }
+                    for (i, (a, b)) in before_oob.iter().zip(&sb.image().oob).enumerate() {
+                        if a != b {
+                            expect.push(shard_of_byte(i / opb * block));
+                        }
+                    }
+                    expect.sort_unstable();
+                    expect.dedup();
+                    let mut got = sb.take_dirty();
+                    got.sort_unstable();
+                    if got != expect {
+                        return Err(format!(
+                            "{} {} x{}: dirty {:?} != changed {:?}",
+                            model.tag(),
+                            name,
+                            shards,
+                            got,
+                            expect
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 // -------------------------------------------------- fault-rate semantics --
 
 #[test]

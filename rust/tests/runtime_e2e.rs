@@ -110,6 +110,7 @@ fn table2_mini_grid_shape_holds() {
         trials: 3,
         batch: 256,
         fault_model: FaultModel::Uniform,
+        ..Default::default()
     };
     let t2 = table2::run(&dir, &cfg, false).unwrap();
     for (name, ok) in t2.shape_checks(&cfg) {
