@@ -10,7 +10,11 @@
 //! store's scrub+decode epoch must run >= 2x the single-worker rate.
 //!
 //! `--json` appends one machine-readable record (for the BENCH_*.json
-//! trajectory) after the human-readable output.
+//! trajectory) after the human-readable output; `--out FILE` appends
+//! the same record to FILE (the repo-root `BENCH_ecc.json` ledger is a
+//! JSON-lines file of these records); `--n BYTES` overrides the buffer
+//! size (rounded up to whole 512-byte tiles; CI uses a synthetic small
+//! size, the default is a VGG16_s-scale 1 MiB).
 
 use zsecc::ecc::strategy_by_name;
 use zsecc::memory::{FaultInjector, FaultModel, ShardedBank};
@@ -48,14 +52,19 @@ fn ext_weights(n: usize, seed: u64) -> Vec<i8> {
 
 fn main() {
     let args = Args::from_env().unwrap_or_default();
-    const N: usize = 1 << 20; // 1 MiB of weights — a VGG16_s-scale buffer
-    println!("== ecc_hotpath: {} weight bytes per op ==", N);
-    let w8 = wot_weights(N, 1);
-    let w16 = ext_weights(N, 2);
-    let mut out = vec![0i8; N];
+    // 1 MiB of weights (a VGG16_s-scale buffer) unless --n overrides;
+    // rounded up to whole tiles so every strategy's block size divides.
+    // A malformed --n must not silently bench the default size — the
+    // ledger record would be mislabeled.
+    let n = args.usize_or("n", 1 << 20).expect("--n expects a byte count");
+    let n = n.max(512).div_ceil(512) * 512;
+    println!("== ecc_hotpath: {} weight bytes per op ==", n);
+    let w8 = wot_weights(n, 1);
+    let w16 = ext_weights(n, 2);
+    let mut out = vec![0i8; n];
     // (name, GB/s) pairs for the --json record
     let mut records: Vec<(String, f64)> = Vec::new();
-    let gbps = |ns_per_iter: f64| N as f64 / ns_per_iter;
+    let gbps = |ns_per_iter: f64| n as f64 / ns_per_iter;
 
     for name in ["faulty", "zero", "ecc", "in-place", "bch16"] {
         let s = strategy_by_name(name).unwrap();
@@ -65,14 +74,14 @@ fn main() {
             let enc = s.encode(w).unwrap();
             std::hint::black_box(&enc);
         });
-        println!("    -> {}", r.throughput_str(N));
+        println!("    -> {}", r.throughput_str(n));
         records.push((format!("{name}/encode"), gbps(r.ns_per_iter)));
         // decode clean
         let enc = s.encode(w).unwrap();
         let r = bench(&format!("{name}: decode (clean)"), || {
             s.decode(std::hint::black_box(&enc), &mut out);
         });
-        println!("    -> {}", r.throughput_str(N));
+        println!("    -> {}", r.throughput_str(n));
         records.push((format!("{name}/decode_clean"), gbps(r.ns_per_iter)));
         // decode with sparse faults (1e-4: the realistic scrub-path load)
         let mut enc_f = enc.clone();
@@ -80,7 +89,7 @@ fn main() {
         let r = bench(&format!("{name}: decode (rate 1e-4)"), || {
             s.decode(std::hint::black_box(&enc_f), &mut out);
         });
-        println!("    -> {}", r.throughput_str(N));
+        println!("    -> {}", r.throughput_str(n));
         records.push((format!("{name}/decode_1e-4"), gbps(r.ns_per_iter)));
         // scrub
         let r = bench(&format!("{name}: scrub (rate 1e-4)"), || {
@@ -88,8 +97,42 @@ fn main() {
             s.scrub(&mut e);
             std::hint::black_box(&e);
         });
-        println!("    -> {}", r.throughput_str(N));
+        println!("    -> {}", r.throughput_str(n));
         records.push((format!("{name}/scrub_1e-4"), gbps(r.ns_per_iter)));
+    }
+
+    // tile engine: clean-buffer decode throughput, scalar span vs the
+    // word-parallel tiled span, per strategy. The clean path is the
+    // overwhelmingly common case at realistic fault rates; the tiled
+    // form proves a whole 512-byte tile clean with one OR-reduction
+    // and degrades decode to a copy (plus sign restore for in-place).
+    println!("== tile engine: clean-buffer decode, scalar vs tiled ==");
+    let mut tile_records: Vec<(String, f64, f64)> = Vec::new();
+    for name in ["faulty", "zero", "ecc", "in-place", "bch16"] {
+        let s = strategy_by_name(name).unwrap();
+        let w = if name == "bch16" { &w16 } else { &w8 };
+        let enc = s.encode(w).unwrap();
+        let rs = bench(&format!("{name}: decode_span scalar (clean)"), || {
+            s.decode_span(
+                std::hint::black_box(&enc.data),
+                std::hint::black_box(&enc.oob),
+                &mut out,
+            );
+        });
+        let rt = bench(&format!("{name}: decode_span tiled  (clean)"), || {
+            s.decode_span_tiled(
+                std::hint::black_box(&enc.data),
+                std::hint::black_box(&enc.oob),
+                &mut out,
+            );
+        });
+        println!(
+            "    -> scalar {} | tiled {} | speedup {:.2}x",
+            rs.throughput_str(n),
+            rt.throughput_str(n),
+            rs.ns_per_iter / rt.ns_per_iter
+        );
+        tile_records.push((name.to_string(), gbps(rs.ns_per_iter), gbps(rt.ns_per_iter)));
     }
 
     // latency-claim check: in-place vs conventional SEC-DED decode
@@ -121,20 +164,20 @@ fn main() {
             inj.inject(&mut e, 1e-3);
             std::hint::black_box(&e);
         });
-        println!("    -> {}", r.throughput_str(N));
+        println!("    -> {}", r.throughput_str(n));
         let layers = vec![zsecc::model::Layer {
             name: "w".into(),
-            shape: vec![N],
+            shape: vec![n],
             offset: 0,
-            size: N,
+            size: n,
             scale: 0.01,
             scale_prewot: 0.01,
         }];
-        let mut f = vec![0f32; N];
+        let mut f = vec![0f32; n];
         let r = bench("dequantize (per-layer scale)", || {
             dequantize_into(std::hint::black_box(&w8), &layers, &mut f);
         });
-        println!("    -> {}", r.throughput_str(N));
+        println!("    -> {}", r.throughput_str(n));
         records.push(("dequantize".into(), gbps(r.ns_per_iter)));
     }
 
@@ -153,8 +196,8 @@ fn main() {
             sb.read(&mut out);
         });
         // 2 passes over the image per iteration (scrub + decode)
-        println!("    -> {}", r.throughput_str(2 * N));
-        sharded.push((workers, 2.0 * N as f64 / r.ns_per_iter));
+        println!("    -> {}", r.throughput_str(2 * n));
+        sharded.push((workers, 2.0 * n as f64 / r.ns_per_iter));
     }
     let base = sharded[0].1;
     for &(workers, g) in &sharded {
@@ -167,10 +210,27 @@ fn main() {
         }
     }
 
-    if args.bool("json") {
+    if args.bool("json") || args.str_opt("out").is_some() {
+        // tile section: per-strategy clean-decode GB/s, scalar vs tiled
+        let tile_flat: Vec<(String, f64)> = tile_records
+            .iter()
+            .flat_map(|(name, sc, ti)| {
+                [
+                    (format!("{name}/scalar"), *sc),
+                    (format!("{name}/tiled"), *ti),
+                ]
+            })
+            .collect();
         let rec = obj(vec![
             ("bench", s("ecc_hotpath")),
-            ("bytes_per_op", num(N as f64)),
+            ("bytes_per_op", num(n as f64)),
+            (
+                "tile",
+                obj(tile_flat
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), num(*v)))
+                    .collect()),
+            ),
             ("inplace_vs_secded_decode_ratio", num(claim_ratio)),
             ("shards", num(SHARDS as f64)),
             (
@@ -193,6 +253,19 @@ fn main() {
                 arr(sharded.iter().map(|&(_, g)| num(g))),
             ),
         ]);
-        println!("{rec}");
+        if args.bool("json") {
+            println!("{rec}");
+        }
+        if let Some(path) = args.str_opt("out") {
+            // append one JSON-lines record to the perf ledger
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .unwrap_or_else(|e| panic!("cannot open ledger {path}: {e}"));
+            writeln!(f, "{rec}").expect("ledger write failed");
+            println!("appended record to {path}");
+        }
     }
 }

@@ -11,6 +11,11 @@ use std::sync::Mutex;
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ShardCounters {
     pub scrubs: u64,
+    /// Scrub passes that saw no error at all — the tile engine's
+    /// clean-span fast path (decode = copy, scrub = no-op). At realistic
+    /// fault rates this should dominate `scrubs`; a falling ratio is an
+    /// early sign of rising fault pressure on the shard.
+    pub clean_scrubs: u64,
     pub corrected: u64,
     pub detected: u64,
     pub zeroed: u64,
@@ -84,6 +89,9 @@ impl Metrics {
         let mut shards = self.shards.lock().unwrap();
         let c = Self::shard_slot(&mut shards, idx);
         c.scrubs += 1;
+        if stats.is_clean() {
+            c.clean_scrubs += 1;
+        }
         c.corrected += stats.corrected;
         c.detected += stats.detected;
         c.zeroed += stats.zeroed;
@@ -123,11 +131,11 @@ impl Metrics {
         );
         let shards = self.shards.lock().unwrap();
         if !shards.is_empty() {
-            s.push_str("\n  shard  scrubs corrected detected zeroed refreshes");
+            s.push_str("\n  shard  scrubs   clean corrected detected zeroed refreshes");
             for (i, c) in shards.iter().enumerate() {
                 s.push_str(&format!(
-                    "\n  {:>5} {:>7} {:>9} {:>8} {:>6} {:>9}",
-                    i, c.scrubs, c.corrected, c.detected, c.zeroed, c.refreshes
+                    "\n  {:>5} {:>7} {:>7} {:>9} {:>8} {:>6} {:>9}",
+                    i, c.scrubs, c.clean_scrubs, c.corrected, c.detected, c.zeroed, c.refreshes
                 ));
             }
         }
@@ -169,11 +177,13 @@ mod tests {
             zeroed: 0,
         };
         m.record_shard_scrub(3, &stats);
+        m.record_shard_scrub(3, &DecodeStats::default()); // clean pass
         m.record_shard_refresh(3);
         m.record_shard_refresh(0);
         let c = m.shard_counters();
         assert_eq!(c.len(), 4);
-        assert_eq!(c[3].scrubs, 1);
+        assert_eq!(c[3].scrubs, 2);
+        assert_eq!(c[3].clean_scrubs, 1, "only the error-free pass is clean");
         assert_eq!(c[3].corrected, 2);
         assert_eq!(c[3].detected, 1);
         assert_eq!(c[3].refreshes, 1);

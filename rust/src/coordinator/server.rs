@@ -215,7 +215,6 @@ impl Server {
                 .name("zsecc-scrub".into())
                 .spawn(move || {
                     let nshards = sb.num_shards();
-                    let mut qbuf = vec![0i8; sb.n_weights()];
                     let mut scratch: Vec<i8> = Vec::new();
                     let mut epoch = 0u64;
                     while !stop2.load(Ordering::Relaxed) {
@@ -238,10 +237,12 @@ impl Server {
                         }
                         let update = if dirty.len() == nshards {
                             // Whole image dirty: one full buffer beats
-                            // nshards deltas.
-                            sb.read(&mut qbuf);
-                            let mut w = vec![0f32; qbuf.len()];
-                            dequantize_into(&qbuf, &layers, &mut w);
+                            // nshards deltas. Fused decode → dequant
+                            // over the worker pool — clean tiles stream
+                            // through the LUT path, no full-image i8
+                            // intermediate.
+                            let mut w = vec![0f32; sb.n_weights()];
+                            sb.decode_dequant_all(&layers, &mut w);
                             m.full_refreshes.fetch_add(1, Ordering::Relaxed);
                             WeightUpdate::Full(w)
                         } else {

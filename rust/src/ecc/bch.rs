@@ -237,18 +237,22 @@ fn ext_violation_mask_u64(w: u64) -> u64 {
 }
 
 /// Fast whole-buffer extended-constraint check (encode hot path).
+/// Agrees with `encode` on every input: a ragged tail cannot form a
+/// whole 128-bit block, so it fails here just as encode rejects it
+/// (same contract as `inplace::satisfies_constraint`).
 pub fn satisfies_constraint_ext(weights: &[i8]) -> bool {
-    weights.chunks_exact(BLOCK).all(|chunk| {
-        let mut b = [0u8; BLOCK];
-        for (d, &s) in b.iter_mut().zip(chunk) {
-            *d = s as u8;
-        }
-        let lo = u64::from_le_bytes(b[..8].try_into().unwrap());
-        let hi = u64::from_le_bytes(b[8..].try_into().unwrap());
-        // byte 15 (top byte of `hi`) is the free byte
-        ext_violation_mask_u64(lo) == 0
-            && (ext_violation_mask_u64(hi) & 0x0080_8080_8080_8080) == 0
-    })
+    weights.len() % BLOCK == 0
+        && weights.chunks_exact(BLOCK).all(|chunk| {
+            let mut b = [0u8; BLOCK];
+            for (d, &s) in b.iter_mut().zip(chunk) {
+                *d = s as u8;
+            }
+            let lo = u64::from_le_bytes(b[..8].try_into().unwrap());
+            let hi = u64::from_le_bytes(b[8..].try_into().unwrap());
+            // byte 15 (top byte of `hi`) is the free byte
+            ext_violation_mask_u64(lo) == 0
+                && (ext_violation_mask_u64(hi) & 0x0080_8080_8080_8080) == 0
+        })
 }
 
 /// Indices violating the extended constraint (first 15 of each 16).

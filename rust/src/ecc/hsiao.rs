@@ -39,10 +39,13 @@ pub struct HsiaoCode {
     /// the unit vector 1 << i.
     pub check_pos: Vec<usize>,
     /// syndrome -> bit position + 1 (0 = not a column => Detected).
-    corr: Vec<u16>,
+    corr: Box<[u16]>,
     /// Per-byte syndrome LUT: lut[byte_idx][byte_value] = XOR of columns
-    /// of the set bits.
-    lut: Vec<[u8; 256]>,
+    /// of the set bits. Stored as a boxed slice built once at
+    /// construction — the hot loops index straight through one pointer
+    /// with no Vec capacity word between the OnceLock'd code and the
+    /// tables.
+    lut: Box<[[u8; 256]]>,
 }
 
 /// Enumerate odd-weight r-bit values of weight >= 3 in deterministic
@@ -119,8 +122,8 @@ impl HsiaoCode {
             n,
             cols,
             check_pos: check_pos.to_vec(),
-            corr,
-            lut,
+            corr: corr.into_boxed_slice(),
+            lut: lut.into_boxed_slice(),
         }
     }
 

@@ -41,24 +41,35 @@ pub fn violation_mask_u64(w: u64) -> u64 {
 
 /// Fast whole-buffer constraint check (the encode hot path); the slow
 /// index-listing variant below is only used to build error messages.
+///
+/// True iff `encode` will accept the buffer: every whole block passes
+/// the WOT mask check *and* the buffer is whole blocks. A ragged tail
+/// can never form a (64, 57) codeword, so it fails here just as
+/// `encode` rejects it — the two predicates agree on every input
+/// (previously `chunks_exact` silently skipped the tail and a
+/// non-multiple-of-8 buffer could pass a check that encode then
+/// rejected).
 pub fn satisfies_constraint(weights: &[i8]) -> bool {
-    weights.chunks_exact(8).all(|chunk| {
-        let mut b = [0u8; 8];
-        for (d, &s) in b.iter_mut().zip(chunk) {
-            *d = s as u8;
-        }
-        violation_mask_u64(u64::from_le_bytes(b)) == 0
-    })
+    weights.len() % BLOCK == 0
+        && weights.chunks_exact(BLOCK).all(|chunk| {
+            let mut b = [0u8; 8];
+            for (d, &s) in b.iter_mut().zip(chunk) {
+                *d = s as u8;
+            }
+            violation_mask_u64(u64::from_le_bytes(b)) == 0
+        })
 }
 
 /// Check the WOT block constraint over a full weight buffer; returns the
-/// indices (into `weights`) of violating values, empty when encodable.
+/// indices (into `weights`) of violating values, empty when every value
+/// is in range (a ragged tail's values are checked as the head of a
+/// would-be block — positions 0..6 constrained).
 pub fn constraint_violations(weights: &[i8]) -> Vec<usize> {
     weights
-        .chunks_exact(BLOCK)
+        .chunks(BLOCK)
         .enumerate()
         .flat_map(|(bi, chunk)| {
-            chunk[..BLOCK - 1]
+            chunk[..chunk.len().min(BLOCK - 1)]
                 .iter()
                 .enumerate()
                 .filter(|(_, &w)| !is_small(w))
@@ -291,6 +302,24 @@ mod tests {
         w[3] = 64; // violating (position 3 of block 0)
         w[15] = -128; // fine (free position of block 1)
         assert_eq!(constraint_violations(&w), vec![3]);
+    }
+
+    #[test]
+    fn ragged_tail_agrees_with_encode() {
+        use crate::ecc::strategy_by_name;
+        // regression: a 12-weight buffer used to pass the constraint
+        // check (chunks_exact skipped the 4-byte tail) while encode
+        // rejected it — the predicate must match encode's verdict.
+        let ragged = vec![0i8; 12];
+        assert!(!satisfies_constraint(&ragged));
+        assert!(strategy_by_name("in-place").unwrap().encode(&ragged).is_err());
+        // tail *values* are still diagnosed: position 9 sits at block
+        // offset 1 of the partial block, which the constraint covers
+        let mut bad_tail = vec![0i8; 12];
+        bad_tail[9] = 100;
+        assert_eq!(constraint_violations(&bad_tail), vec![9]);
+        // whole blocks keep working
+        assert!(satisfies_constraint(&[0i8; 16]));
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //! * [`bch`] — future-work extension (paper section 6): a double-error-
 //!   correcting BCH code fed from the *two* free bits per byte that the
 //!   extended WOT constraint provides.
+//! * [`tile`] — the word-parallel (bitsliced) tile decode engine:
+//!   64 blocks per iteration via a 64x64 bit transpose and XOR-parity
+//!   syndrome planes, with a one-word all-clean proof that turns clean
+//!   decodes into straight copies and clean scrubs into no-ops.
 //! * [`strategy`] — the `Protection` trait unifying all of the above
 //!   (plus unprotected), with exact space-overhead accounting.
 
@@ -20,8 +24,10 @@ pub mod inplace;
 pub mod parity;
 pub mod secded;
 pub mod strategy;
+pub mod tile;
 
 pub use hsiao::{HsiaoCode, Outcome};
 pub use strategy::{
-    all_strategies, all_strategies_ext, strategy_by_name, DecodeStats, Encoded, Protection,
+    all_strategies, all_strategies_ext, strategy_by_name, CleanPath, DecodeStats, Encoded,
+    Protection,
 };

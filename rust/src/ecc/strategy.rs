@@ -15,8 +15,20 @@
 //! whole-buffer `decode`/`scrub` are the `[0, len)` special case. The
 //! sharded memory bank leans on this to scrub disjoint shards of one
 //! stored image from parallel workers.
+//!
+//! On top of the scalar span primitive sits the tiled hot path:
+//! `decode_tile`/`scrub_tile` process one 512-byte tile (64 blocks) and
+//! are overridden by the Hsiao-coded strategies with the word-parallel
+//! engine of [`crate::ecc::tile`] — all-lane syndromes from a bit
+//! transpose, a one-word all-clean proof, scalar fallback only for the
+//! (rare) dirty lanes. `decode_span_tiled`/`scrub_span_tiled` chunk any
+//! block-aligned window into tiles plus a scalar tail, and the range
+//! APIs route through them, so every decode/scrub in the system — shard
+//! workers, campaign trials, the serving scrub loop — rides the tile
+//! engine while `decode_span`/`scrub_span` stay available as the scalar
+//! reference the equivalence proptests (and the bench) compare against.
 
-use super::{bch, inplace, parity, secded};
+use super::{bch, inplace, parity, secded, tile};
 use crate::ecc::hsiao::Outcome;
 
 /// Stored image of a protected weight buffer.
@@ -85,13 +97,44 @@ impl DecodeStats {
     }
 }
 
+/// How a *clean* (syndrome-free) stored data byte maps to its weight
+/// byte — lets the fused decode→dequant path consume clean tiles
+/// straight from the stored image with no intermediate i8 buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CleanPath {
+    /// Stored data bytes are the weight bytes (faulty / zero / ecc).
+    Copy,
+    /// In-place (64, 57): bit 6 of bytes 0..6 of every 8-byte block
+    /// carries a check bit; the weight byte restores it with the
+    /// byte-local sign copy (bit6 := bit7), so callers can fold the
+    /// restore into a per-byte LUT.
+    SignRestore,
+}
+
+/// Copy clean stored bytes into an i8 weight window, 8 bytes per move
+/// (safe u8→i8 chunk cast; byte loop only on a sub-word tail).
+pub(crate) fn copy_clean(data: &[u8], out: &mut [i8]) {
+    debug_assert_eq!(data.len(), out.len());
+    let mut src = data.chunks_exact(8);
+    let mut dst = out.chunks_exact_mut(8);
+    for (chunk, o) in (&mut src).zip(&mut dst) {
+        let w = u64::from_le_bytes(chunk.try_into().unwrap());
+        o.copy_from_slice(&tile::lane_i8(w));
+    }
+    for (&b, o) in src.remainder().iter().zip(dst.into_remainder()) {
+        *o = b as i8;
+    }
+}
+
 /// A memory-protection strategy.
 ///
 /// `decode_span` is the one required decode primitive; `scrub_span`,
 /// the `*_range` addressing forms and the whole-buffer `decode`/`scrub`
 /// all have defaults derived from it (plus `encode` for the scrub
 /// fallback). The built-in strategies override `scrub_span` natively so
-/// scrubbing never round-trips through a weight re-encode.
+/// scrubbing never round-trips through a weight re-encode, and the
+/// Hsiao-coded strategies override `decode_tile`/`scrub_tile` with the
+/// word-parallel engine.
 pub trait Protection: Send + Sync {
     /// Paper name: "faulty", "zero", "ecc", "in-place", "bch16".
     fn name(&self) -> &'static str;
@@ -127,6 +170,74 @@ pub trait Protection: Send + Sync {
         stats
     }
 
+    /// Decode exactly one tile ([`tile::TILE_BYTES`] data bytes, `oob`
+    /// covering its blocks). Strategies with a word-parallel engine
+    /// override this; the default is the scalar span path, so the tiled
+    /// wrappers below are correct for every implementor.
+    fn decode_tile(&self, data: &[u8], oob: &[u8], out: &mut [i8]) -> DecodeStats {
+        self.decode_span(data, oob, out)
+    }
+
+    /// Scrub exactly one tile in place (same contract as `decode_tile`).
+    fn scrub_tile(&self, data: &mut [u8], oob: &mut [u8]) -> DecodeStats {
+        self.scrub_span(data, oob)
+    }
+
+    /// Word-parallel clean probe of exactly one tile: `true` proves
+    /// every block syndrome-free, so a decode is a straight copy (plus
+    /// sign restore for in-place schemes) and a scrub is a no-op.
+    /// Conservative default: `false` sends callers down the
+    /// `decode_tile` path.
+    fn tile_is_clean(&self, _data: &[u8], _oob: &[u8]) -> bool {
+        false
+    }
+
+    /// Clean-block byte mapping (see [`CleanPath`]); paired with
+    /// `tile_is_clean` by the fused decode→dequant path.
+    fn clean_path(&self) -> CleanPath {
+        CleanPath::Copy
+    }
+
+    /// Tiled decode of a block-aligned window: whole 512-byte tiles go
+    /// through `decode_tile` (word-parallel where overridden), the
+    /// ragged tail through the scalar span path. Bit-identical to
+    /// `decode_span` — the equivalence proptests pin this down — and
+    /// what the range APIs and the sharded store actually call.
+    fn decode_span_tiled(&self, data: &[u8], oob: &[u8], out: &mut [i8]) -> DecodeStats {
+        let opt = tile::TILE_BYTES / self.block_bytes() * self.oob_bytes_per_block();
+        let mut stats = DecodeStats::default();
+        let (mut d, mut o) = (0usize, 0usize);
+        while data.len() - d >= tile::TILE_BYTES {
+            let e = d + tile::TILE_BYTES;
+            stats.add(&self.decode_tile(&data[d..e], &oob[o..o + opt], &mut out[d..e]));
+            d = e;
+            o += opt;
+        }
+        if d < data.len() {
+            stats.add(&self.decode_span(&data[d..], &oob[o..], &mut out[d..]));
+        }
+        stats
+    }
+
+    /// Tiled scrub of a block-aligned window (see `decode_span_tiled`).
+    fn scrub_span_tiled(&self, data: &mut [u8], oob: &mut [u8]) -> DecodeStats {
+        let opt = tile::TILE_BYTES / self.block_bytes() * self.oob_bytes_per_block();
+        let mut stats = DecodeStats::default();
+        let (mut d, mut o) = (0usize, 0usize);
+        while data.len() - d >= tile::TILE_BYTES {
+            let e = d + tile::TILE_BYTES;
+            stats.add(&self.scrub_tile(&mut data[d..e], &mut oob[o..o + opt]));
+            d = e;
+            o += opt;
+        }
+        if d < data.len() {
+            let (_, dtail) = data.split_at_mut(d);
+            let (_, otail) = oob.split_at_mut(o);
+            stats.add(&self.scrub_span(dtail, otail));
+        }
+        stats
+    }
+
     /// Map a block-aligned `[start, end)` data-byte window to its
     /// out-of-band check window.
     fn oob_window(
@@ -147,20 +258,22 @@ pub trait Protection: Send + Sync {
 
     /// Decode the window `[start, end)` (block-aligned byte offsets into
     /// `enc.data`) into `out` (`out.len() == end - start`). The whole
-    /// buffer is `decode_range(enc, 0, enc.data.len(), out)`.
+    /// buffer is `decode_range(enc, 0, enc.data.len(), out)`. Routed
+    /// through the tiled span form — scalar behavior, tile speed.
     fn decode_range(&self, enc: &Encoded, start: usize, end: usize, out: &mut [i8]) -> DecodeStats {
         let b = self.block_bytes();
         debug_assert!(start % b == 0 && (end % b == 0 || end == enc.data.len()));
         let (os, oe) = self.oob_window(start, end, enc.data.len(), enc.oob.len());
-        self.decode_span(&enc.data[start..end], &enc.oob[os..oe], out)
+        self.decode_span_tiled(&enc.data[start..end], &enc.oob[os..oe], out)
     }
 
-    /// Scrub the window `[start, end)` of the stored image in place.
+    /// Scrub the window `[start, end)` of the stored image in place
+    /// (tiled, like `decode_range`).
     fn scrub_range(&self, enc: &mut Encoded, start: usize, end: usize) -> DecodeStats {
         let b = self.block_bytes();
         debug_assert!(start % b == 0 && (end % b == 0 || end == enc.data.len()));
         let (os, oe) = self.oob_window(start, end, enc.data.len(), enc.oob.len());
-        self.scrub_span(&mut enc.data[start..end], &mut enc.oob[os..oe])
+        self.scrub_span_tiled(&mut enc.data[start..end], &mut enc.oob[os..oe])
     }
 
     /// Decode the whole stored image into weights, correcting what the
@@ -204,13 +317,14 @@ impl Protection for Unprotected {
         })
     }
     fn decode_span(&self, data: &[u8], _oob: &[u8], out: &mut [i8]) -> DecodeStats {
-        for (o, &b) in out.iter_mut().zip(data) {
-            *o = b as i8;
-        }
+        copy_clean(data, out);
         DecodeStats::default()
     }
     fn scrub_span(&self, _data: &mut [u8], _oob: &mut [u8]) -> DecodeStats {
         DecodeStats::default() // nothing to correct, nothing to re-encode
+    }
+    fn tile_is_clean(&self, _data: &[u8], _oob: &[u8]) -> bool {
+        true // no code, nothing to be dirty
     }
 }
 
@@ -254,9 +368,7 @@ impl Protection for ParityZero {
             let w = u64::from_le_bytes(chunk.try_into().unwrap());
             let mism = parity::parity_word(w) ^ oob[i / 8];
             if mism == 0 {
-                for (o, &b) in out[i..i + 8].iter_mut().zip(chunk) {
-                    *o = b as i8;
-                }
+                out[i..i + 8].copy_from_slice(&tile::lane_i8(w));
             } else {
                 for j in 0..8 {
                     if mism & (1 << j) != 0 {
@@ -301,6 +413,24 @@ impl Protection for ParityZero {
             oob[data.len() / 8] &= mask;
         }
         stats
+    }
+    fn tile_is_clean(&self, data: &[u8], oob: &[u8]) -> bool {
+        // OR-fold the per-word parity mismatches: one branch per tile.
+        let mut acc = 0u8;
+        for (chunk, &o) in data.chunks_exact(8).zip(oob) {
+            acc |= parity::parity_word(u64::from_le_bytes(chunk.try_into().unwrap())) ^ o;
+        }
+        acc == 0
+    }
+    // decode_tile keeps the default (= decode_span): the span path is
+    // already word-parallel with a per-word clean fast path, so an
+    // extra whole-tile probe would only redo the same parity folds.
+    fn scrub_tile(&self, data: &mut [u8], oob: &mut [u8]) -> DecodeStats {
+        // the probe pays here: scrub_span re-checks parity byte-by-byte
+        if self.tile_is_clean(data, oob) {
+            return DecodeStats::default(); // clean tile: scrub is a no-op
+        }
+        self.scrub_span(data, oob)
     }
 }
 
@@ -360,9 +490,64 @@ impl Protection for Secded7264 {
                     None => stats.detected += 1,
                 }
             }
-            let bytes = w.to_le_bytes();
-            for (o, &b) in out[bi * 8..bi * 8 + 8].iter_mut().zip(&bytes) {
-                *o = b as i8;
+            out[bi * 8..bi * 8 + 8].copy_from_slice(&tile::lane_i8(w));
+        }
+        stats
+    }
+    fn tile_is_clean(&self, data: &[u8], oob: &[u8]) -> bool {
+        tile::tile_7264().dirty_lanes(&tile::load_lanes(data), &tile::oob_planes(oob)) == 0
+    }
+    fn decode_tile(&self, data: &[u8], oob: &[u8], out: &mut [i8]) -> DecodeStats {
+        let lanes = tile::load_lanes(data);
+        let dirty = tile::tile_7264().dirty_lanes(&lanes, &tile::oob_planes(oob));
+        let mut stats = DecodeStats::default();
+        if dirty == 0 {
+            copy_clean(data, out);
+            return stats;
+        }
+        let code = secded::code_7264();
+        for (j, &lane) in lanes.iter().enumerate() {
+            let mut w = lane;
+            if dirty >> j & 1 == 1 {
+                let s = code.syndrome_u64(w) ^ code.syndrome_oob(oob[j]);
+                if s != 0 {
+                    match code.correction(s) {
+                        Some(pos) if pos < 64 => {
+                            w ^= 1u64 << pos;
+                            stats.corrected += 1;
+                        }
+                        Some(_) => stats.corrected += 1,
+                        None => stats.detected += 1,
+                    }
+                }
+            }
+            out[j * 8..j * 8 + 8].copy_from_slice(&tile::lane_i8(w));
+        }
+        stats
+    }
+    fn scrub_tile(&self, data: &mut [u8], oob: &mut [u8]) -> DecodeStats {
+        let lanes = tile::load_lanes(data);
+        let mut dirty = tile::tile_7264().dirty_lanes(&lanes, &tile::oob_planes(oob));
+        let mut stats = DecodeStats::default();
+        let code = secded::code_7264();
+        while dirty != 0 {
+            let j = dirty.trailing_zeros() as usize;
+            dirty &= dirty - 1;
+            let w = lanes[j];
+            let s = code.syndrome_u64(w) ^ code.syndrome_oob(oob[j]);
+            if s == 0 {
+                continue;
+            }
+            match code.correction(s) {
+                Some(pos) if pos < 64 => {
+                    data[j * 8..j * 8 + 8].copy_from_slice(&(w ^ (1u64 << pos)).to_le_bytes());
+                    stats.corrected += 1;
+                }
+                Some(pos) => {
+                    oob[j] ^= 1 << (pos - 64);
+                    stats.corrected += 1;
+                }
+                None => stats.detected += 1, // leave stored image as-is
             }
         }
         stats
@@ -449,10 +634,7 @@ impl Protection for InplaceZs {
                 Outcome::Corrected(_) => stats.corrected += 1,
                 Outcome::Detected => stats.detected += 1,
             }
-            let bytes = w.to_le_bytes();
-            for (o, &b) in out[bi * 8..bi * 8 + 8].iter_mut().zip(&bytes) {
-                *o = b as i8;
-            }
+            out[bi * 8..bi * 8 + 8].copy_from_slice(&tile::lane_i8(w));
         }
         stats
     }
@@ -467,6 +649,60 @@ impl Protection for InplaceZs {
                 Outcome::Corrected(_) => {
                     stats.corrected += 1;
                     chunk.copy_from_slice(&w.to_le_bytes());
+                }
+                Outcome::Detected => stats.detected += 1,
+            }
+        }
+        stats
+    }
+    fn tile_is_clean(&self, data: &[u8], _oob: &[u8]) -> bool {
+        tile::tile_6457().dirty_lanes(&tile::load_lanes(data), &tile::NO_OOB) == 0
+    }
+    fn clean_path(&self) -> CleanPath {
+        CleanPath::SignRestore
+    }
+    fn decode_tile(&self, data: &[u8], _oob: &[u8], out: &mut [i8]) -> DecodeStats {
+        let lanes = tile::load_lanes(data);
+        let dirty = tile::tile_6457().dirty_lanes(&lanes, &tile::NO_OOB);
+        let mut stats = DecodeStats::default();
+        if dirty == 0 {
+            // clean fast path: straight copy + branch-free sign restore
+            for (j, &w) in lanes.iter().enumerate() {
+                out[j * 8..j * 8 + 8].copy_from_slice(&tile::lane_i8(inplace::restore_u64(w)));
+            }
+            return stats;
+        }
+        let cx = inplace::ctx();
+        for (j, &lane) in lanes.iter().enumerate() {
+            let w = if dirty >> j & 1 == 0 {
+                inplace::restore_u64(lane)
+            } else {
+                let (w, outcome) = inplace::decode_u64_with(cx, lane);
+                match outcome {
+                    Outcome::Clean => {}
+                    Outcome::Corrected(_) => stats.corrected += 1,
+                    Outcome::Detected => stats.detected += 1,
+                }
+                w
+            };
+            out[j * 8..j * 8 + 8].copy_from_slice(&tile::lane_i8(w));
+        }
+        stats
+    }
+    fn scrub_tile(&self, data: &mut [u8], _oob: &mut [u8]) -> DecodeStats {
+        let lanes = tile::load_lanes(data);
+        let mut dirty = tile::tile_6457().dirty_lanes(&lanes, &tile::NO_OOB);
+        let mut stats = DecodeStats::default();
+        let cx = inplace::ctx();
+        while dirty != 0 {
+            let j = dirty.trailing_zeros() as usize;
+            dirty &= dirty - 1;
+            let (w, outcome) = inplace::scrub_u64_with(cx, lanes[j]);
+            match outcome {
+                Outcome::Clean => {}
+                Outcome::Corrected(_) => {
+                    stats.corrected += 1;
+                    data[j * 8..j * 8 + 8].copy_from_slice(&w.to_le_bytes());
                 }
                 Outcome::Detected => stats.detected += 1,
             }
@@ -531,9 +767,7 @@ impl Protection for Bch16 {
                 bch::BchOutcome::Detected => stats.detected += 1,
             }
             let at = bi * bch::BLOCK;
-            for (o, &b) in out[at..at + bch::BLOCK].iter_mut().zip(&block) {
-                *o = b as i8;
-            }
+            out[at..at + bch::BLOCK].copy_from_slice(&block.map(|b| b as i8));
         }
         stats
     }
@@ -762,6 +996,54 @@ mod tests {
             assert_eq!(sum, whole_stats, "{}: scrub stats must tile", s.name());
             assert_eq!(tiled.data, whole.data, "{}: scrub data mismatch", s.name());
             assert_eq!(tiled.oob, whole.oob, "{}: scrub oob mismatch", s.name());
+        }
+    }
+
+    #[test]
+    fn tiled_span_forms_match_scalar_on_multi_tile_buffers() {
+        // 2 full tiles + a ragged 3-block tail, one flip per tile plus
+        // a clean stretch: tiled and scalar must agree bit-for-bit.
+        let w = wot_weights(2 * 64 * 8 + 3 * 8, 17);
+        for s in all_strategies() {
+            let mut enc = s.encode(&w).unwrap();
+            enc.flip_bit(5); // tile 0
+            enc.flip_bit(64 * 64 + 700); // tile 1
+            let mut a = vec![0i8; w.len()];
+            let mut b = vec![0i8; w.len()];
+            let sa = s.decode_span(&enc.data, &enc.oob, &mut a);
+            let sb = s.decode_span_tiled(&enc.data, &enc.oob, &mut b);
+            assert_eq!(a, b, "{}: tiled decode output", s.name());
+            assert_eq!(sa, sb, "{}: tiled decode stats", s.name());
+            let (mut da, mut oa) = (enc.data.clone(), enc.oob.clone());
+            let (mut db, mut ob) = (enc.data.clone(), enc.oob.clone());
+            let ra = s.scrub_span(&mut da, &mut oa);
+            let rb = s.scrub_span_tiled(&mut db, &mut ob);
+            assert_eq!(da, db, "{}: tiled scrub data", s.name());
+            assert_eq!(oa, ob, "{}: tiled scrub oob", s.name());
+            assert_eq!(ra, rb, "{}: tiled scrub stats", s.name());
+        }
+    }
+
+    #[test]
+    fn clean_tile_probe_agrees_with_decode() {
+        let w = wot_weights(64 * 8, 19);
+        for s in all_strategies() {
+            let enc = s.encode(&w).unwrap();
+            assert!(
+                s.tile_is_clean(&enc.data, &enc.oob),
+                "{}: pristine tile must probe clean",
+                s.name()
+            );
+            if s.block_bytes() == 1 {
+                continue; // unprotected: no syndrome to dirty
+            }
+            let mut hit = enc.clone();
+            hit.data[100] ^= 0x08;
+            assert!(
+                !s.tile_is_clean(&hit.data, &hit.oob),
+                "{}: corrupted tile must probe dirty",
+                s.name()
+            );
         }
     }
 

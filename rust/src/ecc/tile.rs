@@ -1,0 +1,296 @@
+//! Word-parallel (bitsliced) tile decode engine.
+//!
+//! The scalar decode path pays 8 dependent LUT loads per 64-bit block
+//! (`HsiaoCode::syndrome_u64`) plus a branchy correction even when the
+//! block is clean — the overwhelmingly common case at realistic fault
+//! rates. This module processes a *tile* of 64 blocks (512 data bytes)
+//! at once:
+//!
+//!  1. bit-transpose the 64x64 tile (classic masked-swap transpose,
+//!     6 rounds of 32 swap ops) so word `t[p]` holds codeword bit `p`
+//!     of every lane;
+//!  2. compute each syndrome bit for all 64 lanes as one XOR-parity
+//!     over the masked bit-planes ([`TileCode::syndrome_planes`]);
+//!  3. OR-reduce the syndrome planes: a zero word proves the whole
+//!     tile clean with no per-lane work at all, and the set bits of a
+//!     nonzero word name the (rare) lanes that need the scalar
+//!     correction fallback.
+//!
+//! The syndrome-plane identity: lane `j`'s syndrome bit `i` is
+//! `parity(w_j & M_i)` with `M_i` the mask of codeword positions whose
+//! H-column has bit `i` set; after transposition that parity is bit `j`
+//! of `XOR_{p in M_i} t[p]`, so 64 lanes cost what one lane used to.
+//! Out-of-band check bytes (the (72, 64) code) join the same way via
+//! their own bit-planes ([`oob_planes`]).
+
+use super::hsiao::HsiaoCode;
+use super::secded::{code_6457_inplace, code_7264};
+use std::sync::OnceLock;
+
+/// Blocks (lanes) per tile.
+pub const LANES: usize = 64;
+/// Data bytes per lane (one 64-bit codeword).
+pub const LANE_BYTES: usize = 8;
+/// Data bytes per tile.
+pub const TILE_BYTES: usize = LANES * LANE_BYTES;
+
+/// All-zero substitute for the check-byte planes of zero-space codes.
+pub const NO_OOB: [u64; 8] = [0u64; 8];
+
+/// In-place 64x64 bit-matrix transpose (masked-swap, LSB-first
+/// convention): afterwards bit `j` of `a[p]` is bit `p` of the original
+/// `a[j]`. Involution: applying it twice restores the input.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j: usize = 32;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k: usize = 0;
+        while k < 64 {
+            let t = ((a[k] >> j) ^ a[k + j]) & m;
+            a[k] ^= t << j;
+            a[k + j] ^= t;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Load a tile's 64 little-endian lane words.
+#[inline]
+pub fn load_lanes(data: &[u8]) -> [u64; 64] {
+    debug_assert_eq!(data.len(), TILE_BYTES);
+    let mut lanes = [0u64; 64];
+    for (l, chunk) in lanes.iter_mut().zip(data.chunks_exact(LANE_BYTES)) {
+        *l = u64::from_le_bytes(chunk.try_into().unwrap());
+    }
+    lanes
+}
+
+/// The weight bytes of one decoded lane word as i8 — a safe u8 -> i8
+/// chunk cast that compiles to an 8-byte move, replacing the old
+/// byte-by-byte scatter in the scalar decode fallbacks.
+#[inline(always)]
+pub fn lane_i8(w: u64) -> [i8; 8] {
+    w.to_le_bytes().map(|b| b as i8)
+}
+
+/// Bit-planes of a tile's 64 out-of-band check bytes: bit `j` of
+/// `planes[i]` is bit `i` of `oob[j]` (the SWAR multiply gather of
+/// `parity::parity_word`, one multiply per 8 bytes per plane).
+pub fn oob_planes(oob: &[u8]) -> [u64; 8] {
+    debug_assert_eq!(oob.len(), LANES);
+    let mut planes = [0u64; 8];
+    for (g, chunk) in oob.chunks_exact(8).enumerate() {
+        let w = u64::from_le_bytes(chunk.try_into().unwrap());
+        for (i, p) in planes.iter_mut().enumerate() {
+            let gathered =
+                ((w >> i) & 0x0101_0101_0101_0101).wrapping_mul(0x0102_0408_1020_4080) >> 56;
+            *p |= gathered << (g * 8);
+        }
+    }
+    planes
+}
+
+/// The bitsliced form of a Hsiao code's parity-check matrix H: one
+/// position mask per syndrome bit instead of one column per position.
+pub struct TileCode {
+    /// `data_masks[i]`: codeword bit positions 0..64 whose H-column has
+    /// syndrome bit `i` set.
+    pub data_masks: [u64; 8],
+    /// Bits of the out-of-band check byte (codeword positions 64..n)
+    /// contributing to syndrome bit `i`. With unit check columns this
+    /// is `1 << i`; kept general so any `HsiaoCode` bitslices.
+    pub oob_masks: [u8; 8],
+    /// Number of check bits of the underlying code.
+    pub r: usize,
+}
+
+impl TileCode {
+    /// Bitslice a code with a 64-bit in-band codeword part (n = 64 for
+    /// the in-place code, n = 72 for the conventional one).
+    pub fn new(code: &HsiaoCode) -> TileCode {
+        assert!((64..=72).contains(&code.n), "tile engine carries 64-bit lanes");
+        let mut data_masks = [0u64; 8];
+        let mut oob_masks = [0u8; 8];
+        for (p, &c) in code.cols.iter().enumerate() {
+            for i in 0..code.r {
+                if c & (1 << i) != 0 {
+                    if p < 64 {
+                        data_masks[i] |= 1u64 << p;
+                    } else {
+                        oob_masks[i] |= 1 << (p - 64);
+                    }
+                }
+            }
+        }
+        TileCode {
+            data_masks,
+            oob_masks,
+            r: code.r,
+        }
+    }
+
+    /// Syndrome bit-planes of a *transposed* tile: bit `j` of plane `i`
+    /// is syndrome bit `i` of lane `j`. `oob` carries the check-byte
+    /// bit-planes ([`NO_OOB`] for zero-space codes).
+    pub fn syndrome_planes(&self, t: &[u64; 64], oob: &[u64; 8]) -> [u64; 8] {
+        let mut planes = [0u64; 8];
+        for (i, plane) in planes.iter_mut().enumerate().take(self.r) {
+            let mut acc = 0u64;
+            let mut m = self.data_masks[i];
+            while m != 0 {
+                acc ^= t[m.trailing_zeros() as usize];
+                m &= m - 1;
+            }
+            let mut om = self.oob_masks[i];
+            while om != 0 {
+                acc ^= oob[om.trailing_zeros() as usize];
+                om &= om - 1;
+            }
+            *plane = acc;
+        }
+        planes
+    }
+
+    /// Dirty-lane mask of one tile: bit `j` set iff lane `j` has a
+    /// nonzero syndrome. Zero proves the whole 512-byte tile clean.
+    pub fn dirty_lanes(&self, lanes: &[u64; 64], oob: &[u64; 8]) -> u64 {
+        let mut t = *lanes;
+        transpose64(&mut t);
+        let planes = self.syndrome_planes(&t, oob);
+        planes.iter().fold(0u64, |acc, &p| acc | p)
+    }
+}
+
+/// Cached bitsliced form of the in-place (64, 57) code.
+pub fn tile_6457() -> &'static TileCode {
+    static T: OnceLock<TileCode> = OnceLock::new();
+    T.get_or_init(|| TileCode::new(code_6457_inplace()))
+}
+
+/// Cached bitsliced form of the conventional (72, 64) code.
+pub fn tile_7264() -> &'static TileCode {
+    static T: OnceLock<TileCode> = OnceLock::new();
+    T.get_or_init(|| TileCode::new(code_7264()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_matrix(rng: &mut Rng) -> [u64; 64] {
+        let mut m = [0u64; 64];
+        for w in m.iter_mut() {
+            *w = rng.next_u64();
+        }
+        m
+    }
+
+    #[test]
+    fn transpose_matches_naive_definition() {
+        let mut rng = Rng::new(41);
+        for _ in 0..50 {
+            let orig = random_matrix(&mut rng);
+            let mut t = orig;
+            transpose64(&mut t);
+            for (p, &row) in t.iter().enumerate() {
+                for (j, &src) in orig.iter().enumerate() {
+                    assert_eq!(
+                        row >> j & 1,
+                        src >> p & 1,
+                        "t[{p}] bit {j} must be orig[{j}] bit {p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_round_trip_is_identity() {
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let orig = random_matrix(&mut rng);
+            let mut m = orig;
+            transpose64(&mut m);
+            transpose64(&mut m);
+            assert_eq!(m, orig);
+        }
+    }
+
+    #[test]
+    fn oob_planes_match_naive_gather() {
+        let mut rng = Rng::new(43);
+        for _ in 0..100 {
+            let oob: Vec<u8> = (0..LANES).map(|_| rng.next_u64() as u8).collect();
+            let planes = oob_planes(&oob);
+            for (i, &p) in planes.iter().enumerate() {
+                for (j, &b) in oob.iter().enumerate() {
+                    assert_eq!(p >> j & 1, u64::from(b >> i & 1), "plane {i} lane {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syndrome_planes_match_scalar_syndromes() {
+        let mut rng = Rng::new(44);
+        for (code, tc, has_oob) in [
+            (code_6457_inplace(), tile_6457(), false),
+            (code_7264(), tile_7264(), true),
+        ] {
+            for _ in 0..50 {
+                // arbitrary (corrupt) stored words — the identity must
+                // hold for every word, not just near-codewords
+                let lanes = random_matrix(&mut rng);
+                let oob: Vec<u8> = (0..LANES).map(|_| rng.next_u64() as u8).collect();
+                let mut t = lanes;
+                transpose64(&mut t);
+                let ob = if has_oob { oob_planes(&oob) } else { NO_OOB };
+                let planes = tc.syndrome_planes(&t, &ob);
+                for j in 0..LANES {
+                    let mut want = code.syndrome_u64(lanes[j]);
+                    if has_oob {
+                        want ^= code.syndrome_oob(oob[j]);
+                    }
+                    let mut got = 0u8;
+                    for (i, &p) in planes.iter().enumerate() {
+                        got |= ((p >> j & 1) as u8) << i;
+                    }
+                    assert_eq!(got, want, "lane {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_lanes_pinpoints_corrupted_lanes() {
+        use crate::ecc::inplace;
+        let mut rng = Rng::new(45);
+        // a tile of valid in-place codewords is clean; flipping one bit
+        // in lanes {3, 17, 63} dirties exactly those lanes. Clearing
+        // bits 6..8 of bytes 0..6 makes any raw word WOT-encodable.
+        let mut lanes = [0u64; 64];
+        for w in lanes.iter_mut() {
+            *w = inplace::encode_u64(rng.next_u64() & !0x00C0_C0C0_C0C0_C0C0);
+        }
+        let tc = tile_6457();
+        assert_eq!(tc.dirty_lanes(&lanes, &NO_OOB), 0, "encoded tile must be clean");
+        let mut hit = lanes;
+        for &j in &[3usize, 17, 63] {
+            hit[j] ^= 1u64 << (j % 64);
+        }
+        let dirty = tc.dirty_lanes(&hit, &NO_OOB);
+        assert_eq!(dirty, (1u64 << 3) | (1u64 << 17) | (1u64 << 63));
+    }
+
+    #[test]
+    fn lane_i8_is_bytewise_cast() {
+        let w = 0x8001_7FFF_00FF_40C0u64;
+        let got = lane_i8(w);
+        for (k, &b) in w.to_le_bytes().iter().enumerate() {
+            assert_eq!(got[k], b as i8);
+        }
+    }
+}

@@ -12,7 +12,11 @@
 //!   future-work BCH-style extension. The `Protection` trait exposes
 //!   block-range decode/scrub (`decode_span`/`scrub_span`,
 //!   `decode_range`/`scrub_range`) so disjoint windows of one stored
-//!   image can be processed independently — and in parallel.
+//!   image can be processed independently — and in parallel. The hot
+//!   path rides `ecc::tile`: a word-parallel (bitsliced) engine that
+//!   syndromes 64 blocks at once and proves clean 512-byte tiles with
+//!   one OR-reduction, degrading clean decodes to copies and clean
+//!   scrubs to no-ops.
 //! * [`memory`] — encoded weight memory: fault injection + scrubbing.
 //!   `MemoryBank` is the whole-buffer store (Table-2 render, examples);
 //!   `ShardedBank` splits the same stored image into S block-aligned

@@ -4,6 +4,10 @@
 //! The stored image stays contiguous (it models one region of physical
 //! memory), but every decode/scrub pass runs per shard through the
 //! `Protection` range APIs, fanned out over a scoped-thread worker pool.
+//! Shard workers iterate 512-byte *tiles* (the word-parallel engine of
+//! `ecc::tile`), not blocks: a clean tile is proven clean by one
+//! OR-reduction, so the common fault-free epoch costs a copy (decode)
+//! or nothing (scrub) instead of per-block syndrome LUT walks.
 //! Each shard carries its own `DecodeStats` and a dirty bit: fault
 //! injection marks the shards its flips land in, scrubbing marks shards
 //! whose stored bytes it modified, and the serving scrub loop ships
@@ -242,6 +246,32 @@ impl ShardedBank {
         stats
     }
 
+    /// Fused decode + dequantize of *every* shard (fanned out over the
+    /// worker pool, one scratch per job) into the full f32 buffer —
+    /// the scrub epoch's whole-image refresh path. Same stats
+    /// accounting as [`ShardedBank::read`].
+    pub fn decode_dequant_all(&mut self, layers: &[Layer], out: &mut [f32]) -> DecodeStats {
+        assert_eq!(out.len(), self.image.n);
+        let ranges = ranges_of(&self.shards);
+        let strategy = self.strategy.as_ref();
+        let image = &self.image;
+        let jobs = split_windows(&ranges, out);
+        let per_shard = run_jobs(jobs, self.workers, |(i, s, e, win)| {
+            let mut scratch = Vec::new();
+            let stats = crate::quant::decode_dequant_range(
+                strategy,
+                image,
+                s,
+                e,
+                layers,
+                &mut scratch,
+                win,
+            );
+            (i, stats)
+        });
+        self.merge_pass(&per_shard, false)
+    }
+
     /// Scrub pass: correct latent errors shard-by-shard in parallel.
     /// Shards whose pass saw any error are marked dirty.
     pub fn scrub(&mut self) -> DecodeStats {
@@ -304,6 +334,26 @@ fn ranges_of(shards: &[ShardState]) -> Vec<(usize, usize)> {
     shards.iter().map(|s| s.range).collect()
 }
 
+/// Split `buf` into disjoint per-shard `&mut` windows following
+/// `ranges` (which must tile `[0, buf.len())` in order); yields
+/// `(shard_idx, start, end, window)` jobs for the worker pool.
+fn split_windows<'a, T>(
+    ranges: &[(usize, usize)],
+    buf: &'a mut [T],
+) -> Vec<(usize, usize, usize, &'a mut [T])> {
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut rest = buf;
+    let mut off = 0usize;
+    for (i, &(s, e)) in ranges.iter().enumerate() {
+        debug_assert_eq!(s, off);
+        let (win, next) = rest.split_at_mut(e - s);
+        jobs.push((i, s, e, win));
+        rest = next;
+        off = e;
+    }
+    jobs
+}
+
 /// Fan `jobs` out over at most `workers` scoped threads (round-robin so
 /// the ragged last shard does not serialize behind a full bucket);
 /// returns each job's result (bucket order, not submission order).
@@ -346,17 +396,7 @@ fn decode_shards(
     out: &mut [i8],
     workers: usize,
 ) -> Vec<(usize, DecodeStats)> {
-    // Split `out` into disjoint &mut windows, one per shard.
-    let mut jobs = Vec::with_capacity(ranges.len());
-    let mut rest = out;
-    let mut off = 0usize;
-    for (i, &(s, e)) in ranges.iter().enumerate() {
-        debug_assert_eq!(s, off);
-        let (win, next) = rest.split_at_mut(e - s);
-        jobs.push((i, s, e, win));
-        rest = next;
-        off = e;
-    }
+    let jobs = split_windows(ranges, out);
     run_jobs(jobs, workers, |(i, s, e, win)| {
         (i, strategy.decode_range(image, s, e, win))
     })
@@ -389,7 +429,9 @@ fn scrub_shards(
         o_off = oe;
     }
     run_jobs(jobs, workers, |(i, d_win, o_win)| {
-        (i, strategy.scrub_span(d_win, o_win))
+        // tiled form: the worker walks 64-block tiles, the word-parallel
+        // clean proof makes a fault-free shard scrub a read-only pass
+        (i, strategy.scrub_span_tiled(d_win, o_win))
     })
 }
 
@@ -517,6 +559,34 @@ mod tests {
         assert_eq!(out, w);
         assert_eq!(stats.corrected + stats.detected, 0);
         assert!(sb.take_dirty().is_empty());
+    }
+
+    #[test]
+    fn decode_dequant_all_matches_read_plus_dequant() {
+        use crate::model::manifest::Layer;
+        use crate::quant::dequantize_into;
+        let w = wot_weights(8 * 200, 41);
+        let layers = vec![Layer {
+            name: "w".into(),
+            shape: vec![w.len()],
+            offset: 0,
+            size: w.len(),
+            scale: 0.05,
+            scale_prewot: 0.05,
+        }];
+        let mut sb =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &w, 7, 3).unwrap();
+        sb.inject(FaultModel::Uniform, 1e-3, 9);
+        // reference: parallel decode, then a separate dequantize pass
+        let mut q = vec![0i8; w.len()];
+        let read_stats = sb.read(&mut q);
+        let mut want = vec![0f32; w.len()];
+        dequantize_into(&q, &layers, &mut want);
+        // fused parallel path must agree on values and stats
+        let mut got = vec![0f32; w.len()];
+        let fused_stats = sb.decode_dequant_all(&layers, &mut got);
+        assert_eq!(got, want);
+        assert_eq!(fused_stats, read_stats);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! `q * scale_l` for its layer's scale. The rust side only ever
 //! *dequantizes* — quantization happened at build time.
 
-use crate::ecc::{DecodeStats, Encoded, Protection};
+use crate::ecc::{tile, CleanPath, DecodeStats, Encoded, Protection};
 use crate::model::manifest::Layer;
 
 /// WOT block geometry (must match python/compile/quantize.py).
@@ -45,11 +45,93 @@ pub fn dequantize_range(q: &[i8], layers: &[Layer], base: usize, out: &mut [f32]
     }
 }
 
+/// Per-layer f32 dequant LUTs for the clean fast path: `plain[b]` is
+/// the dequantized weight of stored byte `b`, and `restored[b]`
+/// additionally folds in the in-place bit6 := bit7 sign copy — so a
+/// clean tile dequantizes straight from the stored image, one table
+/// load per weight, with no intermediate i8 buffer at all.
+struct LayerLut {
+    plain: [f32; 256],
+    restored: [f32; 256],
+}
+
+impl LayerLut {
+    fn new(scale: f32) -> LayerLut {
+        let mut plain = [0f32; 256];
+        let mut restored = [0f32; 256];
+        for (b, (p, r)) in plain.iter_mut().zip(restored.iter_mut()).enumerate() {
+            let v = b as u8;
+            *p = (v as i8) as f32 * scale;
+            let rv = (v & !0x40) | ((v >> 1) & 0x40);
+            *r = (rv as i8) as f32 * scale;
+        }
+        LayerLut { plain, restored }
+    }
+}
+
+/// Lazily-built LUT cache over the window's layers (tables are only
+/// materialized for layers that actually see a clean tile). Scoped to
+/// one `decode_dequant_range` call: a rebuild costs 512 multiplies per
+/// touched layer, well under 1% of decoding a typical (>= 64 KiB)
+/// shard — callers with many tiny shards should batch them into larger
+/// windows rather than thread a cross-call cache through the API.
+struct CleanLuts<'a> {
+    path: CleanPath,
+    layers: &'a [Layer],
+    tables: Vec<Option<Box<LayerLut>>>,
+}
+
+impl<'a> CleanLuts<'a> {
+    fn new(path: CleanPath, layers: &'a [Layer]) -> CleanLuts<'a> {
+        CleanLuts {
+            path,
+            layers,
+            tables: (0..layers.len()).map(|_| None).collect(),
+        }
+    }
+
+    /// Dequantize a *clean* stored window (global byte offset `base`)
+    /// directly into `out`, per-layer scales applied via the LUTs.
+    fn dequant_clean(&mut self, data: &[u8], base: usize, out: &mut [f32]) {
+        debug_assert_eq!(data.len(), out.len());
+        let end = base + data.len();
+        for (li, l) in self.layers.iter().enumerate() {
+            let (a, b) = (l.offset.max(base), (l.offset + l.size).min(end));
+            if a >= b {
+                continue;
+            }
+            let lut = self.tables[li].get_or_insert_with(|| Box::new(LayerLut::new(l.scale)));
+            let (la, lb) = (a - base, b - base);
+            match self.path {
+                CleanPath::Copy => {
+                    for (o, &v) in out[la..lb].iter_mut().zip(&data[la..lb]) {
+                        *o = lut.plain[v as usize];
+                    }
+                }
+                CleanPath::SignRestore => {
+                    // byte k of each 8-byte block: k < 7 carries an
+                    // in-place check bit, k == 7 is the free byte
+                    for (i, (o, &v)) in out[la..lb].iter_mut().zip(&data[la..lb]).enumerate() {
+                        *o = if (a + i) % 8 == 7 {
+                            lut.plain[v as usize]
+                        } else {
+                            lut.restored[v as usize]
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Fused ECC decode + dequantize of the block-aligned window
-/// `[start, end)` of a stored image: decodes into the reusable
-/// `scratch` buffer (resized to the window, no full-buffer i8 pass) and
-/// dequantizes into `out` (`out.len() == end - start`). This is the
-/// scrub epoch's per-shard refresh path.
+/// `[start, end)` of a stored image into `out`
+/// (`out.len() == end - start`) — the scrub epoch's per-shard refresh
+/// path. Tiles proven clean by the word-parallel probe
+/// (`Protection::tile_is_clean`) dequantize straight from the stored
+/// bytes through the f32 LUTs (sign restore folded in for in-place);
+/// only dirty tiles and the ragged tail decode into the reusable
+/// `scratch` buffer first.
 pub fn decode_dequant_range(
     strategy: &dyn Protection,
     enc: &Encoded,
@@ -60,10 +142,42 @@ pub fn decode_dequant_range(
     out: &mut [f32],
 ) -> DecodeStats {
     debug_assert_eq!(out.len(), end - start);
-    scratch.clear();
-    scratch.resize(end - start, 0);
-    let stats = strategy.decode_range(enc, start, end, scratch);
-    dequantize_range(scratch, layers, start, out);
+    // same alignment contract as decode_range: the SignRestore clean
+    // path reads the block phase off the global byte offset
+    debug_assert!(
+        start % strategy.block_bytes() == 0
+            && (end % strategy.block_bytes() == 0 || end == enc.data.len())
+    );
+    let (os, oe) = strategy.oob_window(start, end, enc.data.len(), enc.oob.len());
+    let data = &enc.data[start..end];
+    let oob = &enc.oob[os..oe];
+    let opt = tile::TILE_BYTES / strategy.block_bytes() * strategy.oob_bytes_per_block();
+    let mut luts = CleanLuts::new(strategy.clean_path(), layers);
+    let mut stats = DecodeStats::default();
+    let (mut d, mut o) = (0usize, 0usize);
+    while data.len() - d >= tile::TILE_BYTES {
+        let (dt, ot) = (&data[d..d + tile::TILE_BYTES], &oob[o..o + opt]);
+        if strategy.tile_is_clean(dt, ot) {
+            luts.dequant_clean(dt, start + d, &mut out[d..d + tile::TILE_BYTES]);
+        } else {
+            // dirty tile: decode_tile re-derives its lane mask (one
+            // extra transpose per dirty tile — cheap next to the scalar
+            // corrections it gates, and it keeps the trait free of
+            // bitsliced-mask plumbing)
+            scratch.clear();
+            scratch.resize(tile::TILE_BYTES, 0);
+            stats.add(&strategy.decode_tile(dt, ot, scratch));
+            dequantize_range(scratch, layers, start + d, &mut out[d..d + tile::TILE_BYTES]);
+        }
+        d += tile::TILE_BYTES;
+        o += opt;
+    }
+    if d < data.len() {
+        scratch.clear();
+        scratch.resize(data.len() - d, 0);
+        stats.add(&strategy.decode_span(&data[d..], &oob[o..], scratch));
+        dequantize_range(scratch, layers, start + d, &mut out[d..]);
+    }
     stats
 }
 
@@ -181,6 +295,72 @@ mod tests {
         ));
         assert_eq!(out, full);
         assert_eq!(stats.corrected, 1);
+    }
+
+    #[test]
+    fn fused_clean_tile_lut_path_matches_two_pass() {
+        use crate::ecc::{strategy_by_name, DecodeStats};
+        use crate::util::rng::Rng;
+        // 2 full tiles + a ragged 8-block tail, with a layer boundary
+        // mid-block (element 700) so the sign-restore LUT path crosses
+        // scale changes at non-block offsets; one correctable flip in
+        // tile 1 keeps a dirty tile in the mix.
+        let n = 2 * 512 + 64;
+        let mut rng = Rng::new(23);
+        let w: Vec<i8> = (0..n)
+            .map(|i| {
+                if i % 8 == 7 {
+                    (rng.below(256) as i64 - 128) as i8
+                } else {
+                    (rng.below(128) as i64 - 64) as i8
+                }
+            })
+            .collect();
+        let layers = vec![
+            Layer {
+                name: "a".into(),
+                shape: vec![700],
+                offset: 0,
+                size: 700,
+                scale: 0.03,
+                scale_prewot: 0.03,
+            },
+            Layer {
+                name: "b".into(),
+                shape: vec![n - 700],
+                offset: 700,
+                size: n - 700,
+                scale: 1.75,
+                scale_prewot: 1.75,
+            },
+        ];
+        for name in ["faulty", "zero", "ecc", "in-place"] {
+            let s = strategy_by_name(name).unwrap();
+            let mut enc = s.encode(&w).unwrap();
+            enc.flip_bit(64 * 64 + 321); // lands in tile 1
+            // reference: full scalar decode, then full dequantize
+            let mut dec = vec![0i8; n];
+            let ref_stats = s.decode_span(&enc.data, &enc.oob, &mut dec);
+            let mut full = vec![0f32; n];
+            dequantize_into(&dec, &layers, &mut full);
+            // fused path, whole window and split windows
+            let mut scratch = Vec::new();
+            let mut out = vec![0f32; n];
+            let stats = decode_dequant_range(
+                s.as_ref(), &enc, 0, n, &layers, &mut scratch, &mut out,
+            );
+            assert_eq!(out, full, "{name}: fused whole-window mismatch");
+            assert_eq!(stats, ref_stats, "{name}: fused stats mismatch");
+            let mut out2 = vec![0f32; n];
+            let mut sum = DecodeStats::default();
+            for (a, b) in [(0usize, 512usize), (512, 1088)] {
+                sum.add(&decode_dequant_range(
+                    s.as_ref(), &enc, a, b, &layers, &mut scratch, &mut out2[a..b],
+                ));
+            }
+            assert_eq!(out2, full, "{name}: fused split-window mismatch");
+            assert_eq!(sum, ref_stats, "{name}: fused split stats mismatch");
+        }
     }
 
     #[test]

@@ -256,6 +256,123 @@ fn prop_overhead_invariant() {
     });
 }
 
+// ---------------------------------------------------- tile equivalence --
+
+/// Flip a random set of stored bits (possibly zero, possibly dense) —
+/// the fault mask the tiled/scalar equivalence properties quantify over.
+fn random_fault_mask(rng: &mut Rng, enc: &mut Encoded) {
+    let total = enc.total_bits();
+    // zero-fault (pure clean path), sparse (mostly-clean tiles) or
+    // dense (many dirty lanes); repeated positions allowed.
+    let nflips = match rng.below(4) {
+        0 => 0,
+        1 => 1 + rng.below(3),
+        _ => rng.below(total / 16 + 2),
+    };
+    for _ in 0..nflips {
+        enc.flip_bit(rng.below(total));
+    }
+}
+
+#[test]
+fn prop_tiled_decode_scrub_equal_scalar_all_strategies() {
+    use zsecc::ecc::all_strategies_ext;
+    // For every strategy (InplaceZs sign-restore included), any fault
+    // mask, and buffer sizes straddling tile boundaries (64 blocks =
+    // one tile), the tiled span forms must be bit-identical to the
+    // scalar primitives: same decode output, same DecodeStats, same
+    // scrubbed image.
+    check("tiled == scalar", 30, |rng, size| {
+        // sizes around 0.5..2.5 tiles, ragged (non-tile-multiple) included
+        let nblocks = 1 + rng.below(2 * size as u64 + 40) as usize;
+        let w8 = wot_weights(rng, nblocks);
+        let w16 = ext_weights(rng, nblocks);
+        let seed = rng.next_u64();
+        for s in all_strategies_ext() {
+            let w: &[i8] = if s.name() == "bch16" { &w16 } else { &w8 };
+            let mut enc = s.encode(w).map_err(|e| e.to_string())?;
+            let mut mask_rng = Rng::new(seed);
+            random_fault_mask(&mut mask_rng, &mut enc);
+            // decode: tiled vs scalar
+            let mut a = vec![0i8; w.len()];
+            let mut b = vec![0i8; w.len()];
+            let sa = s.decode_span(&enc.data, &enc.oob, &mut a);
+            let sb = s.decode_span_tiled(&enc.data, &enc.oob, &mut b);
+            if a != b {
+                return Err(format!("{}: tiled decode output differs", s.name()));
+            }
+            if sa != sb {
+                return Err(format!("{}: decode stats {sb:?} != scalar {sa:?}", s.name()));
+            }
+            // scrub: tiled vs scalar
+            let (mut da, mut oa) = (enc.data.clone(), enc.oob.clone());
+            let (mut db, mut ob) = (enc.data.clone(), enc.oob.clone());
+            let ra = s.scrub_span(&mut da, &mut oa);
+            let rb = s.scrub_span_tiled(&mut db, &mut ob);
+            if da != db || oa != ob {
+                return Err(format!("{}: tiled scrub image differs", s.name()));
+            }
+            if ra != rb {
+                return Err(format!("{}: scrub stats {rb:?} != scalar {ra:?}", s.name()));
+            }
+            // clean probe never lies about a provably clean whole tile
+            if enc.data.len() >= 512 {
+                let opt = 512 / s.block_bytes() * s.oob_bytes_per_block();
+                let (dt, ot) = (&enc.data[..512], &enc.oob[..opt]);
+                let mut tout = vec![0i8; 512];
+                if s.tile_is_clean(dt, ot) && !s.decode_tile(dt, ot, &mut tout).is_clean() {
+                    return Err(format!("{}: clean probe contradicted decode", s.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_range_windows_equal_scalar_span() {
+    use zsecc::ecc::all_strategies_ext;
+    // decode_range/scrub_range are routed through the tiled forms; a
+    // random block-aligned window (tile-unaligned boundaries included)
+    // must match the scalar span over the same window.
+    check("tiled range == scalar window", 25, |rng, size| {
+        let nblocks = 2 + rng.below(2 * size as u64 + 80) as usize;
+        let w8 = wot_weights(rng, nblocks);
+        let w16 = ext_weights(rng, nblocks);
+        let seed = rng.next_u64();
+        for s in all_strategies_ext() {
+            let w: &[i8] = if s.name() == "bch16" { &w16 } else { &w8 };
+            let mut enc = s.encode(w).map_err(|e| e.to_string())?;
+            let mut mask_rng = Rng::new(seed);
+            random_fault_mask(&mut mask_rng, &mut enc);
+            let block = s.block_bytes().max(1);
+            let blocks_total = enc.data.len() / block;
+            let lo = rng.below(blocks_total as u64) as usize * block;
+            let span_blocks = (enc.data.len() - lo) / block;
+            let hi = lo + block + rng.below(span_blocks as u64) as usize * block;
+            let hi = hi.min(enc.data.len());
+            let (os, oe) = s.oob_window(lo, hi, enc.data.len(), enc.oob.len());
+            // decode window
+            let mut a = vec![0i8; hi - lo];
+            let mut b = vec![0i8; hi - lo];
+            let sa = s.decode_span(&enc.data[lo..hi], &enc.oob[os..oe], &mut a);
+            let sb = s.decode_range(&enc, lo, hi, &mut b);
+            if a != b || sa != sb {
+                return Err(format!("{} [{lo},{hi}): range decode differs", s.name()));
+            }
+            // scrub window
+            let mut tiled = enc.clone();
+            let rb = s.scrub_range(&mut tiled, lo, hi);
+            let mut want = enc.clone();
+            let ra = s.scrub_span(&mut want.data[lo..hi], &mut want.oob[os..oe]);
+            if tiled.data != want.data || tiled.oob != want.oob || ra != rb {
+                return Err(format!("{} [{lo},{hi}): range scrub differs", s.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
 // --------------------------------------------------- shard equivalence --
 
 #[test]
