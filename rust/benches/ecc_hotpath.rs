@@ -1,6 +1,9 @@
 //! Hot-path microbenchmarks: ECC block encode/decode/scrub throughput
 //! per strategy, syndrome computation, fault injection, dequantization,
-//! and the sharded store's parallel scrub+decode scaling.
+//! the sharded store's parallel scrub+decode scaling, and the `pool`
+//! section — persistent-pool vs scoped-spawn scrub-pass latency at
+//! shard counts {4, 16, 64} plus the steady-state
+//! allocations-per-scrub-tick gauge (arena misses; target 0).
 //!
 //! This is the §Perf ledger for Layer 3: the paper's latency claim is
 //! that in-place decoding adds only wiring on top of standard SEC-DED —
@@ -16,8 +19,8 @@
 //! size (rounded up to whole 512-byte tiles; CI uses a synthetic small
 //! size, the default is a VGG16_s-scale 1 MiB).
 
-use zsecc::ecc::strategy_by_name;
-use zsecc::memory::{FaultInjector, FaultModel, ShardedBank};
+use zsecc::ecc::{strategy_by_name, Encoded, Protection};
+use zsecc::memory::{plan_shards, pool, FaultInjector, FaultModel, ShardedBank};
 use zsecc::quant::dequantize_into;
 use zsecc::util::cli::Args;
 use zsecc::util::json::{arr, num, obj, s};
@@ -48,6 +51,47 @@ fn ext_weights(n: usize, seed: u64) -> Vec<i8> {
             }
         })
         .collect()
+}
+
+/// One scrub pass fanned out the pre-pool way: fresh scoped threads,
+/// round-robin buckets — the baseline the persistent pool is measured
+/// against (`memory::pool::run_jobs_scoped` drives the same shape for
+/// plain closures; this variant carries the shard span splitting).
+fn scoped_scrub(
+    strategy: &dyn Protection,
+    enc: &mut Encoded,
+    ranges: &[(usize, usize)],
+    workers: usize,
+) {
+    let (data_len, oob_len) = (enc.data.len(), enc.oob.len());
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut d_rest: &mut [u8] = &mut enc.data;
+    let mut o_rest: &mut [u8] = &mut enc.oob;
+    let (mut d_off, mut o_off) = (0usize, 0usize);
+    for &(s, e) in ranges {
+        let (_, oe) = strategy.oob_window(s, e, data_len, oob_len);
+        let (d_win, d_next) = d_rest.split_at_mut(e - d_off);
+        let (o_win, o_next) = o_rest.split_at_mut(oe - o_off);
+        jobs.push((d_win, o_win));
+        d_rest = d_next;
+        o_rest = o_next;
+        d_off = e;
+        o_off = oe;
+    }
+    let nw = workers.min(jobs.len()).max(1);
+    let mut buckets: Vec<Vec<_>> = (0..nw).map(|_| Vec::new()).collect();
+    for (k, job) in jobs.into_iter().enumerate() {
+        buckets[k % nw].push(job);
+    }
+    std::thread::scope(|scope| {
+        for bucket in buckets {
+            scope.spawn(move || {
+                for (d, o) in bucket {
+                    strategy.scrub_span_tiled(d, o);
+                }
+            });
+        }
+    });
 }
 
 fn main() {
@@ -210,6 +254,75 @@ fn main() {
         }
     }
 
+    // persistent pool vs scoped spawn: one scrub pass over the in-place
+    // image at growing shard counts. A clean-ish image makes the scrub
+    // work itself nearly free (tile clean proof), so this isolates the
+    // orchestration cost — parked-worker enqueue vs per-pass
+    // spawn/join. The gap must widen with the shard count.
+    const POOL_WORKERS: usize = 4;
+    println!("== pool: scrub pass, scoped spawn vs persistent pool ({POOL_WORKERS} workers) ==");
+    let mut pool_rows: Vec<(usize, f64, f64)> = Vec::new(); // (shards, scoped ns, pool ns)
+    for shards in [4usize, 16, 64] {
+        let s = strategy_by_name("in-place").unwrap();
+        let mut enc = s.encode(&w8).unwrap();
+        FaultInjector::new(FaultModel::Uniform, 5).inject(&mut enc, 1e-4);
+        let ranges = plan_shards(enc.data.len(), s.block_bytes(), shards);
+        let rs = bench(&format!("scoped scrub ({shards} shards)"), || {
+            scoped_scrub(s.as_ref(), &mut enc, &ranges, POOL_WORKERS);
+        });
+        let mut sb =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &w8, shards, POOL_WORKERS)
+                .unwrap();
+        sb.inject(FaultModel::Uniform, 1e-4, 5);
+        let rp = bench(&format!("pool scrub   ({shards} shards)"), || {
+            sb.scrub();
+        });
+        println!(
+            "    -> scoped {} | pool {} | pool speedup {:.2}x",
+            rs.throughput_str(n),
+            rp.throughput_str(n),
+            rs.ns_per_iter / rp.ns_per_iter
+        );
+        pool_rows.push((shards, rs.ns_per_iter, rp.ns_per_iter));
+    }
+    let pool_speedup_64 = match pool_rows.iter().find(|r| r.0 == 64) {
+        Some(r) => r.1 / r.2,
+        None => 0.0,
+    };
+
+    // steady-state allocations per scrub tick: one serving epoch =
+    // scrub + fused decode→dequant refresh with scratch leased from
+    // the worker arenas. After warmup the arena satisfies every lease,
+    // so the per-tick allocation count (arena misses) must be 0.
+    let allocs_per_tick = {
+        let mut sb =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &w8, 64, POOL_WORKERS)
+                .unwrap();
+        let layers = vec![zsecc::model::Layer {
+            name: "w".into(),
+            shape: vec![n],
+            offset: 0,
+            size: n,
+            scale: 0.01,
+            scale_prewot: 0.01,
+        }];
+        let mut f = vec![0f32; n];
+        for _ in 0..3 {
+            sb.scrub();
+            sb.decode_dequant_all(&layers, &mut f);
+        }
+        let (_, m0) = pool::arena_stats();
+        let ticks = 10u32;
+        for _ in 0..ticks {
+            sb.scrub();
+            sb.decode_dequant_all(&layers, &mut f);
+        }
+        let (_, m1) = pool::arena_stats();
+        let a = (m1 - m0) as f64 / f64::from(ticks);
+        println!("    -> steady-state arena allocations per scrub tick: {a:.1} (target 0)");
+        a
+    };
+
     if args.bool("json") || args.str_opt("out").is_some() {
         // tile section: per-strategy clean-decode GB/s, scalar vs tiled
         let tile_flat: Vec<(String, f64)> = tile_records
@@ -232,6 +345,17 @@ fn main() {
                     .collect()),
             ),
             ("inplace_vs_secded_decode_ratio", num(claim_ratio)),
+            (
+                "pool",
+                obj(vec![
+                    ("workers", num(POOL_WORKERS as f64)),
+                    ("shards", arr(pool_rows.iter().map(|r| num(r.0 as f64)))),
+                    ("scoped_gbps", arr(pool_rows.iter().map(|r| num(gbps(r.1))))),
+                    ("pool_gbps", arr(pool_rows.iter().map(|r| num(gbps(r.2))))),
+                    ("speedup_64_shards", num(pool_speedup_64)),
+                    ("allocs_per_scrub_tick", num(allocs_per_tick)),
+                ]),
+            ),
             ("shards", num(SHARDS as f64)),
             (
                 "sharded_speedup_4w",

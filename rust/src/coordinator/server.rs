@@ -13,16 +13,16 @@
 //! deployment model (weights live encoded in memory; the ECC decode
 //! sits between memory and compute).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher, Request, Response};
 use super::metrics::Metrics;
 use crate::ecc::strategy_by_name;
-use crate::memory::{FaultModel, ShardedBank};
+use crate::memory::{pool, FaultModel, ShardedBank};
 use crate::model::{load_weights, Manifest};
 use crate::quant::dequantize_into;
 use crate::runtime::{argmax_rows, Runtime};
@@ -95,12 +95,51 @@ pub trait BatchExec {
     }
 }
 
+/// Shutdown flag + wakeup for threads parked on timed waits (the scrub
+/// loop): `stop()` flips the flag and wakes every waiter immediately,
+/// so `Server::shutdown` returns in milliseconds however long the
+/// scrub interval is.
+struct StopSignal {
+    stopped: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl StopSignal {
+    fn new() -> Arc<StopSignal> {
+        Arc::new(StopSignal {
+            stopped: Mutex::new(false),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn stop(&self) {
+        *self.stopped.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    /// Park for `dur` or until `stop()`, whichever comes first; `true`
+    /// when stopping.
+    fn wait_timeout(&self, dur: Duration) -> bool {
+        let deadline = Instant::now() + dur;
+        let mut stopped = self.stopped.lock().unwrap();
+        while !*stopped {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self.cv.wait_timeout(stopped, deadline - now).unwrap();
+            stopped = g;
+        }
+        true
+    }
+}
+
 /// A running server.
 pub struct Server {
     batcher: Arc<Batcher>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
-    stop: Arc<AtomicBool>,
+    stop: Arc<StopSignal>,
     threads: Vec<JoinHandle<()>>,
     pub input_dim: usize,
 }
@@ -119,8 +158,11 @@ impl Server {
     {
         let batcher = Arc::new(Batcher::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
-        let stop = Arc::new(AtomicBool::new(false));
+        let stop = StopSignal::new();
         let (weights_tx, weights_rx): (Sender<WeightUpdate>, Receiver<WeightUpdate>) = channel();
+        // Applied f32 buffers travel back to the scrub thread's scratch
+        // arena, so steady-state refresh epochs allocate nothing.
+        let (give_tx, give_rx): (Sender<Vec<f32>>, Receiver<Vec<f32>>) = channel();
         let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
 
         // ---- inference thread ----
@@ -147,55 +189,81 @@ impl Server {
                 // batch rather than dropped — the bank has already
                 // cleared those shards' dirty bits and will not resend.
                 let mut pending: Option<WeightUpdate> = None;
-                let apply = |exec: &mut Box<dyn BatchExec>, update: &WeightUpdate| match update {
-                    WeightUpdate::Full(w) => exec.refresh(w).is_ok(),
-                    WeightUpdate::Deltas(d) => exec.refresh_delta(d).is_ok(),
-                };
+                // Apply an update; on success its f32 buffers go back
+                // to the scrub thread's arena, on failure the update is
+                // returned for retry.
+                let apply =
+                    |exec: &mut Box<dyn BatchExec>, update: WeightUpdate| -> Option<WeightUpdate> {
+                        let ok = match &update {
+                            WeightUpdate::Full(w) => exec.refresh(w).is_ok(),
+                            WeightUpdate::Deltas(d) => exec.refresh_delta(d).is_ok(),
+                        };
+                        if !ok {
+                            return Some(update);
+                        }
+                        match update {
+                            WeightUpdate::Full(w) => {
+                                let _ = give_tx.send(w);
+                            }
+                            WeightUpdate::Deltas(deltas) => {
+                                for d in deltas {
+                                    let _ = give_tx.send(d.values);
+                                }
+                            }
+                        }
+                        None
+                    };
                 while let Some(batch) = b.next_batch() {
                     // Non-blocking weight refresh before each batch;
                     // stop draining on failure to keep updates ordered.
                     if let Some(update) = pending.take() {
-                        if apply(&mut exec, &update) {
-                            m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
-                        } else {
-                            pending = Some(update);
+                        match apply(&mut exec, update) {
+                            None => {
+                                m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                            }
+                            failed => pending = failed,
                         }
                     }
                     while pending.is_none() {
                         let Ok(update) = weights_rx.try_recv() else {
                             break;
                         };
-                        if apply(&mut exec, &update) {
-                            m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
-                        } else {
-                            pending = Some(update);
+                        match apply(&mut exec, update) {
+                            None => {
+                                m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                            }
+                            failed => pending = failed,
                         }
                     }
-                    let count = batch.len().min(bsz);
-                    for (i, r) in batch.iter().take(count).enumerate() {
-                        buf[i * dim..(i + 1) * dim].copy_from_slice(&r.image);
-                    }
-                    let preds = match exec.exec(&buf, count) {
-                        Ok(p) => p,
-                        Err(_) => {
-                            m.exec_failures.fetch_add(1, Ordering::Relaxed);
-                            vec![usize::MAX; count]
+                    // FIFO under oversized batches: the batcher may
+                    // release more requests than the executable's batch
+                    // size (policy.max_batch > exec.batch()). Execute
+                    // bsz-sized chunks in arrival order instead of
+                    // requeueing the overflow behind newer arrivals —
+                    // a requeued request could otherwise starve.
+                    for chunk in batch.chunks(bsz) {
+                        let count = chunk.len();
+                        for (i, r) in chunk.iter().enumerate() {
+                            buf[i * dim..(i + 1) * dim].copy_from_slice(&r.image);
                         }
-                    };
-                    let now = Instant::now();
-                    m.record_batch(count);
-                    for (r, &p) in batch.iter().zip(&preds) {
-                        let lat = now.duration_since(r.submitted);
-                        m.record_latency_us(lat.as_secs_f64() * 1e6);
-                        let _ = r.resp.send(Response {
-                            id: r.id,
-                            pred: p,
-                            latency: lat,
-                        });
-                    }
-                    // Anything beyond bsz goes back through the queue.
-                    for r in batch.into_iter().skip(count) {
-                        let _ = b.push(r);
+                        let preds = match exec.exec(&buf, count) {
+                            Ok(p) => p,
+                            Err(_) => {
+                                m.exec_failures.fetch_add(1, Ordering::Relaxed);
+                                vec![usize::MAX; count]
+                            }
+                        };
+                        let now = Instant::now();
+                        m.record_batch(count);
+                        for (r, &p) in chunk.iter().zip(&preds) {
+                            let lat = now.duration_since(r.submitted);
+                            m.record_latency_us(lat.as_secs_f64() * 1e6);
+                            let _ = r.resp.send(Response {
+                                id: r.id,
+                                pred: p,
+                                latency: lat,
+                            });
+                        }
                     }
                 }
             })?;
@@ -208,17 +276,22 @@ impl Server {
         // ---- scrub thread (owns the ShardedBank) ----
         if let (Some(interval), Some((mut sb, layers))) = (cfg.scrub_interval, bank.take()) {
             let m = metrics.clone();
-            let stop2 = stop.clone();
+            let signal = stop.clone();
             let rate = cfg.fault_rate_per_interval;
             let seed0 = cfg.fault_seed;
             let t = std::thread::Builder::new()
                 .name("zsecc-scrub".into())
                 .spawn(move || {
                     let nshards = sb.num_shards();
-                    let mut scratch: Vec<i8> = Vec::new();
                     let mut epoch = 0u64;
-                    while !stop2.load(Ordering::Relaxed) {
-                        std::thread::sleep(interval);
+                    // Interruptible wait: the loop exits the instant
+                    // shutdown() signals, never after a full interval.
+                    while !signal.wait_timeout(interval) {
+                        // buffers the inference thread has applied come
+                        // back to this thread's scratch arena
+                        while let Ok(buf) = give_rx.try_recv() {
+                            pool::give(buf);
+                        }
                         if rate > 0.0 {
                             let n = sb.inject(FaultModel::Uniform, rate, seed0 ^ epoch);
                             m.faults_injected.fetch_add(n, Ordering::Relaxed);
@@ -240,19 +313,23 @@ impl Server {
                             // nshards deltas. Fused decode → dequant
                             // over the worker pool — clean tiles stream
                             // through the LUT path, no full-image i8
-                            // intermediate.
-                            let mut w = vec![0f32; sb.n_weights()];
+                            // intermediate — into an arena buffer.
+                            let mut w = pool::lease_f32(sb.n_weights());
                             sb.decode_dequant_all(&layers, &mut w);
                             m.full_refreshes.fetch_add(1, Ordering::Relaxed);
-                            WeightUpdate::Full(w)
+                            WeightUpdate::Full(w.take())
                         } else {
+                            let mut scratch = pool::lease_i8(0);
                             let mut deltas = Vec::with_capacity(dirty.len());
                             for i in dirty {
                                 let (s, e) = sb.shard_range(i);
-                                let mut values = vec![0f32; e - s];
+                                let mut values = pool::lease_f32(e - s);
                                 sb.decode_dequant_shard(i, &layers, &mut scratch, &mut values);
                                 m.record_shard_refresh(i);
-                                deltas.push(WeightDelta { offset: s, values });
+                                deltas.push(WeightDelta {
+                                    offset: s,
+                                    values: values.take(),
+                                });
                             }
                             WeightUpdate::Deltas(deltas)
                         };
@@ -339,9 +416,11 @@ impl Server {
         Ok(rx)
     }
 
-    /// Graceful shutdown: drain the queue, stop all threads.
+    /// Graceful shutdown: drain the queue, stop all threads. Returns
+    /// immediately-ish however long the scrub interval is — the scrub
+    /// thread parks on an interruptible wait, not a sleep.
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.stop.stop();
         self.batcher.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -397,7 +476,6 @@ impl BatchExec for PjrtExec {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Mutex;
 
     /// Mock executor: predicts class = round(first pixel), counts calls.
     struct Mock {
@@ -575,6 +653,96 @@ mod tests {
         assert!(srv.metrics.scrubs.load(Ordering::Relaxed) >= 2);
         assert!(srv.metrics.weight_refreshes.load(Ordering::Relaxed) >= 1);
         srv.shutdown();
+    }
+
+    /// Satellite regression: `shutdown()` must not wait out the scrub
+    /// interval — the scrub thread parks on an interruptible condvar
+    /// wait, so a server scrubbed hourly still shuts down in
+    /// milliseconds.
+    #[test]
+    fn shutdown_with_long_scrub_interval_is_immediate() {
+        use crate::ecc::strategy_by_name;
+        let weights = vec![0i8; 64];
+        let bank =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &weights, 4, 2).unwrap();
+        let mut cfg = mock_cfg();
+        cfg.scrub_interval = Some(Duration::from_secs(3600));
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 1,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            1,
+            &cfg,
+            Some((bank, test_layers(64))),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        srv.shutdown();
+        let took = t0.elapsed();
+        assert!(
+            took < Duration::from_secs(2),
+            "shutdown blocked on the scrub interval: {took:?}"
+        );
+    }
+
+    /// Satellite regression: when the batcher releases more requests
+    /// than the executable's batch size, the overflow must execute in
+    /// arrival order (split into chunks), not be requeued behind newer
+    /// arrivals where it could starve.
+    #[test]
+    fn oversized_batches_execute_in_submission_order() {
+        struct LogExec {
+            log: Arc<Mutex<Vec<usize>>>,
+        }
+        impl BatchExec for LogExec {
+            fn batch(&self) -> usize {
+                2
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+                let mut l = self.log.lock().unwrap();
+                for &px in &images[..count] {
+                    l.push(px as usize);
+                }
+                Ok(vec![0; count])
+            }
+            fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        let mut cfg = mock_cfg();
+        // policy releases up to 5 requests; the executable takes 2
+        cfg.policy = BatchPolicy {
+            max_batch: 5,
+            max_wait: Duration::from_millis(30),
+        };
+        let srv = Server::start_with(
+            move || Ok(Box::new(LogExec { log: log2 }) as Box<dyn BatchExec>),
+            1,
+            &cfg,
+            None,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| srv.submit(vec![i as f32]).unwrap())
+            .collect();
+        for rx in &rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        srv.shutdown();
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec![0, 1, 2, 3, 4],
+            "completion must follow submission order"
+        );
     }
 
     /// The acceptance check for incremental refresh: with some (but not

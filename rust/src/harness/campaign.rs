@@ -8,15 +8,20 @@
 //! `[min_trials, max_trials]`; with no target set it runs exactly
 //! `min_trials` trials (the classic Table-2 mode).
 //!
-//! Cells fan out over the same scoped-thread worker pool the sharded
-//! store uses ([`run_jobs`](crate::memory::run_jobs)); each completed
-//! cell is checkpointed to a JSON ledger, so an interrupted campaign
-//! resumed with the same configuration replays nothing — and its final
-//! report is **byte-identical** to an uninterrupted run: trial seeds
-//! derive only from the cell key and trial index, early stopping
-//! depends only on the (deterministic) drop sequence, and the
-//! canonical report excludes wall-clock. `tests/campaign.rs` pins the
-//! identity down.
+//! Cells fan out over the same persistent worker pool the sharded
+//! store uses ([`run_jobs`](crate::memory::run_jobs) — parked threads,
+//! no per-cell spawn/join), and the first `min_trials` trials of each
+//! cell fan out too (they run unconditionally, so parallelism cannot
+//! change the stopping decision; only the adaptive tail is
+//! sequential). Trials reuse per-strategy banks with copy-on-write
+//! resets instead of re-encoding, so a trial's cost is injection +
+//! decode. Each completed cell is checkpointed to a JSON ledger, so an
+//! interrupted campaign resumed with the same configuration replays
+//! nothing — and its final report is **byte-identical** to an
+//! uninterrupted run: trial seeds derive only from the cell key and
+//! trial index, early stopping depends only on the (deterministic)
+//! drop sequence, and the canonical report excludes wall-clock.
+//! `tests/campaign.rs` pins the identity down.
 //!
 //! Two [`TrialRunner`]s ship: [`EvalRunner`] executes real models
 //! through PJRT (one `EvalCtx` per model, mutex-serialized), and
@@ -188,7 +193,9 @@ pub struct TrialOutcome {
 
 /// Runs one fault-injection trial of a cell. Implementations must be
 /// deterministic in `(spec, seed)` — resume identity depends on it —
-/// and `Sync`: trials of *different* cells run concurrently.
+/// and `Sync`: trials of different cells run concurrently, and so do
+/// the first `min_trials` trials *within* a cell (they run
+/// unconditionally, so parallelism cannot change a stopping decision).
 pub trait TrialRunner: Sync {
     fn run_trial(&self, spec: &CellSpec, trial: u64, seed: u64) -> anyhow::Result<TrialOutcome>;
 }
@@ -253,13 +260,19 @@ impl TrialRunner for EvalRunner {
 /// wrong from a [`ShardedBank`] after injection. Deterministic per
 /// seed, no PJRT, no artifacts. The two synthetic weight buffers (WOT
 /// for the paper strategies, extended-WOT for `bch16`) are generated
-/// once and shared across all trials.
+/// once and shared across all trials, and the protected banks are
+/// recycled through a per-strategy freelist: a released bank has been
+/// copy-on-write reset to pristine, so a steady-state trial costs
+/// injection + decode — never a re-encode, never a full image copy.
 pub struct SyntheticRunner {
     n_weights: usize,
     shards: usize,
     workers: usize,
     wot: OnceLock<Vec<i8>>,
     ext: OnceLock<Vec<i8>>,
+    /// Reset banks awaiting reuse, keyed by strategy; depth tracks peak
+    /// same-strategy trial concurrency.
+    banks: Mutex<BTreeMap<String, Vec<ShardedBank>>>,
 }
 
 impl SyntheticRunner {
@@ -271,6 +284,7 @@ impl SyntheticRunner {
             workers,
             wot: OnceLock::new(),
             ext: OnceLock::new(),
+            banks: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -289,12 +303,29 @@ impl TrialRunner for SyntheticRunner {
         } else {
             self.wot.get_or_init(|| synth_wot(self.n_weights, 42))
         };
-        let strat = crate::ecc::strategy_by_name(&spec.strategy)?;
-        let mut bank = ShardedBank::new(strat, w, self.shards, self.workers)?;
+        // a recycled (pristine-reset) bank when one is free, else encode
+        let recycled = {
+            let mut banks = self.banks.lock().unwrap();
+            banks.get_mut(&spec.strategy).and_then(|v| v.pop())
+        };
+        let mut bank = match recycled {
+            Some(b) => b,
+            None => ShardedBank::new(
+                crate::ecc::strategy_by_name(&spec.strategy)?,
+                w,
+                self.shards,
+                self.workers,
+            )?,
+        };
         bank.inject(spec.fault, spec.rate, seed);
-        let mut out = vec![0i8; w.len()];
+        let mut out = crate::memory::pool::lease_i8(w.len());
         let st = bank.read(&mut out);
         let wrong = out.iter().zip(w).filter(|(a, b)| a != b).count();
+        bank.reset(); // copy-on-write: only fault-touched blocks copied back
+        {
+            let mut banks = self.banks.lock().unwrap();
+            banks.entry(spec.strategy.clone()).or_default().push(bank);
+        }
         Ok(TrialOutcome {
             drop_pp: 100.0 * wrong as f64 / w.len() as f64,
             corrected: st.corrected,
@@ -559,20 +590,33 @@ impl Ledger {
 // -------------------------------------------------------------- engine --
 
 /// Run one cell's trial loop until the policy says stop.
+///
+/// The first `min_trials` trials run unconditionally whatever the
+/// stopping rule later decides, so they fan out over the worker pool
+/// (`jobs` wide); the adaptive tail stays sequential because each
+/// extra trial depends on the CI of its prefix. Results are collected
+/// in trial order, so the drops sequence — and hence every stopping
+/// decision — is identical to a fully serial loop.
 fn run_cell(
     spec: &CellSpec,
     policy: &TrialPolicy,
     runner: &dyn TrialRunner,
+    jobs: usize,
 ) -> anyhow::Result<CellResult> {
     let t0 = std::time::Instant::now();
     let mut drops = Vec::with_capacity(policy.min_trials);
     let (mut corrected, mut detected) = (0u64, 0u64);
-    loop {
-        let t = drops.len() as u64;
-        let out = runner.run_trial(spec, t, trial_seed(spec, t))?;
+    let prelude = policy.min_trials.min(policy.max_trials).max(1) as u64;
+    let outcomes = run_jobs((0..prelude).collect(), jobs, |t| {
+        runner.run_trial(spec, t, trial_seed(spec, t))
+    });
+    for out in outcomes {
+        let out = out?;
         drops.push(out.drop_pp);
         corrected += out.corrected;
         detected += out.detected;
+    }
+    loop {
         let n = drops.len();
         if n >= policy.max_trials {
             break;
@@ -587,6 +631,11 @@ fn run_cell(
                 }
             }
         }
+        let t = n as u64;
+        let out = runner.run_trial(spec, t, trial_seed(spec, t))?;
+        drops.push(out.drop_pp);
+        corrected += out.corrected;
+        detected += out.detected;
     }
     Ok(CellResult {
         spec: spec.clone(),
@@ -629,8 +678,9 @@ pub fn run(cfg: &Config, runner: &dyn TrialRunner) -> anyhow::Result<Report> {
         cells: done,
     });
     let policy = cfg.policy;
-    let outcomes = run_jobs(pending, cfg.jobs.max(1), |spec| -> anyhow::Result<()> {
-        let cell = run_cell(&spec, &policy, runner)?;
+    let jobs = cfg.jobs.max(1);
+    let outcomes = run_jobs(pending, jobs, |spec| -> anyhow::Result<()> {
+        let cell = run_cell(&spec, &policy, runner, jobs)?;
         if cfg.verbose {
             eprintln!(
                 "[campaign] {:<12} {:>8} rate={:>7.0e} {:<14} trials={:<3} drop={} hw={:.3}",

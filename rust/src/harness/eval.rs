@@ -1,6 +1,7 @@
 //! Shared evaluation machinery: one loaded (model, executable, dataset)
 //! context on which protected-memory accuracy experiments run.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -42,11 +43,17 @@ pub struct EvalCtx {
     pub base_acc: f64,
     /// Shard/worker geometry of the per-trial protected store (decode
     /// output is identical for every setting; workers only add speed).
+    /// Read when a strategy's bank is first built — change it before
+    /// the first trial.
     pub shards: usize,
     pub decode_workers: usize,
     // scratch
     qbuf: Vec<i8>,
     fbuf: Vec<f32>,
+    /// One reusable protected store per strategy: trials reset it
+    /// copy-on-write (only fault-touched blocks are copied back) instead
+    /// of re-encoding the whole weight image every trial.
+    banks: BTreeMap<String, crate::memory::ShardedBank>,
 }
 
 impl EvalCtx {
@@ -71,6 +78,7 @@ impl EvalCtx {
             base_acc: 0.0,
             shards: 8,
             decode_workers: ShardedBank::auto_workers(),
+            banks: BTreeMap::new(),
         };
         ctx.base_acc = ctx.accuracy_of(&ctx.weights.clone())?;
         Ok(ctx)
@@ -83,8 +91,11 @@ impl EvalCtx {
         accuracy(&self.rt, &self.exe, &wbuf, &self.ds)
     }
 
-    /// One Table-2 trial: encode with `strategy`, inject `rate` faults,
-    /// decode, measure accuracy. Returns (accuracy, corrected, detected).
+    /// One Table-2 trial: inject `rate` faults into the (cached,
+    /// pristine-reset) `strategy` bank, decode, measure accuracy.
+    /// Returns (accuracy, corrected, detected). The bank is encoded
+    /// once per strategy and reset copy-on-write between trials — a
+    /// trial's cost is injection + decode, not a re-encode.
     pub fn faulty_trial(
         &mut self,
         strategy: &str,
@@ -92,10 +103,17 @@ impl EvalCtx {
         rate: f64,
         seed: u64,
     ) -> anyhow::Result<(f64, u64, u64)> {
-        let strat = strategy_by_name(strategy)?;
-        let mut bank = ShardedBank::new(strat, &self.weights, self.shards, self.decode_workers)?;
-        bank.inject(model, rate, seed);
+        use std::collections::btree_map::Entry;
+        let bank = match self.banks.entry(strategy.to_string()) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(e) => {
+                let strat = strategy_by_name(strategy)?;
+                e.insert(ShardedBank::new(strat, &self.weights, self.shards, self.decode_workers)?)
+            }
+        };
         let mut q = std::mem::take(&mut self.qbuf);
+        bank.reset(); // copy-on-write: only the previous trial's faulted blocks
+        bank.inject(model, rate, seed);
         let stats = bank.read(&mut q);
         let acc = self.accuracy_of(&q)?;
         self.qbuf = q;

@@ -20,8 +20,12 @@
 //! * [`memory`] — encoded weight memory: fault injection + scrubbing.
 //!   `MemoryBank` is the whole-buffer store (Table-2 render, examples);
 //!   `ShardedBank` splits the same stored image into S block-aligned
-//!   shards scrubbed/decoded by a scoped-thread worker pool, with
-//!   per-shard `DecodeStats` and dirty tracking for incremental refresh.
+//!   shards scrubbed/decoded over the persistent worker pool
+//!   (`memory::pool`: long-lived parked threads, shared injector +
+//!   stealable per-worker queues, scope-style borrow API, per-worker
+//!   scratch arenas), with per-shard `DecodeStats`, dirty tracking for
+//!   incremental refresh, and copy-on-write trial resets (only
+//!   fault-touched code blocks are copied back from pristine).
 //! * [`quant`] — int8 weight buffers and per-layer dequantization,
 //!   including the fused `decode_dequant_range` used by the scrub
 //!   epoch's per-shard delta path (no full-buffer i8 intermediate).
@@ -37,6 +41,9 @@
 //!   parallel Monte-Carlo campaign engine with adaptive
 //!   (confidence-targeted) trial counts, five deterministic fault
 //!   models, and a resumable checkpoint ledger (bit-identical resume).
+//!   Cells and the unconditional head of each cell's trials pipeline
+//!   over the shared worker pool; trials recycle copy-on-write-reset
+//!   banks instead of re-encoding.
 //! * [`util`] — substrates the offline build denies us as crates: JSON,
 //!   PRNG, CLI parsing, stats, ASCII plots, a bench timer.
 

@@ -10,16 +10,24 @@
 //! * [`bank`] — `MemoryBank`: an encoded weight image + its protection
 //!   strategy; supports fault injection, protected reads and scrubbing.
 //! * [`shard`] — `ShardedBank`: the same stored image split into S
-//!   block-aligned shards, scrubbed/decoded by a scoped-thread worker
+//!   block-aligned shards, scrubbed/decoded over the persistent worker
 //!   pool with per-shard stats and dirty tracking — the serving path's
-//!   store, enabling incremental (delta) weight refresh. Its `run_jobs`
-//!   pool is reused by `harness::campaign` to fan experiment cells out
-//!   over workers.
+//!   store, enabling incremental (delta) weight refresh. Trial resets
+//!   are copy-on-write: only fault-touched code blocks are copied back
+//!   from the pristine image.
+//! * [`pool`] — the persistent worker pool (long-lived parked threads,
+//!   shared injector + per-worker stealable run queues, a scope-style
+//!   borrow API) and the per-worker scratch arenas (recycled
+//!   `Vec<i8>`/`Vec<f32>` freelists). `run_jobs` is the compatibility
+//!   wrapper shard passes, `harness::campaign` cells/trials and the
+//!   serving scrub loop all fan out through.
 
 pub mod bank;
 pub mod fault;
+pub mod pool;
 pub mod shard;
 
 pub use bank::MemoryBank;
 pub use fault::{FaultInjector, FaultModel};
-pub use shard::{plan_shards, run_jobs, ShardState, ShardedBank};
+pub use pool::{run_jobs, Pool};
+pub use shard::{plan_shards, ShardState, ShardedBank};

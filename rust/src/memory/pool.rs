@@ -1,0 +1,689 @@
+//! Persistent worker pool + scratch arenas — the orchestration layer
+//! under every fan-out in the system.
+//!
+//! PR 3's tile engine made clean decode/scrub nearly free *per byte*,
+//! which left pure orchestration as the dominant steady-state cost:
+//! every scrub tick, decode pass and campaign cell used to spawn and
+//! join fresh OS threads through `std::thread::scope`. This module
+//! replaces that with one process-wide pool of long-lived parked
+//! workers:
+//!
+//! * **Queues** — a shared injector (external submissions) plus one
+//!   stealable run queue per worker. A worker prefers its own queue
+//!   (LIFO: nested work stays hot), then the injector, then steals the
+//!   *back* of a sibling's queue. A task submitted from inside a pool
+//!   worker lands on that worker's own queue, so nested fan-outs
+//!   (campaign cell → trial → shard decode) pipeline instead of
+//!   serializing behind a barrier.
+//! * **`Pool::run`** — a `scope`-style borrow API: jobs may capture
+//!   `&mut` windows of caller-stack buffers exactly like
+//!   `std::thread::scope` spawns did. Internally the borrows are
+//!   lifetime-erased and handed to the workers as *tickets*; `run`
+//!   blocks on a heap-allocated latch until every ticket retires, so
+//!   the borrows can never outlive the call. The caller participates
+//!   (it drains its own job queue), and before parking it *reclaims*
+//!   any of its tickets still sitting unstarted in the queues — after
+//!   that, every awaited ticket is running on some worker, so nested
+//!   `run` calls are deadlock-free even on a one-thread pool. A
+//!   waiting caller never executes another frame's work, so a job that
+//!   holds a lock (e.g. a campaign trial holding its model's
+//!   `EvalCtx` mutex) can never re-enter itself on the same thread.
+//! * **Panic propagation** — a panicking job poisons nothing: the first
+//!   panic payload is captured, remaining jobs are abandoned, and the
+//!   payload is re-raised on the calling thread after every ticket has
+//!   retired (same observable behavior as a scoped join).
+//! * **Scratch arenas** — per-worker (thread-local) freelists of
+//!   recycled `Vec<i8>` / `Vec<f32>` buffers: [`lease_i8`] /
+//!   [`lease_f32`] hand one out, dropping the [`Scratch`] returns it,
+//!   [`Scratch::take`] detaches the buffer (e.g. to cross a channel)
+//!   and [`give`] re-parks it. [`arena_stats`] counts hits vs fresh
+//!   allocations — the bench's steady-state allocations-per-scrub-tick
+//!   gauge.
+//!
+//! [`run_jobs`] is the compatibility wrapper every pre-pool call site
+//! keeps using; it delegates to the global pool. [`run_jobs_scoped`]
+//! preserves the old scoped-spawn fan-out as the reference
+//! implementation the equivalence proptests and the `ecc_hotpath`
+//! `pool` bench section compare against.
+//!
+//! Lifecycle: the global pool ([`Pool::global`]) is created on first
+//! use, sized `min(available_parallelism, 8)`, and lives for the
+//! process. Private pools (`Pool::new`) are for tests; `shutdown` is
+//! idempotent, and `run` on a shut-down pool still completes — the
+//! caller reclaims its own tickets.
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::{JoinHandle, LocalKey};
+
+/// A lifetime-erased unit of pool work (see the safety argument in
+/// [`Pool::run`]).
+type Task = Box<dyn FnOnce() + Send>;
+
+/// A queued task tagged with the identity of the `run` frame that
+/// submitted it (the latch address), so a waiting caller can reclaim
+/// its own unstarted tickets.
+type Entry = (usize, Task);
+
+struct Queues {
+    /// External submissions (callers that are not pool workers).
+    injector: VecDeque<Entry>,
+    /// Per-worker run queues: owner pops the front, thieves the back.
+    locals: Vec<VecDeque<Entry>>,
+    shutdown: bool,
+}
+
+/// A persistent pool of parked worker threads.
+pub struct Pool {
+    q: Mutex<Queues>,
+    work_cv: Condvar,
+    threads: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+thread_local! {
+    /// (pool identity, worker index) when this thread is a pool worker.
+    static WORKER: Cell<Option<(usize, usize)>> = const { Cell::new(None) };
+}
+
+static GLOBAL: OnceLock<Arc<Pool>> = OnceLock::new();
+
+impl Pool {
+    /// Spawn a pool of `threads` parked workers (clamped to >= 1).
+    pub fn new(threads: usize) -> Arc<Pool> {
+        let threads = threads.max(1);
+        let pool = Arc::new(Pool {
+            q: Mutex::new(Queues {
+                injector: VecDeque::new(),
+                locals: (0..threads).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            threads,
+            handles: Mutex::new(Vec::new()),
+        });
+        let mut handles = pool.handles.lock().unwrap();
+        for i in 0..threads {
+            let p = pool.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("zsecc-pool-{i}"))
+                    .spawn(move || worker_loop(p, i))
+                    .expect("spawning pool worker"),
+            );
+        }
+        drop(handles);
+        pool
+    }
+
+    /// The process-wide shared pool: `ShardedBank` passes, campaign
+    /// cells/trials and the serving scrub loop all fan out here.
+    pub fn global() -> &'static Arc<Pool> {
+        GLOBAL.get_or_init(|| Pool::new(Pool::default_threads()))
+    }
+
+    /// Pool size for this machine (capped: the workloads are
+    /// memory-bound well before they are core-bound).
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .clamp(1, 8)
+    }
+
+    /// Worker threads in this pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn id(&self) -> usize {
+        self as *const Pool as usize
+    }
+
+    /// Park all workers and join them. Idempotent; queued work is
+    /// drained before a worker exits, and a later `run` still completes
+    /// (the caller reclaims its own tickets).
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.q.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.work_cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Enqueue a task for frame `fid`: a pool worker pushes to its own
+    /// (stealable) run queue, everyone else to the shared injector.
+    fn submit(&self, fid: usize, task: Task) {
+        {
+            let mut q = self.q.lock().unwrap();
+            match WORKER.get() {
+                Some((id, idx)) if id == self.id() => q.locals[idx].push_front((fid, task)),
+                _ => q.injector.push_back((fid, task)),
+            }
+        }
+        self.work_cv.notify_one();
+    }
+
+    /// Remove (and drop) every still-queued ticket of frame `fid`,
+    /// returning how many were removed. After this, all of the frame's
+    /// unretired tickets are *running* on some worker — the waiting
+    /// caller can park without executing anyone else's work.
+    fn reclaim(&self, fid: usize) -> usize {
+        let mut q = self.q.lock().unwrap();
+        let mut removed = 0;
+        let before = q.injector.len();
+        q.injector.retain(|(id, _)| *id != fid);
+        removed += before - q.injector.len();
+        for local in q.locals.iter_mut() {
+            let before = local.len();
+            local.retain(|(id, _)| *id != fid);
+            removed += before - local.len();
+        }
+        removed
+    }
+
+    /// Run `jobs` through `f` on at most `workers` threads (the caller
+    /// counts as one), returning results in job submission order.
+    /// Serial on the calling thread when one worker or one job. Jobs
+    /// may borrow from the caller's stack (`&mut` buffer windows
+    /// included) — `run` does not return until every borrow is dead.
+    /// A panicking job abandons the remaining jobs and re-raises on the
+    /// caller once all workers have let go.
+    pub fn run<J, R, F>(&self, jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
+    where
+        J: Send,
+        R: Send,
+        F: Fn(J) -> R + Sync,
+    {
+        let n = jobs.len();
+        if workers <= 1 || n <= 1 {
+            return jobs.into_iter().map(f).collect();
+        }
+        let frame = RunFrame {
+            queue: Mutex::new(jobs.into_iter().enumerate().collect()),
+            results: Mutex::new((0..n).map(|_| None).collect()),
+            panic: Mutex::new(None),
+            f,
+        };
+        // The caller participates, so tickets = extra workers only.
+        let tickets = workers.min(self.threads + 1).saturating_sub(1).min(n - 1);
+        let latch = Latch::new(tickets);
+        let fid = Arc::as_ptr(&latch) as usize; // unique while the latch lives
+        let fp = SendPtr(&frame as *const RunFrame<J, R, F>);
+        for _ in 0..tickets {
+            let latch = latch.clone();
+            let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                // SAFETY: the frame outlives the ticket — `run` blocks
+                // on the latch below until this retire() has happened,
+                // and retire touches only the Arc'd latch, never the
+                // frame.
+                unsafe { (*fp.0).drain() };
+                latch.retire();
+            });
+            // SAFETY: erasing the borrow of `frame` (and whatever `f`
+            // captures) to 'static is sound because `run` cannot return
+            // before the latch confirms every ticket has finished: the
+            // borrows are dead by the time the frame is dropped.
+            self.submit(fid, unsafe { erase_task(task) });
+        }
+        frame.drain(); // the caller is a worker too
+        // Our queue is dry: tickets still waiting in the pool queues
+        // have nothing left to do — pull them back out instead of
+        // waiting for a worker to start them. Whatever remains is
+        // running right now and will retire on its own.
+        latch.retire_n(self.reclaim(fid));
+        latch.wait();
+        if let Some(payload) = frame.panic.into_inner().unwrap() {
+            resume_unwind(payload);
+        }
+        frame
+            .results
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|r| r.expect("pool job completed without a result"))
+            .collect()
+    }
+}
+
+fn worker_loop(pool: Arc<Pool>, idx: usize) {
+    WORKER.set(Some((pool.id(), idx)));
+    loop {
+        let task = {
+            let mut q = pool.q.lock().unwrap();
+            loop {
+                if let Some(t) = next_task(&mut q, idx) {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = pool.work_cv.wait(q).unwrap();
+            }
+        };
+        match task {
+            // Tickets catch job panics internally; the outer catch only
+            // guards the worker thread against future task kinds.
+            Some((_fid, t)) => drop(catch_unwind(AssertUnwindSafe(t))),
+            None => return,
+        }
+    }
+}
+
+fn next_task(q: &mut Queues, idx: usize) -> Option<Entry> {
+    if let Some(t) = q.locals[idx].pop_front() {
+        return Some(t);
+    }
+    if let Some(t) = q.injector.pop_front() {
+        return Some(t);
+    }
+    let n = q.locals.len();
+    for off in 1..n {
+        if let Some(t) = q.locals[(idx + off) % n].pop_back() {
+            return Some(t);
+        }
+    }
+    None
+}
+
+/// Shared state of one `run` call, on the caller's stack.
+struct RunFrame<J, R, F> {
+    queue: Mutex<VecDeque<(usize, J)>>,
+    results: Mutex<Vec<Option<R>>>,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    f: F,
+}
+
+impl<J, R, F: Fn(J) -> R> RunFrame<J, R, F> {
+    /// Pull jobs until the queue is dry (or a sibling panicked).
+    fn drain(&self) {
+        loop {
+            if self.panic.lock().unwrap().is_some() {
+                return; // abandon the rest; `run` re-raises
+            }
+            let Some((idx, job)) = self.queue.lock().unwrap().pop_front() else {
+                return;
+            };
+            match catch_unwind(AssertUnwindSafe(|| (self.f)(job))) {
+                Ok(r) => self.results.lock().unwrap()[idx] = Some(r),
+                Err(payload) => {
+                    let mut slot = self.panic.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload); // first panic wins
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Erase a task's borrow lifetime so it can sit in the 'static queues.
+///
+/// SAFETY: the caller must guarantee the task runs (and its borrows
+/// die) before the erased lifetime ends — `Pool::run` enforces this
+/// with the ticket latch.
+unsafe fn erase_task<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(task)
+}
+
+/// Raw frame pointer that crosses into tickets.
+///
+/// SAFETY: only constructed in [`Pool::run`], whose bounds (`J: Send`,
+/// `R: Send`, `F: Sync`) make sharing the frame across threads sound;
+/// the latch protocol bounds its lifetime.
+struct SendPtr<T>(*const T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+
+/// Heap-allocated completion latch: one count per ticket.
+struct Latch {
+    left: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Arc<Latch> {
+        Arc::new(Latch {
+            left: Mutex::new(n),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn retire(&self) {
+        self.retire_n(1);
+    }
+
+    /// Retire `n` tickets at once (the reclaimed, never-started ones).
+    fn retire_n(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut left = self.left.lock().unwrap();
+        *left -= n;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every ticket retires. Safe to call only after the
+    /// caller reclaimed its queued tickets: everything still counted is
+    /// running on a worker, executing this frame's own jobs — never a
+    /// wait on work nobody has started, and never a foreign job run on
+    /// this thread (which could re-enter a lock the caller holds).
+    fn wait(&self) {
+        let mut left = self.left.lock().unwrap();
+        while *left != 0 {
+            left = self.cv.wait(left).unwrap();
+        }
+    }
+}
+
+// ------------------------------------------------- compat + reference --
+
+/// Fan `jobs` out over at most `workers` threads of the global
+/// persistent pool; returns results in job submission order. Serial on
+/// the calling thread when one worker or one job. This is the
+/// compatibility wrapper every pre-pool call site keeps using — shard
+/// scrub/decode passes, the campaign engine's cells and trials, and
+/// the serving scrub loop all funnel through it.
+pub fn run_jobs<J, R>(jobs: Vec<J>, workers: usize, f: impl Fn(J) -> R + Sync) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+{
+    Pool::global().run(jobs, workers, f)
+}
+
+/// The pre-pool scoped-spawn fan-out (round-robin buckets over fresh
+/// `std::thread::scope` threads), kept as the reference implementation
+/// the pool-equivalence proptests and the `ecc_hotpath` `pool` bench
+/// section compare against. Returns results in bucket order.
+pub fn run_jobs_scoped<J, R>(jobs: Vec<J>, workers: usize, f: impl Fn(J) -> R + Sync) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+{
+    if workers <= 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let nw = workers.min(jobs.len());
+    let mut buckets: Vec<Vec<J>> = (0..nw).map(|_| Vec::new()).collect();
+    for (k, job) in jobs.into_iter().enumerate() {
+        buckets[k % nw].push(job);
+    }
+    let f = &f;
+    let mut results = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = buckets
+            .into_iter()
+            .map(|bucket| scope.spawn(move || bucket.into_iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            results.extend(h.join().expect("scoped worker panicked"));
+        }
+    });
+    results
+}
+
+// ------------------------------------------------------ scratch arenas --
+
+/// Recycled buffers ever handed out (freelist hits).
+static ARENA_HITS: AtomicU64 = AtomicU64::new(0);
+/// Leases that had to allocate (empty freelist or too-small buffer).
+static ARENA_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Per-thread freelist depth cap — bounds idle memory, not throughput.
+/// Must cover the worst-case buffers parked on one thread per serving
+/// epoch: a delta refresh returns up to (shards - 1) f32 buffers to
+/// the scrub thread, and 64-shard stores are the common large config.
+const MAX_FREE_PER_THREAD: usize = 128;
+
+thread_local! {
+    static FREE_I8: RefCell<Vec<Vec<i8>>> = const { RefCell::new(Vec::new()) };
+    static FREE_F32: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Element types the arena recycles buffers of.
+pub trait ArenaElem: Copy + Default + 'static {
+    #[doc(hidden)]
+    fn freelist() -> &'static LocalKey<RefCell<Vec<Vec<Self>>>>;
+}
+
+impl ArenaElem for i8 {
+    fn freelist() -> &'static LocalKey<RefCell<Vec<Vec<i8>>>> {
+        &FREE_I8
+    }
+}
+
+impl ArenaElem for f32 {
+    fn freelist() -> &'static LocalKey<RefCell<Vec<Vec<f32>>>> {
+        &FREE_F32
+    }
+}
+
+/// A leased arena buffer: derefs to its `Vec`, returns to the leasing
+/// thread's freelist on drop. [`Scratch::take`] detaches the buffer
+/// instead (hand it back later with [`give`]).
+pub struct Scratch<T: ArenaElem> {
+    buf: Vec<T>,
+}
+
+impl<T: ArenaElem> Scratch<T> {
+    /// Detach the buffer from the arena, e.g. to move it into a channel
+    /// message; the receiver returns it with [`give`].
+    pub fn take(mut self) -> Vec<T> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+impl<T: ArenaElem> std::ops::Deref for Scratch<T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        &self.buf
+    }
+}
+
+impl<T: ArenaElem> std::ops::DerefMut for Scratch<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.buf
+    }
+}
+
+impl<T: ArenaElem> Drop for Scratch<T> {
+    fn drop(&mut self) {
+        give(std::mem::take(&mut self.buf));
+    }
+}
+
+/// Lease a zero-filled buffer of `len` elements from this thread's
+/// freelist (allocating only when nothing big enough is parked there).
+pub fn lease<T: ArenaElem>(len: usize) -> Scratch<T> {
+    let recycled = T::freelist().with(|fl| fl.borrow_mut().pop());
+    let mut buf = match recycled {
+        Some(b) if b.capacity() >= len => {
+            ARENA_HITS.fetch_add(1, Ordering::Relaxed);
+            b
+        }
+        Some(b) => {
+            // too small: the resize below reallocates
+            ARENA_MISSES.fetch_add(1, Ordering::Relaxed);
+            b
+        }
+        None => {
+            ARENA_MISSES.fetch_add(1, Ordering::Relaxed);
+            Vec::new()
+        }
+    };
+    buf.clear();
+    buf.resize(len, T::default());
+    Scratch { buf }
+}
+
+/// [`lease`] for the decode scratch (`Vec<i8>`) buffers.
+pub fn lease_i8(len: usize) -> Scratch<i8> {
+    lease(len)
+}
+
+/// [`lease`] for the dequantized-weight (`Vec<f32>`) buffers.
+pub fn lease_f32(len: usize) -> Scratch<f32> {
+    lease(len)
+}
+
+/// Park a buffer in this thread's freelist (e.g. a delta buffer the
+/// inference thread has applied and shipped back).
+pub fn give<T: ArenaElem>(buf: Vec<T>) {
+    if buf.capacity() == 0 {
+        return;
+    }
+    T::freelist().with(|fl| {
+        let mut fl = fl.borrow_mut();
+        if fl.len() < MAX_FREE_PER_THREAD {
+            fl.push(buf);
+        }
+    });
+}
+
+/// `(hits, misses)` across all threads since process start: `misses`
+/// counts leases that allocated — the bench's steady-state
+/// allocations-per-scrub-tick gauge reads its delta.
+pub fn arena_stats() -> (u64, u64) {
+    (
+        ARENA_HITS.load(Ordering::Relaxed),
+        ARENA_MISSES.load(Ordering::Relaxed),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_arrive_in_submission_order() {
+        let pool = Pool::new(4);
+        let out = pool.run((0..200).collect::<Vec<usize>>(), 8, |i| i * 3);
+        assert_eq!(out, (0..200).map(|i| i * 3).collect::<Vec<_>>());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_matches_scoped_reference() {
+        let pool = Pool::new(3);
+        let jobs: Vec<(usize, u64)> = (0..57).map(|i| (i, i as u64 * 0x9E37)).collect();
+        let f = |(i, x): (usize, u64)| (i, x.rotate_left(7) ^ 0xABCD);
+        for workers in [1usize, 2, 7, 16] {
+            let mut a = pool.run(jobs.clone(), workers, f);
+            let mut b = run_jobs_scoped(jobs.clone(), workers, f);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "{workers} workers");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn scope_style_borrowed_windows() {
+        // the port surface: jobs hold &mut windows of a caller buffer
+        let pool = Pool::new(3);
+        let mut buf = vec![0u32; 1000];
+        let jobs: Vec<(usize, &mut [u32])> = buf.chunks_mut(100).enumerate().collect();
+        let out = pool.run(jobs, 4, |(i, win)| {
+            for (k, v) in win.iter_mut().enumerate() {
+                *v = (i * 100 + k) as u32;
+            }
+            i
+        });
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+        assert!(buf.iter().enumerate().all(|(k, &v)| v == k as u32));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn nested_runs_on_a_small_pool_complete() {
+        // deadlock-freedom: 6 outer jobs each fan out 5 inner jobs on a
+        // 2-thread pool; caller participation + helping must drain it
+        let pool = Pool::new(2);
+        let outer = pool.run((0..6u64).collect::<Vec<_>>(), 4, |i| {
+            pool.run((0..5u64).collect::<Vec<_>>(), 4, |j| i * 10 + j)
+                .iter()
+                .sum::<u64>()
+        });
+        let mut want = Vec::new();
+        for i in 0..6u64 {
+            want.push((0..5).map(|j| i * 10 + j).sum::<u64>());
+        }
+        assert_eq!(outer, want);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn job_panics_propagate_and_pool_survives() {
+        let pool = Pool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run((0..8).collect::<Vec<i32>>(), 4, |j| {
+                if j == 5 {
+                    panic!("job {j} exploded");
+                }
+                j
+            })
+        }));
+        assert!(r.is_err(), "job panic must reach the caller");
+        // the pool is intact: workers alive, next run clean
+        assert_eq!(pool.run(vec![1, 2, 3], 4, |x| x * 2), vec![2, 4, 6]);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_run_degrades_gracefully() {
+        let pool = Pool::new(2);
+        assert_eq!(pool.run(vec![1, 2, 3], 4, |x| x + 1), vec![2, 3, 4]);
+        pool.shutdown();
+        pool.shutdown(); // second shutdown must not hang or panic
+        // tickets queued on a dead pool are reclaimed by the caller
+        assert_eq!(pool.run(vec![1, 2, 3], 4, |x| x * 2), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn global_run_jobs_smoke() {
+        let out = run_jobs((0..40).collect::<Vec<usize>>(), 4, |i| i + 1);
+        assert_eq!(out, (1..41).collect::<Vec<_>>());
+        // serial fast paths
+        assert_eq!(run_jobs(vec![7], 8, |x: i32| x), vec![7]);
+        assert_eq!(run_jobs(vec![1, 2], 1, |x: i32| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn arena_recycles_buffers() {
+        // thread-local freelists: this sequence is deterministic even
+        // with other tests leasing on other threads (stats are global,
+        // so compare deltas only)
+        let big = 1 << 20;
+        drop(lease_i8(big)); // allocates, then parks in the freelist
+        let (h0, _) = arena_stats();
+        let b = lease_i8(big); // must recycle the parked buffer
+        let (h1, _) = arena_stats();
+        assert!(h1 > h0, "re-lease must hit the freelist");
+        assert!(b.capacity() >= big);
+        assert!(b.iter().all(|&x| x == 0), "leases are zero-filled");
+        let v = b.take(); // detach (the channel-crossing path)
+        give(v); // hand it back
+        let (h1, _) = arena_stats();
+        let c = lease_f32(64);
+        drop(c);
+        let (h2, m2) = arena_stats();
+        drop(lease_f32(64));
+        let (h3, m3) = arena_stats();
+        assert!(h3 > h2 || m3 == m2, "f32 freelist must recycle too");
+        let _ = h1;
+    }
+}

@@ -3,7 +3,9 @@
 //!
 //! The stored image stays contiguous (it models one region of physical
 //! memory), but every decode/scrub pass runs per shard through the
-//! `Protection` range APIs, fanned out over a scoped-thread worker pool.
+//! `Protection` range APIs, fanned out over the persistent worker pool
+//! ([`crate::memory::pool`] — long-lived parked threads, no per-pass
+//! spawn/join).
 //! Shard workers iterate 512-byte *tiles* (the word-parallel engine of
 //! `ecc::tile`), not blocks: a clean tile is proven clean by one
 //! OR-reduction, so the common fault-free epoch costs a copy (decode)
@@ -20,6 +22,7 @@
 
 use crate::ecc::{DecodeStats, Encoded, Protection};
 use crate::memory::fault::{FaultInjector, FaultModel};
+use crate::memory::pool::{self, run_jobs};
 use crate::model::manifest::Layer;
 
 /// Per-shard bookkeeping.
@@ -67,6 +70,13 @@ pub struct ShardedBank {
     pristine: Encoded,
     shards: Vec<ShardState>,
     workers: usize,
+    /// Code-block indices whose stored bytes may differ from pristine:
+    /// fault injection records every hit block, and a scrub pass only
+    /// ever writes inside blocks already carrying a fault (a zero
+    /// syndrome is never "corrected"). `None` after a direct
+    /// [`ShardedBank::image_mut`] mutation — [`ShardedBank::reset`]
+    /// then falls back to a full pristine restore.
+    touched: Option<Vec<usize>>,
     /// Cumulative decode statistics across all shards.
     pub lifetime: DecodeStats,
     /// Cumulative bits injected.
@@ -107,18 +117,17 @@ impl ShardedBank {
             strategy,
             shards,
             workers: workers.max(1),
+            touched: Some(Vec::new()),
             lifetime: DecodeStats::default(),
             faults_injected: 0,
         }
     }
 
     /// A sensible worker count for this machine (capped: scrubbing is
-    /// memory-bound well before it is core-bound).
+    /// memory-bound well before it is core-bound). Same policy as the
+    /// pool size, so "auto" saturates exactly the shared pool.
     pub fn auto_workers() -> usize {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(8)
+        crate::memory::pool::Pool::default_threads()
     }
 
     pub fn strategy_name(&self) -> &'static str {
@@ -155,6 +164,15 @@ impl ShardedBank {
         &self.image
     }
 
+    /// Mutable access to the stored image for direct manipulation
+    /// (tests, custom corruption). Voids the copy-on-write reset
+    /// tracking: the next [`ShardedBank::reset`] does a full pristine
+    /// restore instead of a touched-blocks-only copy.
+    pub fn image_mut(&mut self) -> &mut Encoded {
+        self.touched = None;
+        &mut self.image
+    }
+
     /// Stored bits (data + check storage) — fault-rate denominator.
     pub fn total_bits(&self) -> u64 {
         self.image.total_bits()
@@ -180,9 +198,22 @@ impl ShardedBank {
             .min(self.shards.len() - 1)
     }
 
+    /// Code-block index owning a stored-bit position (oob bits map back
+    /// through their block, like `shard_of_bit`) — the grain of the
+    /// copy-on-write reset tracking.
+    fn block_of_bit(&self, pos: u64) -> usize {
+        let byte = (pos / 8) as usize;
+        if byte < self.image.data.len() {
+            byte / self.strategy.block_bytes()
+        } else {
+            (byte - self.image.data.len()) / self.strategy.oob_bytes_per_block()
+        }
+    }
+
     /// Inject faults at `rate` with the given model and seed; flips the
-    /// same bit sequence as the monolithic bank and marks the shards
-    /// those bits land in dirty.
+    /// same bit sequence as the monolithic bank, marks the shards those
+    /// bits land in dirty, and records the hit blocks for the
+    /// copy-on-write [`ShardedBank::reset`].
     pub fn inject(&mut self, model: FaultModel, rate: f64, seed: u64) -> u64 {
         let mut inj = FaultInjector::new(model, seed);
         let n = FaultInjector::flip_count(self.image.total_bits(), rate);
@@ -190,8 +221,31 @@ impl ShardedBank {
         let flipped = positions.len() as u64;
         for pos in positions {
             let shard = self.shard_of_bit(pos);
+            let block = self.block_of_bit(pos);
             self.image.flip_bit(pos);
             self.shards[shard].dirty = true;
+            if let Some(t) = &mut self.touched {
+                // burst-family models emit runs of adjacent bits, so
+                // consecutive entries usually repeat one block
+                if t.last() != Some(&block) {
+                    t.push(block);
+                }
+            }
+        }
+        // Past ~1/4 of all *distinct* blocks a full restore beats
+        // per-span copies — and a serving bank that injects every epoch
+        // but never resets must not grow the log unboundedly. Dedup
+        // before judging, so burst models (many flips, few blocks) keep
+        // their copy-on-write resets.
+        let blocks = self.image.data.len() / self.strategy.block_bytes().max(1);
+        let cap = (blocks / 4).max(64);
+        if self.touched.as_ref().is_some_and(|t| t.len() > cap) {
+            let t = self.touched.as_mut().unwrap();
+            t.sort_unstable();
+            t.dedup();
+            if t.len() > cap {
+                self.touched = None;
+            }
         }
         self.faults_injected += flipped;
         flipped
@@ -257,7 +311,9 @@ impl ShardedBank {
         let image = &self.image;
         let jobs = split_windows(&ranges, out);
         let per_shard = run_jobs(jobs, self.workers, |(i, s, e, win)| {
-            let mut scratch = Vec::new();
+            // decode scratch from the worker's arena, not a fresh Vec —
+            // steady-state epochs are allocation-free
+            let mut scratch = pool::lease_i8(0);
             let stats = crate::quant::decode_dequant_range(
                 strategy,
                 image,
@@ -298,8 +354,40 @@ impl ShardedBank {
     }
 
     /// Reset the image to its pristine (fault-free) state.
+    ///
+    /// Copy-on-write: only the code blocks hit by fault injection since
+    /// the last reset are copied back (a scrub pass only ever writes
+    /// inside blocks already carrying a fault — zero-syndrome blocks
+    /// are untouched and parity's ragged-tail padding mask is
+    /// value-neutral on pristine bytes — so restoring the fault-touched
+    /// blocks restores the whole image; the COW-vs-full-reset proptest
+    /// pins this down for every fault model). A trial at realistic
+    /// rates therefore resets a few hundred bytes, not megabytes. A
+    /// direct [`ShardedBank::image_mut`] mutation voids the tracking
+    /// and forces a full restore.
     pub fn reset(&mut self) {
-        self.image = self.pristine.clone();
+        match self.touched.take() {
+            Some(mut blocks) => {
+                blocks.sort_unstable();
+                blocks.dedup();
+                let bb = self.strategy.block_bytes();
+                let opb = self.strategy.oob_bytes_per_block();
+                let (dlen, olen) = (self.image.data.len(), self.image.oob.len());
+                for b in blocks {
+                    let (lo, hi) = (b * bb, ((b + 1) * bb).min(dlen));
+                    self.image.data[lo..hi].copy_from_slice(&self.pristine.data[lo..hi]);
+                    if opb > 0 {
+                        let (ol, oh) = (b * opb, ((b + 1) * opb).min(olen));
+                        self.image.oob[ol..oh].copy_from_slice(&self.pristine.oob[ol..oh]);
+                    }
+                }
+            }
+            None => {
+                self.image.data.copy_from_slice(&self.pristine.data);
+                self.image.oob.copy_from_slice(&self.pristine.oob);
+            }
+        }
+        self.touched = Some(Vec::new());
         for s in &mut self.shards {
             s.dirty = false;
             s.last_scrub = DecodeStats::default();
@@ -352,39 +440,6 @@ fn split_windows<'a, T>(
         off = e;
     }
     jobs
-}
-
-/// Fan `jobs` out over at most `workers` scoped threads (round-robin so
-/// the ragged last shard does not serialize behind a full bucket);
-/// returns each job's result (bucket order, not submission order).
-/// Serial on the calling thread when one worker or one job. This is the
-/// worker pool behind shard scrub/decode passes and the fault-injection
-/// campaign engine (`harness::campaign`).
-pub fn run_jobs<J, R>(jobs: Vec<J>, workers: usize, f: impl Fn(J) -> R + Sync) -> Vec<R>
-where
-    J: Send,
-    R: Send,
-{
-    if workers <= 1 || jobs.len() <= 1 {
-        return jobs.into_iter().map(f).collect();
-    }
-    let nw = workers.min(jobs.len());
-    let mut buckets: Vec<Vec<J>> = (0..nw).map(|_| Vec::new()).collect();
-    for (k, job) in jobs.into_iter().enumerate() {
-        buckets[k % nw].push(job);
-    }
-    let f = &f;
-    let mut results = Vec::new();
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = buckets
-            .into_iter()
-            .map(|bucket| scope.spawn(move || bucket.into_iter().map(f).collect::<Vec<R>>()))
-            .collect();
-        for h in handles {
-            results.extend(h.join().expect("shard worker panicked"));
-        }
-    });
-    results
 }
 
 /// Decode every shard window of `image` into the matching window of
@@ -521,7 +576,7 @@ mod tests {
         assert!(sb.take_dirty().is_empty());
         // a scrub that corrects something re-marks exactly the hit shard
         sb.reset();
-        sb.image.flip_bit(5); // one data-bit flip, lands in shard 0
+        sb.image_mut().flip_bit(5); // one data-bit flip, lands in shard 0
         let stats = sb.scrub();
         assert_eq!(stats.corrected, 1);
         assert_eq!(sb.take_dirty(), vec![0]);
@@ -539,7 +594,7 @@ mod tests {
         let mut sb = ShardedBank::new(strategy_by_name("ecc").unwrap(), &w, 4, 1).unwrap();
         let data_bits = 512 * 8;
         // oob byte 0 -> block 0 -> shard 0; last oob byte -> last shard
-        sb.image.flip_bit(data_bits);
+        sb.image_mut().flip_bit(data_bits);
         sb.shards[sb.shard_of_bit(data_bits)].dirty = true;
         let last = sb.total_bits() - 1;
         let idx = sb.shard_of_bit(last);
@@ -559,6 +614,39 @@ mod tests {
         assert_eq!(out, w);
         assert_eq!(stats.corrected + stats.detected, 0);
         assert!(sb.take_dirty().is_empty());
+    }
+
+    #[test]
+    fn cow_reset_restores_after_inject_and_scrub() {
+        // Scrub modifies stored bytes (corrections, parity zeroing) —
+        // but only inside fault-touched blocks, so the COW reset must
+        // still restore the exact pristine image. Ragged tail included.
+        let w = wot_weights(8 * 37, 15);
+        for name in ["faulty", "zero", "ecc", "in-place"] {
+            let pristine = ShardedBank::new(strategy_by_name(name).unwrap(), &w, 5, 2).unwrap();
+            let mut sb = ShardedBank::new(strategy_by_name(name).unwrap(), &w, 5, 2).unwrap();
+            sb.inject(FaultModel::Burst { len: 3 }, 5e-3, 21);
+            sb.scrub();
+            sb.inject(FaultModel::Uniform, 1e-3, 22); // touched spans accumulate
+            sb.reset();
+            assert_eq!(sb.image().data, pristine.image().data, "{name}: data residue");
+            assert_eq!(sb.image().oob, pristine.image().oob, "{name}: oob residue");
+            assert!(sb.take_dirty().is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn direct_image_mutation_falls_back_to_full_restore() {
+        let w = wot_weights(512, 23);
+        let mut sb = ShardedBank::new(strategy_by_name("ecc").unwrap(), &w, 4, 2).unwrap();
+        // an untracked mutation: COW bookkeeping cannot see it...
+        sb.image_mut().data[100] ^= 0xFF;
+        sb.image_mut().oob[3] ^= 0x10;
+        // ...so reset must restore everything anyway
+        sb.reset();
+        let fresh = ShardedBank::new(strategy_by_name("ecc").unwrap(), &w, 4, 2).unwrap();
+        assert_eq!(sb.image().data, fresh.image().data);
+        assert_eq!(sb.image().oob, fresh.image().oob);
     }
 
     #[test]

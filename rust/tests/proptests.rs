@@ -8,7 +8,7 @@
 //! decode laws over arbitrary WOT-satisfying buffers, JSON roundtrip for
 //! arbitrary values, PRNG distinct-sampling laws.
 
-use zsecc::ecc::{all_strategies, strategy_by_name, Encoded};
+use zsecc::ecc::{all_strategies, strategy_by_name, DecodeStats, Encoded};
 use zsecc::util::json::Json;
 use zsecc::util::rng::Rng;
 
@@ -425,6 +425,125 @@ fn prop_sharded_bank_equals_whole_buffer_path() {
                     || mono.image().oob != sb.image().oob
                 {
                     return Err(format!("{name} x{shards}: scrubbed images differ"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- pool equivalence --
+
+#[test]
+fn prop_pool_run_jobs_equals_scoped_reference() {
+    use zsecc::memory::pool::{run_jobs, run_jobs_scoped};
+    // The persistent pool's compat wrapper and the old scoped-spawn
+    // fan-out must compute the same result multiset for any job list
+    // and worker count (pool results are additionally in submission
+    // order; scoped results are bucket-ordered, so compare sorted).
+    check("pool run_jobs == scoped", 25, |rng, size| {
+        let njobs = 1 + rng.below(3 * size as u64 + 1) as usize;
+        let jobs: Vec<(usize, u64)> = (0..njobs).map(|i| (i, rng.next_u64())).collect();
+        let f = |(i, x): (usize, u64)| (i, x.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17));
+        for workers in [1usize, 2, 7, zsecc::memory::ShardedBank::auto_workers()] {
+            let mut a = run_jobs(jobs.clone(), workers, f);
+            let mut b = run_jobs_scoped(jobs.clone(), workers, f);
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                return Err(format!("pool != scoped at {workers} workers"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pool_backed_bank_identical_across_worker_counts() {
+    use zsecc::memory::{FaultModel, ShardedBank};
+    // ShardedBank decode/scrub passes ride the persistent pool; the
+    // DecodeStats, decode output and scrubbed image must be identical
+    // for every worker count (1 = the pool-free serial path) and every
+    // strategy.
+    check("bank identical across workers", 12, |rng, size| {
+        let nblocks = 1 + rng.below(size.max(1) as u64 + 24) as usize;
+        let w8 = wot_weights(rng, nblocks);
+        let w16 = ext_weights(rng, nblocks);
+        let seed = rng.next_u64();
+        for name in ["faulty", "zero", "ecc", "in-place", "bch16"] {
+            let w: &[i8] = if name == "bch16" { &w16 } else { &w8 };
+            let mut reference: Option<(Vec<i8>, DecodeStats, DecodeStats, Vec<u8>, Vec<u8>)> =
+                None;
+            for workers in [1usize, 2, 7, ShardedBank::auto_workers()] {
+                let mut sb = ShardedBank::new(strategy_by_name(name).unwrap(), w, 13, workers)
+                    .map_err(|e| e.to_string())?;
+                sb.inject(FaultModel::Uniform, 2e-3, seed);
+                let mut out = vec![0i8; w.len()];
+                let read_stats = sb.read(&mut out);
+                let scrub_stats = sb.scrub();
+                let got = (
+                    out,
+                    read_stats,
+                    scrub_stats,
+                    sb.image().data.clone(),
+                    sb.image().oob.clone(),
+                );
+                match &reference {
+                    None => reference = Some(got),
+                    Some(want) => {
+                        if got != *want {
+                            return Err(format!(
+                                "{name}: {workers}-worker pass differs from 1-worker pass"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// --------------------------------------------- copy-on-write reset --
+
+#[test]
+fn prop_cow_reset_equals_full_reset_for_every_fault_model() {
+    use zsecc::memory::ShardedBank;
+    // Trial reset is copy-on-write (only fault-touched code blocks are
+    // copied back from the pristine image). For every fault model and
+    // strategy — scrub writes in between included — the reset image
+    // must be byte-identical to pristine, and post-reset behavior
+    // (stuck-at reads stored cells!) identical to a fresh bank's.
+    check("cow reset == full reset", 12, |rng, size| {
+        let nblocks = 1 + rng.below(size.max(1) as u64 + 16) as usize;
+        let w8 = wot_weights(rng, nblocks);
+        let w16 = ext_weights(rng, nblocks);
+        for model in fault_model_menagerie(rng) {
+            let seed = rng.next_u64();
+            for name in ["faulty", "zero", "ecc", "in-place", "bch16"] {
+                let w: &[i8] = if name == "bch16" { &w16 } else { &w8 };
+                let mut fresh = ShardedBank::new(strategy_by_name(name).unwrap(), w, 6, 2)
+                    .map_err(|e| e.to_string())?;
+                let mut sb = ShardedBank::new(strategy_by_name(name).unwrap(), w, 6, 2)
+                    .map_err(|e| e.to_string())?;
+                sb.inject(model, 2e-2, seed);
+                if rng.below(2) == 1 {
+                    sb.scrub(); // scrub's stored-byte writes must restore too
+                }
+                sb.reset();
+                let clean = sb.image().data == fresh.image().data
+                    && sb.image().oob == fresh.image().oob;
+                if !clean {
+                    return Err(format!("{} {name}: COW reset left residue", model.tag()));
+                }
+                // behavior after reset matches a never-faulted bank
+                let seed2 = seed ^ 0xD1CE;
+                sb.inject(model, 1e-2, seed2);
+                fresh.inject(model, 1e-2, seed2);
+                let same = sb.image().data == fresh.image().data
+                    && sb.image().oob == fresh.image().oob;
+                if !same {
+                    return Err(format!("{} {name}: post-reset divergence", model.tag()));
                 }
             }
         }
