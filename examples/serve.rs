@@ -11,6 +11,7 @@
 use std::time::{Duration, Instant};
 
 use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+use zsecc::memory::ScrubPolicy;
 use zsecc::model::EvalSet;
 use zsecc::util::cli::Args;
 use zsecc::util::rng::Rng;
@@ -28,17 +29,20 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 5)?),
         },
         scrub_interval: Some(Duration::from_millis(args.u64_or("scrub-ms", 250)?)),
+        scrub_policy: ScrubPolicy::parse(&args.str_or("scrub-policy", "adaptive"))?,
+        scrub_max_interval: None, // 16 x scrub interval
         fault_rate_per_interval: args.f64_or("fault-rate", 1e-6)?,
         fault_seed: args.u64_or("seed", 1)?,
         shards: args.usize_or("shards", 8)?,
         scrub_workers: args.usize_or("scrub-workers", 4)?,
     };
     println!(
-        "serving {model}: strategy={} batch<={} max_wait={:?} scrub={:?} fault={}/interval",
+        "serving {model}: strategy={} batch<={} max_wait={:?} scrub={:?} ({}) fault={}/interval",
         cfg.strategy,
         cfg.policy.max_batch,
         cfg.policy.max_wait,
         cfg.scrub_interval,
+        cfg.scrub_policy.tag(),
         cfg.fault_rate_per_interval
     );
     let ds = EvalSet::load(&artifacts.join("dataset.eval.bin"))?;

@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""Bench-regression guard over the BENCH_ecc.json JSON-lines ledger.
+
+The ledger is append-only: every CI run (and any local
+``cargo bench --bench ecc_hotpath -- --out BENCH_ecc.json``) adds one
+record. This guard compares the freshly appended record (the last line)
+against the previous *measured* record — the latest earlier line that
+carries ``tile`` and ``pool`` sections; schema-note lines don't count —
+and fails on a >25% throughput drop in either section:
+
+* ``tile``: per-strategy clean-decode GB/s (``<strategy>/scalar`` and
+  ``<strategy>/tiled`` keys), compared key by key;
+* ``pool``: the ``scoped_gbps``/``pool_gbps`` arrays, compared element
+  by element (positions index the shard-count sweep).
+
+Exit codes: 0 pass/skip, 1 regression. Set ``BENCH_WARN_ONLY=1`` to
+demote regressions to warnings (exit 0) while a legitimate perf change
+lands; the comparison is still printed.
+
+``--self-test`` runs the comparison logic against fabricated records
+and exits nonzero on any logic error — CI runs it first, so the guard
+itself is exercised even while the ledger holds no measured history.
+"""
+
+import json
+import os
+import sys
+
+THRESHOLD = 0.25  # fail when new < old * (1 - THRESHOLD)
+
+
+def is_measured(record):
+    """A record produced by the bench (not a schema note)."""
+    return isinstance(record, dict) and "tile" in record and "pool" in record
+
+
+def comparable(old, new):
+    """Records measured at different bench sizes (e.g. a committed local
+    1 MiB run vs CI's 64 KiB) are not comparable — GB/s shifts from the
+    working-set size alone would swamp the 25% gate."""
+    return old.get("bytes_per_op") == new.get("bytes_per_op")
+
+
+def load_ledger(path):
+    records = []
+    with open(path, encoding="utf-8") as fh:
+        for line_no, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as err:
+                raise SystemExit(f"{path}:{line_no}: unparseable ledger line: {err}")
+    return records
+
+
+def section_pairs(old, new):
+    """Yield (label, old_gbps, new_gbps) for every guarded metric."""
+    old_tile, new_tile = old.get("tile", {}), new.get("tile", {})
+    for key in sorted(old_tile):
+        if key in new_tile:
+            yield f"tile/{key}", old_tile[key], new_tile[key]
+    old_pool, new_pool = old.get("pool", {}), new.get("pool", {})
+    for series in ("scoped_gbps", "pool_gbps"):
+        olds, news = old_pool.get(series, []), new_pool.get(series, [])
+        shards = old_pool.get("shards", [])
+        for i, (o, n) in enumerate(zip(olds, news)):
+            label = f"{shards[i]:g}sh" if i < len(shards) else str(i)
+            yield f"pool/{series}[{label}]", o, n
+
+
+def compare(old, new, threshold=THRESHOLD):
+    """Return the list of regressions as (label, old, new, drop)."""
+    regressions = []
+    for label, o, n in section_pairs(old, new):
+        if not (isinstance(o, (int, float)) and isinstance(n, (int, float))):
+            continue
+        if o <= 0:
+            continue
+        drop = 1.0 - n / o
+        marker = "REGRESSION" if drop > threshold else "ok"
+        print(f"  {label:<34} {o:10.3f} -> {n:10.3f} GB/s  ({-drop:+7.1%}) {marker}")
+        if drop > threshold:
+            regressions.append((label, o, n, drop))
+    return regressions
+
+
+def self_test():
+    old = {
+        "tile": {"ecc/scalar": 10.0, "ecc/tiled": 40.0, "zero/tiled": 8.0},
+        "pool": {"shards": [4, 16], "scoped_gbps": [5.0, 6.0], "pool_gbps": [7.0, 8.0]},
+    }
+    flat = {
+        "tile": {"ecc/scalar": 9.0, "ecc/tiled": 39.0, "zero/tiled": 8.4},
+        "pool": {"shards": [4, 16], "scoped_gbps": [4.9, 5.0], "pool_gbps": [6.9, 7.9]},
+    }
+    slow = {
+        "tile": {"ecc/scalar": 10.0, "ecc/tiled": 20.0, "zero/tiled": 8.0},
+        "pool": {"shards": [4, 16], "scoped_gbps": [5.0, 6.0], "pool_gbps": [7.0, 3.0]},
+    }
+    print("[self-test] within-threshold record:")
+    assert compare(old, flat) == [], "noise within 25% must pass"
+    print("[self-test] regressed record:")
+    bad = compare(old, slow)
+    assert [b[0] for b in bad] == ["tile/ecc/tiled", "pool/pool_gbps[16sh]"], bad
+    note = {"bench": "ecc_hotpath", "note": "schema"}
+    assert not is_measured(note) and is_measured(old)
+    # mismatched shard sweeps only compare the common prefix
+    short = {"tile": {}, "pool": {"shards": [4], "pool_gbps": [7.0]}}
+    assert compare(old, short) == []
+    # records from different bench sizes must not be compared at all
+    ci = {**old, "bytes_per_op": 65536}
+    local = {**old, "bytes_per_op": 1 << 20}
+    assert comparable(ci, dict(ci)) and not comparable(local, ci)
+    print("[self-test] all comparisons behave; guard logic OK")
+
+
+def main(argv):
+    if len(argv) == 2 and argv[1] == "--self-test":
+        self_test()
+        return 0
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    records = load_ledger(argv[1])
+    if not records:
+        raise SystemExit(f"{argv[1]}: empty ledger")
+    new = records[-1]
+    if not is_measured(new):
+        raise SystemExit(f"{argv[1]}: last line is not a measured bench record")
+    priors = [r for r in records[:-1] if is_measured(r)]
+    if not priors:
+        print("bench guard: no prior measured record in the ledger — skipping")
+        return 0
+    old = priors[-1]
+    if not comparable(old, new):
+        print(
+            f"bench guard: previous measured record is a different bench size "
+            f"({old.get('bytes_per_op')} vs {new.get('bytes_per_op')} bytes/op) — skipping"
+        )
+        return 0
+    print(
+        f"bench guard: comparing against previous measured record "
+        f"({old.get('bytes_per_op', '?')} bytes/op), threshold {THRESHOLD:.0%}"
+    )
+    regressions = compare(old, new)
+    if not regressions:
+        print("bench guard: OK")
+        return 0
+    for label, o, n, drop in regressions:
+        print(f"bench guard: {label} dropped {drop:.1%} ({o:.3f} -> {n:.3f} GB/s)")
+    if os.environ.get("BENCH_WARN_ONLY") == "1":
+        print("bench guard: BENCH_WARN_ONLY=1 — reporting only, not failing")
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

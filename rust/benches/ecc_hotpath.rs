@@ -20,10 +20,11 @@
 //! size, the default is a VGG16_s-scale 1 MiB).
 
 use zsecc::ecc::{strategy_by_name, Encoded, Protection};
+use zsecc::harness::scrubsim;
 use zsecc::memory::{plan_shards, pool, FaultInjector, FaultModel, ShardedBank};
 use zsecc::quant::dequantize_into;
 use zsecc::util::cli::Args;
-use zsecc::util::json::{arr, num, obj, s};
+use zsecc::util::json::{arr, num, obj, s, Json};
 use zsecc::util::rng::Rng;
 use zsecc::util::timer::bench;
 
@@ -323,6 +324,31 @@ fn main() {
         a
     };
 
+    // adaptive scrub scheduling: hotspot-migration scenario at equal
+    // scrub bandwidth, fixed vs adaptive residuals. Deterministic
+    // counts (virtual time), so the record is machine-independent; the
+    // bench-regression guard gates only the tile/pool throughput.
+    let (sched_fixed, sched_adaptive) = {
+        let cfg = scrubsim::SimConfig::default();
+        let scenario = scrubsim::Scenario::hotspot_migration(7);
+        let fixed = scrubsim::run_sim(&cfg, &scenario, zsecc::memory::ScrubPolicy::Fixed)
+            .expect("scrubsim fixed");
+        let adaptive = scrubsim::run_sim(&cfg, &scenario, zsecc::memory::ScrubPolicy::Adaptive)
+            .expect("scrubsim adaptive");
+        println!("== sched: hotspot-migration scenario, {} passes each ==", fixed.scrub_passes);
+        println!(
+            "    -> residual uncorrectable blocks: fixed {} | adaptive {} ({})",
+            fixed.residual_uncorrectable,
+            adaptive.residual_uncorrectable,
+            if adaptive.residual_uncorrectable < fixed.residual_uncorrectable {
+                "adaptive wins"
+            } else {
+                "NO WIN"
+            }
+        );
+        (fixed, adaptive)
+    };
+
     if args.bool("json") || args.str_opt("out").is_some() {
         // tile section: per-strategy clean-decode GB/s, scalar vs tiled
         let tile_flat: Vec<(String, f64)> = tile_records
@@ -345,6 +371,36 @@ fn main() {
                     .collect()),
             ),
             ("inplace_vs_secded_decode_ratio", num(claim_ratio)),
+            (
+                "sched",
+                obj(vec![
+                    ("scenario", s("migrate")),
+                    ("scrub_passes", num(sched_fixed.scrub_passes as f64)),
+                    (
+                        "fixed_residual_uncorrectable",
+                        num(sched_fixed.residual_uncorrectable as f64),
+                    ),
+                    (
+                        "adaptive_residual_uncorrectable",
+                        num(sched_adaptive.residual_uncorrectable as f64),
+                    ),
+                    (
+                        "fixed_residual_wrong_weights",
+                        num(sched_fixed.residual_wrong_weights as f64),
+                    ),
+                    (
+                        "adaptive_residual_wrong_weights",
+                        num(sched_adaptive.residual_wrong_weights as f64),
+                    ),
+                    (
+                        "adaptive_wins",
+                        Json::Bool(
+                            sched_adaptive.residual_uncorrectable
+                                < sched_fixed.residual_uncorrectable,
+                        ),
+                    ),
+                ]),
+            ),
             (
                 "pool",
                 obj(vec![

@@ -1,13 +1,19 @@
 //! Serving benchmark: coordinator throughput/latency under open-loop
 //! Poisson load, swept over the batching policy — first with a mock
 //! executor (pure coordinator overhead), then over the real PJRT model
-//! when artifacts exist.
+//! when artifacts exist. `--scrub-policy fixed|adaptive` selects the
+//! scrub scheduling policy of the real-model section (BENCH_ecc.json
+//! records the scheduler's fixed-vs-adaptive comparison in its `sched`
+//! section; this flag lets the serving latency numbers be taken under
+//! either policy too).
 
 use std::time::{Duration, Instant};
 
-use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
 use zsecc::coordinator::server::BatchExec;
+use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+use zsecc::memory::ScrubPolicy;
 use zsecc::model::EvalSet;
+use zsecc::util::cli::Args;
 use zsecc::util::rng::Rng;
 use zsecc::util::stats::Series;
 
@@ -65,6 +71,8 @@ fn drive(srv: &Server, dim: usize, rps: f64, secs: f64, seed: u64) -> (f64, Seri
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().unwrap_or_default();
+    let scrub_policy = ScrubPolicy::parse(&args.str_or("scrub-policy", "adaptive"))?;
     println!("== serving bench: coordinator overhead (mock executor, 2ms/batch) ==");
     println!(
         "{:<32} {:>10} {:>10} {:>10} {:>10}",
@@ -108,7 +116,10 @@ fn main() -> anyhow::Result<()> {
 
     let artifacts = zsecc::artifacts_dir();
     if artifacts.join("index.json").exists() {
-        println!("\n== serving bench: real PJRT model (squeezenet_s, in-place, live faults) ==");
+        println!(
+            "\n== serving bench: real PJRT model (squeezenet_s, in-place, live faults, {} scrub) ==",
+            scrub_policy.tag()
+        );
         println!(
             "{:<32} {:>10} {:>10} {:>10} {:>10}",
             "policy", "req/s", "mean ms", "p50 ms", "p99 ms"
@@ -122,6 +133,7 @@ fn main() -> anyhow::Result<()> {
                     max_wait: Duration::from_millis(wait_ms),
                 },
                 scrub_interval: Some(Duration::from_millis(250)),
+                scrub_policy,
                 fault_rate_per_interval: 1e-6,
                 fault_seed: 1,
                 ..ServerConfig::default()

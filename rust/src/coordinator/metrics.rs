@@ -1,8 +1,10 @@
 //! Serving metrics: request counters, latency series, memory-protection
 //! event counters (corrected / detected / scrub passes), execution
-//! failures, and per-shard scrub/refresh counters for the sharded store.
+//! failures, per-shard scrub/refresh counters for the sharded store,
+//! and the scrub scheduler's per-shard BER/deadline/overdue gauges.
 
 use crate::ecc::DecodeStats;
+use crate::memory::ShardSchedule;
 use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -30,6 +32,10 @@ pub struct Metrics {
     pub batch_sizes_sum: AtomicU64,
     pub corrected: AtomicU64,
     pub detected: AtomicU64,
+    /// Scrub-loop wakeups. Under the fixed policy every wakeup scrubs
+    /// every shard (a full epoch); under the adaptive policy a wakeup
+    /// scrubs only the due shards — per-shard pass counts live in
+    /// [`Metrics::shard_counters`] / [`Metrics::shard_schedules`].
     pub scrubs: AtomicU64,
     pub faults_injected: AtomicU64,
     /// Refresh *messages* applied by the inference thread (one per
@@ -46,6 +52,10 @@ pub struct Metrics {
     pub exec_failures: AtomicU64,
     latency_us: Mutex<Series>,
     shards: Mutex<Vec<ShardCounters>>,
+    /// Scheduler gauges, one slot per shard: Wilson BER bounds, current
+    /// interval, deadline headroom, cumulative overdue passes. Written
+    /// wholesale by the scrub loop after each wakeup.
+    sched: Mutex<Vec<ShardSchedule>>,
 }
 
 impl Metrics {
@@ -109,6 +119,17 @@ impl Metrics {
         self.shards.lock().unwrap().clone()
     }
 
+    /// Publish the scrub scheduler's per-shard gauges (one snapshot per
+    /// shard, replacing the previous set).
+    pub fn set_shard_schedules(&self, gauges: Vec<ShardSchedule>) {
+        *self.sched.lock().unwrap() = gauges;
+    }
+
+    /// Latest scheduler gauges (empty before the first scrub wakeup).
+    pub fn shard_schedules(&self) -> Vec<ShardSchedule> {
+        self.sched.lock().unwrap().clone()
+    }
+
     pub fn report(&self) -> String {
         let (mean, p50, p99, n) = self.latency_summary();
         let mut s = format!(
@@ -139,6 +160,17 @@ impl Metrics {
                 ));
             }
         }
+        drop(shards);
+        let sched = self.sched.lock().unwrap();
+        if !sched.is_empty() {
+            s.push_str("\n  shard  ber_upper  interval_s  deadline_in_s  passes overdue");
+            for (i, g) in sched.iter().enumerate() {
+                s.push_str(&format!(
+                    "\n  {:>5} {:>10.3e} {:>11.3} {:>14.3} {:>7} {:>7}",
+                    i, g.ber_upper, g.interval_secs, g.deadline_in_secs, g.passes, g.overdue
+                ));
+            }
+        }
         s
     }
 }
@@ -166,6 +198,114 @@ mod tests {
         assert_eq!(n, 100);
         assert!((p50 - 50.5).abs() < 1.0);
         assert!(p99 >= 99.0);
+    }
+
+    #[test]
+    fn latency_summary_under_concurrent_recorders() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let threads = 8;
+        let per_thread = 500;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        m.record_latency_us((t * per_thread + i) as f64);
+                        m.record_batch(2);
+                    }
+                })
+            })
+            .collect();
+        // summaries taken *while* recorders run must never panic and
+        // never observe a partial count
+        for _ in 0..50 {
+            let (_, _, _, n) = m.latency_summary();
+            assert!(n <= threads * per_thread);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (mean, p50, _, n) = m.latency_summary();
+        assert_eq!(n, threads * per_thread);
+        // the union of the 8 ranges is 0..4000: mean/p50 ~ 1999.5
+        assert!((mean - 1999.5).abs() < 1e-9, "mean = {mean}");
+        assert!((p50 - 1999.5).abs() < 1.0, "p50 = {p50}");
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2 * (threads * per_thread) as u64);
+        assert_eq!(m.batches.load(Ordering::Relaxed), (threads * per_thread) as u64);
+    }
+
+    #[test]
+    fn shard_counters_under_concurrent_recorders() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let threads = 6;
+        let per_thread = 400;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    let shard = t % 3; // three shards, two writers each
+                    let stats = DecodeStats {
+                        corrected: 1,
+                        detected: 0,
+                        zeroed: 0,
+                    };
+                    for i in 0..per_thread {
+                        if i % 2 == 0 {
+                            m.record_shard_scrub(shard, &stats);
+                        } else {
+                            m.record_shard_scrub(shard, &DecodeStats::default());
+                        }
+                        m.record_shard_refresh(shard);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let c = m.shard_counters();
+        assert_eq!(c.len(), 3);
+        for (i, shard) in c.iter().enumerate() {
+            assert_eq!(shard.scrubs, 2 * per_thread as u64, "shard {i}");
+            assert_eq!(shard.clean_scrubs, per_thread as u64, "shard {i}");
+            assert_eq!(shard.corrected, per_thread as u64, "shard {i}");
+            assert_eq!(shard.refreshes, 2 * per_thread as u64, "shard {i}");
+        }
+        assert_eq!(m.delta_refreshes.load(Ordering::Relaxed), (threads * per_thread) as u64);
+    }
+
+    #[test]
+    fn shard_schedule_gauges_roundtrip_and_render() {
+        let m = Metrics::new();
+        assert!(m.shard_schedules().is_empty());
+        let gauges = vec![
+            ShardSchedule {
+                ber_lower: 0.0,
+                ber_upper: 2.5e-7,
+                interval_secs: 3.2,
+                deadline_in_secs: 1.1,
+                passes: 9,
+                overdue: 0,
+            },
+            ShardSchedule {
+                ber_lower: 1e-6,
+                ber_upper: 8e-6,
+                interval_secs: 0.1,
+                deadline_in_secs: -0.4,
+                passes: 40,
+                overdue: 2,
+            },
+        ];
+        m.set_shard_schedules(gauges.clone());
+        assert_eq!(m.shard_schedules(), gauges);
+        let report = m.report();
+        assert!(report.contains("ber_upper"), "{report}");
+        assert!(report.contains("overdue"), "{report}");
+        // wholesale replacement, not accumulation
+        m.set_shard_schedules(gauges[..1].to_vec());
+        assert_eq!(m.shard_schedules().len(), 1);
     }
 
     #[test]

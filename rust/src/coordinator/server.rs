@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{BatchPolicy, Batcher, Request, Response};
 use super::metrics::Metrics;
 use crate::ecc::strategy_by_name;
-use crate::memory::{pool, FaultModel, ShardedBank};
+use crate::memory::{pool, FaultModel, SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardedBank};
 use crate::model::{load_weights, Manifest};
 use crate::quant::dequantize_into;
 use crate::runtime::{argmax_rows, Runtime};
@@ -33,10 +33,23 @@ pub struct ServerConfig {
     /// Protection strategy name ("faulty" | "zero" | "ecc" | "in-place").
     pub strategy: String,
     pub policy: BatchPolicy,
-    /// Scrub period; `None` disables the scrub loop.
+    /// Base scrub period; `None` disables the scrub loop. Under the
+    /// fixed policy every shard is scrubbed at this cadence; under the
+    /// adaptive policy it is the hot clamp (and the minimum interval).
     pub scrub_interval: Option<Duration>,
+    /// Scrub scheduling policy: `Fixed` is the classic
+    /// every-shard-every-interval loop, `Adaptive` gives each shard its
+    /// own deadline from the online BER estimator (hot shards scrub at
+    /// `scrub_interval`, clean shards decay toward
+    /// `scrub_max_interval`).
+    pub scrub_policy: ScrubPolicy,
+    /// Adaptive upper clamp on a shard's scrub interval; `None` uses
+    /// 16 x `scrub_interval`.
+    pub scrub_max_interval: Option<Duration>,
     /// Fraction of stored bits flipped per scrub interval (environmental
-    /// fault simulation); 0 disables injection.
+    /// fault simulation); 0 disables injection. Injection happens at
+    /// scrub wakeups, scaled by the elapsed time, so the fault pressure
+    /// per wall-clock second is the same under both policies.
     pub fault_rate_per_interval: f64,
     pub fault_seed: u64,
     /// Shard count of the protected weight store.
@@ -51,6 +64,8 @@ impl Default for ServerConfig {
             strategy: "in-place".into(),
             policy: BatchPolicy::default(),
             scrub_interval: Some(Duration::from_millis(100)),
+            scrub_policy: ScrubPolicy::Fixed,
+            scrub_max_interval: None,
             fault_rate_per_interval: 0.0,
             fault_seed: 1,
             shards: 8,
@@ -279,30 +294,88 @@ impl Server {
             let signal = stop.clone();
             let rate = cfg.fault_rate_per_interval;
             let seed0 = cfg.fault_seed;
+            let sched_cfg = match cfg.scrub_policy {
+                ScrubPolicy::Fixed => SchedulerConfig::fixed(interval),
+                ScrubPolicy::Adaptive => SchedulerConfig::adaptive(
+                    interval,
+                    cfg.scrub_max_interval.unwrap_or(interval * 16),
+                ),
+            };
             let t = std::thread::Builder::new()
                 .name("zsecc-scrub".into())
                 .spawn(move || {
                     let nshards = sb.num_shards();
+                    let shard_bits: Vec<u64> = (0..nshards).map(|i| sb.shard_bits(i)).collect();
+                    // The scheduler runs on elapsed time since thread
+                    // start; every shard starts due, so the first
+                    // wakeup is immediate and calibrates the estimator.
+                    let t0 = Instant::now();
+                    let mut sched = ScrubScheduler::new(sched_cfg, &shard_bits, Duration::ZERO);
                     let mut epoch = 0u64;
-                    // Interruptible wait: the loop exits the instant
-                    // shutdown() signals, never after a full interval.
-                    while !signal.wait_timeout(interval) {
+                    let mut last_wake = Duration::ZERO;
+                    // Fractional expected flips carried between wakeups:
+                    // adaptive wakeups can be closely spaced, and
+                    // rounding each wakeup's small expectation to a
+                    // whole count independently would systematically
+                    // under-inject (possibly to zero) vs the fixed
+                    // policy at the same wall-clock rate.
+                    let mut flip_carry = 0.0f64;
+                    loop {
+                        // Interruptible wait until the earliest shard
+                        // deadline: the loop exits the instant
+                        // shutdown() signals, never after a full
+                        // interval.
+                        let sleep = sched.next_deadline().saturating_sub(t0.elapsed());
+                        if signal.wait_timeout(sleep) {
+                            break;
+                        }
+                        let now = t0.elapsed();
                         // buffers the inference thread has applied come
                         // back to this thread's scratch arena
                         while let Ok(buf) = give_rx.try_recv() {
                             pool::give(buf);
                         }
                         if rate > 0.0 {
-                            let n = sb.inject(FaultModel::Uniform, rate, seed0 ^ epoch);
-                            m.faults_injected.fetch_add(n, Ordering::Relaxed);
+                            // rate is "per base interval": scale by the
+                            // elapsed wall clock so adaptive wakeups see
+                            // the same fault pressure per second. A zero
+                            // base interval (busy-scrub config) falls
+                            // back to the unscaled per-wakeup rate.
+                            let scale = if interval > Duration::ZERO {
+                                (now - last_wake).as_secs_f64() / interval.as_secs_f64()
+                            } else {
+                                1.0
+                            };
+                            let bits = sb.total_bits() as f64;
+                            flip_carry += bits * rate * scale;
+                            let whole = flip_carry.floor();
+                            flip_carry -= whole;
+                            if whole >= 1.0 {
+                                // adjusted rate injects exactly `whole`
+                                // flips (flip_count rounds bits * r)
+                                let n = sb.inject(
+                                    FaultModel::Uniform,
+                                    whole / bits,
+                                    seed0 ^ epoch,
+                                );
+                                m.faults_injected.fetch_add(n, Ordering::Relaxed);
+                            }
                         }
-                        let stats = sb.scrub();
+                        last_wake = now;
+                        let due = sched.due(now);
+                        let per_shard = sb.scrub_subset(&due);
+                        let mut stats = crate::ecc::DecodeStats::default();
+                        for &(i, s) in &per_shard {
+                            stats.add(&s);
+                            sched.record_pass(i, &s, now);
+                            m.record_shard_scrub(i, &s);
+                        }
                         m.corrected.fetch_add(stats.corrected, Ordering::Relaxed);
                         m.detected.fetch_add(stats.detected, Ordering::Relaxed);
                         m.scrubs.fetch_add(1, Ordering::Relaxed);
-                        for (i, s) in sb.shard_states().iter().enumerate() {
-                            m.record_shard_scrub(i, &s.last_scrub);
-                        }
+                        m.set_shard_schedules(
+                            (0..nshards).map(|i| sched.snapshot(i, now)).collect(),
+                        );
                         let dirty = sb.take_dirty();
                         epoch += 1;
                         if dirty.is_empty() {
@@ -514,6 +587,7 @@ mod tests {
             fault_seed: 0,
             shards: 4,
             scrub_workers: 2,
+            ..ServerConfig::default()
         }
     }
 
@@ -652,6 +726,58 @@ mod tests {
         }
         assert!(srv.metrics.scrubs.load(Ordering::Relaxed) >= 2);
         assert!(srv.metrics.weight_refreshes.load(Ordering::Relaxed) >= 1);
+        srv.shutdown();
+    }
+
+    /// The adaptive scheduler in the live loop: with injection
+    /// disabled, clean passes grow every shard's interval past the
+    /// base, and the scheduler gauges surface through `Metrics`.
+    #[test]
+    fn adaptive_policy_relaxes_clean_shards_and_exports_gauges() {
+        use crate::ecc::strategy_by_name;
+        let weights = vec![0i8; 256];
+        let bank =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &weights, 4, 2).unwrap();
+        let mut cfg = mock_cfg();
+        cfg.scrub_interval = Some(Duration::from_millis(5));
+        cfg.scrub_policy = ScrubPolicy::Adaptive;
+        cfg.scrub_max_interval = Some(Duration::from_millis(40));
+        cfg.fault_rate_per_interval = 0.0;
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 1,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            1,
+            &cfg,
+            Some((bank, test_layers(256))),
+        )
+        .unwrap();
+        // wait until every shard has at least two passes recorded
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let gauges = srv.metrics.shard_schedules();
+            if gauges.len() == 4 && gauges.iter().all(|g| g.passes >= 2) {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "scrub gauges never reached 2 passes/shard: {gauges:?}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let gauges = srv.metrics.shard_schedules();
+        for (i, g) in gauges.iter().enumerate() {
+            assert!(
+                g.interval_secs > 0.005,
+                "shard {i}: clean interval must grow past the base, got {}",
+                g.interval_secs
+            );
+            assert!(g.ber_upper < 1.0, "shard {i}: evidence must bound the BER");
+        }
         srv.shutdown();
     }
 

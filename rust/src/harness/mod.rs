@@ -10,13 +10,16 @@
 //! × rate × fault-model) cells with adaptive (confidence-targeted)
 //! trial counts and a resumable checkpoint ledger. `table2` is a thin
 //! consumer of it; `ablation` drives it over the expanded fault-model
-//! set on synthetic buffers.
+//! set on synthetic buffers. [`scrubsim`] replays *time-varying*
+//! scenarios (rate ramps, hotspot migration) against the adaptive
+//! scrub scheduler at equal scrub bandwidth vs fixed-interval.
 
 pub mod ablation;
 pub mod campaign;
 pub mod eval;
 pub mod fig1;
 pub mod fig34;
+pub mod scrubsim;
 pub mod table1;
 pub mod table2;
 

@@ -26,6 +26,11 @@
 //!   scratch arenas), with per-shard `DecodeStats`, dirty tracking for
 //!   incremental refresh, and copy-on-write trial resets (only
 //!   fault-touched code blocks are copied back from pristine).
+//!   `memory::scheduler` closes the telemetry → scheduling loop: an
+//!   online per-shard bit-error-rate estimator (exponentially weighted
+//!   error arrivals, Wilson confidence bounds) drives per-shard scrub
+//!   deadlines — hot shards clamp to the base interval, provably-clean
+//!   shards decay toward a configured maximum.
 //! * [`quant`] — int8 weight buffers and per-layer dequantization,
 //!   including the fused `decode_dequant_range` used by the scrub
 //!   epoch's per-shard delta path (no full-buffer i8 intermediate).
@@ -43,7 +48,9 @@
 //!   models, and a resumable checkpoint ledger (bit-identical resume).
 //!   Cells and the unconditional head of each cell's trials pipeline
 //!   over the shared worker pool; trials recycle copy-on-write-reset
-//!   banks instead of re-encoding.
+//!   banks instead of re-encoding. `harness::scrubsim` replays
+//!   time-varying fault scenarios (rate ramps, hotspot migration)
+//!   against the adaptive scrub scheduler at equal scrub bandwidth.
 //! * [`util`] — substrates the offline build denies us as crates: JSON,
 //!   PRNG, CLI parsing, stats, ASCII plots, a bench timer.
 

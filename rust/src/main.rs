@@ -13,8 +13,8 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
-use zsecc::harness::{ablation, campaign, fig1, fig34, table1, table2};
-use zsecc::memory::FaultModel;
+use zsecc::harness::{ablation, campaign, fig1, fig34, scrubsim, table1, table2};
+use zsecc::memory::{FaultModel, ScrubPolicy};
 use zsecc::model::manifest::list_models;
 use zsecc::util::cli::Args;
 use zsecc::util::rng::Rng;
@@ -137,6 +137,7 @@ fn main() -> anyhow::Result<()> {
             println!("{}", ablation::render_fault_models(&sweep, 1e-3));
         }
         Some("campaign") => run_campaign(&args, &artifacts)?,
+        Some("scrubsim") => run_scrubsim(&args)?,
         Some("serve") => {
             let model = args.str_or("model", "squeezenet_s");
             let secs = args.f64_or("seconds", 5.0)?;
@@ -150,6 +151,10 @@ fn main() -> anyhow::Result<()> {
                 scrub_interval: Some(Duration::from_millis(
                     args.u64_or("scrub-ms", 200)?,
                 )),
+                scrub_policy: ScrubPolicy::parse(&args.str_or("scrub-policy", "adaptive"))?,
+                scrub_max_interval: Some(Duration::from_millis(
+                    args.u64_or("scrub-max-ms", 16 * args.u64_or("scrub-ms", 200)?)?,
+                )),
                 fault_rate_per_interval: args.f64_or("fault-rate", 1e-7)?,
                 fault_seed: args.u64_or("seed", 1)?,
                 shards: args.usize_or("shards", 8)?,
@@ -160,13 +165,17 @@ fn main() -> anyhow::Result<()> {
         _ => {
             println!(
                 "zsecc — In-Place Zero-Space Memory Protection for CNN (NeurIPS'19 reproduction)\n\
-                 usage: zsecc <info|table1|table2|campaign|fig1|fig3|fig4|ablation|serve> [flags]\n\
+                 usage: zsecc <info|table1|table2|campaign|scrubsim|fig1|fig3|fig4|ablation|serve> [flags]\n\
                  common flags: --artifacts DIR --models a,b --json\n\
                  table2:   --trials N --rates 1e-6,1e-5 --strategies faulty,ecc --batch B --jobs J --fault-model M --verbose\n\
-                 campaign: --fault-model uniform,burst:4,stuckat:1,rowburst:8192:4,hotspot:0.05\n\
+                 campaign: --fault-model uniform,burst:4,stuckat:1,rowburst:8192:4,hotspot:0.05,hotspotat:0.4:0.05\n\
                  \x20         --ci-target HW --confidence C --min-trials N --max-trials N --jobs J\n\
                  \x20         --ledger FILE --resume --out FILE --synthetic --n WEIGHTS --verbose\n\
-                 serve:    --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS --fault-rate F --shards S --scrub-workers W"
+                 scrubsim: --scenario ramp|migrate --scrub-policy fixed|adaptive|both --seed N\n\
+                 \x20         --strategy S --n WEIGHTS --shards S --budget PASSES --max-interval TICKS\n\
+                 \x20         --trace --out FILE --json\n\
+                 serve:    --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS\n\
+                 \x20         --scrub-policy fixed|adaptive --scrub-max-ms MS --fault-rate F --shards S --scrub-workers W"
             );
         }
     }
@@ -253,6 +262,71 @@ fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> 
     }
     if args.bool("json") {
         println!("{}", report.to_json());
+    }
+    Ok(())
+}
+
+/// The `scrubsim` subcommand: replay a time-varying fault scenario
+/// (rate ramp / hotspot migration) against the scrub scheduler,
+/// comparing the fixed and adaptive policies at equal scrub bandwidth.
+/// Artifact-free and deterministic in `--seed`; `--out` writes a JSON
+/// record including the per-shard BER traces (the nightly campaign's
+/// build artifact).
+fn run_scrubsim(args: &Args) -> anyhow::Result<()> {
+    let cfg = scrubsim::SimConfig {
+        strategy: args.str_or("strategy", "in-place"),
+        n_weights: args.usize_or("n", 64 * 1024)?,
+        shards: args.usize_or("shards", 16)?,
+        budget: args.usize_or("budget", 2)?,
+        max_interval_ticks: args.u64_or("max-interval", 16)?,
+        workers: args.usize_or("workers", 2)?,
+    };
+    let seed = args.u64_or("seed", 7)?;
+    let scenario = scrubsim::Scenario::by_name(&args.str_or("scenario", "migrate"), seed)?;
+    let policy = args.str_or("scrub-policy", "both");
+    let results: Vec<scrubsim::SimResult> = match policy.as_str() {
+        "both" => {
+            let (fixed, adaptive) = scrubsim::compare(&cfg, &scenario)?;
+            vec![fixed, adaptive]
+        }
+        p => vec![scrubsim::run_sim(&cfg, &scenario, ScrubPolicy::parse(p)?)?],
+    };
+    let refs: Vec<&scrubsim::SimResult> = results.iter().collect();
+    println!(
+        "scrubsim: scenario={} seed={seed} strategy={} shards={} budget={}/tick ticks={}",
+        scenario.name,
+        cfg.strategy,
+        cfg.shards,
+        cfg.budget,
+        scenario.total_ticks()
+    );
+    println!("{}", scrubsim::render(&refs));
+    if let [fixed, adaptive] = refs.as_slice() {
+        if fixed.policy == ScrubPolicy::Fixed && adaptive.policy == ScrubPolicy::Adaptive {
+            println!(
+                "adaptive vs fixed residual (uncorrectable blocks): {} vs {} [{}]",
+                adaptive.residual_uncorrectable,
+                fixed.residual_uncorrectable,
+                if adaptive.residual_uncorrectable <= fixed.residual_uncorrectable {
+                    "ok"
+                } else {
+                    "ADAPTIVE WORSE"
+                }
+            );
+        }
+    }
+    let trace = args.bool("trace") || args.str_opt("out").is_some();
+    let record = zsecc::util::json::obj(vec![
+        ("scenario", zsecc::util::json::s(&scenario.name)),
+        ("seed", zsecc::util::json::num(seed as f64)),
+        ("results", zsecc::util::json::arr(results.iter().map(|r| r.to_json(trace)))),
+    ]);
+    if let Some(out) = args.str_opt("out") {
+        std::fs::write(out, record.to_string())?;
+        println!("(JSON written to {out})");
+    }
+    if args.bool("json") {
+        println!("{record}");
     }
     Ok(())
 }

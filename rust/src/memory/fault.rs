@@ -21,6 +21,10 @@
 //! * [`FaultModel::Hotspot`] — flips concentrated in one contiguous
 //!   window covering a fraction of the image (localized damage, e.g. a
 //!   failing bank region).
+//! * [`FaultModel::HotspotAt`] — hotspot with a caller-pinned window
+//!   start, so successive injections with fresh seeds keep hitting the
+//!   same region; the time-varying scrub scenarios migrate the window
+//!   between phases by changing the start fraction.
 //!
 //! Every model draws through [`FaultInjector::draw_positions`], so the
 //! sharded bank's dirty tracking works unchanged for all of them.
@@ -49,6 +53,14 @@ pub enum FaultModel {
     /// budget saturates at the window capacity — the window never
     /// widens to fit the budget.
     Hotspot { frac: f64 },
+    /// Hotspot with a *fixed* window: the window starts at fraction
+    /// `start` of the stored image instead of being drawn from the
+    /// seed, so repeated injections with fresh seeds keep hammering the
+    /// same region — the time-varying scrub scenarios move the window
+    /// between phases by changing `start` (hotspot migration). Flip
+    /// positions inside the window still vary per seed; the budget
+    /// saturates at the window capacity like [`FaultModel::Hotspot`].
+    HotspotAt { start: f64, frac: f64 },
 }
 
 impl FaultModel {
@@ -61,6 +73,7 @@ impl FaultModel {
             FaultModel::StuckAt { bit } => format!("stuckat:{bit}"),
             FaultModel::RowBurst { row_bits, len } => format!("rowburst:{row_bits}:{len}"),
             FaultModel::Hotspot { frac } => format!("hotspot:{frac}"),
+            FaultModel::HotspotAt { start, frac } => format!("hotspotat:{start}:{frac}"),
         }
     }
 
@@ -110,9 +123,27 @@ impl FaultModel {
                 );
                 FaultModel::Hotspot { frac }
             }
+            "hotspotat" => {
+                let (start, frac) = match rest {
+                    None => (0.5, 0.05),
+                    Some(r) => match r.split_once(':') {
+                        Some((a, b)) => (
+                            a.parse().map_err(|_| bad("hotspot start"))?,
+                            b.parse().map_err(|_| bad("hotspot fraction"))?,
+                        ),
+                        None => (r.parse().map_err(|_| bad("hotspot start"))?, 0.05),
+                    },
+                };
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&start) && (0.0..=1.0).contains(&frac),
+                    "hotspotat start/fraction must be in [0, 1], got {start}:{frac}"
+                );
+                FaultModel::HotspotAt { start, frac }
+            }
             _ => anyhow::bail!(
                 "unknown fault model '{text}' \
-                 (uniform | burst:LEN | stuckat:BIT | rowburst:ROWBITS:LEN | hotspot:FRAC)"
+                 (uniform | burst:LEN | stuckat:BIT | rowburst:ROWBITS:LEN | hotspot:FRAC | \
+                 hotspotat:START:FRAC)"
             ),
         };
         Ok(model)
@@ -208,21 +239,28 @@ impl FaultInjector {
                 positions
             }
             FaultModel::Hotspot { frac } => {
-                // The budget saturates at the window capacity — the
-                // window never widens to fit the budget, otherwise the
-                // model would silently degenerate into a solid burst.
-                let window =
-                    ((total as f64 * frac.clamp(0.0, 1.0)).ceil() as u64).clamp(1, total);
-                let n = n.min(window);
                 let start = self.rng.below(total);
-                self.rng
-                    .distinct(window, n)
-                    .into_iter()
-                    .map(|off| (start + off) % total)
-                    .collect()
+                hotspot_positions(&mut self.rng, total, start, frac, n)
+            }
+            FaultModel::HotspotAt { start, frac } => {
+                let start = ((total as f64 * start.clamp(0.0, 1.0)) as u64).min(total - 1);
+                hotspot_positions(&mut self.rng, total, start, frac, n)
             }
         }
     }
+}
+
+/// Distinct positions inside the circular window of `frac * total` bits
+/// starting at `start`. The budget saturates at the window capacity —
+/// the window never widens to fit the budget, otherwise the model would
+/// silently degenerate into a solid burst.
+fn hotspot_positions(rng: &mut Rng, total: u64, start: u64, frac: f64, n: u64) -> Vec<u64> {
+    let window = ((total as f64 * frac.clamp(0.0, 1.0)).ceil() as u64).clamp(1, total);
+    let n = n.min(window);
+    rng.distinct(window, n)
+        .into_iter()
+        .map(|off| (start + off) % total)
+        .collect()
 }
 
 /// `bursts` non-overlapping runs of `len` adjacent bits in `[0, total)`
@@ -423,6 +461,34 @@ mod tests {
     }
 
     #[test]
+    fn hotspotat_window_is_stable_across_seeds() {
+        // Fresh seeds redraw the positions but never the window: every
+        // drawn bit stays inside [start*total, start*total + window).
+        let enc = image(4096);
+        let total = enc.total_bits();
+        let (start_frac, frac) = (0.25, 0.03);
+        let start = (total as f64 * start_frac) as u64;
+        let window = (total as f64 * frac).ceil() as u64;
+        let mut seen_distinct = false;
+        let mut prev: Option<Vec<u64>> = None;
+        for seed in 0..8 {
+            let mut inj =
+                FaultInjector::new(FaultModel::HotspotAt { start: start_frac, frac }, seed);
+            let pos = inj.draw_positions(&enc, 40);
+            assert_eq!(pos.len(), 40);
+            for &p in &pos {
+                let off = (p + total - start) % total;
+                assert!(off < window, "bit {p} outside the fixed window");
+            }
+            if prev.as_ref().is_some_and(|q| *q != pos) {
+                seen_distinct = true;
+            }
+            prev = Some(pos);
+        }
+        assert!(seen_distinct, "positions must still vary with the seed");
+    }
+
+    #[test]
     fn tags_roundtrip_through_parse() {
         let models = [
             FaultModel::Uniform,
@@ -430,11 +496,17 @@ mod tests {
             FaultModel::StuckAt { bit: 1 },
             FaultModel::RowBurst { row_bits: 8192, len: 2 },
             FaultModel::Hotspot { frac: 0.05 },
+            FaultModel::HotspotAt { start: 0.25, frac: 0.05 },
         ];
         for m in models {
             assert_eq!(FaultModel::parse(&m.tag()).unwrap(), m, "{}", m.tag());
         }
         assert_eq!(FaultModel::parse("burst").unwrap(), FaultModel::Burst { len: 4 });
+        assert_eq!(
+            FaultModel::parse("hotspotat:0.3").unwrap(),
+            FaultModel::HotspotAt { start: 0.3, frac: 0.05 }
+        );
+        assert!(FaultModel::parse("hotspotat:1.5:0.05").is_err());
         assert!(FaultModel::parse("stuckat:2").is_err());
         assert!(FaultModel::parse("nope").is_err());
         assert!(FaultModel::parse("burst:x").is_err());
@@ -452,6 +524,7 @@ mod tests {
             FaultModel::StuckAt { bit: 1 },
             FaultModel::RowBurst { row_bits: 128, len: 2 },
             FaultModel::Hotspot { frac: 0.1 },
+            FaultModel::HotspotAt { start: 0.6, frac: 0.1 },
         ];
         for m in models {
             let mut a = image(256);

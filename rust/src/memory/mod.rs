@@ -21,13 +21,21 @@
 //!   `Vec<i8>`/`Vec<f32>` freelists). `run_jobs` is the compatibility
 //!   wrapper shard passes, `harness::campaign` cells/trials and the
 //!   serving scrub loop all fan out through.
+//! * [`scheduler`] — the adaptive scrub scheduler: a per-shard online
+//!   bit-error-rate estimator (exponentially weighted error arrivals
+//!   with Wilson confidence bounds) feeding per-shard scrub deadlines.
+//!   Hot shards clamp to the base interval, provably-clean shards
+//!   decay toward a configured maximum; the serving loop and the
+//!   `harness::scrubsim` scenarios both drive it.
 
 pub mod bank;
 pub mod fault;
 pub mod pool;
+pub mod scheduler;
 pub mod shard;
 
 pub use bank::MemoryBank;
 pub use fault::{FaultInjector, FaultModel};
 pub use pool::{run_jobs, Pool};
+pub use scheduler::{SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardSchedule};
 pub use shard::{plan_shards, ShardState, ShardedBank};

@@ -1,0 +1,488 @@
+//! Adaptive per-shard scrub scheduling driven by an online
+//! bit-error-rate estimator.
+//!
+//! The serving loop used to scrub every shard on one fixed interval —
+//! wasting clean-tile passes on cold shards while under-protecting
+//! hotspots (exactly the non-uniform fault models the campaign engine
+//! injects). This module closes the telemetry → scheduling loop:
+//!
+//! ```text
+//!             DecodeStats per scrub pass
+//!   ShardedBank ----------------------------> BerEstimator (per shard)
+//!        ^                                         | EW error counts,
+//!        | scrub_subset(due shards)                | Wilson upper bound
+//!        |                                         v
+//!   ScrubScheduler <------------------------- deadline = f(BER, budget)
+//!             earliest-deadline-first dispatch
+//! ```
+//!
+//! **Estimator.** Every scrub pass over a shard yields a `DecodeStats`.
+//! The estimator folds the pass into exponentially weighted counts of
+//! *newly arrived* error bits (`corrected + zeroed` plus the *increase*
+//! in detected-uncorrectable blocks — a block that is already
+//! uncorrectable is re-detected by every subsequent pass, and more
+//! scrubbing cannot help it, so only fresh detections count as arrival
+//! signal) over exponentially weighted bit·seconds of exposure. The
+//! Wilson score interval ([`crate::util::stats::wilson_interval`]) on
+//! those effective counts gives a confidence-bounded BER: a shard with
+//! no observed error still has a non-zero upper bound that shrinks as
+//! clean evidence accumulates — "provably clean" is an accumulating
+//! statement, not a single lucky pass.
+//!
+//! **Scheduler.** Each shard carries its own next-scrub deadline. The
+//! adaptive policy sizes the interval so the *expected number of new
+//! error bits arriving between scrubs* (Wilson-upper BER × shard bits ×
+//! interval) stays at the configured residual budget, clamped to
+//! `[base_interval, max_interval]`; a clean pass additionally grows the
+//! interval by at least the `growth` factor, so with injection disabled
+//! every shard's interval decays monotonically to the maximum. Hot
+//! shards clamp to the base interval and soak up scrub bandwidth;
+//! deadlines are served earliest-first.
+//!
+//! Time is passed in by the caller as a [`Duration`] since an arbitrary
+//! epoch — the serving loop uses wall clock, the simulation harness
+//! ([`crate::harness::scrubsim`]) uses virtual ticks, which is what
+//! makes the scheduler's behavior deterministically testable.
+
+use std::time::Duration;
+
+use crate::ecc::DecodeStats;
+use crate::util::stats;
+
+/// Which scrub scheduling policy the serving loop runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScrubPolicy {
+    /// Every shard on one fixed interval (the pre-scheduler behavior).
+    Fixed,
+    /// Per-shard deadlines from the online BER estimator.
+    Adaptive,
+}
+
+impl ScrubPolicy {
+    /// Stable tag (CLI flag values, JSON reports).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ScrubPolicy::Fixed => "fixed",
+            ScrubPolicy::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a `--scrub-policy` value; accepts every string `tag`
+    /// produces.
+    pub fn parse(text: &str) -> anyhow::Result<ScrubPolicy> {
+        match text {
+            "fixed" => Ok(ScrubPolicy::Fixed),
+            "adaptive" => Ok(ScrubPolicy::Adaptive),
+            _ => anyhow::bail!("unknown scrub policy '{text}' (fixed | adaptive)"),
+        }
+    }
+}
+
+/// Scheduler knobs. `fixed`/`adaptive` constructors carry sensible
+/// defaults; everything is public for the simulation harness.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    pub policy: ScrubPolicy,
+    /// The fixed policy's period; the adaptive policy's starting
+    /// interval and lower clamp.
+    pub base_interval: Duration,
+    /// Adaptive upper clamp: provably-clean shards decay toward this.
+    pub max_interval: Duration,
+    /// Target expected *new* error bits per shard per interval — the
+    /// residual-error budget the deadline is derived from.
+    pub target_residual: f64,
+    /// Confidence of the Wilson upper bound (see `stats::normal_z`).
+    pub confidence: f64,
+    /// Exponential retain factor per pass in (0, 1): how much of the
+    /// previous evidence a new pass keeps. Smaller forgets (and thus
+    /// re-adapts) faster.
+    pub decay: f64,
+    /// Minimum multiplicative interval growth after a clean pass
+    /// (>= 1); guarantees monotone decay to `max_interval` on clean
+    /// streaks whatever the Wilson bound does.
+    pub growth: f64,
+}
+
+impl SchedulerConfig {
+    /// The classic fixed-interval loop expressed as a scheduler.
+    pub fn fixed(interval: Duration) -> SchedulerConfig {
+        SchedulerConfig {
+            policy: ScrubPolicy::Fixed,
+            base_interval: interval,
+            max_interval: interval,
+            target_residual: 0.5,
+            confidence: 0.95,
+            decay: 0.7,
+            growth: 1.5,
+        }
+    }
+
+    /// Adaptive scheduling between `base` (hot clamp) and `max`
+    /// (clean decay target).
+    pub fn adaptive(base: Duration, max: Duration) -> SchedulerConfig {
+        SchedulerConfig {
+            policy: ScrubPolicy::Adaptive,
+            base_interval: base,
+            max_interval: max.max(base),
+            target_residual: 0.5,
+            confidence: 0.95,
+            decay: 0.7,
+            growth: 1.5,
+        }
+    }
+}
+
+/// Per-shard estimator + deadline state.
+#[derive(Clone, Debug)]
+struct ShardSched {
+    /// Stored bits exposed to faults (BER denominator).
+    bits: u64,
+    /// Current scrub interval.
+    interval: Duration,
+    /// Next scrub deadline (same epoch as the caller's `now`).
+    deadline: Duration,
+    /// When the shard was last scrubbed (creation time before the
+    /// first pass — exposure starts when the bank goes live).
+    last_pass: Duration,
+    /// Exponentially weighted newly-arrived error bits.
+    ew_errors: f64,
+    /// Exponentially weighted bit·seconds of exposure.
+    ew_bitsecs: f64,
+    /// Detected-uncorrectable count of the previous pass: re-detected
+    /// blocks are not new arrivals.
+    last_detected: u64,
+    passes: u64,
+    /// Passes that started later than deadline + half the base
+    /// interval — the "scheduler cannot keep up" signal.
+    overdue: u64,
+}
+
+/// Read-only per-shard snapshot for metrics/reporting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardSchedule {
+    /// Wilson lower bound on the per-bit-per-second error rate.
+    pub ber_lower: f64,
+    /// Wilson upper bound — what the deadline is derived from.
+    pub ber_upper: f64,
+    /// Current scrub interval in seconds.
+    pub interval_secs: f64,
+    /// Deadline relative to the caller's `now` (negative = overdue by
+    /// that many seconds).
+    pub deadline_in_secs: f64,
+    /// Cumulative scrub passes recorded for this shard.
+    pub passes: u64,
+    /// Cumulative late passes (past deadline by more than half the
+    /// base interval).
+    pub overdue: u64,
+}
+
+/// Deadline-based per-shard scrub scheduler (see module docs).
+pub struct ScrubScheduler {
+    cfg: SchedulerConfig,
+    shards: Vec<ShardSched>,
+}
+
+impl ScrubScheduler {
+    /// A scheduler over shards of the given stored-bit sizes. Every
+    /// shard starts due at `now` — the first pass calibrates the
+    /// estimator — with an *optimistic* interval at the max: a clean
+    /// first pass keeps it there (no cold-start stampede of the whole
+    /// fleet growing from the base interval), while a first pass that
+    /// sees errors re-derives the interval from the evidence and
+    /// clamps hot shards straight to the base.
+    pub fn new(cfg: SchedulerConfig, shard_bits: &[u64], now: Duration) -> ScrubScheduler {
+        let shards = shard_bits
+            .iter()
+            .map(|&bits| ShardSched {
+                bits: bits.max(1),
+                interval: cfg.max_interval,
+                deadline: now,
+                last_pass: now,
+                ew_errors: 0.0,
+                ew_bitsecs: 0.0,
+                last_detected: 0,
+                passes: 0,
+                overdue: 0,
+            })
+            .collect();
+        ScrubScheduler { cfg, shards }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn policy(&self) -> ScrubPolicy {
+        self.cfg.policy
+    }
+
+    /// Shards whose deadline has passed, in shard-index order (the
+    /// consumer scrubs them all this wakeup; use [`Self::most_urgent`]
+    /// when dispatch order matters).
+    pub fn due(&self, now: Duration) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&i| self.shards[i].deadline <= now)
+            .collect()
+    }
+
+    /// The `k` shards with the earliest deadlines whether or not they
+    /// are due yet — the fixed-bandwidth dispatch the simulation
+    /// harness uses to compare policies at equal scrub passes per tick.
+    pub fn most_urgent(&self, k: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&i| (self.shards[i].deadline, i));
+        order.truncate(k);
+        order
+    }
+
+    /// Earliest deadline across all shards — what the serving loop
+    /// sleeps until.
+    pub fn next_deadline(&self) -> Duration {
+        self.shards
+            .iter()
+            .map(|s| s.deadline)
+            .min()
+            .unwrap_or_default()
+    }
+
+    pub fn interval(&self, idx: usize) -> Duration {
+        self.shards[idx].interval
+    }
+
+    pub fn deadline(&self, idx: usize) -> Duration {
+        self.shards[idx].deadline
+    }
+
+    /// Wilson `(lower, upper)` bounds on shard `idx`'s per-bit-per-
+    /// second error rate at the configured confidence. `(0, 1)` before
+    /// any evidence.
+    pub fn ber_bounds(&self, idx: usize) -> (f64, f64) {
+        let s = &self.shards[idx];
+        stats::wilson_interval(s.ew_errors, s.ew_bitsecs, self.cfg.confidence)
+    }
+
+    /// Snapshot of shard `idx` relative to `now` (for metrics gauges).
+    pub fn snapshot(&self, idx: usize, now: Duration) -> ShardSchedule {
+        let s = &self.shards[idx];
+        let (ber_lower, ber_upper) = self.ber_bounds(idx);
+        ShardSchedule {
+            ber_lower,
+            ber_upper,
+            interval_secs: s.interval.as_secs_f64(),
+            deadline_in_secs: s.deadline.as_secs_f64() - now.as_secs_f64(),
+            passes: s.passes,
+            overdue: s.overdue,
+        }
+    }
+
+    /// Record a completed scrub pass over shard `idx` and re-derive
+    /// its interval and deadline. `now` must not precede the shard's
+    /// previous pass.
+    pub fn record_pass(&mut self, idx: usize, pass: &DecodeStats, now: Duration) {
+        let cfg = self.cfg;
+        let s = &mut self.shards[idx];
+        // Newly arrived error bits: corrections and zeroings are fresh
+        // by construction (the pass repaired them); detections are new
+        // only beyond the previous pass's count.
+        let new_err = pass.corrected + pass.zeroed + pass.detected.saturating_sub(s.last_detected);
+        s.last_detected = pass.detected;
+        // Fold unconditionally: a pass with zero elapsed exposure still
+        // contributes its error evidence (the Wilson interval stays
+        // vacuous until bit·seconds accrue), so arrivals seen by an
+        // instant first pass are never silently dropped.
+        let elapsed = now.saturating_sub(s.last_pass).as_secs_f64();
+        s.ew_errors = cfg.decay * s.ew_errors + new_err as f64;
+        s.ew_bitsecs = cfg.decay * s.ew_bitsecs + s.bits as f64 * elapsed;
+        if now > s.deadline + cfg.base_interval / 2 {
+            s.overdue += 1;
+        }
+        s.last_pass = now;
+        s.passes += 1;
+        if cfg.policy == ScrubPolicy::Adaptive {
+            let (_, ber_hi) = stats::wilson_interval(s.ew_errors, s.ew_bitsecs, cfg.confidence);
+            // Expected new error bits per second at the upper bound;
+            // the interval that keeps arrivals at the residual budget.
+            let err_per_sec = ber_hi * s.bits as f64;
+            let mut next = if err_per_sec > 0.0 {
+                Duration::from_secs_f64(
+                    (cfg.target_residual / err_per_sec).min(cfg.max_interval.as_secs_f64()),
+                )
+            } else {
+                cfg.max_interval
+            };
+            if new_err == 0 {
+                // Clean pass: never shrink, grow by at least `growth` —
+                // the monotone decay-to-max guarantee.
+                next = next.max(s.interval.mul_f64(cfg.growth));
+            }
+            s.interval = next.clamp(cfg.base_interval, cfg.max_interval);
+        }
+        s.deadline = now + s.interval;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(n: u64) -> Duration {
+        Duration::from_secs(n)
+    }
+
+    fn errs(corrected: u64, detected: u64) -> DecodeStats {
+        DecodeStats {
+            corrected,
+            detected,
+            zeroed: 0,
+        }
+    }
+
+    #[test]
+    fn policy_tags_roundtrip() {
+        for p in [ScrubPolicy::Fixed, ScrubPolicy::Adaptive] {
+            assert_eq!(ScrubPolicy::parse(p.tag()).unwrap(), p);
+        }
+        assert!(ScrubPolicy::parse("eager").is_err());
+    }
+
+    #[test]
+    fn fixed_policy_keeps_one_cadence() {
+        let cfg = SchedulerConfig::fixed(secs(10));
+        let mut sched = ScrubScheduler::new(cfg, &[1 << 20, 1 << 20], Duration::ZERO);
+        assert_eq!(sched.due(Duration::ZERO), vec![0, 1], "all due at start");
+        sched.record_pass(0, &errs(100, 3), secs(0));
+        sched.record_pass(1, &DecodeStats::default(), secs(0));
+        // however different the evidence, fixed keeps the base interval
+        assert_eq!(sched.interval(0), secs(10));
+        assert_eq!(sched.interval(1), secs(10));
+        assert_eq!(sched.deadline(0), secs(10));
+        assert!(sched.due(secs(9)).is_empty());
+        assert_eq!(sched.due(secs(10)), vec![0, 1]);
+    }
+
+    #[test]
+    fn clean_shards_decay_to_max_interval() {
+        // The acceptance guarantee: with fault injection disabled,
+        // every shard's interval decays (monotonically grows) to the
+        // configured maximum — here from the worst starting point, a
+        // shard clamped hot by an initial error shower.
+        let cfg = SchedulerConfig::adaptive(secs(1), secs(64));
+        let mut sched = ScrubScheduler::new(cfg, &[1 << 16, 1 << 22], Duration::ZERO);
+        for idx in 0..sched.num_shards() {
+            sched.record_pass(idx, &errs(400, 0), secs(1));
+            assert_eq!(sched.interval(idx), secs(1), "shard {idx}: hot clamp");
+            let mut now = secs(1);
+            let mut prev = Duration::ZERO;
+            for _ in 0..24 {
+                now += sched.interval(idx);
+                sched.record_pass(idx, &DecodeStats::default(), now);
+                assert!(
+                    sched.interval(idx) >= prev,
+                    "shard {idx}: interval must never shrink on clean passes"
+                );
+                prev = sched.interval(idx);
+            }
+            assert_eq!(
+                sched.interval(idx),
+                secs(64),
+                "shard {idx}: clean shard must reach the max interval"
+            );
+            // ...and the BER upper bound keeps shrinking as the error
+            // evidence decays and clean exposure accumulates
+            let (_, hi) = sched.ber_bounds(idx);
+            assert!(hi < 1e-3, "clean shard upper bound: {hi}");
+        }
+    }
+
+    #[test]
+    fn hot_shard_clamps_to_base_interval() {
+        let cfg = SchedulerConfig::adaptive(secs(1), secs(64));
+        let mut sched = ScrubScheduler::new(cfg, &[1 << 20], Duration::ZERO);
+        let mut now = secs(1);
+        for _ in 0..6 {
+            sched.record_pass(0, &errs(500, 10), now);
+            now += sched.interval(0);
+        }
+        assert_eq!(
+            sched.interval(0),
+            secs(1),
+            "a shard showering errors must sit at the hot clamp"
+        );
+        let (lo, hi) = sched.ber_bounds(0);
+        assert!(lo > 0.0 && hi > lo, "error evidence must lift both bounds");
+    }
+
+    #[test]
+    fn redetected_uncorrectables_are_not_new_arrivals() {
+        let cfg = SchedulerConfig::adaptive(secs(1), secs(32));
+        let mut sched = ScrubScheduler::new(cfg, &[1 << 20], Duration::ZERO);
+        // A pass that finds 5 uncorrectable blocks...
+        sched.record_pass(0, &errs(0, 5), secs(1));
+        let hot = sched.interval(0);
+        assert!(hot < secs(32), "fresh detections must tighten the interval");
+        // ...then the same 5 re-detected every pass with nothing new:
+        // the shard must cool back down (arrival rate is zero).
+        let mut now = secs(1);
+        for _ in 0..20 {
+            now += sched.interval(0);
+            sched.record_pass(0, &errs(0, 5), now);
+        }
+        assert_eq!(
+            sched.interval(0),
+            secs(32),
+            "a statically-damaged shard must not hog scrub bandwidth"
+        );
+    }
+
+    #[test]
+    fn adaptation_recovers_after_a_hot_phase() {
+        let cfg = SchedulerConfig::adaptive(secs(1), secs(16));
+        let mut sched = ScrubScheduler::new(cfg, &[1 << 20], Duration::ZERO);
+        let mut now = Duration::ZERO;
+        for _ in 0..5 {
+            now += sched.interval(0);
+            sched.record_pass(0, &errs(200, 0), now);
+        }
+        assert_eq!(sched.interval(0), secs(1));
+        for _ in 0..24 {
+            now += sched.interval(0);
+            sched.record_pass(0, &DecodeStats::default(), now);
+        }
+        assert_eq!(
+            sched.interval(0),
+            secs(16),
+            "evidence decay must let a cooled shard relax again"
+        );
+    }
+
+    #[test]
+    fn due_and_urgent_order_by_deadline() {
+        let cfg = SchedulerConfig::adaptive(secs(1), secs(64));
+        let mut sched = ScrubScheduler::new(cfg, &[1 << 20, 1 << 20, 1 << 20], Duration::ZERO);
+        // shard 1 hot (deadline now+1), shards 0/2 clean (later)
+        sched.record_pass(0, &DecodeStats::default(), secs(1));
+        sched.record_pass(1, &errs(300, 0), secs(1));
+        sched.record_pass(2, &DecodeStats::default(), secs(1));
+        assert_eq!(sched.most_urgent(2), vec![1, 0]);
+        assert_eq!(sched.next_deadline(), sched.deadline(1));
+        let due = sched.due(secs(2));
+        assert_eq!(due, vec![1], "only the hot shard is due after 1s");
+        assert!(sched.due(Duration::ZERO).is_empty());
+    }
+
+    #[test]
+    fn overdue_passes_are_counted() {
+        let cfg = SchedulerConfig::adaptive(secs(2), secs(64));
+        let mut sched = ScrubScheduler::new(cfg, &[1 << 20], Duration::ZERO);
+        // first pass at t=10: deadline was 0, slack is 1s -> overdue
+        sched.record_pass(0, &DecodeStats::default(), secs(10));
+        let snap = sched.snapshot(0, secs(10));
+        assert_eq!(snap.overdue, 1);
+        assert_eq!(snap.passes, 1);
+        assert!(snap.deadline_in_secs > 0.0);
+        // a punctual pass adds nothing
+        let next = sched.deadline(0);
+        sched.record_pass(0, &DecodeStats::default(), next);
+        assert_eq!(sched.snapshot(0, next).overdue, 1);
+    }
+}

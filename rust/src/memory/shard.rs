@@ -336,9 +336,49 @@ impl ShardedBank {
             self.strategy.as_ref(),
             &mut self.image,
             &ranges,
+            None,
             self.workers,
         );
         self.merge_pass(&per_shard, true)
+    }
+
+    /// Scrub only the given shards (fanned out over the worker pool),
+    /// with the same per-shard stats/dirty accounting as a full
+    /// [`ShardedBank::scrub`] — the entry point the adaptive scrub
+    /// scheduler drives with its due list. Indices may arrive in any
+    /// order and may repeat; each selected shard is scrubbed once.
+    /// Returns `(shard, stats)` per scrubbed shard.
+    pub fn scrub_subset(&mut self, indices: &[usize]) -> Vec<(usize, DecodeStats)> {
+        let mut sel: Vec<usize> = indices.to_vec();
+        sel.sort_unstable();
+        sel.dedup();
+        assert!(sel.last().is_none_or(|&i| i < self.shards.len()), "shard index out of range");
+        let ranges = ranges_of(&self.shards);
+        let per_shard = scrub_shards(
+            self.strategy.as_ref(),
+            &mut self.image,
+            &ranges,
+            Some(&sel),
+            self.workers,
+        );
+        self.merge_pass(&per_shard, true);
+        per_shard
+    }
+
+    /// Scrub a single shard on the calling thread (no pool fan-out).
+    pub fn scrub_shard(&mut self, idx: usize) -> DecodeStats {
+        let (s, e) = self.shards[idx].range;
+        let stats = self.strategy.scrub_range(&mut self.image, s, e);
+        self.merge_pass(&[(idx, stats)], true);
+        stats
+    }
+
+    /// Stored bits (data + owned check bytes) of shard `idx` — the
+    /// denominator of the scheduler's per-shard bit-error rate.
+    pub fn shard_bits(&self, idx: usize) -> u64 {
+        let (s, e) = self.shards[idx].range;
+        let (os, oe) = self.strategy.oob_window(s, e, self.image.data.len(), self.image.oob.len());
+        (((e - s) + (oe - os)) * 8) as u64
     }
 
     /// Indices of dirty shards, clearing the flags.
@@ -457,17 +497,20 @@ fn decode_shards(
     })
 }
 
-/// Scrub every shard window of `image` in place, in parallel: the data
-/// and oob byte ranges of distinct shards are disjoint, so the stored
-/// image is split into per-shard &mut spans handed to the workers.
+/// Scrub shard windows of `image` in place, in parallel: the data and
+/// oob byte ranges of distinct shards are disjoint, so the stored image
+/// is split into per-shard &mut spans handed to the workers. With
+/// `selected` (sorted, deduped) only those shards get jobs — the walk
+/// still advances through every range so the spans line up.
 fn scrub_shards(
     strategy: &dyn Protection,
     image: &mut Encoded,
     ranges: &[(usize, usize)],
+    selected: Option<&[usize]>,
     workers: usize,
 ) -> Vec<(usize, DecodeStats)> {
     let (data_len, oob_len) = (image.data.len(), image.oob.len());
-    let mut jobs = Vec::with_capacity(ranges.len());
+    let mut jobs = Vec::with_capacity(selected.map_or(ranges.len(), <[usize]>::len));
     let mut d_rest: &mut [u8] = &mut image.data;
     let mut o_rest: &mut [u8] = &mut image.oob;
     let (mut d_off, mut o_off) = (0usize, 0usize);
@@ -477,7 +520,9 @@ fn scrub_shards(
         debug_assert_eq!(os, o_off);
         let (d_win, d_next) = d_rest.split_at_mut(e - d_off);
         let (o_win, o_next) = o_rest.split_at_mut(oe - o_off);
-        jobs.push((i, d_win, o_win));
+        if selected.is_none_or(|sel| sel.binary_search(&i).is_ok()) {
+            jobs.push((i, d_win, o_win));
+        }
         d_rest = d_next;
         o_rest = o_next;
         d_off = e;
@@ -675,6 +720,80 @@ mod tests {
         let fused_stats = sb.decode_dequant_all(&layers, &mut got);
         assert_eq!(got, want);
         assert_eq!(fused_stats, read_stats);
+    }
+
+    #[test]
+    fn scrub_subset_touches_only_selected_shards() {
+        let w = wot_weights(8 * 64, 33);
+        for name in ["zero", "ecc", "in-place"] {
+            let mk = || ShardedBank::new(strategy_by_name(name).unwrap(), &w, 8, 2).unwrap();
+            let mut full = mk();
+            let mut sub = mk();
+            full.inject(FaultModel::Uniform, 2e-3, 51);
+            sub.inject(FaultModel::Uniform, 2e-3, 51);
+            full.take_dirty();
+            sub.take_dirty();
+            // unsorted, duplicated input: each shard scrubbed once
+            let per = sub.scrub_subset(&[5, 1, 5, 3]);
+            assert_eq!(
+                per.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+                vec![1, 3, 5],
+                "{name}: selection must be sorted and deduped"
+            );
+            // selected shards match what a full scrub does to them...
+            full.scrub();
+            for &(i, stats) in &per {
+                assert_eq!(stats, full.shard_states()[i].last_scrub, "{name}: shard {i}");
+                let (s, e) = sub.shard_range(i);
+                assert_eq!(
+                    sub.image().data[s..e],
+                    full.image().data[s..e],
+                    "{name}: shard {i} bytes"
+                );
+            }
+            // ...unselected shards keep their (possibly faulty) bytes
+            let mut pristine = mk();
+            pristine.inject(FaultModel::Uniform, 2e-3, 51);
+            for i in [0usize, 2, 4, 6, 7] {
+                let (s, e) = sub.shard_range(i);
+                assert_eq!(
+                    sub.image().data[s..e],
+                    pristine.image().data[s..e],
+                    "{name}: unselected shard {i} must be untouched"
+                );
+                assert_eq!(sub.shard_states()[i].scrubs, 0, "{name}: shard {i}");
+            }
+            // dirty flags: only selected shards whose pass modified bytes
+            for i in sub.take_dirty() {
+                assert!([1usize, 3, 5].contains(&i), "{name}: dirty {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scrub_shard_matches_subset_of_one() {
+        let w = wot_weights(8 * 40, 35);
+        let mut a = ShardedBank::new(strategy_by_name("in-place").unwrap(), &w, 5, 2).unwrap();
+        let mut b = ShardedBank::new(strategy_by_name("in-place").unwrap(), &w, 5, 2).unwrap();
+        a.inject(FaultModel::Burst { len: 3 }, 3e-3, 77);
+        b.inject(FaultModel::Burst { len: 3 }, 3e-3, 77);
+        for idx in 0..a.num_shards() {
+            let sa = a.scrub_shard(idx);
+            let sb = b.scrub_subset(&[idx]);
+            assert_eq!(sb, vec![(idx, sa)]);
+        }
+        assert_eq!(a.image().data, b.image().data);
+        assert_eq!(a.lifetime, b.lifetime);
+    }
+
+    #[test]
+    fn shard_bits_sum_to_total() {
+        let w = wot_weights(8 * 56, 37);
+        for name in ["faulty", "zero", "ecc", "in-place"] {
+            let sb = ShardedBank::new(strategy_by_name(name).unwrap(), &w, 7, 1).unwrap();
+            let sum: u64 = (0..sb.num_shards()).map(|i| sb.shard_bits(i)).sum();
+            assert_eq!(sum, sb.total_bits(), "{name}");
+        }
     }
 
     #[test]

@@ -110,6 +110,33 @@ pub fn mean_ci_half_width(xs: &[f64], confidence: f64) -> f64 {
     t_critical(xs.len() - 1, confidence) * s / (xs.len() as f64).sqrt()
 }
 
+/// Two-sided normal quantile `z*` for the given confidence level —
+/// the `df → ∞` limit of [`t_critical`] (1.645 / 1.960 / 2.576 for
+/// 90 / 95 / 99%).
+pub fn normal_z(confidence: f64) -> f64 {
+    t_critical(usize::MAX, confidence)
+}
+
+/// Wilson score interval for a Bernoulli proportion: `k` successes out
+/// of `n` trials at the given confidence. Unlike the Wald interval it
+/// never collapses to zero width on `k == 0` — exactly what an online
+/// bit-error-rate estimator needs: a shard that has shown no error
+/// still carries an upper bound that shrinks as clean evidence
+/// accumulates. Accepts fractional (exponentially weighted) effective
+/// counts; `n <= 0` returns the vacuous `(0, 1)`.
+pub fn wilson_interval(k: f64, n: f64, confidence: f64) -> (f64, f64) {
+    if n <= 0.0 {
+        return (0.0, 1.0);
+    }
+    let z = normal_z(confidence);
+    let p = (k / n).clamp(0.0, 1.0);
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n;
+    let center = (p + z2 / (2.0 * n)) / denom;
+    let half = z * (p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt() / denom;
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
 /// Online accumulator for latency series (keeps raw samples; our series
 /// are small enough that exact percentiles beat streaming sketches).
 #[derive(Default, Clone)]
@@ -195,6 +222,38 @@ mod tests {
         // wider at higher confidence
         assert!(mean_ci_half_width(&xs, 0.99) > hw);
         assert!(mean_ci_half_width(&xs, 0.90) < hw);
+    }
+
+    #[test]
+    fn wilson_matches_published_values() {
+        // classic fixture: 10/100 at 95% -> (0.0552, 0.1744)
+        let (lo, hi) = wilson_interval(10.0, 100.0, 0.95);
+        assert!((lo - 0.0552).abs() < 1e-3, "lo = {lo}");
+        assert!((hi - 0.1744).abs() < 1e-3, "hi = {hi}");
+        // zero successes: lower bound 0, upper ~ z^2 / (n + z^2)
+        let (lo, hi) = wilson_interval(0.0, 1000.0, 0.95);
+        assert_eq!(lo, 0.0);
+        let z2 = normal_z(0.95).powi(2);
+        assert!((hi - z2 / (1000.0 + z2)).abs() < 1e-6, "hi = {hi}");
+        // all successes mirrors zero successes
+        let (lo, hi) = wilson_interval(1000.0, 1000.0, 0.95);
+        assert!(hi > 1.0 - 1e-9, "hi = {hi}");
+        assert!((lo - 1000.0 / (1000.0 + z2)).abs() < 1e-6, "lo = {lo}");
+        // no evidence is the vacuous interval
+        assert_eq!(wilson_interval(0.0, 0.0, 0.95), (0.0, 1.0));
+        // more evidence tightens, higher confidence widens
+        let (_, hi_small) = wilson_interval(1.0, 100.0, 0.95);
+        let (_, hi_big) = wilson_interval(10.0, 1000.0, 0.95);
+        assert!(hi_big < hi_small);
+        let (_, hi99) = wilson_interval(10.0, 1000.0, 0.99);
+        assert!(hi99 > hi_big);
+    }
+
+    #[test]
+    fn normal_z_anchors() {
+        assert!((normal_z(0.90) - 1.645).abs() < 1e-3);
+        assert!((normal_z(0.95) - 1.960).abs() < 1e-3);
+        assert!((normal_z(0.99) - 2.576).abs() < 1e-3);
     }
 
     #[test]

@@ -204,6 +204,7 @@ fn coordinator_with_protected_bank_and_live_faults() {
         fault_seed: 3,
         shards: 4,
         scrub_workers: 2,
+        ..ServerConfig::default()
     };
     let srv = Server::start_with(
         || Ok(Box::new(Mock) as Box<dyn zsecc::coordinator::server::BatchExec>),

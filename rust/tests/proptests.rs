@@ -799,3 +799,70 @@ fn prop_fault_rate_exact_count() {
         Ok(())
     });
 }
+
+// ------------------------------------------------ BER estimator laws --
+
+/// Convergence property of the scrub scheduler's online BER estimator:
+/// a single-shard bank scrubbed every virtual tick under a stationary
+/// fault process ends with a Wilson interval that brackets the true
+/// injected rate — across every fault model. Burst-family models
+/// deposit whole runs inside one code block, and a block-level code
+/// reports one *event* per hit block however many bits the burst
+/// carried, so their truth is the realized flip rate divided by the
+/// burst length (the window the estimator can actually observe).
+#[test]
+fn prop_ber_estimator_brackets_injected_rate() {
+    use std::time::Duration;
+    use zsecc::memory::{FaultModel, SchedulerConfig, ScrubScheduler, ShardedBank};
+
+    // (model, event bits per observable event, usable rates). Rates
+    // are capped per model: a block that has gone uncorrectable stops
+    // reporting new arrivals, so the accumulated dead-block fraction
+    // (~ rate x ticks x block_bits / burst_len) must stay well inside
+    // the Wilson interval's relative width — burst-family models kill
+    // a whole block per event and need the lowest rates.
+    type Case = (FaultModel, f64, &'static [f64]);
+    let models: [Case; 5] = [
+        (FaultModel::Uniform, 1.0, &[2.5e-5, 5e-5, 1e-4]),
+        (FaultModel::StuckAt { bit: 1 }, 1.0, &[2.5e-5, 5e-5, 1e-4]),
+        (FaultModel::HotspotAt { start: 0.3, frac: 0.5 }, 1.0, &[2.5e-5, 5e-5]),
+        (FaultModel::Burst { len: 3 }, 3.0, &[2.5e-5]),
+        (FaultModel::RowBurst { row_bits: 256, len: 4 }, 4.0, &[2.5e-5]),
+    ];
+    check("ber estimator brackets", 8, |rng, _size| {
+        let seed0 = rng.next_u64();
+        let (model, event_bits, rates) = models[rng.below(models.len() as u64) as usize];
+        let rate = rates[rng.below(rates.len() as u64) as usize];
+        let weights = wot_weights(&mut Rng::new(seed0 ^ 1), 4096); // 32 KiB
+        let mut bank =
+            ShardedBank::new(strategy_by_name("in-place").unwrap(), &weights, 1, 1).unwrap();
+        let bits = bank.shard_bits(0) as f64;
+        let tick = Duration::from_secs(1);
+        // fixed 1-tick cadence, slow decay: long memory tightens the
+        // interval around the stationary rate
+        let mut cfg = SchedulerConfig::fixed(tick);
+        cfg.decay = 0.98;
+        let mut sched = ScrubScheduler::new(cfg, &[bits as u64], Duration::ZERO);
+        let ticks = 150u64;
+        for t in 0..ticks {
+            bank.inject(model, rate, seed0 ^ (t + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            let stats = bank.scrub_shard(0);
+            sched.record_pass(0, &stats, tick * (t as u32 + 1));
+        }
+        let realized = bank.faults_injected as f64 / (bits * ticks as f64);
+        let truth = realized / event_bits;
+        let (lo, hi) = sched.ber_bounds(0);
+        if !(lo <= truth && truth <= hi) {
+            return Err(format!(
+                "{}: truth {truth:.3e} outside Wilson ({lo:.3e}, {hi:.3e}), \
+                 realized {realized:.3e}, rate {rate:.0e}",
+                model.tag()
+            ));
+        }
+        // and the interval is informative, not vacuous
+        if hi >= 1e-2 {
+            return Err(format!("{}: vacuous upper bound {hi:.3e}", model.tag()));
+        }
+        Ok(())
+    });
+}
