@@ -7,10 +7,14 @@
 //!
 //! Run: `cargo run --release --example serve -- \
 //!        --model squeezenet_s --strategy in-place --rps 300 --seconds 10`
+//!
+//! `--ingress ring|locked` (default ring) selects the front door: the
+//! lock-free slab ring or the mutex batcher baseline; `--ring-depth N`
+//! sets the ring's slab count.
 
 use std::time::{Duration, Instant};
 
-use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+use zsecc::coordinator::{BatchPolicy, IngressPolicy, Server, ServerConfig};
 use zsecc::memory::ScrubPolicy;
 use zsecc::model::EvalSet;
 use zsecc::util::cli::Args;
@@ -35,10 +39,13 @@ fn main() -> anyhow::Result<()> {
         fault_seed: args.u64_or("seed", 1)?,
         shards: args.usize_or("shards", 8)?,
         scrub_workers: args.usize_or("scrub-workers", 4)?,
+        ingress: IngressPolicy::parse(&args.str_or("ingress", "ring"))?,
+        ring_depth: args.usize_or("ring-depth", 8)?,
     };
     println!(
-        "serving {model}: strategy={} batch<={} max_wait={:?} scrub={:?} ({}) fault={}/interval",
+        "serving {model}: strategy={} ingress={} batch<={} max_wait={:?} scrub={:?} ({}) fault={}/interval",
         cfg.strategy,
+        cfg.ingress.tag(),
         cfg.policy.max_batch,
         cfg.policy.max_wait,
         cfg.scrub_interval,

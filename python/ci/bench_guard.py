@@ -11,7 +11,11 @@ and fails on a >25% throughput drop in either section:
 * ``tile``: per-strategy clean-decode GB/s (``<strategy>/scalar`` and
   ``<strategy>/tiled`` keys), compared key by key;
 * ``pool``: the ``scoped_gbps``/``pool_gbps`` arrays, compared element
-  by element (positions index the shard-count sweep).
+  by element (positions index the shard-count sweep);
+* ``serving.ingress``: the ``ring_mreqs``/``locked_mreqs`` arrays
+  (million req/s over the producer-count sweep), compared element by
+  element — only when both records carry the section, so ledgers
+  predating it stay comparable.
 
 Exit codes: 0 pass/skip, 1 regression. Set ``BENCH_WARN_ONLY=1`` to
 demote regressions to warnings (exit 0) while a legitimate perf change
@@ -56,31 +60,39 @@ def load_ledger(path):
 
 
 def section_pairs(old, new):
-    """Yield (label, old_gbps, new_gbps) for every guarded metric."""
+    """Yield (label, old, new, unit) for every guarded metric."""
     old_tile, new_tile = old.get("tile", {}), new.get("tile", {})
     for key in sorted(old_tile):
         if key in new_tile:
-            yield f"tile/{key}", old_tile[key], new_tile[key]
+            yield f"tile/{key}", old_tile[key], new_tile[key], "GB/s"
     old_pool, new_pool = old.get("pool", {}), new.get("pool", {})
     for series in ("scoped_gbps", "pool_gbps"):
         olds, news = old_pool.get(series, []), new_pool.get(series, [])
         shards = old_pool.get("shards", [])
         for i, (o, n) in enumerate(zip(olds, news)):
             label = f"{shards[i]:g}sh" if i < len(shards) else str(i)
-            yield f"pool/{series}[{label}]", o, n
+            yield f"pool/{series}[{label}]", o, n, "GB/s"
+    old_ing = old.get("serving", {}).get("ingress", {})
+    new_ing = new.get("serving", {}).get("ingress", {})
+    producers = old_ing.get("producers", [])
+    for series in ("ring_mreqs", "locked_mreqs"):
+        olds, news = old_ing.get(series, []), new_ing.get(series, [])
+        for i, (o, n) in enumerate(zip(olds, news)):
+            label = f"{producers[i]:g}p" if i < len(producers) else str(i)
+            yield f"serving/ingress/{series}[{label}]", o, n, "Mreq/s"
 
 
 def compare(old, new, threshold=THRESHOLD):
     """Return the list of regressions as (label, old, new, drop)."""
     regressions = []
-    for label, o, n in section_pairs(old, new):
+    for label, o, n, unit in section_pairs(old, new):
         if not (isinstance(o, (int, float)) and isinstance(n, (int, float))):
             continue
         if o <= 0:
             continue
         drop = 1.0 - n / o
         marker = "REGRESSION" if drop > threshold else "ok"
-        print(f"  {label:<34} {o:10.3f} -> {n:10.3f} GB/s  ({-drop:+7.1%}) {marker}")
+        print(f"  {label:<34} {o:10.3f} -> {n:10.3f} {unit:<6} ({-drop:+7.1%}) {marker}")
         if drop > threshold:
             regressions.append((label, o, n, drop))
     return regressions
@@ -109,6 +121,31 @@ def self_test():
     # mismatched shard sweeps only compare the common prefix
     short = {"tile": {}, "pool": {"shards": [4], "pool_gbps": [7.0]}}
     assert compare(old, short) == []
+    # serving.ingress: guarded elementwise when both records carry it,
+    # silently skipped when either side predates the section
+    ing = {
+        "serving": {
+            "ingress": {
+                "producers": [1, 4],
+                "ring_mreqs": [2.0, 5.0],
+                "locked_mreqs": [2.0, 1.5],
+            }
+        }
+    }
+    ing_slow = {
+        "serving": {
+            "ingress": {
+                "producers": [1, 4],
+                "ring_mreqs": [1.9, 2.0],
+                "locked_mreqs": [1.9, 1.4],
+            }
+        }
+    }
+    print("[self-test] serving.ingress regressed record:")
+    bad = compare({**old, **ing}, {**flat, **ing_slow})
+    assert [b[0] for b in bad] == ["serving/ingress/ring_mreqs[4p]"], bad
+    assert compare({**old, **ing}, flat) == [], "absent section must be skipped"
+    assert compare(old, {**flat, **ing_slow}) == [], "absent old section too"
     # records from different bench sizes must not be compared at all
     ci = {**old, "bytes_per_op": 65536}
     local = {**old, "bytes_per_op": 1 << 20}

@@ -95,6 +95,155 @@ fn scoped_scrub(
     });
 }
 
+/// Closed-loop multi-producer front-door throughput (million req/s)
+/// for the lock-free slab ring: P producers push fire-and-forget
+/// requests (response receivers dropped, so fan-out is a cheap failed
+/// send) while a dispatcher thread drains sealed batches and recycles
+/// slabs. The executor is free, so this isolates the ingress cost —
+/// reserve/write/seal against lock/enqueue in [`locked_ingress_mreqs`].
+fn ring_ingress_mreqs(producers: usize, secs: f64) -> f64 {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+    use zsecc::coordinator::{IngressRing, Response, RingConfig};
+
+    let ring = Arc::new(IngressRing::new(RingConfig {
+        depth: 64,
+        cap: 32,
+        dim: 8,
+        max_wait: Duration::from_millis(1),
+    }));
+    let dispatcher = {
+        let r = ring.clone();
+        std::thread::spawn(move || {
+            while let Some(batch) = r.next_sealed() {
+                for slot in 0..batch.count() {
+                    let lane = batch.take_lane(slot);
+                    let _ = lane.resp.send(Response {
+                        id: lane.id,
+                        pred: 0,
+                        latency: lane.submitted.elapsed(),
+                    });
+                }
+            }
+        })
+    };
+    let stop = AtomicBool::new(false);
+    let mut pushed = 0u64;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let ring = &ring;
+            let stop = &stop;
+            handles.push(scope.spawn(move || {
+                let img = vec![0f32; 8];
+                let (tx, rx) = channel();
+                drop(rx); // fire-and-forget: response sends fail cheaply
+                let mut n = 0u64;
+                let mut id = (p as u64) << 32;
+                while !stop.load(Ordering::Relaxed) {
+                    match ring.push(id, &img, tx.clone()) {
+                        Ok(()) => {
+                            n += 1;
+                            id += 1;
+                        }
+                        Err(_) => std::thread::yield_now(),
+                    }
+                }
+                n
+            }));
+        }
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            pushed += h.join().unwrap();
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    ring.close();
+    dispatcher.join().unwrap();
+    pushed as f64 / elapsed / 1e6
+}
+
+/// The locked baseline for [`ring_ingress_mreqs`]: same closed-loop
+/// producers and free executor, front door swapped for the
+/// Mutex+Condvar [`zsecc::coordinator::Batcher`]. The batcher queue is
+/// unbounded, so producers self-throttle (an occasional `len()` probe)
+/// to keep the comparison memory-bounded without adding a lock
+/// acquisition to every push.
+fn locked_ingress_mreqs(producers: usize, secs: f64) -> f64 {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+    use zsecc::coordinator::{BatchPolicy, Batcher, Request, Response};
+
+    let b = Arc::new(Batcher::new(BatchPolicy {
+        max_batch: 32,
+        max_wait: Duration::from_millis(1),
+    }));
+    let consumer = {
+        let b = b.clone();
+        std::thread::spawn(move || {
+            while let Some(batch) = b.next_batch() {
+                for req in batch {
+                    let _ = req.resp.send(Response {
+                        id: req.id,
+                        pred: 0,
+                        latency: req.submitted.elapsed(),
+                    });
+                }
+            }
+        })
+    };
+    let stop = AtomicBool::new(false);
+    let mut pushed = 0u64;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let b = &b;
+            let stop = &stop;
+            handles.push(scope.spawn(move || {
+                let img = vec![0f32; 8];
+                let (tx, rx) = channel();
+                drop(rx);
+                let mut n = 0u64;
+                let mut id = (p as u64) << 32;
+                while !stop.load(Ordering::Relaxed) {
+                    if n % 256 == 0 && b.len() > 8192 {
+                        std::thread::yield_now();
+                        continue;
+                    }
+                    let req = Request {
+                        id,
+                        image: img.clone(),
+                        submitted: Instant::now(),
+                        resp: tx.clone(),
+                    };
+                    if b.push(req).is_err() {
+                        break;
+                    }
+                    n += 1;
+                    id += 1;
+                }
+                n
+            }));
+        }
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            pushed += h.join().unwrap();
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    b.close();
+    consumer.join().unwrap();
+    pushed as f64 / elapsed / 1e6
+}
+
 fn main() {
     let args = Args::from_env().unwrap_or_default();
     // 1 MiB of weights (a VGG16_s-scale buffer) unless --n overrides;
@@ -349,6 +498,32 @@ fn main() {
         (fixed, adaptive)
     };
 
+    // serving ingress: closed-loop multi-producer front-door
+    // throughput, lock-free slab ring vs the mutex batcher, free
+    // executor (batch 32 both ways). The ring's reserve/write/seal
+    // path must hold its lead once producers contend on the front
+    // door (target: ring >= locked at 4 producers).
+    const PRODUCERS: [usize; 5] = [1, 2, 4, 8, 16];
+    println!("== serving ingress: ring vs locked, closed-loop producers (batch 32) ==");
+    let ingress_secs = 0.3;
+    let mut ring_mreqs: Vec<f64> = Vec::new();
+    let mut locked_mreqs: Vec<f64> = Vec::new();
+    for &p in &PRODUCERS {
+        let rg = ring_ingress_mreqs(p, ingress_secs);
+        let lk = locked_ingress_mreqs(p, ingress_secs);
+        println!(
+            "    -> {p:>2} producers: ring {rg:>6.2} Mreq/s | locked {lk:>6.2} Mreq/s | {:.2}x",
+            rg / lk
+        );
+        ring_mreqs.push(rg);
+        locked_mreqs.push(lk);
+    }
+    let ring_vs_locked_4p = {
+        let i = PRODUCERS.iter().position(|&p| p == 4).unwrap();
+        ring_mreqs[i] / locked_mreqs[i]
+    };
+    println!("    -> ring/locked at 4 producers: {ring_vs_locked_4p:.2}x (target >= 1x)");
+
     if args.bool("json") || args.str_opt("out").is_some() {
         // tile section: per-strategy clean-decode GB/s, scalar vs tiled
         let tile_flat: Vec<(String, f64)> = tile_records
@@ -400,6 +575,18 @@ fn main() {
                         ),
                     ),
                 ]),
+            ),
+            (
+                "serving",
+                obj(vec![(
+                    "ingress",
+                    obj(vec![
+                        ("producers", arr(PRODUCERS.iter().map(|&p| num(p as f64)))),
+                        ("ring_mreqs", arr(ring_mreqs.iter().map(|&v| num(v)))),
+                        ("locked_mreqs", arr(locked_mreqs.iter().map(|&v| num(v)))),
+                        ("ring_vs_locked_4p", num(ring_vs_locked_4p)),
+                    ]),
+                )]),
             ),
             (
                 "pool",

@@ -1,16 +1,24 @@
 //! Serving benchmark: coordinator throughput/latency under open-loop
 //! Poisson load, swept over the batching policy — first with a mock
-//! executor (pure coordinator overhead), then over the real PJRT model
-//! when artifacts exist. `--scrub-policy fixed|adaptive` selects the
-//! scrub scheduling policy of the real-model section (BENCH_ecc.json
-//! records the scheduler's fixed-vs-adaptive comparison in its `sched`
-//! section; this flag lets the serving latency numbers be taken under
-//! either policy too).
+//! executor (pure coordinator overhead), then a closed-loop
+//! multi-producer sweep over the ingress front door, then the real
+//! PJRT model when artifacts exist.
+//!
+//! Flags: `--ingress ring|locked|both` (default both) selects the
+//! front door(s) under test; `--producers N` pins the producer sweep
+//! to one count instead of {1, 2, 4, 8, 16}; `--quick` shrinks drive
+//! times and skips the real-model section (the CI smoke runs
+//! `--ingress ring --producers 4 --quick`); `--scrub-policy
+//! fixed|adaptive` selects the scrub scheduling policy of the
+//! real-model section (BENCH_ecc.json records the scheduler's
+//! fixed-vs-adaptive comparison in its `sched` section; this flag lets
+//! the serving latency numbers be taken under either policy too).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 use zsecc::coordinator::server::BatchExec;
-use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
+use zsecc::coordinator::{BatchPolicy, IngressPolicy, Server, ServerConfig};
 use zsecc::memory::ScrubPolicy;
 use zsecc::model::EvalSet;
 use zsecc::util::cli::Args;
@@ -70,55 +78,170 @@ fn drive(srv: &Server, dim: usize, rps: f64, secs: f64, seed: u64) -> (f64, Seri
     (answered as f64 / t0.elapsed().as_secs_f64(), lat)
 }
 
+/// Closed-loop multi-producer throughput (million answered req/s)
+/// through the full server with a zero-cost mock executor: each
+/// producer keeps a bounded window of in-flight requests and counts
+/// completed responses, so the number is end-to-end (submit → batch →
+/// exec → fan-out), dominated by the selected ingress front door.
+fn producer_sweep(pol: IngressPolicy, producers: usize, secs: f64) -> anyhow::Result<f64> {
+    const WINDOW: usize = 64;
+    let cfg = ServerConfig {
+        strategy: "faulty".into(),
+        policy: BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(1),
+        },
+        scrub_interval: None,
+        fault_rate_per_interval: 0.0,
+        fault_seed: 0,
+        ingress: pol,
+        ring_depth: 64,
+        ..ServerConfig::default()
+    };
+    let srv = Server::start_with(
+        move || {
+            Ok(Box::new(Mock {
+                batch: 32,
+                dim: 8,
+                cost: Duration::ZERO,
+            }) as Box<dyn BatchExec>)
+        },
+        8,
+        &cfg,
+        None,
+    )?;
+    let stop = AtomicBool::new(false);
+    let mut answered = 0u64;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..producers {
+            let srv = &srv;
+            let stop = &stop;
+            handles.push(scope.spawn(move || {
+                let img = vec![0f32; 8];
+                let mut window = std::collections::VecDeque::with_capacity(WINDOW);
+                let mut n = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    match srv.try_submit(img.clone()) {
+                        Ok(rx) => window.push_back(rx),
+                        Err(_) => std::thread::yield_now(), // ring backpressure
+                    }
+                    if window.len() >= WINDOW {
+                        let rx = window.pop_front().unwrap();
+                        if rx.recv_timeout(Duration::from_secs(10)).is_ok() {
+                            n += 1;
+                        }
+                    }
+                }
+                for rx in window {
+                    if rx.recv_timeout(Duration::from_secs(10)).is_ok() {
+                        n += 1;
+                    }
+                }
+                n
+            }));
+        }
+        std::thread::sleep(Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            answered += h.join().unwrap();
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    srv.shutdown();
+    Ok(answered as f64 / elapsed / 1e6)
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env().unwrap_or_default();
     let scrub_policy = ScrubPolicy::parse(&args.str_or("scrub-policy", "adaptive"))?;
-    println!("== serving bench: coordinator overhead (mock executor, 2ms/batch) ==");
-    println!(
-        "{:<32} {:>10} {:>10} {:>10} {:>10}",
-        "policy", "req/s", "mean ms", "p50 ms", "p99 ms"
-    );
-    for (max_batch, wait_ms) in [(1usize, 0u64), (8, 2), (32, 5), (32, 20), (128, 5)] {
-        let cfg = ServerConfig {
-            strategy: "faulty".into(),
-            policy: BatchPolicy {
-                max_batch,
-                max_wait: Duration::from_millis(wait_ms),
-            },
-            scrub_interval: None,
-            fault_rate_per_interval: 0.0,
-            fault_seed: 0,
-            ..ServerConfig::default()
-        };
-        let srv = Server::start_with(
-            move || {
-                Ok(Box::new(Mock {
-                    batch: max_batch,
-                    dim: 8,
-                    cost: Duration::from_millis(2),
-                }) as Box<dyn BatchExec>)
-            },
-            8,
-            &cfg,
-            None,
-        )?;
-        let (rps, lat) = drive(&srv, 8, 2000.0, 2.0, 42);
+    let quick = args.bool("quick");
+    let ingress_arg = args.str_or("ingress", "both");
+    let fronts: Vec<IngressPolicy> = match ingress_arg.as_str() {
+        "both" => vec![IngressPolicy::Ring, IngressPolicy::Locked],
+        other => vec![IngressPolicy::parse(other)?],
+    };
+    let drive_secs = if quick { 0.5 } else { 2.0 };
+    let policy_grid: &[(usize, u64)] = if quick {
+        &[(32, 5)]
+    } else {
+        &[(1, 0), (8, 2), (32, 5), (32, 20), (128, 5)]
+    };
+    for &front in &fronts {
         println!(
-            "{:<32} {:>10.0} {:>10.2} {:>10.2} {:>10.2}",
-            format!("batch<={max_batch} wait={wait_ms}ms"),
-            rps,
-            lat.mean(),
-            lat.p(50.0),
-            lat.p(99.0)
+            "== serving bench: coordinator overhead (mock executor, 2ms/batch, ingress={}) ==",
+            front.tag()
         );
-        srv.shutdown();
+        println!(
+            "{:<32} {:>10} {:>10} {:>10} {:>10}",
+            "policy", "req/s", "mean ms", "p50 ms", "p99 ms"
+        );
+        for &(max_batch, wait_ms) in policy_grid {
+            let cfg = ServerConfig {
+                strategy: "faulty".into(),
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(wait_ms),
+                },
+                scrub_interval: None,
+                fault_rate_per_interval: 0.0,
+                fault_seed: 0,
+                ingress: front,
+                ring_depth: 8,
+                ..ServerConfig::default()
+            };
+            let srv = Server::start_with(
+                move || {
+                    Ok(Box::new(Mock {
+                        batch: max_batch,
+                        dim: 8,
+                        cost: Duration::from_millis(2),
+                    }) as Box<dyn BatchExec>)
+                },
+                8,
+                &cfg,
+                None,
+            )?;
+            let (rps, lat) = drive(&srv, 8, 2000.0, drive_secs, 42);
+            println!(
+                "{:<32} {:>10.0} {:>10.2} {:>10.2} {:>10.2}",
+                format!("batch<={max_batch} wait={wait_ms}ms"),
+                rps,
+                lat.mean(),
+                lat.p(50.0),
+                lat.p(99.0)
+            );
+            srv.shutdown();
+        }
     }
 
+    // Closed-loop producer sweep over the ingress front door: the
+    // ring's lock-free reserve/write/seal path against the mutex
+    // batcher as producer contention grows.
+    let producer_counts: Vec<usize> = match args.usize_or("producers", 0)? {
+        0 => vec![1, 2, 4, 8, 16],
+        p => vec![p],
+    };
+    let sweep_secs = if quick { 0.3 } else { 1.0 };
+    println!("== serving bench: closed-loop producer sweep (mock executor, free exec) ==");
+    for &p in &producer_counts {
+        for &front in &fronts {
+            let mreqs = producer_sweep(front, p, sweep_secs)?;
+            println!("ingress={:<8} producers={:<3} {:>8.3} Mreq/s", front.tag(), p, mreqs);
+        }
+    }
+
+    if quick {
+        println!("\n(real-model serving bench skipped: --quick)");
+        return Ok(());
+    }
     let artifacts = zsecc::artifacts_dir();
     if artifacts.join("index.json").exists() {
         println!(
-            "\n== serving bench: real PJRT model (squeezenet_s, in-place, live faults, {} scrub) ==",
-            scrub_policy.tag()
+            "\n== serving bench: real PJRT model (squeezenet_s, in-place, live faults, {} scrub, ingress={}) ==",
+            scrub_policy.tag(),
+            fronts[0].tag()
         );
         println!(
             "{:<32} {:>10} {:>10} {:>10} {:>10}",
@@ -136,6 +259,8 @@ fn main() -> anyhow::Result<()> {
                 scrub_policy,
                 fault_rate_per_interval: 1e-6,
                 fault_seed: 1,
+                ingress: fronts[0],
+                ring_depth: 8,
                 ..ServerConfig::default()
             };
             let srv = Server::start_pjrt(&artifacts, "squeezenet_s", &cfg)?;

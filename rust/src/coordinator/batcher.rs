@@ -1,9 +1,12 @@
 //! Dynamic batcher: size-or-deadline policy.
 //!
 //! Requests accumulate in a queue; a batch is released when either
-//! `max_batch` requests are waiting or the oldest request has waited
-//! `max_wait`. This is the standard serving trade-off (throughput from
-//! large batches vs. tail latency) and one of our serving-bench sweeps.
+//! `max_batch` requests are waiting or the batch's deadline expires.
+//! The deadline is *pinned* when the batch's first request arrives
+//! (`first.submitted + max_wait`) and never recomputed on later
+//! wakeups, so a stream of late arrivals cannot starve it. This is the
+//! standard serving trade-off (throughput from large batches vs. tail
+//! latency) and one of our serving-bench sweeps.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
@@ -46,6 +49,9 @@ impl Default for BatchPolicy {
 struct Inner {
     queue: VecDeque<Request>,
     closed: bool,
+    /// Deadline of the batch currently forming, pinned to its first
+    /// request at push time; `None` while the queue is empty.
+    deadline: Option<Instant>,
 }
 
 /// Thread-safe request queue with the release policy.
@@ -61,6 +67,7 @@ impl Batcher {
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
                 closed: false,
+                deadline: None,
             }),
             cv: Condvar::new(),
             policy,
@@ -72,6 +79,10 @@ impl Batcher {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             return Err(req);
+        }
+        if g.queue.is_empty() {
+            // This request starts a new batch: pin its deadline now.
+            g.deadline = Some(req.submitted + self.policy.max_wait);
         }
         g.queue.push_back(req);
         self.cv.notify_one();
@@ -101,13 +112,16 @@ impl Batcher {
                 break;
             }
             if !g.queue.is_empty() {
-                let oldest = g.queue.front().unwrap().submitted;
-                let age = oldest.elapsed();
-                if age >= self.policy.max_wait {
+                // Wait against the deadline pinned when the batch's
+                // first request arrived — never recomputed here, so
+                // late arrivals (which reset nothing) cannot push it
+                // out and starve the batch.
+                let deadline = g.deadline.expect("non-empty queue has a pinned deadline");
+                let now = Instant::now();
+                if now >= deadline {
                     break;
                 }
-                let remain = self.policy.max_wait - age;
-                let (ng, _t) = self.cv.wait_timeout(g, remain).unwrap();
+                let (ng, _t) = self.cv.wait_timeout(g, deadline - now).unwrap();
                 g = ng;
                 if g.closed && g.queue.is_empty() {
                     return None;
@@ -120,7 +134,14 @@ impl Batcher {
             g = self.cv.wait(g).unwrap();
         }
         let take = g.queue.len().min(self.policy.max_batch);
-        Some(g.queue.drain(..take).collect())
+        let batch: Vec<Request> = g.queue.drain(..take).collect();
+        // Overflow left behind starts the next batch: re-pin to its
+        // (already waiting) first request.
+        g.deadline = g
+            .queue
+            .front()
+            .map(|r| r.submitted + self.policy.max_wait);
+        Some(batch)
     }
 }
 
@@ -172,6 +193,52 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t.elapsed() >= Duration::from_millis(15));
+    }
+
+    /// Satellite regression: the release deadline is pinned to the
+    /// batch's *first* request. A stream of late arrivals — each
+    /// younger than `max_wait` — must not push the deadline out; the
+    /// batch releases at `first.submitted + max_wait` regardless.
+    #[test]
+    fn deadline_pinned_to_first_request_under_late_arrivals() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 100, // never released on size
+            max_wait: Duration::from_millis(40),
+        }));
+        let t0 = Instant::now();
+        let (first, _rx0) = req(0);
+        assert!(b.push(first).is_ok());
+        // Late arrivals every 5ms for well past the deadline; a
+        // drifting implementation (deadline derived from recent queue
+        // state on each wakeup) would keep waiting.
+        let feeder = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut kept = Vec::new();
+                for i in 1..30 {
+                    std::thread::sleep(Duration::from_millis(5));
+                    let (r, rx) = req(i);
+                    if b.push(r).is_err() {
+                        break; // batcher closed by the main thread
+                    }
+                    kept.push(rx);
+                }
+                kept
+            })
+        };
+        let batch = b.next_batch().unwrap();
+        let elapsed = t0.elapsed();
+        assert_eq!(batch[0].id, 0, "first request leads the batch");
+        assert!(
+            elapsed >= Duration::from_millis(35),
+            "released before the pinned deadline: {elapsed:?}"
+        );
+        assert!(
+            elapsed < Duration::from_millis(120),
+            "late arrivals starved the deadline: {elapsed:?}"
+        );
+        b.close();
+        let _ = feeder.join().unwrap();
     }
 
     #[test]

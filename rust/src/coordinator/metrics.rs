@@ -3,11 +3,12 @@
 //! failures, per-shard scrub/refresh counters for the sharded store,
 //! and the scrub scheduler's per-shard BER/deadline/overdue gauges.
 
+use crate::coordinator::ingress::{IngressSnapshot, IngressStats};
 use crate::ecc::DecodeStats;
 use crate::memory::ShardSchedule;
 use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Per-shard counter snapshot (scrub loop + refresh channel activity).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -51,6 +52,12 @@ pub struct Metrics {
     /// `pred == usize::MAX`) — previously invisible to operators.
     pub exec_failures: AtomicU64,
     latency_us: Mutex<Series>,
+    /// Live handle to the ring front door's gauges (occupancy
+    /// high-water mark, CAS retries, seal-cause split, overload
+    /// rejections); `None` under the locked baseline. The counters
+    /// themselves live in the ring and are read lock-free — this mutex
+    /// only guards attachment.
+    ingress: Mutex<Option<Arc<IngressStats>>>,
     shards: Mutex<Vec<ShardCounters>>,
     /// Scheduler gauges, one slot per shard: Wilson BER bounds, current
     /// interval, deadline headroom, cumulative overdue passes. Written
@@ -114,6 +121,18 @@ impl Metrics {
         Self::shard_slot(&mut shards, idx).refreshes += 1;
     }
 
+    /// Attach the ring ingress gauges (done once at server startup
+    /// when the ring front door is selected).
+    pub fn set_ingress(&self, stats: Arc<IngressStats>) {
+        *self.ingress.lock().unwrap() = Some(stats);
+    }
+
+    /// Snapshot of the ingress gauges; `None` under the locked
+    /// baseline.
+    pub fn ingress(&self) -> Option<IngressSnapshot> {
+        self.ingress.lock().unwrap().as_ref().map(|s| s.snapshot())
+    }
+
     /// Snapshot of the per-shard counters.
     pub fn shard_counters(&self) -> Vec<ShardCounters> {
         self.shards.lock().unwrap().clone()
@@ -150,6 +169,18 @@ impl Metrics {
             self.delta_refreshes.load(Ordering::Relaxed),
             self.exec_failures.load(Ordering::Relaxed),
         );
+        if let Some(i) = self.ingress() {
+            s.push_str(&format!(
+                "\n  ingress occupancy={} hwm={} cas_retries={} seal(full/deadline/drain)={}/{}/{} overloads={}",
+                i.occupancy,
+                i.occupancy_hwm,
+                i.cas_retries,
+                i.seal_full,
+                i.seal_deadline,
+                i.seal_drain,
+                i.overloads,
+            ));
+        }
         let shards = self.shards.lock().unwrap();
         if !shards.is_empty() {
             s.push_str("\n  shard  scrubs   clean corrected detected zeroed refreshes");
@@ -306,6 +337,74 @@ mod tests {
         // wholesale replacement, not accumulation
         m.set_shard_schedules(gauges[..1].to_vec());
         assert_eq!(m.shard_schedules().len(), 1);
+    }
+
+    /// Ingress gauges read through `Metrics` while producers and a
+    /// dispatcher hammer the ring: snapshots must stay internally
+    /// consistent mid-flight and settle to conserved totals.
+    #[test]
+    fn ingress_gauges_under_concurrent_recorders() {
+        use crate::coordinator::ingress::{IngressRing, PushError, RingConfig};
+        use std::sync::mpsc::channel;
+        use std::time::Duration;
+
+        let m = Arc::new(Metrics::new());
+        assert!(m.ingress().is_none(), "locked baseline has no gauges");
+        let ring = Arc::new(IngressRing::new(RingConfig {
+            depth: 4,
+            cap: 8,
+            dim: 1,
+            max_wait: Duration::from_millis(1),
+        }));
+        m.set_ingress(ring.stats());
+        let producers = 4;
+        let per = 250u64;
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let ring = ring.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let (tx, _rx) = channel();
+                        loop {
+                            match ring.push(p * 1000 + i, &[0.0], tx.clone()) {
+                                Ok(()) => break,
+                                Err(PushError::Overloaded) => std::thread::yield_now(),
+                                Err(e) => panic!("{e}"),
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let dispatcher = {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                let mut served = 0u64;
+                while let Some(b) = ring.next_sealed() {
+                    served += b.count() as u64;
+                }
+                served
+            })
+        };
+        // snapshots taken while recorders run never tear: the gauge can
+        // momentarily lead the high-water mark (increment precedes the
+        // fetch_max) by at most one lagging producer each, but neither
+        // can exceed the ring's admission capacity
+        for _ in 0..50 {
+            let i = m.ingress().unwrap();
+            assert!(i.occupancy <= 4 * 8);
+            assert!(i.occupancy_hwm <= 4 * 8);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        ring.close();
+        assert_eq!(dispatcher.join().unwrap(), producers * per);
+        let i = m.ingress().unwrap();
+        assert_eq!(i.occupancy, 0, "all reservations recycled");
+        assert!(i.occupancy_hwm >= 1);
+        assert!(i.seal_full + i.seal_deadline + i.seal_drain >= 1);
+        assert!(m.report().contains("ingress occupancy="), "{}", m.report());
     }
 
     #[test]

@@ -1,16 +1,27 @@
 //! Thread-based serving coordinator (tokio is unavailable offline; the
-//! event loop is std::thread + mpsc channels + condvar-backed queues).
+//! event loop is std::thread + mpsc channels + lock-free/condvar
+//! queues).
 //!
-//! Topology per served model:
+//! Topology per served model (front door selected by
+//! [`IngressPolicy`]):
 //!
 //! ```text
-//!   clients --submit()--> [ Batcher queue ] --batches--> inference thread
-//!                                                        (owns PJRT: !Send)
+//!   clients --try_submit()--> [ Ingress: lock-free slab ring (Ring)
+//!                               or Mutex+Condvar queue    (Locked) ]
+//!                                  --sealed batches--> inference thread
+//!                                                      (owns PJRT: !Send)
 //!   scrub thread --(WeightUpdate: full | dirty-shard deltas)--> inference
 //!        |                                                thread (rebind)
 //!        `-- owns the ShardedBank: fault injection + parallel per-shard
 //!            scrub on a scoped worker pool + dirty tracking
 //! ```
+//!
+//! Under the ring front door producers CAS-reserve a slot and write
+//! their input tensor straight into the batch slab (reserve → write →
+//! seal → exec → recycle; see [`ingress`]), so the request hot path
+//! takes no lock and performs no steady-state allocation; a full ring
+//! is explicit [`PushError::Overloaded`] backpressure. The locked
+//! batcher remains the selectable baseline.
 //!
 //! PJRT handles wrap raw pointers and are not Send, so every PJRT object
 //! lives on the inference thread; other threads communicate through
@@ -20,11 +31,16 @@
 //! deltas; a full buffer crosses only when every shard is dirty.
 
 pub mod batcher;
+pub mod ingress;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy, Request, Response};
+pub use ingress::{
+    Ingress, IngressPolicy, IngressRing, IngressSnapshot, IngressStats, PushError, RingConfig,
+    SealCause, SealedBatch,
+};
 pub use metrics::{Metrics, ShardCounters};
 pub use router::Router;
 pub use server::{BatchExec, Server, ServerConfig, WeightDelta, WeightUpdate};

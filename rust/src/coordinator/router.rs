@@ -6,13 +6,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 
 use super::batcher::Response;
+use super::ingress::PushError;
 use super::server::Server;
 
 pub struct Router {
     servers: BTreeMap<String, Server>,
     inflight: AtomicU64,
     pub max_inflight: u64,
+    /// Requests refused at the router's global in-flight cap.
     pub rejected: AtomicU64,
+    /// Requests refused by a saturated per-model ingress ring
+    /// ([`PushError::Overloaded`]) — backpressure from below the
+    /// router's own cap, visible separately so operators can tell
+    /// "router cap too low" from "model ring too shallow".
+    pub shed: AtomicU64,
 }
 
 impl Router {
@@ -22,6 +29,7 @@ impl Router {
             inflight: AtomicU64::new(0),
             max_inflight,
             rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         }
     }
 
@@ -53,11 +61,14 @@ impl Router {
             .inspect_err(|_| {
                 self.inflight.fetch_sub(1, Ordering::AcqRel);
             })?;
-        match srv.submit(image) {
+        match srv.try_submit(image) {
             Ok(rx) => Ok(Ticket { rx, router: self }),
             Err(e) => {
                 self.inflight.fetch_sub(1, Ordering::AcqRel);
-                Err(e)
+                if e == PushError::Overloaded {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(anyhow::anyhow!("{model}: {e}"))
             }
         }
     }
@@ -162,6 +173,82 @@ mod tests {
         );
         assert_eq!(router.rejected.load(Ordering::Relaxed), 1);
         drop(_t1);
+        assert_eq!(router.in_flight(), 0);
+        router.shutdown();
+    }
+
+    /// Per-model ring backpressure propagates through the router as
+    /// `shed` (distinct from the router's own cap `rejected`): a gated
+    /// executor keeps the model's ring full, so submits under the
+    /// router cap still get refused by the ring.
+    #[test]
+    fn ring_overload_sheds_through_router() {
+        use crate::coordinator::ingress::IngressPolicy;
+        use std::sync::{Arc, Mutex};
+
+        struct Gated {
+            gate: Arc<Mutex<()>>,
+        }
+        impl BatchExec for Gated {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn exec(&mut self, _images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+                let _g = self.gate.lock().unwrap();
+                Ok(vec![0; count])
+            }
+            fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+        let gate = Arc::new(Mutex::new(()));
+        let held = gate.lock().unwrap();
+        let gate2 = gate.clone();
+        let cfg = ServerConfig {
+            strategy: "faulty".into(),
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            scrub_interval: None,
+            ingress: IngressPolicy::Ring,
+            ring_depth: 2,
+            ..ServerConfig::default()
+        };
+        let srv = Server::start_with(
+            move || Ok(Box::new(Gated { gate: gate2 }) as Box<dyn BatchExec>),
+            1,
+            &cfg,
+            None,
+        )
+        .unwrap();
+        let mut router = Router::new(64);
+        router.add("a", srv);
+        // Ring capacity is depth(2) x cap(1) = 2 (+1 the dispatcher may
+        // hold at the gate); well under the router cap of 64, so the
+        // first refusal must come from the ring, not the router.
+        let mut tickets = Vec::new();
+        let mut refused = false;
+        for _ in 0..16 {
+            match router.submit("a", vec![0.0]) {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    assert!(e.to_string().contains("overloaded"), "{e}");
+                    refused = true;
+                    break;
+                }
+            }
+        }
+        assert!(refused, "saturated ring must shed through the router");
+        assert!(router.shed.load(Ordering::Relaxed) >= 1);
+        assert_eq!(router.rejected.load(Ordering::Relaxed), 0);
+        drop(held);
+        for t in tickets {
+            t.wait(Duration::from_secs(5)).unwrap();
+        }
         assert_eq!(router.in_flight(), 0);
         router.shutdown();
     }

@@ -19,7 +19,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::{BatchPolicy, Batcher, Request, Response};
+use super::batcher::{BatchPolicy, Batcher, Response};
+use super::ingress::{Ingress, IngressPolicy, IngressRing, PushError, RingConfig};
 use super::metrics::Metrics;
 use crate::ecc::strategy_by_name;
 use crate::memory::{pool, FaultModel, SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardedBank};
@@ -56,6 +57,12 @@ pub struct ServerConfig {
     pub shards: usize,
     /// Worker threads the scrub loop fans shards out over.
     pub scrub_workers: usize,
+    /// Serving front door: the mutex batcher baseline or the lock-free
+    /// slot-reservation ring (`coordinator::ingress`).
+    pub ingress: IngressPolicy,
+    /// Ring depth (slabs) when `ingress == Ring`; rounded up to a
+    /// power of two. Admission capacity is `ring_depth * max_batch`.
+    pub ring_depth: usize,
 }
 
 impl Default for ServerConfig {
@@ -70,6 +77,10 @@ impl Default for ServerConfig {
             fault_seed: 1,
             shards: 8,
             scrub_workers: 4,
+            // Locked stays the default for API back-compat; `zsecc
+            // serve`, `examples/serve` and the benches select the ring.
+            ingress: IngressPolicy::Locked,
+            ring_depth: 8,
         }
     }
 }
@@ -151,7 +162,7 @@ impl StopSignal {
 
 /// A running server.
 pub struct Server {
-    batcher: Arc<Batcher>,
+    ingress: Arc<Ingress>,
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     stop: Arc<StopSignal>,
@@ -171,8 +182,19 @@ impl Server {
     where
         F: FnOnce() -> anyhow::Result<Box<dyn BatchExec>> + Send + 'static,
     {
-        let batcher = Arc::new(Batcher::new(cfg.policy));
+        let ingress = Arc::new(match cfg.ingress {
+            IngressPolicy::Locked => Ingress::Locked(Batcher::new(cfg.policy)),
+            IngressPolicy::Ring => Ingress::Ring(IngressRing::new(RingConfig {
+                depth: cfg.ring_depth,
+                cap: cfg.policy.max_batch,
+                dim: input_dim,
+                max_wait: cfg.policy.max_wait,
+            })),
+        });
         let metrics = Arc::new(Metrics::new());
+        if let Ingress::Ring(r) = &*ingress {
+            metrics.set_ingress(r.stats());
+        }
         let stop = StopSignal::new();
         let (weights_tx, weights_rx): (Sender<WeightUpdate>, Receiver<WeightUpdate>) = channel();
         // Applied f32 buffers travel back to the scrub thread's scratch
@@ -181,7 +203,7 @@ impl Server {
         let (ready_tx, ready_rx) = channel::<anyhow::Result<()>>();
 
         // ---- inference thread ----
-        let b = batcher.clone();
+        let ing = ingress.clone();
         let m = metrics.clone();
         let inf = std::thread::Builder::new()
             .name("zsecc-infer".into())
@@ -228,56 +250,107 @@ impl Server {
                         }
                         None
                     };
-                while let Some(batch) = b.next_batch() {
-                    // Non-blocking weight refresh before each batch;
-                    // stop draining on failure to keep updates ordered.
-                    if let Some(update) = pending.take() {
-                        match apply(&mut exec, update) {
-                            None => {
-                                m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                // Non-blocking weight refresh before each batch; stop
+                // draining on failure to keep updates ordered.
+                let drain_updates =
+                    |exec: &mut Box<dyn BatchExec>, pending: &mut Option<WeightUpdate>| {
+                        if let Some(update) = pending.take() {
+                            match apply(exec, update) {
+                                None => {
+                                    m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                                }
+                                failed => *pending = failed,
                             }
-                            failed => pending = failed,
+                        }
+                        while pending.is_none() {
+                            let Ok(update) = weights_rx.try_recv() else {
+                                break;
+                            };
+                            match apply(exec, update) {
+                                None => {
+                                    m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                                }
+                                failed => *pending = failed,
+                            }
+                        }
+                    };
+                match &*ing {
+                    // Locked baseline: copy each request's image into
+                    // the staging buffer, chunked FIFO under oversized
+                    // batches (policy.max_batch > exec.batch()) — a
+                    // requeued overflow request could otherwise starve.
+                    Ingress::Locked(b) => {
+                        while let Some(batch) = b.next_batch() {
+                            drain_updates(&mut exec, &mut pending);
+                            for chunk in batch.chunks(bsz) {
+                                let count = chunk.len();
+                                for (i, r) in chunk.iter().enumerate() {
+                                    buf[i * dim..(i + 1) * dim].copy_from_slice(&r.image);
+                                }
+                                let preds = match exec.exec(&buf, count) {
+                                    Ok(p) => p,
+                                    Err(_) => {
+                                        m.exec_failures.fetch_add(1, Ordering::Relaxed);
+                                        vec![usize::MAX; count]
+                                    }
+                                };
+                                let now = Instant::now();
+                                m.record_batch(count);
+                                for (r, &p) in chunk.iter().zip(&preds) {
+                                    let lat = now.duration_since(r.submitted);
+                                    m.record_latency_us(lat.as_secs_f64() * 1e6);
+                                    let _ = r.resp.send(Response {
+                                        id: r.id,
+                                        pred: p,
+                                        latency: lat,
+                                    });
+                                }
+                            }
                         }
                     }
-                    while pending.is_none() {
-                        let Ok(update) = weights_rx.try_recv() else {
-                            break;
-                        };
-                        match apply(&mut exec, update) {
-                            None => {
-                                m.weight_refreshes.fetch_add(1, Ordering::Relaxed);
+                    // Ring: producers already wrote their rows into the
+                    // slab, so a matching geometry executes zero-copy
+                    // straight from the slab; otherwise fall back to
+                    // bsz-sized chunk copies in slot (= arrival) order.
+                    Ingress::Ring(r) => {
+                        let zero_copy = r.cap() == bsz && r.dim() == dim;
+                        while let Some(sealed) = r.next_sealed() {
+                            drain_updates(&mut exec, &mut pending);
+                            let total = sealed.count();
+                            let mut start = 0usize;
+                            while start < total {
+                                let count = (total - start).min(bsz);
+                                let res = if zero_copy && start == 0 && count == total {
+                                    sealed.with_inputs(|inp| exec.exec(inp, count))
+                                } else {
+                                    sealed.with_inputs(|inp| {
+                                        buf[..count * dim].copy_from_slice(
+                                            &inp[start * dim..(start + count) * dim],
+                                        );
+                                    });
+                                    exec.exec(&buf, count)
+                                };
+                                let preds = match res {
+                                    Ok(p) => p,
+                                    Err(_) => {
+                                        m.exec_failures.fetch_add(1, Ordering::Relaxed);
+                                        vec![usize::MAX; count]
+                                    }
+                                };
+                                let now = Instant::now();
+                                m.record_batch(count);
+                                for (slot, &p) in (start..start + count).zip(&preds) {
+                                    let lane = sealed.take_lane(slot);
+                                    let lat = now.duration_since(lane.submitted);
+                                    m.record_latency_us(lat.as_secs_f64() * 1e6);
+                                    let _ = lane.resp.send(Response {
+                                        id: lane.id,
+                                        pred: p,
+                                        latency: lat,
+                                    });
+                                }
+                                start += count;
                             }
-                            failed => pending = failed,
-                        }
-                    }
-                    // FIFO under oversized batches: the batcher may
-                    // release more requests than the executable's batch
-                    // size (policy.max_batch > exec.batch()). Execute
-                    // bsz-sized chunks in arrival order instead of
-                    // requeueing the overflow behind newer arrivals —
-                    // a requeued request could otherwise starve.
-                    for chunk in batch.chunks(bsz) {
-                        let count = chunk.len();
-                        for (i, r) in chunk.iter().enumerate() {
-                            buf[i * dim..(i + 1) * dim].copy_from_slice(&r.image);
-                        }
-                        let preds = match exec.exec(&buf, count) {
-                            Ok(p) => p,
-                            Err(_) => {
-                                m.exec_failures.fetch_add(1, Ordering::Relaxed);
-                                vec![usize::MAX; count]
-                            }
-                        };
-                        let now = Instant::now();
-                        m.record_batch(count);
-                        for (r, &p) in chunk.iter().zip(&preds) {
-                            let lat = now.duration_since(r.submitted);
-                            m.record_latency_us(lat.as_secs_f64() * 1e6);
-                            let _ = r.resp.send(Response {
-                                id: r.id,
-                                pred: p,
-                                latency: lat,
-                            });
                         }
                     }
                 }
@@ -415,7 +488,7 @@ impl Server {
         }
 
         Ok(Server {
-            batcher,
+            ingress,
             metrics,
             next_id: AtomicU64::new(0),
             stop,
@@ -474,19 +547,27 @@ impl Server {
         )
     }
 
-    /// Submit one image; returns the response channel.
-    pub fn submit(&self, image: Vec<f32>) -> anyhow::Result<Receiver<Response>> {
+    /// Submit one image; returns the response channel. Typed errors:
+    /// a ring front door under overload returns
+    /// [`PushError::Overloaded`] for the caller (router, load shedder)
+    /// to act on; the locked baseline never overloads (its queue is
+    /// unbounded).
+    pub fn try_submit(&self, image: Vec<f32>) -> Result<Receiver<Response>, PushError> {
         let (tx, rx) = channel();
-        let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            image,
-            submitted: Instant::now(),
-            resp: tx,
-        };
-        self.batcher
-            .push(req)
-            .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.ingress.push_owned(id, image, tx)?;
         Ok(rx)
+    }
+
+    /// [`try_submit`](Server::try_submit) with the pre-ingress `anyhow`
+    /// signature, kept for callers that treat every refusal alike.
+    pub fn submit(&self, image: Vec<f32>) -> anyhow::Result<Receiver<Response>> {
+        self.try_submit(image).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Which front door this server runs.
+    pub fn ingress_policy(&self) -> IngressPolicy {
+        self.ingress.policy()
     }
 
     /// Graceful shutdown: drain the queue, stop all threads. Returns
@@ -494,7 +575,7 @@ impl Server {
     /// thread parks on an interruptible wait, not a sleep.
     pub fn shutdown(mut self) {
         self.stop.stop();
-        self.batcher.close();
+        self.ingress.close();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
@@ -632,6 +713,139 @@ mod tests {
         srv.shutdown();
     }
 
+    /// The same end-to-end contract as `serves_and_answers`, through
+    /// the lock-free ring front door with matching geometry (cap ==
+    /// exec batch), i.e. the zero-copy dispatch path.
+    #[test]
+    fn ring_ingress_serves_and_answers() {
+        let mut cfg = mock_cfg();
+        cfg.ingress = IngressPolicy::Ring;
+        cfg.ring_depth = 4;
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 3,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            3,
+            &cfg,
+            None,
+        )
+        .unwrap();
+        assert_eq!(srv.ingress_policy(), IngressPolicy::Ring);
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            rxs.push(srv.submit(vec![i as f32, 0.0, 0.0]).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.pred, i);
+        }
+        assert_eq!(srv.metrics.requests.load(Ordering::Relaxed), 10);
+        srv.shutdown();
+    }
+
+    /// Ring cap larger than the executable batch: the dispatcher must
+    /// chunk-copy slab rows in slot order (the non-zero-copy path).
+    #[test]
+    fn ring_ingress_chunks_oversized_batches_in_order() {
+        let mut cfg = mock_cfg();
+        cfg.ingress = IngressPolicy::Ring;
+        cfg.ring_depth = 4;
+        // ring batches hold up to 5, the executable takes 2
+        cfg.policy = BatchPolicy {
+            max_batch: 5,
+            max_wait: Duration::from_millis(30),
+        };
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 2,
+                    dim: 1,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            1,
+            &cfg,
+            None,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..5).map(|i| srv.submit(vec![i as f32]).unwrap()).collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.pred, i, "slot order == submission order");
+        }
+        srv.shutdown();
+    }
+
+    /// Typed backpressure surfaces through `try_submit` when the ring
+    /// is saturated and nothing drains it (the executor is gated shut).
+    #[test]
+    fn ring_ingress_overload_is_typed() {
+        struct Gated {
+            gate: Arc<Mutex<()>>,
+        }
+        impl BatchExec for Gated {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn input_dim(&self) -> usize {
+                1
+            }
+            fn exec(&mut self, _images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+                let _g = self.gate.lock().unwrap();
+                Ok(vec![0; count])
+            }
+            fn refresh(&mut self, _w: &[f32]) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+        let gate = Arc::new(Mutex::new(()));
+        let held = gate.lock().unwrap();
+        let gate2 = gate.clone();
+        let mut cfg = mock_cfg();
+        cfg.ingress = IngressPolicy::Ring;
+        cfg.ring_depth = 2;
+        cfg.policy = BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+        };
+        let srv = Server::start_with(
+            move || Ok(Box::new(Gated { gate: gate2 }) as Box<dyn BatchExec>),
+            1,
+            &cfg,
+            None,
+        )
+        .unwrap();
+        // Capacity is depth(2) x cap(1) = 2; the dispatcher may pull
+        // one batch and block on the gate, freeing at most one slab —
+        // so at most 3 admissions before Overloaded. Submit until the
+        // typed error surfaces.
+        let mut rxs = Vec::new();
+        let mut overloaded = false;
+        for _ in 0..16 {
+            match srv.try_submit(vec![0.0]) {
+                Ok(rx) => rxs.push(rx),
+                Err(PushError::Overloaded) => {
+                    overloaded = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(overloaded, "saturated ring must report Overloaded");
+        assert!(rxs.len() <= 3);
+        assert!(srv.metrics.ingress().is_some());
+        assert!(srv.metrics.ingress().unwrap().overloads >= 1);
+        drop(held); // open the gate, let everything drain
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        srv.shutdown();
+    }
+
     #[test]
     fn shutdown_rejects_new_requests() {
         let srv = Server::start_with(
@@ -648,9 +862,9 @@ mod tests {
         )
         .unwrap();
         let m = srv.metrics.clone();
-        let b = srv.batcher.clone();
+        let ing = srv.ingress.clone();
         srv.shutdown();
-        let _ = (m, b);
+        let _ = (m, ing);
     }
 
     #[test]

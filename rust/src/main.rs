@@ -159,6 +159,10 @@ fn main() -> anyhow::Result<()> {
                 fault_seed: args.u64_or("seed", 1)?,
                 shards: args.usize_or("shards", 8)?,
                 scrub_workers: args.usize_or("scrub-workers", 4)?,
+                // The lock-free slab ring is the serving default; the
+                // mutex batcher stays selectable as the baseline.
+                ingress: zsecc::coordinator::IngressPolicy::parse(&args.str_or("ingress", "ring"))?,
+                ring_depth: args.usize_or("ring-depth", 8)?,
             };
             serve_demo(&artifacts, &model, cfg, secs, rps)?;
         }
@@ -175,7 +179,8 @@ fn main() -> anyhow::Result<()> {
                  \x20         --strategy S --n WEIGHTS --shards S --budget PASSES --max-interval TICKS\n\
                  \x20         --trace --out FILE --json\n\
                  serve:    --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS\n\
-                 \x20         --scrub-policy fixed|adaptive --scrub-max-ms MS --fault-rate F --shards S --scrub-workers W"
+                 \x20         --scrub-policy fixed|adaptive --scrub-max-ms MS --fault-rate F --shards S --scrub-workers W\n\
+                 \x20         --ingress ring|locked (lock-free slab ring vs mutex batcher) --ring-depth N"
             );
         }
     }

@@ -1,0 +1,253 @@
+//! Offline shim of the `loom` permutation-testing API.
+//!
+//! The real `loom` crate model-checks concurrent code by running a test
+//! body many times under a deterministic scheduler that explores every
+//! bounded thread interleaving (DPOR). This repo builds fully offline,
+//! so this shim provides the same *API surface* with a weaker — but
+//! still adversarial — exploration strategy: the body runs for many
+//! iterations on real OS threads, and every atomic operation routed
+//! through [`sync::atomic`] first calls a preemption hook that
+//! pseudo-randomly yields or briefly sleeps, perturbing the schedule
+//! around exactly the operations where interleaving matters. Each
+//! iteration reseeds the perturbation stream, so repeated runs walk
+//! different schedules.
+//!
+//! Tests written against this shim therefore must assert *invariants*
+//! (exactly-once delivery, conserved counts, a single seal winner) that
+//! hold under every schedule — the same discipline real loom enforces —
+//! and they keep compiling unchanged if the real crate is swapped in
+//! (`loom = "0.7"` in place of the vendored path) for exhaustive
+//! checking on a networked machine.
+//!
+//! Knobs: `LOOM_ITERS` (iterations per [`model`] call, default 200) and
+//! `LOOM_PREEMPT_BOUND` (accepted for CLI compatibility; the shim's
+//! exploration is already bounded by its iteration count).
+
+use std::sync::atomic::{AtomicU64 as StdAtomicU64, Ordering as StdOrdering};
+
+/// Global perturbation state: a splitmix-style counter shared by every
+/// thread of the current iteration. Interleaved increments from many
+/// threads are welcome — they add genuine nondeterminism on top of the
+/// per-iteration reseed.
+static SCHED_STATE: StdAtomicU64 = StdAtomicU64::new(0x9e3779b97f4a7c15);
+
+/// Pseudo-randomly perturb the current thread's schedule. Called by
+/// every shimmed atomic operation.
+pub(crate) fn preempt() {
+    let x = SCHED_STATE.fetch_add(0x9e3779b97f4a7c15, StdOrdering::Relaxed);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^= z >> 31;
+    match z & 0x3f {
+        // ~1/8 of atomic ops give up the timeslice entirely,
+        0..=7 => std::thread::yield_now(),
+        // ~1/32 park long enough for a cross-core preemption,
+        8..=9 => std::thread::sleep(std::time::Duration::from_micros(z % 50)),
+        // the rest run straight through (the common schedule).
+        _ => {}
+    }
+}
+
+/// Run `f` under bounded schedule exploration: `LOOM_ITERS` iterations
+/// (default 200), each with a reseeded perturbation stream.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let iters: u64 = std::env::var("LOOM_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    for i in 0..iters {
+        SCHED_STATE.store(
+            0x9e3779b97f4a7c15u64.wrapping_mul(i.wrapping_add(1)),
+            StdOrdering::Relaxed,
+        );
+        f();
+    }
+}
+
+pub mod thread {
+    //! Real-thread mirrors of `loom::thread`.
+
+    pub use std::thread::{JoinHandle, Result};
+
+    /// Spawn a real OS thread (the shim explores schedules via the
+    /// atomic-op preemption hook, not a virtual scheduler).
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::spawn(f)
+    }
+
+    pub fn yield_now() {
+        std::thread::yield_now();
+    }
+}
+
+pub mod cell {
+    //! `loom::cell::UnsafeCell`: closure-scoped raw-pointer access, so
+    //! code written for loom's access-tracking cell compiles against
+    //! both the shim and the real crate.
+
+    #[derive(Debug, Default)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> UnsafeCell<T> {
+        pub fn new(v: T) -> Self {
+            UnsafeCell(std::cell::UnsafeCell::new(v))
+        }
+
+        /// Immutable access. Safety contract is the caller's, exactly as
+        /// with `std::cell::UnsafeCell::get`.
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Mutable access. Safety contract is the caller's.
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}
+
+pub mod sync {
+    //! `loom::sync`: std primitives, with atomics wrapped to call the
+    //! preemption hook around every operation.
+
+    pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        /// Declare one shimmed atomic wrapper type: every operation
+        /// calls [`crate::preempt`] first, then delegates to std.
+        macro_rules! shim_atomic {
+            ($name:ident, $std:ty, $val:ty) => {
+                #[derive(Debug, Default)]
+                pub struct $name($std);
+
+                impl $name {
+                    pub fn new(v: $val) -> Self {
+                        Self(<$std>::new(v))
+                    }
+
+                    pub fn load(&self, o: Ordering) -> $val {
+                        crate::preempt();
+                        self.0.load(o)
+                    }
+
+                    pub fn store(&self, v: $val, o: Ordering) {
+                        crate::preempt();
+                        self.0.store(v, o)
+                    }
+
+                    pub fn swap(&self, v: $val, o: Ordering) -> $val {
+                        crate::preempt();
+                        self.0.swap(v, o)
+                    }
+
+                    pub fn fetch_add(&self, v: $val, o: Ordering) -> $val {
+                        crate::preempt();
+                        self.0.fetch_add(v, o)
+                    }
+
+                    pub fn fetch_sub(&self, v: $val, o: Ordering) -> $val {
+                        crate::preempt();
+                        self.0.fetch_sub(v, o)
+                    }
+
+                    pub fn fetch_max(&self, v: $val, o: Ordering) -> $val {
+                        crate::preempt();
+                        self.0.fetch_max(v, o)
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        cur: $val,
+                        new: $val,
+                        ok: Ordering,
+                        err: Ordering,
+                    ) -> Result<$val, $val> {
+                        crate::preempt();
+                        self.0.compare_exchange(cur, new, ok, err)
+                    }
+
+                    pub fn compare_exchange_weak(
+                        &self,
+                        cur: $val,
+                        new: $val,
+                        ok: Ordering,
+                        err: Ordering,
+                    ) -> Result<$val, $val> {
+                        crate::preempt();
+                        self.0.compare_exchange_weak(cur, new, ok, err)
+                    }
+                }
+            };
+        }
+
+        shim_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+        shim_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        shim_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+        /// `AtomicBool` has a different value type; declared by hand
+        /// (fetch_add/sub/max don't exist on bools).
+        #[derive(Debug, Default)]
+        pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+        impl AtomicBool {
+            pub fn new(v: bool) -> Self {
+                Self(std::sync::atomic::AtomicBool::new(v))
+            }
+
+            pub fn load(&self, o: Ordering) -> bool {
+                crate::preempt();
+                self.0.load(o)
+            }
+
+            pub fn store(&self, v: bool, o: Ordering) {
+                crate::preempt();
+                self.0.store(v, o)
+            }
+
+            pub fn swap(&self, v: bool, o: Ordering) -> bool {
+                crate::preempt();
+                self.0.swap(v, o)
+            }
+        }
+
+        pub fn fence(o: Ordering) {
+            crate::preempt();
+            std::sync::atomic::fence(o)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn model_reruns_and_atomics_count() {
+        std::env::set_var("LOOM_ITERS", "8");
+        let runs = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let r = runs.clone();
+        super::model(move || {
+            let c = Arc::new(AtomicU64::new(0));
+            let c2 = c.clone();
+            let h = super::thread::spawn(move || {
+                c2.fetch_add(1, Ordering::SeqCst);
+            });
+            c.fetch_add(1, Ordering::SeqCst);
+            h.join().unwrap();
+            assert_eq!(c.load(Ordering::SeqCst), 2);
+            r.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(runs.load(std::sync::atomic::Ordering::SeqCst), 8);
+    }
+}
