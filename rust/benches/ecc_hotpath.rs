@@ -12,6 +12,10 @@
 //! checks the serving claim instead: with >= 4 workers the sharded
 //! store's scrub+decode epoch must run >= 2x the single-worker rate.
 //!
+//! The `guards` section prices the compute-path protection: guarded
+//! (ABFT checksummed / range-supervised) vs unguarded dense-head
+//! forward throughput, plus the raw envelope-clamp scan rate.
+//!
 //! `--json` appends one machine-readable record (for the BENCH_*.json
 //! trajectory) after the human-readable output; `--out FILE` appends
 //! the same record to FILE (the repo-root `BENCH_ecc.json` ledger is a
@@ -498,6 +502,64 @@ fn main() {
         (fixed, adaptive)
     };
 
+    // compute-path guards: the guarded software executor's dense-head
+    // forward under each guard mode vs the unguarded pass (same model,
+    // same inputs, no faults — the steady-state serve cost), plus the
+    // raw envelope-clamp scan over an n-byte activation plane.
+    let (guard_gmacs, guard_full_ratio, guard_clamp_gbps) = {
+        use zsecc::runtime::guard::{ComputeFaults, DenseModel, Envelope, GuardMode, GuardReport};
+        const GDIMS: &[(usize, usize)] = &[(256, 64), (64, 16)];
+        const GBATCH: usize = 32;
+        let nw: usize = GDIMS.iter().map(|&(r, c)| r * c).sum();
+        let mut rng = Rng::new(11);
+        let w: Vec<f32> = (0..nw).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let mut model = DenseModel::from_flat(&w, GDIMS).unwrap();
+        let x: Vec<f32> = (0..GBATCH * GDIMS[0].0)
+            .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+            .collect();
+        model.calibrate(&x, GBATCH, 0.05);
+        let macs = (GBATCH * nw) as f64;
+        let faults = ComputeFaults::default();
+        println!("== guards: dense head {GBATCH}x256x64x16, guarded vs unguarded forward ==");
+        let mut time_mode = |mode: GuardMode| {
+            let r = bench(&format!("forward ({})", mode.tag()), || {
+                let mut report = GuardReport::default();
+                let y = model.forward_guarded(
+                    std::hint::black_box(&x),
+                    GBATCH,
+                    mode,
+                    &faults,
+                    &mut report,
+                );
+                std::hint::black_box((&y, &report));
+            });
+            println!("    -> {:.2} GMAC/s", macs / r.ns_per_iter);
+            r.ns_per_iter
+        };
+        let t_off = time_mode(GuardMode::Off);
+        let t_range = time_mode(GuardMode::Range);
+        let t_abft = time_mode(GuardMode::Abft);
+        let t_full = time_mode(GuardMode::Full);
+        println!(
+            "    -> overhead vs off: range {:.2}x | abft {:.2}x | full {:.2}x",
+            t_range / t_off,
+            t_abft / t_off,
+            t_full / t_off
+        );
+        let env = Envelope::new(-1.0, 1.0);
+        let mut plane = vec![0.5f32; (n / 4).max(1)];
+        let rc = bench("range clamp scan (clean plane)", || {
+            std::hint::black_box(env.clamp_count(std::hint::black_box(&mut plane)));
+        });
+        println!("    -> {}", rc.throughput_str(plane.len() * 4));
+        let clamp_gbps = (plane.len() * 4) as f64 / rc.ns_per_iter;
+        (
+            [macs / t_off, macs / t_range, macs / t_abft, macs / t_full],
+            t_full / t_off,
+            clamp_gbps,
+        )
+    };
+
     // serving ingress: closed-loop multi-producer front-door
     // throughput, lock-free slab ring vs the mutex batcher, free
     // executor (batch 32 both ways). The ring's reserve/write/seal
@@ -574,6 +636,19 @@ fn main() {
                                 < sched_fixed.residual_uncorrectable,
                         ),
                     ),
+                ]),
+            ),
+            (
+                "guards",
+                obj(vec![
+                    ("batch", num(32.0)),
+                    ("dims", s("256x64x16")),
+                    ("unguarded_gmacs", num(guard_gmacs[0])),
+                    ("range_gmacs", num(guard_gmacs[1])),
+                    ("abft_gmacs", num(guard_gmacs[2])),
+                    ("full_gmacs", num(guard_gmacs[3])),
+                    ("full_overhead_ratio", num(guard_full_ratio)),
+                    ("clamp_gbps", num(guard_clamp_gbps)),
                 ]),
             ),
             (

@@ -6,6 +6,7 @@
 use crate::coordinator::ingress::{IngressSnapshot, IngressStats};
 use crate::ecc::DecodeStats;
 use crate::memory::ShardSchedule;
+use crate::runtime::guard::{GuardReport, GuardStats};
 use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -58,6 +59,10 @@ pub struct Metrics {
     /// themselves live in the ring and are read lock-free — this mutex
     /// only guards attachment.
     ingress: Mutex<Option<Arc<IngressStats>>>,
+    /// Live handle to the compute-path guard counters (range clamps,
+    /// ABFT checks/trips/recomputes); `None` when the server runs
+    /// unguarded. Same attachment pattern as `ingress`.
+    guards: Mutex<Option<Arc<GuardStats>>>,
     shards: Mutex<Vec<ShardCounters>>,
     /// Scheduler gauges, one slot per shard: Wilson BER bounds, current
     /// interval, deadline headroom, cumulative overdue passes. Written
@@ -133,6 +138,17 @@ impl Metrics {
         self.ingress.lock().unwrap().as_ref().map(|s| s.snapshot())
     }
 
+    /// Attach the guard counters (done once at server startup when a
+    /// guard mode is armed).
+    pub fn set_guards(&self, stats: Arc<GuardStats>) {
+        *self.guards.lock().unwrap() = Some(stats);
+    }
+
+    /// Snapshot of the guard counters; `None` when guards are off.
+    pub fn guard_snapshot(&self) -> Option<GuardReport> {
+        self.guards.lock().unwrap().as_ref().map(|g| g.snapshot())
+    }
+
     /// Snapshot of the per-shard counters.
     pub fn shard_counters(&self) -> Vec<ShardCounters> {
         self.shards.lock().unwrap().clone()
@@ -169,6 +185,12 @@ impl Metrics {
             self.delta_refreshes.load(Ordering::Relaxed),
             self.exec_failures.load(Ordering::Relaxed),
         );
+        if let Some(g) = self.guard_snapshot() {
+            s.push_str(&format!(
+                "\n  guards range_clamps={} abft_checks={} abft_trips={} recomputes={}",
+                g.range_clamps, g.abft_checks, g.abft_trips, g.recomputes,
+            ));
+        }
         if let Some(i) = self.ingress() {
             s.push_str(&format!(
                 "\n  ingress occupancy={} hwm={} cas_retries={} seal(full/deadline/drain)={}/{}/{} overloads={}",
@@ -405,6 +427,29 @@ mod tests {
         assert!(i.occupancy_hwm >= 1);
         assert!(i.seal_full + i.seal_deadline + i.seal_drain >= 1);
         assert!(m.report().contains("ingress occupancy="), "{}", m.report());
+    }
+
+    #[test]
+    fn guard_gauges_attach_and_render() {
+        let m = Metrics::new();
+        assert!(m.guard_snapshot().is_none(), "unguarded baseline has no gauges");
+        assert!(!m.report().contains("guards"), "{}", m.report());
+        let stats = Arc::new(GuardStats::default());
+        m.set_guards(stats.clone());
+        stats.absorb(&GuardReport {
+            abft_checks: 5,
+            abft_trips: 2,
+            recomputes: 2,
+            range_clamps: 7,
+        });
+        let g = m.guard_snapshot().unwrap();
+        assert_eq!(g.range_clamps, 7);
+        assert_eq!(g.abft_checks, 5);
+        assert_eq!(g.abft_trips, 2);
+        assert_eq!(g.recomputes, 2);
+        let report = m.report();
+        assert!(report.contains("guards range_clamps=7"), "{report}");
+        assert!(report.contains("abft_trips=2"), "{report}");
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::ecc::strategy_by_name;
 use crate::memory::{pool, FaultModel, SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardedBank};
 use crate::model::{load_weights, Manifest};
 use crate::quant::dequantize_into;
+use crate::runtime::guard::{Calibration, Envelope, GuardMode, GuardReport, GuardStats};
 use crate::runtime::{argmax_rows, Runtime};
 
 /// Server configuration.
@@ -60,9 +61,22 @@ pub struct ServerConfig {
     /// Serving front door: the mutex batcher baseline or the lock-free
     /// slot-reservation ring (`coordinator::ingress`).
     pub ingress: IngressPolicy,
-    /// Ring depth (slabs) when `ingress == Ring`; rounded up to a
-    /// power of two. Admission capacity is `ring_depth * max_batch`.
+    /// Ring depth (slabs) when `ingress == Ring`; must be a power of
+    /// two >= 2 ([`ServerConfig::validate`] rejects anything else with
+    /// a typed [`ConfigError`]). Admission capacity is
+    /// `ring_depth * max_batch`.
     pub ring_depth: usize,
+    /// Compute-path guard mode for the serve path. The serve path
+    /// supports range supervision (`off` | `range`): each batch is
+    /// clamped into the calibrated input envelope before execution and
+    /// every clamp is counted into `Metrics`. ABFT modes are refused by
+    /// `validate` — the checksummed path runs through
+    /// [`crate::runtime::guard::GuardedExecutable`] and the campaign's
+    /// synthetic compute runner, not the opaque batch executor.
+    pub guard: GuardMode,
+    /// Calibrated envelopes (the manifest's `guards` section); required
+    /// whenever `guard` needs range supervision.
+    pub guard_calibration: Option<Calibration>,
 }
 
 impl Default for ServerConfig {
@@ -81,7 +95,107 @@ impl Default for ServerConfig {
             // serve`, `examples/serve` and the benches select the ring.
             ingress: IngressPolicy::Locked,
             ring_depth: 8,
+            guard: GuardMode::Off,
+            guard_calibration: None,
         }
+    }
+}
+
+/// A structurally invalid [`ServerConfig`], caught before any thread
+/// spawns or artifact loads.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `ring_depth` is not a power of two >= 2. Slab indices are
+    /// masked, so the ring would defensively round the depth up —
+    /// silently giving the operator a different admission capacity
+    /// (`depth * max_batch`) than configured. Reject instead.
+    RingDepth(usize),
+    /// The guard mode needs calibrated envelopes but the config carries
+    /// none (run `zsecc calibrate` and reload the manifest).
+    GuardNeedsCalibration(GuardMode),
+    /// The guard mode is not supported on this execution path.
+    GuardUnsupported(GuardMode),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::RingDepth(d) => write!(
+                f,
+                "ring depth {d} is invalid: must be a power of two >= 2 \
+                 (slot indices are masked, not wrapped)"
+            ),
+            ConfigError::GuardNeedsCalibration(g) => write!(
+                f,
+                "guard mode '{}' needs calibrated envelopes; run `zsecc calibrate` first",
+                g.tag()
+            ),
+            ConfigError::GuardUnsupported(g) => write!(
+                f,
+                "guard mode '{}' is not supported on the serve path (ABFT wraps \
+                 linear executables via GuardedExecutable, or runs under \
+                 `zsecc campaign --synthetic`); use 'off' or 'range'",
+                g.tag()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl ServerConfig {
+    /// Structural validation, run by [`Server::start_with`] and the CLI
+    /// front ends before anything is built from the config.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.ingress == IngressPolicy::Ring
+            && (self.ring_depth < 2 || !self.ring_depth.is_power_of_two())
+        {
+            return Err(ConfigError::RingDepth(self.ring_depth));
+        }
+        if self.guard.abft() {
+            return Err(ConfigError::GuardUnsupported(self.guard));
+        }
+        if self.guard.range()
+            && self
+                .guard_calibration
+                .as_ref()
+                .and_then(|c| c.input_envelope())
+                .is_none()
+        {
+            return Err(ConfigError::GuardNeedsCalibration(self.guard));
+        }
+        Ok(())
+    }
+}
+
+/// Fractional fault-injection budget carried across scrub wakeups.
+///
+/// The configured rate is "expected flips per stored bit per base
+/// interval"; adaptive wakeups are unevenly spaced, and rounding each
+/// wakeup's small expectation to a whole count independently would
+/// systematically under-inject (possibly to zero, forever) versus the
+/// fixed policy at the same wall-clock rate. `take` accrues the exact
+/// expectation and returns only the whole part, keeping the fractional
+/// remainder, so the cumulative grant never drifts more than one flip
+/// from `bits · rate · Σscale` however the wakeups are spaced.
+#[derive(Debug, Default)]
+pub struct FlipBudget {
+    carry: f64,
+}
+
+impl FlipBudget {
+    /// Accrue `bits * rate * scale` expected flips and withdraw the
+    /// whole part. Degenerate inputs (zero, negative or non-finite
+    /// expectations) grant nothing and leave the carry untouched.
+    pub fn take(&mut self, bits: u64, rate: f64, scale: f64) -> u64 {
+        let due = bits as f64 * rate * scale;
+        if !due.is_finite() || due <= 0.0 {
+            return 0;
+        }
+        self.carry += due;
+        let whole = self.carry.floor();
+        self.carry -= whole;
+        whole as u64
     }
 }
 
@@ -182,6 +296,7 @@ impl Server {
     where
         F: FnOnce() -> anyhow::Result<Box<dyn BatchExec>> + Send + 'static,
     {
+        cfg.validate()?;
         let ingress = Arc::new(match cfg.ingress {
             IngressPolicy::Locked => Ingress::Locked(Batcher::new(cfg.policy)),
             IngressPolicy::Ring => Ingress::Ring(IngressRing::new(RingConfig {
@@ -194,6 +309,20 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         if let Ingress::Ring(r) = &*ingress {
             metrics.set_ingress(r.stats());
+        }
+        // Range supervision: the inference thread wraps its executor in
+        // a GuardedBatch sharing these counters with Metrics. validate()
+        // guarantees the envelope exists whenever the mode wants it.
+        let guard_env = if cfg.guard.range() {
+            cfg.guard_calibration
+                .as_ref()
+                .and_then(|c| c.input_envelope())
+        } else {
+            None
+        };
+        let guard_stats = guard_env.map(|_| Arc::new(GuardStats::default()));
+        if let Some(gs) = &guard_stats {
+            metrics.set_guards(gs.clone());
         }
         let stop = StopSignal::new();
         let (weights_tx, weights_rx): (Sender<WeightUpdate>, Receiver<WeightUpdate>) = channel();
@@ -218,6 +347,15 @@ impl Server {
                         return;
                     }
                 };
+                if let (Some(env), Some(stats)) = (guard_env, guard_stats) {
+                    let cap = exec.batch() * exec.input_dim();
+                    exec = Box::new(GuardedBatch {
+                        inner: exec,
+                        env,
+                        stats,
+                        scratch: Vec::with_capacity(cap),
+                    });
+                }
                 let bsz = exec.batch();
                 let dim = exec.input_dim();
                 let mut buf = vec![0f32; bsz * dim];
@@ -386,13 +524,12 @@ impl Server {
                     let mut sched = ScrubScheduler::new(sched_cfg, &shard_bits, Duration::ZERO);
                     let mut epoch = 0u64;
                     let mut last_wake = Duration::ZERO;
-                    // Fractional expected flips carried between wakeups:
-                    // adaptive wakeups can be closely spaced, and
-                    // rounding each wakeup's small expectation to a
-                    // whole count independently would systematically
-                    // under-inject (possibly to zero) vs the fixed
-                    // policy at the same wall-clock rate.
-                    let mut flip_carry = 0.0f64;
+                    // Fractional expected flips carried between wakeups
+                    // (see FlipBudget): adaptive wakeups can be closely
+                    // spaced, and rounding each independently would
+                    // systematically under-inject vs the fixed policy
+                    // at the same wall-clock rate.
+                    let mut budget = FlipBudget::default();
                     loop {
                         // Interruptible wait until the earliest shard
                         // deadline: the loop exits the instant
@@ -419,16 +556,14 @@ impl Server {
                             } else {
                                 1.0
                             };
-                            let bits = sb.total_bits() as f64;
-                            flip_carry += bits * rate * scale;
-                            let whole = flip_carry.floor();
-                            flip_carry -= whole;
-                            if whole >= 1.0 {
+                            let bits = sb.total_bits();
+                            let whole = budget.take(bits, rate, scale);
+                            if whole > 0 {
                                 // adjusted rate injects exactly `whole`
                                 // flips (flip_count rounds bits * r)
                                 let n = sb.inject(
                                     FaultModel::Uniform,
-                                    whole / bits,
+                                    whole as f64 / bits as f64,
                                     seed0 ^ epoch,
                                 );
                                 m.faults_injected.fetch_add(n, Ordering::Relaxed);
@@ -507,6 +642,15 @@ impl Server {
         let weights = load_weights(&man.weights_path(), man.num_weights)?;
         let layers = man.layers.clone();
 
+        // A range guard without an explicit calibration picks up the
+        // manifest's `guards` section (written by `zsecc calibrate`);
+        // validate() below still refuses if neither exists.
+        let mut cfg = cfg.clone();
+        if cfg.guard.range() && cfg.guard_calibration.is_none() {
+            cfg.guard_calibration = man.guards.clone();
+        }
+        let cfg = &cfg;
+
         let batch = cfg.policy.max_batch;
         anyhow::ensure!(
             man.batches.contains(&batch),
@@ -579,6 +723,48 @@ impl Server {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+    }
+}
+
+/// Range supervision around any executor: every live row of an
+/// incoming batch is clamped into the calibrated input envelope before
+/// execution (on a scratch copy — the staging/slab buffer is shared and
+/// must not be mutated), and each clamp bumps the shared guard
+/// counters that `Metrics` reports.
+struct GuardedBatch {
+    inner: Box<dyn BatchExec>,
+    env: Envelope,
+    stats: Arc<GuardStats>,
+    scratch: Vec<f32>,
+}
+
+impl BatchExec for GuardedBatch {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn input_dim(&self) -> usize {
+        self.inner.input_dim()
+    }
+    fn exec(&mut self, images: &[f32], count: usize) -> anyhow::Result<Vec<usize>> {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(images);
+        // Only the `count` live rows: pad rows are copies of live ones
+        // and would double-count their trips.
+        let live = count * self.inner.input_dim();
+        let clamps = self.env.clamp_count(&mut self.scratch[..live]);
+        if clamps > 0 {
+            self.stats.absorb(&GuardReport {
+                range_clamps: clamps,
+                ..GuardReport::default()
+            });
+        }
+        self.inner.exec(&self.scratch, count)
+    }
+    fn refresh(&mut self, weights: &[f32]) -> anyhow::Result<()> {
+        self.inner.refresh(weights)
+    }
+    fn refresh_delta(&mut self, deltas: &[WeightDelta]) -> anyhow::Result<()> {
+        self.inner.refresh_delta(deltas)
     }
 }
 
@@ -670,6 +856,141 @@ mod tests {
             scrub_workers: 2,
             ..ServerConfig::default()
         }
+    }
+
+    fn input_calibration(lo: f32, hi: f32) -> Calibration {
+        Calibration {
+            margin: 0.0,
+            batches: 1,
+            layers: vec![crate::runtime::guard::LayerEnvelope {
+                name: "input".into(),
+                env: Envelope::new(lo, hi),
+            }],
+        }
+    }
+
+    #[test]
+    fn flip_budget_tracks_the_continuous_rate_without_drift() {
+        // Uneven wakeups — the adaptive scheduler's reality. The
+        // cumulative whole-flip grant must track bits*rate*Σscale
+        // within one flip however the wakeups are spaced; per-wakeup
+        // rounding would grant zero forever at these spacings.
+        let bits = 1u64 << 20;
+        let rate = 3e-6; // ~3.1 expected flips per base interval
+        let mut budget = FlipBudget::default();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut granted = 0u64;
+        let mut elapsed = 0.0f64;
+        for i in 0..10_000 {
+            let scale = rng.f64() * 0.2; // wakeups at 0..20% of base
+            elapsed += scale;
+            granted += budget.take(bits, rate, scale);
+            let expected = bits as f64 * rate * elapsed;
+            assert!(
+                (granted as f64 - expected).abs() < 1.0 + 1e-6,
+                "wakeup {i}: granted {granted} drifted from expected {expected:.3}"
+            );
+        }
+        assert!(granted > 0, "fractional wakeups must still inject");
+        // Degenerate inputs grant nothing.
+        assert_eq!(budget.take(0, rate, 1.0), 0);
+        assert_eq!(budget.take(bits, 0.0, 1.0), 0);
+        assert_eq!(budget.take(bits, rate, f64::NAN), 0);
+        assert_eq!(budget.take(bits, -1.0, 1.0), 0);
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_ring_depths() {
+        let mut cfg = mock_cfg();
+        cfg.ingress = IngressPolicy::Ring;
+        for bad in [0usize, 1, 3, 6, 12] {
+            cfg.ring_depth = bad;
+            assert_eq!(cfg.validate(), Err(ConfigError::RingDepth(bad)));
+            // start_with refuses before spawning any thread
+            let cfg2 = cfg.clone();
+            let err = Server::start_with(
+                || {
+                    Ok(Box::new(Mock {
+                        batch: 4,
+                        dim: 2,
+                        weights_seen: 0,
+                    }) as Box<dyn BatchExec>)
+                },
+                2,
+                &cfg2,
+                None,
+            )
+            .unwrap_err();
+            assert!(err.to_string().contains("power of two"), "{err}");
+        }
+        for good in [2usize, 4, 8, 64] {
+            cfg.ring_depth = good;
+            assert_eq!(cfg.validate(), Ok(()));
+        }
+        cfg.ring_depth = 3;
+        cfg.ingress = IngressPolicy::Locked;
+        assert_eq!(cfg.validate(), Ok(()), "depth is a ring knob; locked ignores it");
+    }
+
+    #[test]
+    fn config_validation_gates_guard_modes() {
+        let mut cfg = mock_cfg();
+        cfg.guard = GuardMode::Range;
+        assert_eq!(
+            cfg.validate(),
+            Err(ConfigError::GuardNeedsCalibration(GuardMode::Range))
+        );
+        // A calibration without an input-plane envelope is as useless
+        // as none.
+        cfg.guard_calibration = Some(Calibration {
+            margin: 0.0,
+            batches: 1,
+            layers: vec![crate::runtime::guard::LayerEnvelope {
+                name: "logits".into(),
+                env: Envelope::new(0.0, 1.0),
+            }],
+        });
+        assert_eq!(
+            cfg.validate(),
+            Err(ConfigError::GuardNeedsCalibration(GuardMode::Range))
+        );
+        cfg.guard_calibration = Some(input_calibration(0.0, 1.0));
+        assert_eq!(cfg.validate(), Ok(()));
+        for abft in [GuardMode::Abft, GuardMode::Full] {
+            cfg.guard = abft;
+            assert_eq!(cfg.validate(), Err(ConfigError::GuardUnsupported(abft)));
+        }
+    }
+
+    #[test]
+    fn range_guard_clamps_and_counts_at_the_front_door() {
+        let mut cfg = mock_cfg();
+        cfg.guard = GuardMode::Range;
+        cfg.guard_calibration = Some(input_calibration(0.0, 5.0));
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 2,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            2,
+            &cfg,
+            None,
+        )
+        .unwrap();
+        // Mock predicts round(first pixel): the out-of-envelope 9.0
+        // must reach it clamped to 5.0, the in-envelope 3.0 untouched.
+        let rx = srv.try_submit(vec![9.0, 1.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().pred, 5);
+        let rx = srv.try_submit(vec![3.0, 1.0]).unwrap();
+        assert_eq!(rx.recv().unwrap().pred, 3);
+        let snap = srv.metrics.guard_snapshot().expect("guards armed");
+        assert_eq!(snap.range_clamps, 1, "exactly the one wild pixel");
+        let report = srv.metrics.report();
+        assert!(report.contains("guards"), "report surfaces guard trips:\n{report}");
+        srv.shutdown();
     }
 
     fn test_layers(n: usize) -> Vec<crate::model::Layer> {

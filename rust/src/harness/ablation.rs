@@ -283,6 +283,8 @@ pub fn fault_model_campaign(
             FaultModel::StuckAt { bit: 1 },
             FaultModel::Hotspot { frac: 0.05 },
         ],
+        sites: vec![crate::memory::FaultSite::Weights],
+        guards: vec![crate::runtime::GuardMode::Off],
         policy: TrialPolicy::adaptive(4, 24, 0.05, 0.95),
         jobs,
         ledger: None,

@@ -1,7 +1,16 @@
 //! Parallel Monte-Carlo fault-injection campaign engine.
 //!
 //! A campaign is a grid of cells — (model × strategy × fault-rate ×
-//! fault-model) — evaluated by independent fault-injection trials.
+//! fault-model × fault-site × guard-mode) — evaluated by independent
+//! fault-injection trials. The default axes (`weights` site, guards
+//! `off`) reproduce the classic storage campaign bit-for-bit — ledger
+//! keys, fingerprints and trial seeds are unchanged, so existing
+//! ledgers resume. The compute sites (`activations`, `accumulators`)
+//! strike transiently during inference and are answered by the
+//! compute-path guards ([`crate::runtime::guard`]); their trial seeds
+//! deliberately exclude the guard mode, so guards-on and guards-off
+//! cells face *identical* fault sequences and the reported residuals
+//! compare at exactly equal injected faults.
 //! Instead of a fixed trial count, each cell runs until the Student-t
 //! confidence interval on its mean accuracy drop is tight enough
 //! (`ci_target` half-width at `confidence`), bounded by
@@ -34,43 +43,81 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::harness::eval::EvalCtx;
-use crate::memory::{run_jobs, FaultModel, ShardedBank};
+use crate::memory::{run_jobs, FaultInjector, FaultModel, FaultSite, ShardedBank};
 use crate::model::EvalSet;
+use crate::runtime::guard::{
+    residual_pp, ComputeFault, ComputeFaults, DenseModel, GuardMode, GuardReport,
+};
 use crate::runtime::Runtime;
 use crate::util::json::{arr, num, num_or_null, obj, s, Json};
 use crate::util::plot;
+use crate::util::rng::Rng;
 use crate::util::stats;
 
 // ---------------------------------------------------------------- grid --
 
-/// One grid cell: a (model, strategy, rate, fault-model) combination.
+/// One grid cell: a (model, strategy, rate, fault-model, fault-site,
+/// guard-mode) combination. For compute sites the strategy is inert
+/// (no storage decode happens) and the fault model is always the
+/// uniform transient strike — fault-model geometry describes stored
+/// images; keep `--fault-model uniform` for compute-site sweeps.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellSpec {
     pub model: String,
     pub strategy: String,
     pub rate: f64,
     pub fault: FaultModel,
+    pub site: FaultSite,
+    pub guard: GuardMode,
 }
 
 impl CellSpec {
-    /// Stable ledger key; also the seed domain of the cell's trials.
+    /// Stable ledger key. Default axes (weights site, guards off) keep
+    /// the pre-site four-part key, so old ledgers resume unchanged.
     pub fn key(&self) -> String {
-        format!(
+        let mut k = format!(
             "{}|{}|{:e}|{}",
             self.model,
             self.strategy,
             self.rate,
             self.fault.tag()
-        )
+        );
+        if self.site != FaultSite::Weights || self.guard != GuardMode::Off {
+            k.push('|');
+            k.push_str(self.site.tag());
+            k.push('|');
+            k.push_str(self.guard.tag());
+        }
+        k
+    }
+
+    /// The trial-seed domain: like [`CellSpec::key`] but guard-blind,
+    /// so guards-on and guards-off cells of the same site draw
+    /// *identical* fault sequences — guard comparisons are at exactly
+    /// equal injected faults.
+    pub fn seed_key(&self) -> String {
+        let mut k = format!(
+            "{}|{}|{:e}|{}",
+            self.model,
+            self.strategy,
+            self.rate,
+            self.fault.tag()
+        );
+        if self.site != FaultSite::Weights {
+            k.push('|');
+            k.push_str(self.site.tag());
+        }
+        k
     }
 }
 
-/// Stable per-trial seed: FNV-1a over the cell key, whitened by the
-/// trial index. Depends on nothing else — the backbone of resume
-/// identity and cross-cell independence.
+/// Stable per-trial seed: FNV-1a over the cell's seed key, whitened by
+/// the trial index. Depends on nothing else — the backbone of resume
+/// identity, cross-cell independence and equal-faults guard
+/// comparisons.
 pub fn trial_seed(spec: &CellSpec, trial: u64) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    for b in spec.key().bytes() {
+    for b in spec.seed_key().bytes() {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
@@ -120,6 +167,13 @@ pub struct Config {
     pub strategies: Vec<String>,
     pub rates: Vec<f64>,
     pub fault_models: Vec<FaultModel>,
+    /// Fault sites to sweep; `[Weights]` is the classic storage
+    /// campaign (and keeps ledgers byte-compatible with pre-site runs).
+    pub sites: Vec<FaultSite>,
+    /// Guard modes to sweep; `[Off]` preserves classic behaviour.
+    /// Guards only change compute-site trials — a weights-site cell
+    /// runs the storage path regardless of guard mode.
+    pub guards: Vec<GuardMode>,
     pub policy: TrialPolicy,
     /// Parallel cell workers (1 = serial in grid order).
     pub jobs: usize,
@@ -146,12 +200,18 @@ impl Config {
             for strategy in &self.strategies {
                 for &rate in &self.rates {
                     for &fault in &self.fault_models {
-                        cells.push(CellSpec {
-                            model: model.clone(),
-                            strategy: strategy.clone(),
-                            rate,
-                            fault,
-                        });
+                        for &site in &self.sites {
+                            for &guard in &self.guards {
+                                cells.push(CellSpec {
+                                    model: model.clone(),
+                                    strategy: strategy.clone(),
+                                    rate,
+                                    fault,
+                                    site,
+                                    guard,
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -165,7 +225,7 @@ impl Config {
     fn fingerprint(&self) -> String {
         let rates: Vec<String> = self.rates.iter().map(|r| format!("{r:e}")).collect();
         let faults: Vec<String> = self.fault_models.iter().map(|f| f.tag()).collect();
-        format!(
+        let mut fp = format!(
             "v1|runner={}|models={}|strategies={}|rates={}|faults={}|min={}|max={}|ci={:?}|conf={}",
             self.runner_tag,
             self.models.join(","),
@@ -176,7 +236,19 @@ impl Config {
             self.policy.max_trials,
             self.policy.ci_target,
             self.policy.confidence,
-        )
+        );
+        // Default axes stay out of the fingerprint so pre-site ledgers
+        // remain resumable; any non-default sweep is identity-bearing.
+        if self.sites != [FaultSite::Weights] || self.guards != [GuardMode::Off] {
+            let sites: Vec<&str> = self.sites.iter().map(|s| s.tag()).collect();
+            let guards: Vec<&str> = self.guards.iter().map(|g| g.tag()).collect();
+            fp.push_str(&format!(
+                "|sites={}|guards={}",
+                sites.join(","),
+                guards.join(",")
+            ));
+        }
+        fp
     }
 }
 
@@ -185,10 +257,16 @@ impl Config {
 /// One trial's measurements.
 #[derive(Clone, Copy, Debug)]
 pub struct TrialOutcome {
-    /// Accuracy drop vs the fault-free baseline, percentage points.
+    /// Degradation vs the fault-free baseline, percentage points:
+    /// accuracy drop for weights-site trials, magnitude-weighted output
+    /// residual ([`residual_pp`]) for compute-site trials — the latter
+    /// so clamping a corrupted activation *reduces* the metric even
+    /// when the prediction flips either way.
     pub drop_pp: f64,
     pub corrected: u64,
     pub detected: u64,
+    /// Out-of-envelope activations clamped by the range guard.
+    pub clamped: u64,
 }
 
 /// Runs one fault-injection trial of a cell. Implementations must be
@@ -245,13 +323,31 @@ impl TrialRunner for EvalRunner {
             .ok_or_else(|| anyhow::anyhow!("model '{}' not loaded in this campaign", spec.model))?;
         let mut ctx = ctx.lock().unwrap();
         let base = ctx.base_acc;
-        let (acc, corrected, detected) =
-            ctx.faulty_trial(&spec.strategy, spec.fault, spec.rate, seed)?;
-        Ok(TrialOutcome {
-            drop_pp: (base - acc) * 100.0,
-            corrected,
-            detected,
-        })
+        match spec.site {
+            FaultSite::Weights => {
+                let (acc, corrected, detected) =
+                    ctx.faulty_trial(&spec.strategy, spec.fault, spec.rate, seed)?;
+                Ok(TrialOutcome {
+                    drop_pp: (base - acc) * 100.0,
+                    corrected,
+                    detected,
+                    clamped: 0,
+                })
+            }
+            FaultSite::Activations => {
+                let (acc, clamped) = ctx.activation_trial(spec.guard, spec.rate, seed)?;
+                Ok(TrialOutcome {
+                    drop_pp: (base - acc) * 100.0,
+                    corrected: 0,
+                    detected: 0,
+                    clamped,
+                })
+            }
+            FaultSite::Accumulators => anyhow::bail!(
+                "fault site 'accumulators' strikes inside the opaque PJRT executable; \
+                 sweep it with the software compute path (--synthetic)"
+            ),
+        }
     }
 }
 
@@ -273,6 +369,18 @@ pub struct SyntheticRunner {
     /// Reset banks awaiting reuse, keyed by strategy; depth tracks peak
     /// same-strategy trial concurrency.
     banks: Mutex<BTreeMap<String, Vec<ShardedBank>>>,
+    /// Lazily-built software compute path for the activation and
+    /// accumulator fault sites: a dense head over the dequantized
+    /// synthetic WOT weights, one fixed calibrated input batch, and its
+    /// clean logits.
+    compute: OnceLock<SynthCompute>,
+}
+
+struct SynthCompute {
+    model: DenseModel,
+    x: Vec<f32>,
+    batch: usize,
+    clean: Vec<f32>,
 }
 
 impl SyntheticRunner {
@@ -285,7 +393,46 @@ impl SyntheticRunner {
             wot: OnceLock::new(),
             ext: OnceLock::new(),
             banks: Mutex::new(BTreeMap::new()),
+            compute: OnceLock::new(),
         }
+    }
+
+    /// Columns of the synthetic dense head.
+    const CLASSES: usize = 16;
+    /// Rows of the fixed input batch the compute-site trials strike.
+    const BATCH: usize = 32;
+
+    /// The shared compute path: a single dense layer shaped
+    /// `[n_weights/16 x 16]` over the dequantized synthetic WOT image,
+    /// calibrated on (and evaluated against) one deterministic batch.
+    fn compute_path(&self) -> anyhow::Result<&SynthCompute> {
+        anyhow::ensure!(
+            self.n_weights >= Self::CLASSES && self.n_weights % Self::CLASSES == 0,
+            "compute-site cells need n_weights to be a multiple of {} (got {})",
+            Self::CLASSES,
+            self.n_weights
+        );
+        let q = self
+            .wot
+            .get_or_init(|| crate::harness::ablation::synth_wot(self.n_weights, 42));
+        Ok(self.compute.get_or_init(|| {
+            let dim = self.n_weights / Self::CLASSES;
+            // The same dequantization scale the int8 pipeline uses for
+            // small synthetic heads; exact value only shifts magnitudes.
+            let w: Vec<f32> = q.iter().map(|&v| v as f32 * 0.02).collect();
+            let mut model = DenseModel::from_flat(&w, &[(dim, Self::CLASSES)])
+                .expect("synthetic dense head has a valid shape by construction");
+            let mut rng = Rng::new(4242);
+            let x: Vec<f32> = (0..Self::BATCH * dim).map(|_| rng.f64() as f32).collect();
+            model.calibrate(&x, Self::BATCH, 0.05);
+            let clean = model.forward(&x, Self::BATCH);
+            SynthCompute {
+                model,
+                x,
+                batch: Self::BATCH,
+                clean,
+            }
+        }))
     }
 }
 
@@ -298,6 +445,9 @@ impl Default for SyntheticRunner {
 impl TrialRunner for SyntheticRunner {
     fn run_trial(&self, spec: &CellSpec, _trial: u64, seed: u64) -> anyhow::Result<TrialOutcome> {
         use crate::harness::ablation::{synth_ext, synth_wot};
+        if spec.site != FaultSite::Weights {
+            return self.compute_trial(spec, seed);
+        }
         let w: &[i8] = if spec.strategy == "bch16" {
             self.ext.get_or_init(|| synth_ext(self.n_weights, 42))
         } else {
@@ -330,6 +480,49 @@ impl TrialRunner for SyntheticRunner {
             drop_pp: 100.0 * wrong as f64 / w.len() as f64,
             corrected: st.corrected,
             detected: st.detected,
+            clamped: 0,
+        })
+    }
+}
+
+impl SyntheticRunner {
+    /// One compute-site trial: draw `flip_count` transient single-bit
+    /// strikes into the activation (or accumulator) buffer of the
+    /// shared dense head, run it under the cell's guard mode, and score
+    /// the magnitude-weighted residual against the cached clean logits.
+    /// Seeds exclude the guard mode (see [`CellSpec::seed_key`]), so
+    /// guards-on and guards-off cells face identical strikes.
+    fn compute_trial(&self, spec: &CellSpec, seed: u64) -> anyhow::Result<TrialOutcome> {
+        let sc = self.compute_path()?;
+        let elems = match spec.site {
+            FaultSite::Activations => sc.model.activation_elems(0, sc.batch),
+            FaultSite::Accumulators => sc.model.accumulator_elems(0, sc.batch),
+            FaultSite::Weights => unreachable!("weights site takes the storage path"),
+        };
+        let bits = (elems * 32) as u64;
+        let mut rng = Rng::new(seed);
+        let mut faults = ComputeFaults::default();
+        let list = match spec.site {
+            FaultSite::Activations => &mut faults.activations,
+            _ => &mut faults.accumulators,
+        };
+        for _ in 0..FaultInjector::flip_count(bits, spec.rate) {
+            let pos = rng.below(bits);
+            list.push(ComputeFault {
+                layer: 0,
+                index: (pos / 32) as usize,
+                bit: (pos % 32) as u32,
+            });
+        }
+        let mut report = GuardReport::default();
+        let y = sc
+            .model
+            .forward_guarded(&sc.x, sc.batch, spec.guard, &faults, &mut report);
+        Ok(TrialOutcome {
+            drop_pp: residual_pp(&y, &sc.clean),
+            corrected: report.recomputes,
+            detected: report.abft_trips,
+            clamped: report.range_clamps,
         })
     }
 }
@@ -344,6 +537,9 @@ pub struct CellResult {
     pub drops: Vec<f64>,
     pub corrected: u64,
     pub detected: u64,
+    /// Range-guard clamps summed over the cell's trials (compute sites
+    /// only; always 0 for weights-site cells).
+    pub clamped: u64,
     /// CI half-width on the mean drop at the policy's confidence
     /// (infinite when a single trial cannot bound it).
     pub half_width: f64,
@@ -363,6 +559,8 @@ impl CellResult {
             ("strategy", s(&self.spec.strategy)),
             ("rate", num(self.spec.rate)),
             ("fault_model", s(&self.spec.fault.tag())),
+            ("site", s(self.spec.site.tag())),
+            ("guard", s(self.spec.guard.tag())),
             ("trials", num(self.drops.len() as f64)),
             ("drop_mean", num(stats::mean(&self.drops))),
             ("drop_std", num(stats::std(&self.drops))),
@@ -370,6 +568,7 @@ impl CellResult {
             ("drops", arr(self.drops.iter().map(|d| num(*d)))),
             ("corrected", num(self.corrected as f64)),
             ("detected", num(self.detected as f64)),
+            ("clamped", num(self.clamped as f64)),
         ];
         if timing {
             fields.push(("wall_ms", num(self.wall_ms)));
@@ -405,16 +604,29 @@ impl CellResult {
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("'ci_half_width' must be a number or null"))?,
         };
+        // Pre-site ledgers carry neither field: default to the classic
+        // storage campaign axes they were written under.
+        let site = match v.get("site").and_then(|x| x.as_str()) {
+            Some(tag) => FaultSite::parse(tag)?,
+            None => FaultSite::Weights,
+        };
+        let guard = match v.get("guard").and_then(|x| x.as_str()) {
+            Some(tag) => GuardMode::parse(tag)?,
+            None => GuardMode::Off,
+        };
         Ok(CellResult {
             spec: CellSpec {
                 model: st("model")?,
                 strategy: st("strategy")?,
                 rate: f("rate")?,
                 fault: FaultModel::parse(&st("fault_model")?)?,
+                site,
+                guard,
             },
             drops,
             corrected: f("corrected")? as u64,
             detected: f("detected")? as u64,
+            clamped: v.get("clamped").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
             half_width,
             wall_ms: v.get("wall_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
         })
@@ -485,8 +697,18 @@ impl Report {
     /// Paper-shaped summary table.
     pub fn render(&self) -> String {
         let headers = [
-            "model", "strategy", "fault", "rate", "trials", "drop (pp)", "ci-hw", "corrected",
+            "model",
+            "strategy",
+            "fault",
+            "site",
+            "guard",
+            "rate",
+            "trials",
+            "drop (pp)",
+            "ci-hw",
+            "corrected",
             "detected",
+            "clamped",
         ];
         let rows: Vec<Vec<String>> = self
             .cells
@@ -496,6 +718,8 @@ impl Report {
                     c.spec.model.clone(),
                     c.spec.strategy.clone(),
                     c.spec.fault.tag(),
+                    c.spec.site.tag().to_string(),
+                    c.spec.guard.tag().to_string(),
                     format!("{:.0e}", c.spec.rate),
                     c.trials().to_string(),
                     stats::mean_std_str(&c.drops),
@@ -506,6 +730,7 @@ impl Report {
                     },
                     c.corrected.to_string(),
                     c.detected.to_string(),
+                    c.clamped.to_string(),
                 ]
             })
             .collect();
@@ -605,7 +830,7 @@ fn run_cell(
 ) -> anyhow::Result<CellResult> {
     let t0 = std::time::Instant::now();
     let mut drops = Vec::with_capacity(policy.min_trials);
-    let (mut corrected, mut detected) = (0u64, 0u64);
+    let (mut corrected, mut detected, mut clamped) = (0u64, 0u64, 0u64);
     let prelude = policy.min_trials.min(policy.max_trials).max(1) as u64;
     let outcomes = run_jobs((0..prelude).collect(), jobs, |t| {
         runner.run_trial(spec, t, trial_seed(spec, t))
@@ -615,6 +840,7 @@ fn run_cell(
         drops.push(out.drop_pp);
         corrected += out.corrected;
         detected += out.detected;
+        clamped += out.clamped;
     }
     loop {
         let n = drops.len();
@@ -636,6 +862,7 @@ fn run_cell(
         drops.push(out.drop_pp);
         corrected += out.corrected;
         detected += out.detected;
+        clamped += out.clamped;
     }
     Ok(CellResult {
         spec: spec.clone(),
@@ -643,6 +870,7 @@ fn run_cell(
         drops,
         corrected,
         detected,
+        clamped,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -683,11 +911,13 @@ pub fn run(cfg: &Config, runner: &dyn TrialRunner) -> anyhow::Result<Report> {
         let cell = run_cell(&spec, &policy, runner, jobs)?;
         if cfg.verbose {
             eprintln!(
-                "[campaign] {:<12} {:>8} rate={:>7.0e} {:<14} trials={:<3} drop={} hw={:.3}",
+                "[campaign] {:<12} {:>8} rate={:>7.0e} {:<14} {:>12}/{:<5} trials={:<3} drop={} hw={:.3}",
                 spec.model,
                 spec.strategy,
                 spec.rate,
                 spec.fault.tag(),
+                spec.site.tag(),
+                spec.guard.tag(),
                 cell.trials(),
                 stats::mean_std_str(&cell.drops),
                 cell.half_width,
@@ -731,6 +961,8 @@ mod tests {
             strategies: vec!["a".into(), "b".into()],
             rates: vec![1e-3],
             fault_models: vec![FaultModel::Uniform, FaultModel::Burst { len: 2 }],
+            sites: vec![FaultSite::Weights],
+            guards: vec![GuardMode::Off],
             policy,
             jobs: 1,
             ledger: None,
@@ -749,6 +981,7 @@ mod tests {
                 drop_pp: self.0,
                 corrected: 1,
                 detected: 0,
+                clamped: 0,
             })
         }
     }
@@ -762,6 +995,7 @@ mod tests {
                 drop_pp: (t % 2) as f64 * 10.0,
                 corrected: 0,
                 detected: 0,
+                clamped: 0,
             })
         }
     }
@@ -783,6 +1017,8 @@ mod tests {
             strategy: "ecc".into(),
             rate: 1e-4,
             fault: FaultModel::Uniform,
+            site: FaultSite::Weights,
+            guard: GuardMode::Off,
         };
         let s0 = trial_seed(&spec, 0);
         assert_eq!(s0, trial_seed(&spec, 0));
@@ -793,6 +1029,80 @@ mod tests {
         let mut other = spec.clone();
         other.rate = 1e-3;
         assert_ne!(s0, trial_seed(&other, 0));
+        let mut other = spec.clone();
+        other.site = FaultSite::Activations;
+        assert_ne!(s0, trial_seed(&other, 0), "fault site is in the seed");
+    }
+
+    #[test]
+    fn default_axes_keep_classic_keys_and_guard_stays_out_of_seeds() {
+        let classic = CellSpec {
+            model: "m".into(),
+            strategy: "ecc".into(),
+            rate: 1e-4,
+            fault: FaultModel::Uniform,
+            site: FaultSite::Weights,
+            guard: GuardMode::Off,
+        };
+        // Pre-site ledgers keyed cells as model|strategy|rate|fault;
+        // the default axes must reproduce that byte-for-byte.
+        assert_eq!(classic.key(), "m|ecc|1e-4|uniform");
+        assert_eq!(classic.seed_key(), "m|ecc|1e-4|uniform");
+
+        let mut guarded = classic.clone();
+        guarded.site = FaultSite::Activations;
+        guarded.guard = GuardMode::Full;
+        let mut unguarded = guarded.clone();
+        unguarded.guard = GuardMode::Off;
+        // Distinct ledger cells, identical fault sequences.
+        assert_ne!(guarded.key(), unguarded.key());
+        assert_eq!(guarded.seed_key(), unguarded.seed_key());
+        assert_eq!(trial_seed(&guarded, 3), trial_seed(&unguarded, 3));
+    }
+
+    #[test]
+    fn compute_site_cells_are_deterministic_and_guards_reduce_residual() {
+        // 2e-3 over 32x64 activations = ~131 strikes per trial: enough
+        // that some land in exponent bits (big, detectable corruption)
+        // whatever the seed draws, so the comparative asserts below
+        // hold by construction rather than by luck.
+        let runner = SyntheticRunner::new(64 * 16, 4, 1);
+        let spec = CellSpec {
+            model: "synthetic".into(),
+            strategy: "none".into(),
+            rate: 2e-3,
+            fault: FaultModel::Uniform,
+            site: FaultSite::Activations,
+            guard: GuardMode::Off,
+        };
+        let seed = trial_seed(&spec, 0);
+        let off = runner.run_trial(&spec, 0, seed).unwrap();
+        let again = runner.run_trial(&spec, 0, seed).unwrap();
+        assert_eq!(off.drop_pp, again.drop_pp, "trials are seed-deterministic");
+        assert!(off.drop_pp > 0.0, "unguarded strikes must corrupt output");
+
+        let mut full = spec.clone();
+        full.guard = GuardMode::Full;
+        let on = runner.run_trial(&full, 0, trial_seed(&full, 0)).unwrap();
+        assert!(
+            on.drop_pp < off.drop_pp,
+            "guards must reduce the residual at equal faults (off={} on={})",
+            off.drop_pp,
+            on.drop_pp
+        );
+        assert!(on.clamped > 0, "range guard clamps out-of-envelope strikes");
+        assert!(on.detected > 0 && on.corrected > 0, "ABFT repairs the rest");
+
+        let mut acc = spec.clone();
+        acc.site = FaultSite::Accumulators;
+        let acc_off = runner.run_trial(&acc, 0, trial_seed(&acc, 0)).unwrap();
+        acc.guard = GuardMode::Abft;
+        let abft = runner.run_trial(&acc, 0, trial_seed(&acc, 0)).unwrap();
+        assert!(
+            abft.drop_pp < acc_off.drop_pp,
+            "ABFT recompute must shrink the accumulator-site residual"
+        );
+        assert!(abft.detected > 0 && abft.corrected > 0);
     }
 
     #[test]
@@ -842,18 +1152,33 @@ mod tests {
                     row_bits: 512,
                     len: 4,
                 },
+                site: FaultSite::Activations,
+                guard: GuardMode::Full,
             },
             drops: vec![0.0, 0.125, 3.5],
             corrected: 17,
             detected: 3,
+            clamped: 9,
             half_width: 1.25,
             wall_ms: 12.5,
         };
         let back = CellResult::from_json(&cell.to_json(true)).unwrap();
         assert_eq!(back.spec, cell.spec);
         assert_eq!(back.drops, cell.drops);
-        assert_eq!((back.corrected, back.detected), (17, 3));
+        assert_eq!((back.corrected, back.detected, back.clamped), (17, 3, 9));
         assert_eq!(back.half_width, 1.25);
+        // A pre-site ledger cell (no site/guard/clamped fields) loads
+        // with the classic defaults.
+        let mut old = cell.to_json(true);
+        if let Json::Obj(m) = &mut old {
+            m.remove("site");
+            m.remove("guard");
+            m.remove("clamped");
+        }
+        let back = CellResult::from_json(&old).unwrap();
+        assert_eq!(back.spec.site, FaultSite::Weights);
+        assert_eq!(back.spec.guard, GuardMode::Off);
+        assert_eq!(back.clamped, 0);
         // infinite half-width survives as null
         let single = CellResult {
             half_width: f64::INFINITY,
@@ -880,6 +1205,16 @@ mod tests {
         assert_ne!(a.fingerprint(), c.fingerprint());
         c = cfg(TrialPolicy::fixed(5));
         c.runner_tag = "other".into();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // Default site/guard axes leave the fingerprint untouched (old
+        // ledgers resume); a real sweep is identity-bearing.
+        c = cfg(TrialPolicy::fixed(5));
+        assert_eq!(a.fingerprint(), c.fingerprint());
+        assert!(!a.fingerprint().contains("sites="));
+        c.sites = vec![FaultSite::Weights, FaultSite::Activations];
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        c = cfg(TrialPolicy::fixed(5));
+        c.guards = vec![GuardMode::Off, GuardMode::Full];
         assert_ne!(a.fingerprint(), c.fingerprint());
     }
 }

@@ -6,10 +6,12 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::ecc::strategy_by_name;
-use crate::memory::{FaultModel, ShardedBank};
+use crate::memory::{FaultInjector, FaultModel, ShardedBank};
 use crate::model::{load_weights, EvalSet, Manifest};
 use crate::quant::dequantize_into;
+use crate::runtime::guard::{Calibration, Envelope, GuardMode, LayerEnvelope};
 use crate::runtime::{accuracy, Executable, Runtime};
+use crate::util::rng::Rng;
 
 /// Stable per-cell seed so every trial is reproducible and independent
 /// across (model, strategy, rate, trial). Kept for the examples and
@@ -118,6 +120,118 @@ impl EvalCtx {
         let acc = self.accuracy_of(&q)?;
         self.qbuf = q;
         Ok((acc, stats.corrected, stats.detected))
+    }
+
+    /// Record the model's serve-time envelopes — the `input` plane over
+    /// the whole eval set and the `logits` plane over the clean int8
+    /// model's outputs — widened by `margin`. The result is what
+    /// `zsecc calibrate` persists into the manifest's `guards` section.
+    pub fn calibrate(&mut self, margin: f64) -> anyhow::Result<Calibration> {
+        dequantize_into(&self.weights, &self.man.layers, &mut self.fbuf);
+        let wbuf = self.rt.bind_weights(&self.fbuf)?;
+        let mut input = Envelope::empty();
+        for v in self.ds.batch(0, self.ds.n) {
+            input.observe(*v);
+        }
+        let mut logits = Envelope::empty();
+        let b = self.exe.batch;
+        let mut batches = 0usize;
+        let mut at = 0usize;
+        // Whole batches only: the ragged tail would just re-observe
+        // padded copies of images already in the envelope.
+        while at + b <= self.ds.n {
+            for v in self.exe.run(&self.rt, &wbuf, self.ds.batch(at, b))? {
+                logits.observe(v);
+            }
+            at += b;
+            batches += 1;
+        }
+        anyhow::ensure!(batches > 0, "eval set smaller than one batch; cannot calibrate");
+        Ok(Calibration {
+            margin,
+            batches,
+            layers: vec![
+                LayerEnvelope {
+                    name: "input".to_string(),
+                    env: input.widen(margin),
+                },
+                LayerEnvelope {
+                    name: "logits".to_string(),
+                    env: logits.widen(margin),
+                },
+            ],
+        })
+    }
+
+    /// One activation-site trial through PJRT: transient single-bit
+    /// strikes land in each image batch *after* it leaves the (assumed
+    /// clean) store, and range supervision — when the guard mode asks
+    /// for it — clamps the struck batch into the manifest's calibrated
+    /// `input` envelope before execution. Returns (accuracy, clamped).
+    ///
+    /// ABFT modes are refused here: the executable is an opaque compiled
+    /// graph, so the checksum relation cannot be carried through it for
+    /// a general model — accumulator strikes and ABFT sweeps run on the
+    /// software compute path (`campaign --synthetic`).
+    pub fn activation_trial(
+        &mut self,
+        guard: GuardMode,
+        rate: f64,
+        seed: u64,
+    ) -> anyhow::Result<(f64, u64)> {
+        anyhow::ensure!(
+            !guard.abft(),
+            "guard mode '{}' needs ABFT, which cannot wrap the opaque PJRT \
+             executable for model '{}'; run this cell with --synthetic",
+            guard.tag(),
+            self.man.model
+        );
+        let env = if guard.range() {
+            let calib = self.man.guards.as_ref().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model '{}' has no calibrated envelopes; run `zsecc calibrate` first",
+                    self.man.model
+                )
+            })?;
+            Some(calib.input_envelope().ok_or_else(|| {
+                anyhow::anyhow!("calibration for '{}' misses the 'input' envelope", self.man.model)
+            })?)
+        } else {
+            None
+        };
+        dequantize_into(&self.weights, &self.man.layers, &mut self.fbuf);
+        let wbuf = self.rt.bind_weights(&self.fbuf)?;
+        let b = self.exe.batch;
+        let dim = self.exe.input_dim;
+        let bits = (b * dim * 32) as u64;
+        let mut rng = Rng::new(seed);
+        let mut staged = vec![0f32; b * dim];
+        let mut clamped = 0u64;
+        let mut correct = 0usize;
+        let mut at = 0usize;
+        while at < self.ds.n {
+            let take = b.min(self.ds.n - at);
+            staged[..take * dim].copy_from_slice(self.ds.batch(at, take));
+            for i in take..b {
+                staged[i * dim..(i + 1) * dim].copy_from_slice(self.ds.image(at));
+            }
+            for _ in 0..FaultInjector::flip_count(bits, rate) {
+                let pos = rng.below(bits);
+                let v = &mut staged[(pos / 32) as usize];
+                *v = f32::from_bits(v.to_bits() ^ (1u32 << (pos % 32)));
+            }
+            if let Some(env) = &env {
+                clamped += env.clamp_count(&mut staged);
+            }
+            let preds = self.exe.predict(&self.rt, &wbuf, &staged)?;
+            for i in 0..take {
+                if preds[i] == self.ds.labels[at + i] as usize {
+                    correct += 1;
+                }
+            }
+            at += take;
+        }
+        Ok((correct as f64 / self.ds.n as f64, clamped))
     }
 }
 

@@ -92,6 +92,8 @@ pub fn run(artifacts: &Path, cfg: &Config, verbose: bool) -> anyhow::Result<Tabl
         strategies: cfg.strategies.clone(),
         rates: cfg.rates.clone(),
         fault_models: vec![cfg.fault_model],
+        sites: vec![crate::memory::FaultSite::Weights],
+        guards: vec![crate::runtime::GuardMode::Off],
         policy: TrialPolicy::fixed(cfg.trials),
         jobs: cfg.jobs,
         ledger: None,

@@ -35,7 +35,12 @@
 //!   including the fused `decode_dequant_range` used by the scrub
 //!   epoch's per-shard delta path (no full-buffer i8 intermediate).
 //! * [`model`] — artifact manifests, weight/dataset loaders.
-//! * [`runtime`] — PJRT CPU client wrapper (HLO text -> executable).
+//! * [`runtime`] — PJRT CPU client wrapper (HLO text -> executable),
+//!   plus [`runtime::guard`]: compute-path protection (ABFT
+//!   checksummed matmul with bitwise recompute-on-mismatch, calibrated
+//!   activation range envelopes with clamp-and-count) for the guarded
+//!   software executor, the serve front door, and the campaign's
+//!   activation/accumulator fault sites.
 //! * [`coordinator`] — request router, dynamic batcher, sharded
 //!   protected weight store, metrics (global + per-shard). The scrub
 //!   loop ships `WeightUpdate::Deltas` (offset + f32 window per dirty

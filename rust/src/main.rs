@@ -3,6 +3,7 @@
 //! Subcommands map one-to-one onto the paper's evaluation artifacts:
 //!   table1, table2, fig1, fig3, fig4   reproduce the paper's numbers
 //!   ablation                           QATT-vs-ADMM, BCH, burst, scrub
+//!   calibrate                          record activation envelopes for guards
 //!   serve                              protected inference serving demo
 //!   info                               artifact inventory
 //!
@@ -14,8 +15,9 @@ use std::time::Duration;
 
 use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
 use zsecc::harness::{ablation, campaign, fig1, fig34, scrubsim, table1, table2};
-use zsecc::memory::{FaultModel, ScrubPolicy};
+use zsecc::memory::{FaultModel, FaultSite, ScrubPolicy};
 use zsecc::model::manifest::list_models;
+use zsecc::runtime::GuardMode;
 use zsecc::util::cli::Args;
 use zsecc::util::rng::Rng;
 
@@ -137,6 +139,33 @@ fn main() -> anyhow::Result<()> {
             println!("{}", ablation::render_fault_models(&sweep, 1e-3));
         }
         Some("campaign") => run_campaign(&args, &artifacts)?,
+        Some("calibrate") => {
+            let batch = args.usize_or("batch", 256)?;
+            let margin = args.f64_or("margin", 0.05)?;
+            let models = args.list_or("models", &[]);
+            let models = if models.is_empty() {
+                list_models(&artifacts)?
+            } else {
+                models
+            };
+            let rt = zsecc::runtime::Runtime::cpu()?;
+            let ds = std::sync::Arc::new(zsecc::model::EvalSet::load(
+                &artifacts.join("dataset.eval.bin"),
+            )?);
+            for model in &models {
+                let mut ctx =
+                    zsecc::harness::EvalCtx::load(&artifacts, model, batch, rt.clone(), ds.clone())?;
+                let calib = ctx.calibrate(margin)?;
+                ctx.man.save_guards(&calib)?;
+                println!(
+                    "[{model}] calibrated over {} batches of {batch} (margin {margin}):",
+                    calib.batches
+                );
+                for l in &calib.layers {
+                    println!("  {:<8} [{:+.4}, {:+.4}]", l.name, l.env.lo, l.env.hi);
+                }
+            }
+        }
         Some("scrubsim") => run_scrubsim(&args)?,
         Some("serve") => {
             let model = args.str_or("model", "squeezenet_s");
@@ -163,7 +192,12 @@ fn main() -> anyhow::Result<()> {
                 // mutex batcher stays selectable as the baseline.
                 ingress: zsecc::coordinator::IngressPolicy::parse(&args.str_or("ingress", "ring"))?,
                 ring_depth: args.usize_or("ring-depth", 8)?,
+                guard: GuardMode::parse(&args.str_or("guards", "off"))?,
+                // start_pjrt fills this from the manifest's calibrated
+                // envelopes (`zsecc calibrate`) when the mode needs it.
+                guard_calibration: None,
             };
+            cfg.validate()?;
             serve_demo(&artifacts, &model, cfg, secs, rps)?;
         }
         _ => {
@@ -173,14 +207,17 @@ fn main() -> anyhow::Result<()> {
                  common flags: --artifacts DIR --models a,b --json\n\
                  table2:   --trials N --rates 1e-6,1e-5 --strategies faulty,ecc --batch B --jobs J --fault-model M --verbose\n\
                  campaign: --fault-model uniform,burst:4,stuckat:1,rowburst:8192:4,hotspot:0.05,hotspotat:0.4:0.05\n\
+                 \x20         --site weights,activations,accumulators --guards off,range,abft,full\n\
                  \x20         --ci-target HW --confidence C --min-trials N --max-trials N --jobs J\n\
                  \x20         --ledger FILE --resume --out FILE --synthetic --n WEIGHTS --verbose\n\
+                 calibrate: --models a,b --batch B --margin M   (writes envelopes into the manifest)\n\
                  scrubsim: --scenario ramp|migrate --scrub-policy fixed|adaptive|both --seed N\n\
                  \x20         --strategy S --n WEIGHTS --shards S --budget PASSES --max-interval TICKS\n\
                  \x20         --trace --out FILE --json\n\
                  serve:    --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS\n\
                  \x20         --scrub-policy fixed|adaptive --scrub-max-ms MS --fault-rate F --shards S --scrub-workers W\n\
-                 \x20         --ingress ring|locked (lock-free slab ring vs mutex batcher) --ring-depth N"
+                 \x20         --ingress ring|locked (lock-free slab ring vs mutex batcher) --ring-depth N\n\
+                 \x20         --guards off|range (range needs a prior `zsecc calibrate`)"
             );
         }
     }
@@ -236,11 +273,29 @@ fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> 
         0 => None,
         n => Some(n),
     };
+    // `--site` and `--sites` are synonyms (one axis value is the common
+    // case); same for `--guard`/`--guards`.
+    let sites = match args.str_opt("sites").or_else(|| args.str_opt("site")) {
+        None => vec![FaultSite::Weights],
+        Some(s) => s
+            .split(',')
+            .map(FaultSite::parse)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    let guards = match args.str_opt("guards").or_else(|| args.str_opt("guard")) {
+        None => vec![GuardMode::Off],
+        Some(s) => s
+            .split(',')
+            .map(GuardMode::parse)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
     let cfg = campaign::Config {
         models,
         strategies: args.list_or("strategies", &table2::PAPER_STRATEGIES),
         rates: parse_rates(args)?,
         fault_models,
+        sites,
+        guards,
         policy,
         jobs: args.usize_or("jobs", 2)?,
         ledger: args.str_opt("ledger").map(PathBuf::from),
@@ -261,6 +316,7 @@ fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> 
         campaign::run(&cfg, &runner)?
     };
     println!("{}", report.render());
+    print_guard_comparisons(&report);
     if let Some(out) = args.str_opt("out") {
         std::fs::write(out, report.canonical_json().to_string())?;
         println!("(canonical JSON written to {out})");
@@ -269,6 +325,41 @@ fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> 
         println!("{}", report.to_json());
     }
     Ok(())
+}
+
+/// For every guarded cell that has an unguarded sibling (same model,
+/// strategy, rate, fault model, and site — and, because guard modes are
+/// excluded from trial seeds, the *same* injected fault sequence),
+/// print the mean-residual comparison. CI greps for `[guards ok]`.
+fn print_guard_comparisons(report: &campaign::Report) {
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let sibling_key = |s: &campaign::CellSpec| {
+        format!("{}|{}|{:e}|{}|{}", s.model, s.strategy, s.rate, s.fault.tag(), s.site.tag())
+    };
+    let mut off = std::collections::BTreeMap::new();
+    for c in &report.cells {
+        if c.spec.guard == GuardMode::Off && !c.drops.is_empty() {
+            off.insert(sibling_key(&c.spec), mean(&c.drops));
+        }
+    }
+    for c in &report.cells {
+        if c.spec.guard == GuardMode::Off || c.drops.is_empty() {
+            continue;
+        }
+        if let Some(&base) = off.get(&sibling_key(&c.spec)) {
+            println!(
+                "guards: {} site={} rate={:e} {}={:.4}pp off={:.4}pp clamped={} [{}]",
+                c.spec.model,
+                c.spec.site.tag(),
+                c.spec.rate,
+                c.spec.guard.tag(),
+                mean(&c.drops),
+                base,
+                c.clamped,
+                if mean(&c.drops) < base { "guards ok" } else { "guards FAIL" }
+            );
+        }
+    }
 }
 
 /// The `scrubsim` subcommand: replay a time-varying fault scenario

@@ -32,6 +32,43 @@
 use crate::ecc::Encoded;
 use crate::util::rng::Rng;
 
+/// Where a campaign injects its faults. [`FaultSite::Weights`] is the
+/// storage site every PR so far exercised (bit flips in the protected
+/// weight image); the compute sites strike transiently during
+/// inference — [`FaultSite::Activations`] hits the buffer feeding a
+/// dense layer's MACs, [`FaultSite::Accumulators`] hits the produced
+/// output plane — and are answered by the compute-path guards
+/// ([`crate::runtime::guard`]), not by storage ECC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    Weights,
+    Activations,
+    Accumulators,
+}
+
+impl FaultSite {
+    /// Stable tag — ledger keys, JSON reports, CLI. `parse` accepts
+    /// every string `tag` produces.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultSite::Weights => "weights",
+            FaultSite::Activations => "activations",
+            FaultSite::Accumulators => "accumulators",
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<FaultSite> {
+        match text {
+            "weights" => Ok(FaultSite::Weights),
+            "activations" => Ok(FaultSite::Activations),
+            "accumulators" => Ok(FaultSite::Accumulators),
+            _ => anyhow::bail!(
+                "unknown fault site '{text}' (weights | activations | accumulators)"
+            ),
+        }
+    }
+}
+
 /// Fault model selector.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FaultModel {
@@ -486,6 +523,18 @@ mod tests {
             prev = Some(pos);
         }
         assert!(seen_distinct, "positions must still vary with the seed");
+    }
+
+    #[test]
+    fn site_tags_roundtrip_through_parse() {
+        for site in [
+            FaultSite::Weights,
+            FaultSite::Activations,
+            FaultSite::Accumulators,
+        ] {
+            assert_eq!(FaultSite::parse(site.tag()).unwrap(), site);
+        }
+        assert!(FaultSite::parse("cache").is_err());
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub mod scheduler;
 pub mod shard;
 
 pub use bank::MemoryBank;
-pub use fault::{FaultInjector, FaultModel};
+pub use fault::{FaultInjector, FaultModel, FaultSite};
 pub use pool::{run_jobs, Pool};
 pub use scheduler::{SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardSchedule};
 pub use shard::{plan_shards, ShardState, ShardedBank};

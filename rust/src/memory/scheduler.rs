@@ -194,7 +194,7 @@ impl ScrubScheduler {
         let shards = shard_bits
             .iter()
             .map(|&bits| ShardSched {
-                bits: bits.max(1),
+                bits,
                 interval: cfg.max_interval,
                 deadline: now,
                 last_pass: now,
@@ -299,17 +299,7 @@ impl ScrubScheduler {
         s.last_pass = now;
         s.passes += 1;
         if cfg.policy == ScrubPolicy::Adaptive {
-            let (_, ber_hi) = stats::wilson_interval(s.ew_errors, s.ew_bitsecs, cfg.confidence);
-            // Expected new error bits per second at the upper bound;
-            // the interval that keeps arrivals at the residual budget.
-            let err_per_sec = ber_hi * s.bits as f64;
-            let mut next = if err_per_sec > 0.0 {
-                Duration::from_secs_f64(
-                    (cfg.target_residual / err_per_sec).min(cfg.max_interval.as_secs_f64()),
-                )
-            } else {
-                cfg.max_interval
-            };
+            let mut next = derive_interval(&cfg, s.bits, s.ew_errors, s.ew_bitsecs);
             if new_err == 0 {
                 // Clean pass: never shrink, grow by at least `growth` —
                 // the monotone decay-to-max guarantee.
@@ -318,6 +308,33 @@ impl ScrubScheduler {
             s.interval = next.clamp(cfg.base_interval, cfg.max_interval);
         }
         s.deadline = now + s.interval;
+    }
+}
+
+/// The adaptive interval that keeps expected new-error arrivals at the
+/// residual budget — `target_residual / (wilson_upper · bits)` with
+/// every degenerate denominator guarded. A zero-bit shard (shard
+/// geometry can leave an empty tail shard) exposes nothing: it idles at
+/// the maximum interval instead of letting its vacuous evidence
+/// hot-clamp it. A zero or non-finite arrival-rate bound likewise falls
+/// back to the maximum rather than dividing into a NaN deadline.
+fn derive_interval(
+    cfg: &SchedulerConfig,
+    bits: u64,
+    ew_errors: f64,
+    ew_bitsecs: f64,
+) -> Duration {
+    if bits == 0 {
+        return cfg.max_interval;
+    }
+    let (_, ber_hi) = stats::wilson_interval(ew_errors, ew_bitsecs, cfg.confidence);
+    let err_per_sec = ber_hi * bits as f64;
+    if err_per_sec.is_finite() && err_per_sec > 0.0 {
+        Duration::from_secs_f64(
+            (cfg.target_residual / err_per_sec).min(cfg.max_interval.as_secs_f64()),
+        )
+    } else {
+        cfg.max_interval
     }
 }
 
@@ -392,6 +409,35 @@ mod tests {
             let (_, hi) = sched.ber_bounds(idx);
             assert!(hi < 1e-3, "clean shard upper bound: {hi}");
         }
+    }
+
+    #[test]
+    fn zero_bit_shard_never_hot_clamps() {
+        // An empty shard exposes no bits. Before the denominator guard
+        // its pinned 1-bit exposure made the Wilson upper bound hover
+        // near 1, so `target / (ber_hi * bits)` dragged it to the hot
+        // clamp — an empty shard soaking up scrub bandwidth forever.
+        let cfg = SchedulerConfig::adaptive(secs(1), secs(64));
+        let mut sched = ScrubScheduler::new(cfg, &[0, 1 << 20], Duration::ZERO);
+        let mut now = Duration::ZERO;
+        for _ in 0..4 {
+            now += secs(1);
+            sched.record_pass(0, &DecodeStats::default(), now);
+            assert_eq!(
+                sched.interval(0),
+                secs(64),
+                "no bits, no evidence, no hot clamp"
+            );
+        }
+        // Even a (nonsensical) error report against an empty shard must
+        // not divide its way into a hot deadline.
+        sched.record_pass(0, &errs(3, 0), now + secs(1));
+        assert_eq!(sched.interval(0), secs(64));
+        let (lo, hi) = sched.ber_bounds(0);
+        assert_eq!((lo, hi), (0.0, 1.0), "vacuous evidence stays vacuous");
+        // The populated neighbour still adapts normally.
+        sched.record_pass(1, &errs(400, 0), secs(1));
+        assert_eq!(sched.interval(1), secs(1), "real shards still hot-clamp");
     }
 
     #[test]

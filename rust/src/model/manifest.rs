@@ -3,6 +3,7 @@
 //! shapes, frozen dequantization scales), reference accuracies, and the
 //! artifact file index.
 
+use crate::runtime::guard::Calibration;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -42,6 +43,9 @@ pub struct Manifest {
     pub hlo: BTreeMap<usize, String>,
     pub hlo_pallas: BTreeMap<usize, String>,
     pub hlo_prewot: BTreeMap<usize, String>,
+    /// Compute-path guard calibration (activation envelopes), written
+    /// back by `zsecc calibrate`; absent until a calibration pass ran.
+    pub guards: Option<Calibration>,
     /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
@@ -109,6 +113,10 @@ impl Manifest {
             hlo: batch_map(files.req("hlo")?)?,
             hlo_pallas: batch_map(files.req("hlo_pallas")?)?,
             hlo_prewot: batch_map(files.req("hlo_prewot")?)?,
+            guards: match j.get("guards") {
+                Some(Json::Null) | None => None,
+                Some(g) => Some(Calibration::from_json(g)?),
+            },
             dir: path.parent().unwrap_or(Path::new(".")).to_path_buf(),
         };
         man.validate()?;
@@ -176,6 +184,29 @@ impl Manifest {
             .ok_or_else(|| anyhow::anyhow!("no prewot HLO artifact for batch {batch}"))
     }
 
+    /// Persist a guard calibration into the manifest file (the
+    /// `guards` key is replaced, everything else round-trips through
+    /// the parser untouched). Write-to-temp + rename so an interrupted
+    /// calibration never leaves a truncated manifest.
+    pub fn save_guards(&self, calib: &Calibration) -> anyhow::Result<()> {
+        let path = self.dir.join(format!("{}.manifest.json", self.model));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let mut j = Json::parse(&text)?;
+        match &mut j {
+            Json::Obj(m) => {
+                m.insert("guards".to_string(), calib.to_json());
+            }
+            _ => anyhow::bail!("manifest {} is not a JSON object", path.display()),
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, j.to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow::anyhow!("publishing {}: {e}", path.display()))?;
+        Ok(())
+    }
+
     /// Layers with prewot scales substituted (Table-1 path).
     pub fn layers_prewot(&self) -> Vec<Layer> {
         self.layers
@@ -231,6 +262,44 @@ mod tests {
         assert!(m.hlo_path(1).unwrap().ends_with("m.b1.hlo.txt"));
         assert!(m.hlo_path(7).is_err());
         assert_eq!(m.layers_prewot()[0].scale, 0.6);
+    }
+
+    #[test]
+    fn guards_calibration_roundtrips_through_the_manifest() {
+        use crate::runtime::guard::{Envelope, LayerEnvelope};
+        let dir = std::env::temp_dir().join("zsecc_man_guards");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.manifest.json");
+        std::fs::write(&p, MINI).unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert!(m.guards.is_none(), "seed manifest carries no calibration");
+        let calib = Calibration {
+            margin: 0.05,
+            batches: 2,
+            layers: vec![
+                LayerEnvelope {
+                    name: "input".into(),
+                    env: Envelope::new(0.0, 1.0),
+                },
+                LayerEnvelope {
+                    name: "logits".into(),
+                    env: Envelope::new(-8.0, 11.0),
+                },
+            ],
+        };
+        m.save_guards(&calib).unwrap();
+        let back = Manifest::load(&p).unwrap();
+        assert_eq!(back.guards.as_ref(), Some(&calib));
+        // everything else survives the rewrite
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.hlo[&32], "m.b32.hlo.txt");
+        // a malformed guards section is a load error, not a silent None
+        let poisoned = MINI.replace(
+            "\"model\": \"m\",",
+            "\"model\": \"m\", \"guards\": {\"margin\": 0.1}, ",
+        );
+        std::fs::write(&p, poisoned).unwrap();
+        assert!(Manifest::load(&p).is_err());
     }
 
     #[test]

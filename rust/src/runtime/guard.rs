@@ -1,0 +1,1137 @@
+//! Compute-path protection: ABFT checksummed dense execution and
+//! activation range supervision.
+//!
+//! Everything before this module guards weights *at rest*; a fault that
+//! strikes during inference — in an activation buffer or a MAC
+//! accumulator — passes through silently. Two classic guards close that
+//! gap:
+//!
+//! * **ABFT matmul** (FT-CNN, Zhao et al., PAPERS.md): row/column
+//!   checksums of a dense layer `y[B,C] = x[B,D] · w[D,C]` are computed
+//!   over the *staged* (pre-strike) inputs and verified against the
+//!   produced outputs after execution. The column check (per output
+//!   class, summed over the batch) is the detector; the row check (per
+//!   batch row) localizes which rows to recompute, so the
+//!   recompute-on-mismatch fallback re-executes only the implicated
+//!   rows from the staged inputs. Checksum cost is `O(D·C + B·D)` per
+//!   batch against the matmul's `O(B·D·C)` — a `~1/B + 1/C` overhead.
+//!   Floating-point reassociation makes exact equality impossible, so
+//!   verification uses an error bound derived from the absolute-value
+//!   mass of the products ([`DenseLayer::tolerance`]); a corruption
+//!   whose effect stays under that bound is below the numerical noise
+//!   floor and is not a silent data corruption by construction.
+//! * **Activation range supervision** (Geissler et al., PAPERS.md):
+//!   per-layer min/max envelopes recorded by a calibration pass over
+//!   clean data; at serve time every activation is clamped into its
+//!   envelope and each clamp is counted. Bit flips that blow an
+//!   exponent land far outside any calibrated envelope, so clamping
+//!   converts the large (prediction-flipping) corruptions into bounded,
+//!   *counted* events.
+//!
+//! [`DenseModel`] is the pure-Rust guarded reference executor the
+//! campaign's compute-site trials and the guard tests run (the PJRT
+//! graph is opaque — faults cannot be injected mid-HLO).
+//! [`GuardedExecutable`] wraps a PJRT [`Executable`]: range supervision
+//! applies to any model (input + logits envelopes), while end-to-end
+//! ABFT applies when the model is a pure linear map (`num_weights ==
+//! input_dim · num_classes`), which is the only shape whose checksum
+//! relation survives an opaque executable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::{Executable, Runtime, WeightsBuf};
+use crate::util::json::{arr, num, obj, s, Json};
+
+// ---------------------------------------------------------------- mode --
+
+/// Which guards are armed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GuardMode {
+    /// No guards: the execution path is byte-identical to an unguarded
+    /// run (pinned by tests).
+    Off,
+    /// Activation range supervision only.
+    Range,
+    /// ABFT checksummed matmul only.
+    Abft,
+    /// Both guards.
+    Full,
+}
+
+impl GuardMode {
+    pub fn abft(self) -> bool {
+        matches!(self, GuardMode::Abft | GuardMode::Full)
+    }
+
+    pub fn range(self) -> bool {
+        matches!(self, GuardMode::Range | GuardMode::Full)
+    }
+
+    /// Stable tag — ledger keys, JSON reports, CLI. `parse` accepts
+    /// every string `tag` produces.
+    pub fn tag(self) -> &'static str {
+        match self {
+            GuardMode::Off => "off",
+            GuardMode::Range => "range",
+            GuardMode::Abft => "abft",
+            GuardMode::Full => "full",
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<GuardMode> {
+        match text {
+            "off" => Ok(GuardMode::Off),
+            "range" => Ok(GuardMode::Range),
+            "abft" => Ok(GuardMode::Abft),
+            "full" => Ok(GuardMode::Full),
+            _ => anyhow::bail!("unknown guard mode '{text}' (off | range | abft | full)"),
+        }
+    }
+}
+
+// ------------------------------------------------------------ envelope --
+
+/// A calibrated min/max range for one activation buffer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Envelope {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Envelope {
+    pub fn new(lo: f32, hi: f32) -> Envelope {
+        Envelope { lo, hi }
+    }
+
+    /// Inverted bounds that any observation will overwrite.
+    pub fn empty() -> Envelope {
+        Envelope {
+            lo: f32::INFINITY,
+            hi: f32::NEG_INFINITY,
+        }
+    }
+
+    /// Grow the envelope to include `v` (non-finite values ignored —
+    /// calibration data is clean by contract, but never poison bounds).
+    pub fn observe(&mut self, v: f32) {
+        if v.is_finite() {
+            self.lo = self.lo.min(v);
+            self.hi = self.hi.max(v);
+        }
+    }
+
+    /// Widen by `margin` of the observed span on each side, so values a
+    /// hair outside the calibration sample are not flagged. A
+    /// degenerate (single-point) span widens by `margin` absolute.
+    pub fn widen(&self, margin: f64) -> Envelope {
+        let span = f64::from(self.hi) - f64::from(self.lo);
+        let pad = if span > 0.0 { span * margin } else { margin.max(0.0) };
+        Envelope {
+            lo: (f64::from(self.lo) - pad) as f32,
+            hi: (f64::from(self.hi) + pad) as f32,
+        }
+    }
+
+    pub fn contains(&self, v: f32) -> bool {
+        v >= self.lo && v <= self.hi
+    }
+
+    /// Clamp every value into the envelope, returning how many were
+    /// out of range. Non-finite values always count: NaN and -inf pin
+    /// to `lo`, +inf to `hi` — range supervision is also the serve
+    /// path's last line of defense against poisoned buffers.
+    pub fn clamp_count(&self, xs: &mut [f32]) -> u64 {
+        let mut clamped = 0u64;
+        for v in xs {
+            if v.is_nan() {
+                *v = self.lo;
+                clamped += 1;
+            } else if *v > self.hi {
+                *v = self.hi;
+                clamped += 1;
+            } else if *v < self.lo {
+                *v = self.lo;
+                clamped += 1;
+            }
+        }
+        clamped
+    }
+}
+
+/// One named calibrated envelope (layer inputs, or the logits plane).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerEnvelope {
+    pub name: String,
+    pub env: Envelope,
+}
+
+/// The output of a calibration pass: named per-buffer envelopes plus
+/// the parameters that produced them. Stored in the model `Manifest`
+/// under the optional `guards` key (see `zsecc calibrate`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// Envelope widening applied at record time (fraction of span).
+    pub margin: f64,
+    /// Clean batches observed.
+    pub batches: usize,
+    pub layers: Vec<LayerEnvelope>,
+}
+
+impl Calibration {
+    pub fn envelope(&self, name: &str) -> Option<Envelope> {
+        self.layers.iter().find(|l| l.name == name).map(|l| l.env)
+    }
+
+    /// The envelope guarding the model input buffer: `input` when the
+    /// calibration came from the serve path, else the first dense
+    /// layer's (`layer0`).
+    pub fn input_envelope(&self) -> Option<Envelope> {
+        self.envelope("input").or_else(|| self.envelope("layer0"))
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("margin", num(self.margin)),
+            ("batches", num(self.batches as f64)),
+            (
+                "layers",
+                arr(self.layers.iter().map(|l| {
+                    obj(vec![
+                        ("name", s(&l.name)),
+                        ("lo", num(f64::from(l.env.lo))),
+                        ("hi", num(f64::from(l.env.hi))),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<Calibration> {
+        let margin = v
+            .req("margin")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("guards 'margin' must be a number"))?;
+        let batches = v
+            .req("batches")?
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("guards 'batches' must be a number"))?
+            as usize;
+        let mut layers = Vec::new();
+        for lv in v
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("guards 'layers' must be an array"))?
+        {
+            let name = lv
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("guards layer 'name' must be a string"))?
+                .to_string();
+            let grab = |k: &str| -> anyhow::Result<f32> {
+                let x = lv
+                    .req(k)?
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("guards layer '{name}' field '{k}' must be a number"))?;
+                Ok(x as f32)
+            };
+            let env = Envelope::new(grab("lo")?, grab("hi")?);
+            anyhow::ensure!(
+                env.lo.is_finite() && env.hi.is_finite() && env.lo <= env.hi,
+                "guards layer '{name}' envelope [{}, {}] is not a finite ordered range",
+                env.lo,
+                env.hi
+            );
+            layers.push(LayerEnvelope { name, env });
+        }
+        anyhow::ensure!(!layers.is_empty(), "guards calibration holds no envelopes");
+        Ok(Calibration {
+            margin,
+            batches,
+            layers,
+        })
+    }
+}
+
+// ------------------------------------------------------------ counters --
+
+/// Guard activity of one guarded run (plain counters; campaign trials
+/// and tests read these directly).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GuardReport {
+    /// ABFT batch verifications performed.
+    pub abft_checks: u64,
+    /// Rows implicated by a checksum mismatch (detections).
+    pub abft_trips: u64,
+    /// Rows recomputed from staged inputs (corrections).
+    pub recomputes: u64,
+    /// Activations clamped back into their envelope.
+    pub range_clamps: u64,
+}
+
+impl GuardReport {
+    pub fn any(&self) -> bool {
+        self.abft_trips > 0 || self.range_clamps > 0
+    }
+}
+
+/// Shared atomic guard counters for the serve path; `Metrics` holds an
+/// `Arc` to the same instance the guarded executor bumps.
+#[derive(Debug, Default)]
+pub struct GuardStats {
+    pub abft_checks: AtomicU64,
+    pub abft_trips: AtomicU64,
+    pub recomputes: AtomicU64,
+    pub range_clamps: AtomicU64,
+}
+
+impl GuardStats {
+    pub fn absorb(&self, r: &GuardReport) {
+        self.abft_checks.fetch_add(r.abft_checks, Ordering::Relaxed);
+        self.abft_trips.fetch_add(r.abft_trips, Ordering::Relaxed);
+        self.recomputes.fetch_add(r.recomputes, Ordering::Relaxed);
+        self.range_clamps.fetch_add(r.range_clamps, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> GuardReport {
+        GuardReport {
+            abft_checks: self.abft_checks.load(Ordering::Relaxed),
+            abft_trips: self.abft_trips.load(Ordering::Relaxed),
+            recomputes: self.recomputes.load(Ordering::Relaxed),
+            range_clamps: self.range_clamps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+// -------------------------------------------------------------- faults --
+
+/// One transient compute-path bit flip: `bit` of element `index` of
+/// `layer`'s targeted buffer (activations or accumulators, chosen by
+/// which [`ComputeFaults`] list carries it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ComputeFault {
+    pub layer: usize,
+    pub index: usize,
+    pub bit: u32,
+}
+
+/// Transient faults to strike during a guarded forward pass.
+/// Activation faults hit the staged input buffer *after* ABFT
+/// checksums are taken (an SEU on the buffer feeding the MACs);
+/// accumulator faults hit the output plane after the MACs run. Both
+/// model transient strikes: a recompute from the staged inputs is
+/// clean.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ComputeFaults {
+    pub activations: Vec<ComputeFault>,
+    pub accumulators: Vec<ComputeFault>,
+}
+
+impl ComputeFaults {
+    pub fn is_empty(&self) -> bool {
+        self.activations.is_empty() && self.accumulators.is_empty()
+    }
+}
+
+fn apply_faults(faults: &[ComputeFault], layer: usize, buf: &mut [f32]) {
+    for f in faults {
+        if f.layer == layer && f.index < buf.len() {
+            let bits = buf[f.index].to_bits() ^ (1u32 << (f.bit & 31));
+            buf[f.index] = f32::from_bits(bits);
+        }
+    }
+}
+
+// --------------------------------------------------------- dense layer --
+
+/// One dense layer `y[B,C] = x[B,D] · w[D,C]` with precomputed checksum
+/// weights: `wrow[d] = Σ_c w[d,c]` folds a whole output row into one
+/// scalar for the row check, `wabs[d] = Σ_c |w[d,c]|` bounds its
+/// rounding mass for the tolerance.
+#[derive(Clone, Debug)]
+pub struct DenseLayer {
+    pub rows: usize,
+    pub cols: usize,
+    w: Vec<f32>,
+    wrow: Vec<f64>,
+    wabs: Vec<f64>,
+}
+
+impl DenseLayer {
+    pub fn new(w: Vec<f32>, rows: usize, cols: usize) -> anyhow::Result<DenseLayer> {
+        anyhow::ensure!(
+            rows > 0 && cols > 0 && w.len() == rows * cols,
+            "dense layer wants {rows}x{cols} = {} weights, got {}",
+            rows * cols,
+            w.len()
+        );
+        anyhow::ensure!(
+            w.iter().all(|v| v.is_finite()),
+            "dense layer weights must be finite"
+        );
+        let mut wrow = vec![0f64; rows];
+        let mut wabs = vec![0f64; rows];
+        for d in 0..rows {
+            for c in 0..cols {
+                let wv = f64::from(w[d * cols + c]);
+                wrow[d] += wv;
+                wabs[d] += wv.abs();
+            }
+        }
+        Ok(DenseLayer {
+            rows,
+            cols,
+            w,
+            wrow,
+            wabs,
+        })
+    }
+
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// One output row — the unit both the full matmul and the
+    /// recompute fallback go through, so a recomputed row is bitwise
+    /// identical to a cleanly computed one.
+    fn matmul_row(&self, xr: &[f32], yr: &mut [f32]) {
+        yr.fill(0.0);
+        for (d, &xv) in xr.iter().enumerate() {
+            let wr = &self.w[d * self.cols..(d + 1) * self.cols];
+            for (c, &wv) in wr.iter().enumerate() {
+                yr[c] += xv * wv;
+            }
+        }
+    }
+
+    /// Plain (unguarded) batch matmul.
+    pub fn matmul(&self, x: &[f32], batch: usize, y: &mut [f32]) {
+        debug_assert_eq!(x.len(), batch * self.rows);
+        debug_assert_eq!(y.len(), batch * self.cols);
+        for b in 0..batch {
+            self.matmul_row(
+                &x[b * self.rows..(b + 1) * self.rows],
+                &mut y[b * self.cols..(b + 1) * self.cols],
+            );
+        }
+    }
+
+    /// Verification bound for a checksum whose products carry the given
+    /// absolute-value `mass`: each f32 MAC contributes up to one ulp of
+    /// its running sum, `terms` partial sums stack, and a safety factor
+    /// absorbs the f64 reference's own (much smaller) rounding.
+    pub fn tolerance(&self, mass: f64, batch: usize) -> f64 {
+        let terms = (self.rows + batch) as f64;
+        1e-9 + mass * terms * f64::from(f32::EPSILON) * 8.0
+    }
+
+    /// ABFT verify: compare `y` (claimed `x_staged · w`) against f64
+    /// row/column checksums of the *staged* inputs. Returns the batch
+    /// rows implicated by a mismatch — empty means verified. The column
+    /// check detects (it sees every output element exactly once); the
+    /// row check localizes; a column trip that no row localizes (e.g. a
+    /// corruption whose row-sum cancels against `wrow ≈ 0`) implicates
+    /// the whole batch.
+    pub fn verify(&self, x_staged: &[f32], batch: usize, y: &[f32]) -> Vec<usize> {
+        debug_assert_eq!(x_staged.len(), batch * self.rows);
+        debug_assert_eq!(y.len(), batch * self.cols);
+        let mut colsum = vec![0f64; self.rows];
+        let mut colabs = vec![0f64; self.rows];
+        for b in 0..batch {
+            let xr = &x_staged[b * self.rows..(b + 1) * self.rows];
+            for (d, &xv) in xr.iter().enumerate() {
+                let xv = f64::from(xv);
+                colsum[d] += xv;
+                colabs[d] += xv.abs();
+            }
+        }
+        let mut col_trip = false;
+        for c in 0..self.cols {
+            let mut chk = 0f64;
+            let mut mass = 0f64;
+            for d in 0..self.rows {
+                let wv = f64::from(self.w[d * self.cols + c]);
+                chk += colsum[d] * wv;
+                mass += colabs[d] * wv.abs();
+            }
+            let mut ysum = 0f64;
+            for b in 0..batch {
+                ysum += f64::from(y[b * self.cols + c]);
+            }
+            if !ysum.is_finite() || (ysum - chk).abs() > self.tolerance(mass, batch) {
+                col_trip = true;
+                break;
+            }
+        }
+        let mut suspects = Vec::new();
+        for b in 0..batch {
+            let xr = &x_staged[b * self.rows..(b + 1) * self.rows];
+            let mut chk = 0f64;
+            let mut mass = 0f64;
+            for (d, &xv) in xr.iter().enumerate() {
+                let xv = f64::from(xv);
+                chk += xv * self.wrow[d];
+                mass += xv.abs() * self.wabs[d];
+            }
+            let mut ysum = 0f64;
+            for c in 0..self.cols {
+                ysum += f64::from(y[b * self.cols + c]);
+            }
+            if !ysum.is_finite() || (ysum - chk).abs() > self.tolerance(mass, self.cols) {
+                suspects.push(b);
+            }
+        }
+        if col_trip && suspects.is_empty() {
+            // detected but not localized: recompute everything
+            return (0..batch).collect();
+        }
+        suspects
+    }
+}
+
+// --------------------------------------------------------- dense model --
+
+/// A pure-Rust dense network (matmul layers, ReLU between them) with
+/// both guards wired through [`DenseModel::forward_guarded`]. This is
+/// the reference compute path the campaign's `activations` /
+/// `accumulators` fault sites execute.
+#[derive(Clone, Debug)]
+pub struct DenseModel {
+    pub layers: Vec<DenseLayer>,
+    /// Per-layer *input* envelopes; empty until [`DenseModel::calibrate`]
+    /// or [`DenseModel::set_envelopes`].
+    envs: Vec<Envelope>,
+}
+
+impl DenseModel {
+    pub fn new(layers: Vec<DenseLayer>) -> anyhow::Result<DenseModel> {
+        anyhow::ensure!(!layers.is_empty(), "dense model wants at least one layer");
+        for pair in layers.windows(2) {
+            anyhow::ensure!(
+                pair[0].cols == pair[1].rows,
+                "layer shapes do not chain: {}x{} -> {}x{}",
+                pair[0].rows,
+                pair[0].cols,
+                pair[1].rows,
+                pair[1].cols
+            );
+        }
+        Ok(DenseModel {
+            layers,
+            envs: Vec::new(),
+        })
+    }
+
+    /// Build from one flat weight buffer split by `(rows, cols)` dims.
+    pub fn from_flat(w: &[f32], dims: &[(usize, usize)]) -> anyhow::Result<DenseModel> {
+        let want: usize = dims.iter().map(|&(r, c)| r * c).sum();
+        anyhow::ensure!(
+            w.len() == want,
+            "flat weights hold {} values, dims want {want}",
+            w.len()
+        );
+        let mut layers = Vec::with_capacity(dims.len());
+        let mut at = 0;
+        for &(r, c) in dims {
+            layers.push(DenseLayer::new(w[at..at + r * c].to_vec(), r, c)?);
+            at += r * c;
+        }
+        DenseModel::new(layers)
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].rows
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers[self.layers.len() - 1].cols
+    }
+
+    /// Elements of the buffer a fault site targets at `layer`:
+    /// activations strike the layer's input plane, accumulators its
+    /// output plane.
+    pub fn activation_elems(&self, layer: usize, batch: usize) -> usize {
+        batch * self.layers[layer].rows
+    }
+
+    pub fn accumulator_elems(&self, layer: usize, batch: usize) -> usize {
+        batch * self.layers[layer].cols
+    }
+
+    /// Plain forward pass — the unguarded reference.
+    pub fn forward(&self, x: &[f32], batch: usize) -> Vec<f32> {
+        self.forward_guarded(
+            x,
+            batch,
+            GuardMode::Off,
+            &ComputeFaults::default(),
+            &mut GuardReport::default(),
+        )
+    }
+
+    /// Record per-layer input envelopes (plus the logits plane) from
+    /// one clean batch, widen by `margin`, and arm them on the model.
+    pub fn calibrate(&mut self, x: &[f32], batch: usize, margin: f64) -> Calibration {
+        let mut named = Vec::with_capacity(self.layers.len() + 1);
+        let mut envs = Vec::with_capacity(self.layers.len());
+        let mut act = x.to_vec();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let mut env = Envelope::empty();
+            act.iter().for_each(|&v| env.observe(v));
+            let env = env.widen(margin);
+            envs.push(env);
+            named.push(LayerEnvelope {
+                name: format!("layer{l}"),
+                env,
+            });
+            let mut y = vec![0f32; batch * layer.cols];
+            layer.matmul(&act, batch, &mut y);
+            if l + 1 < self.layers.len() {
+                y.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            act = y;
+        }
+        let mut logits = Envelope::empty();
+        act.iter().for_each(|&v| logits.observe(v));
+        named.push(LayerEnvelope {
+            name: "logits".to_string(),
+            env: logits.widen(margin),
+        });
+        self.envs = envs;
+        Calibration {
+            margin,
+            batches: 1,
+            layers: named,
+        }
+    }
+
+    /// Arm previously recorded envelopes (e.g. loaded from a manifest).
+    pub fn set_envelopes(&mut self, calib: &Calibration) -> anyhow::Result<()> {
+        let mut envs = Vec::with_capacity(self.layers.len());
+        for l in 0..self.layers.len() {
+            let name = format!("layer{l}");
+            envs.push(
+                calib
+                    .envelope(&name)
+                    .ok_or_else(|| anyhow::anyhow!("calibration misses envelope '{name}'"))?,
+            );
+        }
+        self.envs = envs;
+        Ok(())
+    }
+
+    /// Guarded forward pass. Per layer: stage the input, take ABFT
+    /// checksums of the staged (clean) buffer, strike the transient
+    /// activation faults, range-clamp the execution buffer, run the
+    /// matmul, strike the accumulator faults, then ABFT-verify and
+    /// recompute implicated rows from the staged inputs. With
+    /// `GuardMode::Off` and no faults this is exactly the plain matmul
+    /// chain — bitwise identical outputs (pinned by tests).
+    pub fn forward_guarded(
+        &self,
+        x: &[f32],
+        batch: usize,
+        mode: GuardMode,
+        faults: &ComputeFaults,
+        report: &mut GuardReport,
+    ) -> Vec<f32> {
+        assert_eq!(x.len(), batch * self.input_dim(), "input shape mismatch");
+        let range = mode.range() && !self.envs.is_empty();
+        let mut staged = x.to_vec();
+        let mut y = Vec::new();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let mut exec = staged.clone();
+            apply_faults(&faults.activations, l, &mut exec);
+            if range {
+                report.range_clamps += self.envs[l].clamp_count(&mut exec);
+            }
+            y = vec![0f32; batch * layer.cols];
+            layer.matmul(&exec, batch, &mut y);
+            apply_faults(&faults.accumulators, l, &mut y);
+            if mode.abft() {
+                report.abft_checks += 1;
+                let suspects = layer.verify(&staged, batch, &y);
+                report.abft_trips += suspects.len() as u64;
+                for b in suspects {
+                    layer.matmul_row(
+                        &staged[b * layer.rows..(b + 1) * layer.rows],
+                        &mut y[b * layer.cols..(b + 1) * layer.cols],
+                    );
+                    report.recomputes += 1;
+                }
+            }
+            if l + 1 < self.layers.len() {
+                y.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            staged = std::mem::take(&mut y);
+        }
+        staged
+    }
+}
+
+/// Relative L1 residual between a (possibly corrupted) output and its
+/// clean reference, in percent — the campaign's silent-data-corruption
+/// rate for compute-site trials. Magnitude-weighted on purpose: range
+/// clamping shrinks every out-of-envelope error toward the reference,
+/// so the residual strictly drops whenever a clamp fires, which a
+/// mismatch *count* would not show.
+pub fn residual_pp(y: &[f32], reference: &[f32]) -> f64 {
+    debug_assert_eq!(y.len(), reference.len());
+    let mut err = 0f64;
+    let mut mag = 0f64;
+    for (a, r) in y.iter().zip(reference) {
+        let d = f64::from(*a) - f64::from(*r);
+        err += if d.is_finite() { d.abs() } else { f64::from(f32::MAX) };
+        mag += f64::from(*r).abs();
+    }
+    100.0 * err / mag.max(1e-12)
+}
+
+// ---------------------------------------------------- PJRT integration --
+
+/// A PJRT [`Executable`] behind both guards. Range supervision clamps
+/// the input batch into the calibrated `input` envelope before upload
+/// and the returned logits into the `logits` envelope after; ABFT
+/// verifies the logits against f64 checksums of the host weight matrix
+/// and re-runs the batch once on a mismatch (transient faults don't
+/// repeat; a persistent mismatch is surfaced as trips with no matching
+/// recompute credit). ABFT requires the model to be a pure linear map —
+/// `num_weights == input_dim · num_classes` — because an opaque
+/// executable only preserves the checksum relation end-to-end when the
+/// whole model *is* the matmul; `new` refuses anything else.
+pub struct GuardedExecutable {
+    pub exe: Executable,
+    mode: GuardMode,
+    input_env: Option<Envelope>,
+    logit_env: Option<Envelope>,
+    head: Option<DenseLayer>,
+    stats: Arc<GuardStats>,
+}
+
+impl GuardedExecutable {
+    pub fn new(
+        exe: Executable,
+        mode: GuardMode,
+        calib: Option<&Calibration>,
+        host_weights: Option<&[f32]>,
+    ) -> anyhow::Result<GuardedExecutable> {
+        let (input_env, logit_env) = if mode.range() {
+            let calib = calib.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "guard mode '{}' needs a calibration (run `zsecc calibrate` first)",
+                    mode.tag()
+                )
+            })?;
+            let input = calib.input_envelope().ok_or_else(|| {
+                anyhow::anyhow!("calibration has no input envelope ('input' or 'layer0')")
+            })?;
+            (Some(input), calib.envelope("logits"))
+        } else {
+            (None, None)
+        };
+        let head = if mode.abft() {
+            let w = host_weights
+                .ok_or_else(|| anyhow::anyhow!("ABFT guard needs the host weight buffer"))?;
+            anyhow::ensure!(
+                exe.num_weights == exe.input_dim * exe.num_classes,
+                "ABFT over an opaque executable needs a pure linear model \
+                 ({}x{} = {} weights, manifest has {}) — use guard mode 'range'",
+                exe.input_dim,
+                exe.num_classes,
+                exe.input_dim * exe.num_classes,
+                exe.num_weights
+            );
+            Some(DenseLayer::new(
+                w.to_vec(),
+                exe.input_dim,
+                exe.num_classes,
+            )?)
+        } else {
+            None
+        };
+        Ok(GuardedExecutable {
+            exe,
+            mode,
+            input_env,
+            logit_env,
+            head,
+            stats: Arc::new(GuardStats::default()),
+        })
+    }
+
+    /// The atomic counters this executable bumps — share with `Metrics`.
+    pub fn stats(&self) -> Arc<GuardStats> {
+        Arc::clone(&self.stats)
+    }
+
+    pub fn mode(&self) -> GuardMode {
+        self.mode
+    }
+
+    /// Run one guarded batch; returns logits like [`Executable::run`].
+    /// `GuardMode::Off` delegates untouched.
+    pub fn run(
+        &self,
+        rt: &Runtime,
+        weights: &WeightsBuf,
+        images: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        if self.mode == GuardMode::Off {
+            return self.exe.run(rt, weights, images);
+        }
+        let mut report = GuardReport::default();
+        let mut staged = images.to_vec();
+        if let Some(env) = self.input_env {
+            report.range_clamps += env.clamp_count(&mut staged);
+        }
+        let mut logits = self.exe.run(rt, weights, &staged)?;
+        if let Some(head) = &self.head {
+            report.abft_checks += 1;
+            let suspects = head.verify(&staged, self.exe.batch, &logits);
+            if !suspects.is_empty() {
+                report.abft_trips += suspects.len() as u64;
+                logits = self.exe.run(rt, weights, &staged)?;
+                if head.verify(&staged, self.exe.batch, &logits).is_empty() {
+                    report.recomputes += suspects.len() as u64;
+                }
+            }
+        }
+        if let Some(env) = self.logit_env {
+            report.range_clamps += env.clamp_count(&mut logits);
+        }
+        self.stats.absorb(&report);
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| lo + (hi - lo) * rng.f64() as f32)
+            .collect()
+    }
+
+    /// A layer whose weights are bounded away from zero, so any
+    /// meaningful input corruption has a meaningful output effect.
+    fn test_layer(rng: &mut Rng, rows: usize, cols: usize) -> DenseLayer {
+        let w: Vec<f32> = (0..rows * cols)
+            .map(|_| {
+                let v = 0.25 + 0.75 * rng.f64() as f32;
+                if rng.f64() < 0.5 {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect();
+        DenseLayer::new(w, rows, cols).unwrap()
+    }
+
+    fn test_model(rng: &mut Rng, dims: &[(usize, usize)]) -> DenseModel {
+        DenseModel::new(dims.iter().map(|&(r, c)| test_layer(rng, r, c)).collect()).unwrap()
+    }
+
+    #[test]
+    fn guard_mode_tags_roundtrip() {
+        for m in [
+            GuardMode::Off,
+            GuardMode::Range,
+            GuardMode::Abft,
+            GuardMode::Full,
+        ] {
+            assert_eq!(GuardMode::parse(m.tag()).unwrap(), m);
+        }
+        assert!(GuardMode::parse("on").is_err());
+        assert!(!GuardMode::Off.abft() && !GuardMode::Off.range());
+        assert!(GuardMode::Full.abft() && GuardMode::Full.range());
+    }
+
+    #[test]
+    fn envelope_clamp_counts_exactly_the_out_of_range_values() {
+        let env = Envelope::new(-1.0, 1.0);
+        let mut xs = vec![0.0, -1.0, 1.0, 1.5, -2.0, f32::NAN, f32::INFINITY, 0.25];
+        let clamped = env.clamp_count(&mut xs);
+        assert_eq!(clamped, 4, "1.5, -2.0, NaN and inf are out of range");
+        assert_eq!(xs, vec![0.0, -1.0, 1.0, 1.0, -1.0, -1.0, 1.0, 0.25]);
+    }
+
+    #[test]
+    fn envelope_widen_handles_degenerate_spans() {
+        let mut e = Envelope::empty();
+        e.observe(2.0);
+        let w = e.widen(0.1);
+        assert!(w.lo < 2.0 && w.hi > 2.0, "point span still widens");
+        let mut e = Envelope::empty();
+        e.observe(0.0);
+        e.observe(10.0);
+        let w = e.widen(0.05);
+        assert_eq!((w.lo, w.hi), (-0.5, 10.5));
+    }
+
+    #[test]
+    fn calibration_json_roundtrips() {
+        let calib = Calibration {
+            margin: 0.05,
+            batches: 4,
+            layers: vec![
+                LayerEnvelope {
+                    name: "layer0".into(),
+                    env: Envelope::new(-0.5, 1.5),
+                },
+                LayerEnvelope {
+                    name: "logits".into(),
+                    env: Envelope::new(-12.0, 9.0),
+                },
+            ],
+        };
+        let back = Calibration::from_json(&calib.to_json()).unwrap();
+        assert_eq!(back, calib);
+        assert_eq!(back.input_envelope(), Some(Envelope::new(-0.5, 1.5)));
+        // malformed envelopes are refused
+        let bad = Json::parse(
+            r#"{"margin":0.1,"batches":1,"layers":[{"name":"layer0","lo":2.0,"hi":1.0}]}"#,
+        )
+        .unwrap();
+        assert!(Calibration::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn guards_off_is_bitwise_identical_to_plain_matmul() {
+        let mut rng = Rng::new(7);
+        let model = test_model(&mut rng, &[(24, 16), (16, 10)]);
+        let x = rand_vec(&mut rng, 5 * 24, -1.0, 1.0);
+        let plain = model.forward(&x, 5);
+        let mut report = GuardReport::default();
+        let off = model.forward_guarded(&x, 5, GuardMode::Off, &ComputeFaults::default(), &mut report);
+        assert_eq!(report, GuardReport::default(), "off mode counts nothing");
+        let a: Vec<u32> = plain.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = off.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "guards off must not perturb a single bit");
+    }
+
+    #[test]
+    fn clean_runs_never_trip_abft() {
+        let mut rng = Rng::new(11);
+        let model = test_model(&mut rng, &[(32, 24), (24, 8)]);
+        for batch in [1usize, 4, 9] {
+            let x = rand_vec(&mut rng, batch * 32, -2.0, 2.0);
+            let mut report = GuardReport::default();
+            let y = model.forward_guarded(
+                &x,
+                batch,
+                GuardMode::Abft,
+                &ComputeFaults::default(),
+                &mut report,
+            );
+            assert_eq!(report.abft_trips, 0, "false positive at batch {batch}");
+            assert_eq!(report.abft_checks, 2);
+            let bits_ref: Vec<u32> = model.forward(&x, batch).iter().map(|v| v.to_bits()).collect();
+            let bits: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits, bits_ref);
+        }
+    }
+
+    /// The satellite contract: every single-flip into matmul inputs or
+    /// accumulators is either detected by the ABFT verify or its whole
+    /// output effect is below the checksum tolerance (numerical noise,
+    /// not an SDC). Exponent-bit flips — the prediction flippers — are
+    /// always detected.
+    #[test]
+    fn abft_catches_every_meaningful_single_flip() {
+        let mut rng = Rng::new(23);
+        let (d, c) = (16usize, 8usize);
+        let model = test_model(&mut rng, &[(d, c)]);
+        let layer = &model.layers[0];
+        // exec-shaped batches around a nominal exec width of 4
+        for batch in [1usize, 4, 5] {
+            let x = rand_vec(&mut rng, batch * d, 0.1, 1.0);
+            let clean = model.forward(&x, batch);
+            // an undetected fault is under every per-column tolerance,
+            // so its total output effect is under the sum of them
+            let mass: f64 = x.iter().map(|v| f64::from(v.abs())).sum();
+            let noise_floor = c as f64 * layer.tolerance(mass, batch + c);
+            for site in 0..2 {
+                let elems = if site == 0 { batch * d } else { batch * c };
+                for index in 0..elems {
+                    for bit in 0..32u32 {
+                        let fault = ComputeFault {
+                            layer: 0,
+                            index,
+                            bit,
+                        };
+                        let faults = if site == 0 {
+                            ComputeFaults {
+                                activations: vec![fault],
+                                ..Default::default()
+                            }
+                        } else {
+                            ComputeFaults {
+                                accumulators: vec![fault],
+                                ..Default::default()
+                            }
+                        };
+                        let mut off = GuardReport::default();
+                        let corrupted =
+                            model.forward_guarded(&x, batch, GuardMode::Off, &faults, &mut off);
+                        let effect: f64 = corrupted
+                            .iter()
+                            .zip(&clean)
+                            .map(|(a, b)| {
+                                let e = f64::from(*a) - f64::from(*b);
+                                if e.is_finite() {
+                                    e.abs()
+                                } else {
+                                    f64::INFINITY
+                                }
+                            })
+                            .sum();
+                        let mut report = GuardReport::default();
+                        let guarded =
+                            model.forward_guarded(&x, batch, GuardMode::Abft, &faults, &mut report);
+                        if report.abft_trips > 0 {
+                            // detected -> recompute restores the clean bits
+                            assert_eq!(report.recomputes, report.abft_trips);
+                            let a: Vec<u32> = guarded.iter().map(|v| v.to_bits()).collect();
+                            let b: Vec<u32> = clean.iter().map(|v| v.to_bits()).collect();
+                            assert_eq!(a, b, "recompute must restore batch {batch} exactly");
+                        } else {
+                            assert!(
+                                effect <= noise_floor,
+                                "undetected flip site={site} index={index} bit={bit} \
+                                 batch={batch} has effect {effect:e} above noise {noise_floor:e}"
+                            );
+                        }
+                        // exponent flips of non-tiny values never escape
+                        if bit >= 23 && bit < 31 && effect > noise_floor {
+                            assert!(
+                                report.abft_trips > 0,
+                                "exponent flip escaped: site={site} index={index} bit={bit}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn range_guard_clamps_every_out_of_envelope_activation() {
+        let mut rng = Rng::new(31);
+        let mut model = test_model(&mut rng, &[(16, 8)]);
+        let batch = 4usize;
+        let x = rand_vec(&mut rng, batch * 16, 0.0, 1.0);
+        model.calibrate(&x, batch, 0.05);
+        // flip the top exponent bit of k distinct activations: values in
+        // (0, 2) jump far outside the [0,1]-ish envelope
+        let k = 7usize;
+        let faults = ComputeFaults {
+            activations: (0..k)
+                .map(|i| ComputeFault {
+                    layer: 0,
+                    index: i * 3,
+                    bit: 30,
+                })
+                .collect(),
+            ..Default::default()
+        };
+        let mut report = GuardReport::default();
+        let y = model.forward_guarded(&x, batch, GuardMode::Range, &faults, &mut report);
+        assert_eq!(
+            report.range_clamps, k as u64,
+            "clamp count must equal the injected out-of-envelope activations"
+        );
+        let clean = model.forward(&x, batch);
+        let mut off = GuardReport::default();
+        let unguarded = model.forward_guarded(&x, batch, GuardMode::Off, &faults, &mut off);
+        assert!(
+            residual_pp(&y, &clean) < residual_pp(&unguarded, &clean),
+            "clamping must strictly shrink the residual"
+        );
+        // in-envelope flips (low mantissa bits of values in [0,1)) do
+        // not count as clamps
+        let benign = ComputeFaults {
+            activations: vec![ComputeFault {
+                layer: 0,
+                index: 1,
+                bit: 2,
+            }],
+            ..Default::default()
+        };
+        let mut report = GuardReport::default();
+        model.forward_guarded(&x, batch, GuardMode::Range, &benign, &mut report);
+        assert_eq!(report.range_clamps, 0);
+    }
+
+    #[test]
+    fn full_mode_recovers_transient_faults_exactly() {
+        let mut rng = Rng::new(41);
+        let mut model = test_model(&mut rng, &[(24, 12), (12, 6)]);
+        let batch = 4usize;
+        let x = rand_vec(&mut rng, batch * 24, 0.0, 1.0);
+        model.calibrate(&x, batch, 0.05);
+        let clean = model.forward(&x, batch);
+        let faults = ComputeFaults {
+            activations: vec![
+                ComputeFault {
+                    layer: 0,
+                    index: 5,
+                    bit: 30,
+                },
+                ComputeFault {
+                    layer: 1,
+                    index: 3,
+                    bit: 28,
+                },
+            ],
+            accumulators: vec![ComputeFault {
+                layer: 1,
+                index: 2,
+                bit: 29,
+            }],
+        };
+        let mut report = GuardReport::default();
+        let y = model.forward_guarded(&x, batch, GuardMode::Full, &faults, &mut report);
+        assert!(report.abft_trips > 0);
+        let a: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = clean.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "transient faults must be fully recomputed away");
+    }
+
+    #[test]
+    fn guard_stats_absorb_and_snapshot() {
+        let stats = GuardStats::default();
+        stats.absorb(&GuardReport {
+            abft_checks: 3,
+            abft_trips: 1,
+            recomputes: 1,
+            range_clamps: 7,
+        });
+        stats.absorb(&GuardReport {
+            abft_checks: 1,
+            abft_trips: 0,
+            recomputes: 0,
+            range_clamps: 2,
+        });
+        assert_eq!(
+            stats.snapshot(),
+            GuardReport {
+                abft_checks: 4,
+                abft_trips: 1,
+                recomputes: 1,
+                range_clamps: 9,
+            }
+        );
+    }
+
+    #[test]
+    fn residual_metric_is_zero_only_on_match() {
+        let r = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(residual_pp(&r, &r), 0.0);
+        let y = vec![1.0f32, -2.5, 3.0];
+        assert!(residual_pp(&y, &r) > 0.0);
+    }
+}

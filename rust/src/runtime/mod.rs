@@ -5,11 +5,21 @@
 //! as one flat dequantized f32 buffer that is uploaded to the device
 //! once per scrub epoch (`bind_weights`) and shared across all batches
 //! executed against it — the request path uploads only images.
+//!
+//! [`guard`] adds the optional compute-path protection layer: ABFT
+//! checksummed dense execution with recompute-on-mismatch and
+//! activation range supervision ([`GuardedExecutable`] wraps an
+//! [`Executable`]; `guard::DenseModel` is the pure-Rust guarded
+//! reference path the campaign's compute fault sites run).
 
 use std::path::Path;
 use std::sync::Arc;
 
 use crate::model::{EvalSet, Manifest};
+
+pub mod guard;
+
+pub use guard::{GuardMode, GuardReport, GuardStats, GuardedExecutable};
 
 /// Shared PJRT CPU client.
 pub struct Runtime {

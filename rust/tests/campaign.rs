@@ -5,7 +5,8 @@
 use std::path::PathBuf;
 
 use zsecc::harness::campaign::{self, Config, SyntheticRunner, TrialPolicy};
-use zsecc::memory::FaultModel;
+use zsecc::memory::{FaultModel, FaultSite};
+use zsecc::runtime::GuardMode;
 use zsecc::util::json::Json;
 
 fn base_cfg(ledger: Option<PathBuf>, jobs: usize) -> Config {
@@ -18,6 +19,8 @@ fn base_cfg(ledger: Option<PathBuf>, jobs: usize) -> Config {
         ],
         rates: vec![1e-9, 5e-3],
         fault_models: vec![FaultModel::Uniform, FaultModel::Burst { len: 2 }],
+        sites: vec![FaultSite::Weights],
+        guards: vec![GuardMode::Off],
         policy: TrialPolicy::adaptive(3, 8, 0.05, 0.95),
         jobs,
         ledger,
@@ -131,6 +134,60 @@ fn ledger_refuses_a_foreign_campaign() {
     other.resume = true;
     let err = campaign::run(&other, &runner()).unwrap_err().to_string();
     assert!(err.contains("fingerprint"), "unexpected error: {err}");
+}
+
+/// Compute-site cells (activations/accumulators through the guarded
+/// dense head) ride the same ledger machinery as storage cells: a
+/// guards-on/off grid checkpoints, resumes bit-identically under
+/// different parallelism, and the guarded sibling of every cell —
+/// which by construction sees the identical fault sequence — lands at
+/// a strictly lower mean residual.
+#[test]
+fn compute_site_cells_checkpoint_resume_and_beat_unguarded() {
+    let mk = |ledger: Option<PathBuf>, jobs: usize| {
+        let mut cfg = base_cfg(ledger, jobs);
+        cfg.strategies = vec!["ecc".to_string()];
+        cfg.rates = vec![2e-3];
+        cfg.fault_models = vec![FaultModel::Uniform];
+        cfg.sites = vec![FaultSite::Activations, FaultSite::Accumulators];
+        cfg.guards = vec![GuardMode::Off, GuardMode::Full];
+        cfg.policy = TrialPolicy::fixed(3);
+        cfg
+    };
+    let runner = || SyntheticRunner::new(64 * 16, 4, 1);
+    let oneshot = campaign::run(&mk(None, 1), &runner()).unwrap();
+    assert!(oneshot.complete);
+    assert_eq!(oneshot.cells.len(), 4, "2 sites x 2 guard modes");
+    for site in [FaultSite::Activations, FaultSite::Accumulators] {
+        let mean = |guard: GuardMode| {
+            let c = oneshot
+                .cells
+                .iter()
+                .find(|c| c.spec.site == site && c.spec.guard == guard)
+                .unwrap();
+            c.drops.iter().sum::<f64>() / c.drops.len() as f64
+        };
+        assert!(
+            mean(GuardMode::Full) < mean(GuardMode::Off),
+            "site {}: guards on must beat guards off at equal faults",
+            site.tag()
+        );
+    }
+
+    let ledger = temp_ledger("compute_resume");
+    let mut cfg = mk(Some(ledger.clone()), 1);
+    cfg.stop_after = Some(2);
+    let partial = campaign::run(&cfg, &runner()).unwrap();
+    assert!(!partial.complete);
+    let mut cfg = mk(Some(ledger), 3);
+    cfg.resume = true;
+    let resumed = campaign::run(&cfg, &runner()).unwrap();
+    assert!(resumed.complete);
+    assert_eq!(
+        resumed.canonical_json().to_string(),
+        oneshot.canonical_json().to_string(),
+        "compute-site resume must be bit-identical to a one-shot run"
+    );
 }
 
 #[test]

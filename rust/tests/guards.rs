@@ -1,0 +1,159 @@
+//! Compute-path guard integration tests over the public API: exhaustive
+//! single-flip ABFT sweeps across batch sizes (one short of, equal to,
+//! and one past the model's natural execution batch), clamp accounting
+//! for range supervision, and the guards-off byte-identity contract.
+
+use zsecc::runtime::guard::{
+    residual_pp, ComputeFault, ComputeFaults, DenseModel, GuardMode, GuardReport,
+};
+use zsecc::util::rng::Rng;
+
+const DIMS: &[(usize, usize)] = &[(12, 10), (10, 8)];
+
+/// The model's "natural" batch in these sweeps; tests run {1, EXEC,
+/// EXEC + 1} to cover the degenerate, aligned, and ragged cases.
+const EXEC: usize = 4;
+
+fn model_and_input(batch: usize) -> (DenseModel, Vec<f32>) {
+    let n: usize = DIMS.iter().map(|&(r, c)| r * c).sum();
+    let mut rng = Rng::new(17);
+    let w: Vec<f32> = (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let mut model = DenseModel::from_flat(&w, DIMS).unwrap();
+    let x: Vec<f32> = (0..batch * model.input_dim())
+        .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+        .collect();
+    model.calibrate(&x, batch, 0.05);
+    (model, x)
+}
+
+fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits())
+}
+
+/// Every single-bit flip, on every element of every activation and
+/// accumulator plane, at every bit position, across all three batch
+/// sizes: ABFT either repairs it bitwise or the flip was numerically
+/// negligible (sub-tolerance — the detect-or-negligible contract).
+/// High-exponent flips (bit 30 — a guaranteed huge corruption) must
+/// all be caught and repaired exactly.
+#[test]
+fn abft_repairs_every_single_flip_or_proves_it_negligible() {
+    for &batch in &[1usize, EXEC, EXEC + 1] {
+        let (model, x) = model_and_input(batch);
+        let clean = model.forward(&x, batch);
+        for layer in 0..DIMS.len() {
+            for site in ["activations", "accumulators"] {
+                let elems = match site {
+                    "activations" => model.activation_elems(layer, batch),
+                    _ => model.accumulator_elems(layer, batch),
+                };
+                for index in 0..elems {
+                    for bit in 0..32u32 {
+                        let mut faults = ComputeFaults::default();
+                        let f = ComputeFault { layer, index, bit };
+                        match site {
+                            "activations" => faults.activations.push(f),
+                            _ => faults.accumulators.push(f),
+                        }
+                        let mut report = GuardReport::default();
+                        let y = model.forward_guarded(
+                            &x,
+                            batch,
+                            GuardMode::Abft,
+                            &faults,
+                            &mut report,
+                        );
+                        let tag = format!("batch={batch} {site} layer={layer} [{index}]^{bit}");
+                        assert!(report.abft_checks > 0, "{tag}: no checks ran");
+                        if report.recomputes > 0 {
+                            assert!(report.abft_trips > 0, "{tag}");
+                            assert!(
+                                bitwise_eq(&y, &clean),
+                                "{tag}: repaired output is not bitwise clean"
+                            );
+                        } else {
+                            // escaped the checksum: must be sub-tolerance
+                            let r = residual_pp(&y, &clean);
+                            assert!(r < 0.25, "{tag}: escaped flip left {r} pp residual");
+                        }
+                        if bit == 30 {
+                            assert!(
+                                report.abft_trips > 0 && bitwise_eq(&y, &clean),
+                                "{tag}: high-exponent flip must be caught and repaired"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Range supervision counts exactly the out-of-envelope activations it
+/// clamps: bit-30 flips blast calibrated-in-range values to magnitude
+/// >= 2 (outside any envelope calibrated on (-1, 1) data), so the clamp
+/// count must equal the number of struck elements — and a clean pass
+/// through an armed range guard clamps nothing and changes no byte.
+#[test]
+fn clamp_count_matches_injected_out_of_envelope_activations() {
+    for &batch in &[1usize, EXEC, EXEC + 1] {
+        let (model, x) = model_and_input(batch);
+        let clean = model.forward(&x, batch);
+
+        let mut report = GuardReport::default();
+        let y = model.forward_guarded(
+            &x,
+            batch,
+            GuardMode::Range,
+            &ComputeFaults::default(),
+            &mut report,
+        );
+        assert_eq!(report.range_clamps, 0, "batch={batch}: clean pass clamped");
+        assert!(bitwise_eq(&y, &clean), "batch={batch}: clean pass changed bytes");
+
+        // Strike distinct elements of the layer-0 input plane. Only
+        // layer 0 is safe for an exact count: its values sit in (-1, 1)
+        // where a bit-30 flip always lands outside the envelope, while
+        // deeper planes can hold magnitudes >= 2 whose bit-30 flip
+        // collapses *into* range.
+        let strikes = model.activation_elems(0, batch).min(7);
+        let mut faults = ComputeFaults::default();
+        for index in 0..strikes {
+            faults.activations.push(ComputeFault { layer: 0, index, bit: 30 });
+        }
+        let mut on = GuardReport::default();
+        let y_on = model.forward_guarded(&x, batch, GuardMode::Range, &faults, &mut on);
+        assert_eq!(
+            on.range_clamps, strikes as u64,
+            "batch={batch}: clamp count != injected out-of-envelope strikes"
+        );
+        let mut off = GuardReport::default();
+        let y_off = model.forward_guarded(&x, batch, GuardMode::Off, &faults, &mut off);
+        assert_eq!(off.range_clamps, 0);
+        assert!(
+            residual_pp(&y_on, &clean) < residual_pp(&y_off, &clean),
+            "batch={batch}: clamping must beat running the blast through unguarded"
+        );
+    }
+}
+
+/// Guards off means *off*: byte-identical outputs to the plain forward
+/// pass and an untouched report, at every batch size.
+#[test]
+fn guards_off_is_byte_identical_to_unguarded_forward() {
+    for &batch in &[1usize, EXEC, EXEC + 1] {
+        let (model, x) = model_and_input(batch);
+        let clean = model.forward(&x, batch);
+        let mut report = GuardReport::default();
+        let y = model.forward_guarded(
+            &x,
+            batch,
+            GuardMode::Off,
+            &ComputeFaults::default(),
+            &mut report,
+        );
+        assert!(bitwise_eq(&y, &clean), "batch={batch}");
+        assert_eq!(report, GuardReport::default(), "batch={batch}: off mode counted something");
+        assert!(!report.any());
+    }
+}
