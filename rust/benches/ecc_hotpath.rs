@@ -16,6 +16,11 @@
 //! (ABFT checksummed / range-supervised) vs unguarded dense-head
 //! forward throughput, plus the raw envelope-clamp scan rate.
 //!
+//! The `recovery` section prices the MILR tier: the zero-redundancy
+//! milr probe decode, the block-localizing outcome decode at a sparse
+//! fault rate, and the algebraic least-squares solve in µs per
+//! recovered block (eight blocks solved jointly on a dense head).
+//!
 //! `--json` appends one machine-readable record (for the BENCH_*.json
 //! trajectory) after the human-readable output; `--out FILE` appends
 //! the same record to FILE (the repo-root `BENCH_ecc.json` ledger is a
@@ -560,6 +565,64 @@ fn main() {
         )
     };
 
+    // recovery tier: the milr probe (zero-redundancy clean proof), the
+    // block-localizing outcome decode at a sparse fault rate, and the
+    // algebraic solve itself — µs per recovered block, eight blocks
+    // solved jointly (8 unknowns per column system) on a dense head.
+    let (milr_probe_gbps, milr_outcome_gbps, solve_us_per_block) = {
+        use zsecc::model::{recover_blocks, DenseShape, RecoverySet};
+        use zsecc::runtime::guard::DenseModel;
+        let s = strategy_by_name("milr").unwrap();
+        let enc = s.encode(&w8).unwrap();
+        println!("== recovery: milr probe + outcome decode + algebraic solve ==");
+        let r = bench("milr: decode (clean probe)", || {
+            s.decode(std::hint::black_box(&enc), &mut out);
+        });
+        println!("    -> {}", r.throughput_str(n));
+        let probe_gbps = gbps(r.ns_per_iter);
+        let mut enc_f = enc.clone();
+        FaultInjector::new(FaultModel::Uniform, 3).inject(&mut enc_f, 1e-4);
+        let ro = bench("milr: decode_range_outcome (rate 1e-4)", || {
+            let o = s.decode_range_outcome(
+                std::hint::black_box(&enc_f),
+                0,
+                enc_f.data.len(),
+                &mut out,
+            );
+            std::hint::black_box(&o);
+        });
+        println!("    -> {}", ro.throughput_str(n));
+        let cols = 16usize;
+        let rows = n / cols;
+        let scale = 0.02f32;
+        let wf: Vec<f32> = w8.iter().map(|&v| v as f32 * scale).collect();
+        let model = DenseModel::from_flat(&wf, &[(rows, cols)]).unwrap();
+        let mut rng = Rng::new(777);
+        let batch = 32usize;
+        let x: Vec<f32> = (0..batch * rows)
+            .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+            .collect();
+        let set = RecoverySet::capture(&model, &["head".to_string()], &x, batch);
+        let shapes = vec![DenseShape {
+            name: "head".into(),
+            offset: 0,
+            rows,
+            cols,
+            scale,
+        }];
+        // eight even blocks: rows 0..7 of columns 0..7, so every column
+        // system carries 8 joint unknowns — the worst supported shape
+        // for this batch size short of underdetermination
+        let blocks: Vec<usize> = (0..8).map(|i| 2 * i).collect();
+        let rs = bench("milr: recover_blocks (8 joint blocks)", || {
+            let o = recover_blocks(&set, &shapes, std::hint::black_box(&w8), &blocks, 8);
+            std::hint::black_box(&o);
+        });
+        let us = rs.ns_per_iter / 1e3 / blocks.len() as f64;
+        println!("    -> {us:.1} us per recovered block");
+        (probe_gbps, gbps(ro.ns_per_iter), us)
+    };
+
     // serving ingress: closed-loop multi-producer front-door
     // throughput, lock-free slab ring vs the mutex batcher, free
     // executor (batch 32 both ways). The ring's reserve/write/seal
@@ -649,6 +712,14 @@ fn main() {
                     ("full_gmacs", num(guard_gmacs[3])),
                     ("full_overhead_ratio", num(guard_full_ratio)),
                     ("clamp_gbps", num(guard_clamp_gbps)),
+                ]),
+            ),
+            (
+                "recovery",
+                obj(vec![
+                    ("milr_probe_decode_gbps", num(milr_probe_gbps)),
+                    ("milr_outcome_decode_gbps", num(milr_outcome_gbps)),
+                    ("solve_us_per_block", num(solve_us_per_block)),
                 ]),
             ),
             (

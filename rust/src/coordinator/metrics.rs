@@ -4,7 +4,7 @@
 //! and the scrub scheduler's per-shard BER/deadline/overdue gauges.
 
 use crate::coordinator::ingress::{IngressSnapshot, IngressStats};
-use crate::ecc::DecodeStats;
+use crate::ecc::{DecodeStats, DETECTED_BLOCK_CAP};
 use crate::memory::ShardSchedule;
 use crate::runtime::guard::{GuardReport, GuardStats};
 use crate::util::stats::Series;
@@ -52,7 +52,20 @@ pub struct Metrics {
     /// Batches whose executor call failed (requests were answered with
     /// `pred == usize::MAX`) — previously invisible to operators.
     pub exec_failures: AtomicU64,
+    /// Blocks the MILR recovery tier reconstructed and re-encoded clean.
+    pub recovered_blocks: AtomicU64,
+    /// Blocks recovery gave up on — quarantined, served as decoded until
+    /// a later scrub or refresh clears them.
+    pub quarantined_blocks: AtomicU64,
     latency_us: Mutex<Series>,
+    /// Wall-clock cost of each recovery escalation (solve + re-encode +
+    /// write-back for one batch of implicated blocks).
+    recovery_us: Mutex<Series>,
+    /// Block indices currently quarantined — the typed degradation
+    /// signal: recovery failed, the block is served as decoded until a
+    /// later scrub heals it or a later escalation recovers it. Bounded
+    /// at [`DETECTED_BLOCK_CAP`], sorted, deduplicated.
+    quarantine: Mutex<Vec<usize>>,
     /// Live handle to the ring front door's gauges (occupancy
     /// high-water mark, CAS retries, seal-cause split, overload
     /// rejections); `None` under the locked baseline. The counters
@@ -89,6 +102,35 @@ impl Metrics {
     pub fn latency_summary(&self) -> (f64, f64, f64, usize) {
         let s = self.latency_us.lock().unwrap();
         (s.mean(), s.p(50.0), s.p(99.0), s.len())
+    }
+
+    /// Record one recovery escalation: block identities reconstructed
+    /// and quarantined, plus the wall-clock latency of the attempt.
+    /// Recovered blocks leave the quarantine list (a later pass may
+    /// heal what an earlier one could not); quarantined blocks join it.
+    pub fn record_recovery(&self, recovered: &[usize], quarantined: &[usize], us: f64) {
+        self.recovered_blocks
+            .fetch_add(recovered.len() as u64, Ordering::Relaxed);
+        self.quarantined_blocks
+            .fetch_add(quarantined.len() as u64, Ordering::Relaxed);
+        self.recovery_us.lock().unwrap().push(us);
+        let mut q = self.quarantine.lock().unwrap();
+        q.retain(|b| !recovered.contains(b));
+        q.extend_from_slice(quarantined);
+        q.sort_unstable();
+        q.dedup();
+        q.truncate(DETECTED_BLOCK_CAP);
+    }
+
+    /// Blocks currently quarantined (sorted, deduplicated, bounded).
+    pub fn quarantined(&self) -> Vec<usize> {
+        self.quarantine.lock().unwrap().clone()
+    }
+
+    /// Recovery latency summary: `(mean, p99, attempts)`.
+    pub fn recovery_summary(&self) -> (f64, f64, usize) {
+        let s = self.recovery_us.lock().unwrap();
+        (s.mean(), s.p(99.0), s.len())
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -185,6 +227,27 @@ impl Metrics {
             self.delta_refreshes.load(Ordering::Relaxed),
             self.exec_failures.load(Ordering::Relaxed),
         );
+        let (rec_mean, rec_p99, rec_n) = self.recovery_summary();
+        if rec_n > 0 {
+            s.push_str(&format!(
+                "\n  recovery recovered={} quarantined={} latency(mean/p99)={:.0}/{:.0}us (n={})",
+                self.recovered_blocks.load(Ordering::Relaxed),
+                self.quarantined_blocks.load(Ordering::Relaxed),
+                rec_mean,
+                rec_p99,
+                rec_n,
+            ));
+            let q = self.quarantined();
+            if !q.is_empty() {
+                let shown: Vec<String> = q.iter().take(16).map(|b| b.to_string()).collect();
+                let more = if q.len() > 16 { ", …" } else { "" };
+                s.push_str(&format!(
+                    "\n  quarantine n={} blocks=[{}{more}]",
+                    q.len(),
+                    shown.join(", ")
+                ));
+            }
+        }
         if let Some(g) = self.guard_snapshot() {
             s.push_str(&format!(
                 "\n  guards range_clamps={} abft_checks={} abft_trips={} recomputes={}",
@@ -450,6 +513,27 @@ mod tests {
         let report = m.report();
         assert!(report.contains("guards range_clamps=7"), "{report}");
         assert!(report.contains("abft_trips=2"), "{report}");
+    }
+
+    #[test]
+    fn recovery_gauges_accumulate_and_render() {
+        let m = Metrics::new();
+        assert!(!m.report().contains("recovery"), "{}", m.report());
+        assert!(m.quarantined().is_empty());
+        m.record_recovery(&[7, 2, 5], &[9], 420.0);
+        m.record_recovery(&[], &[4, 9], 180.0);
+        assert_eq!(m.recovered_blocks.load(Ordering::Relaxed), 3);
+        assert_eq!(m.quarantined_blocks.load(Ordering::Relaxed), 3);
+        assert_eq!(m.quarantined(), vec![4, 9], "list dedups identities");
+        let (mean, _p99, n) = m.recovery_summary();
+        assert_eq!(n, 2);
+        assert!((mean - 300.0).abs() < 1e-9);
+        let report = m.report();
+        assert!(report.contains("recovery recovered=3 quarantined=3"), "{report}");
+        assert!(report.contains("quarantine n=2 blocks=[4, 9]"), "{report}");
+        // a later escalation that recovers a quarantined block clears it
+        m.record_recovery(&[9], &[], 100.0);
+        assert_eq!(m.quarantined(), vec![4]);
     }
 
     #[test]

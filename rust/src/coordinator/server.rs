@@ -24,7 +24,9 @@ use super::ingress::{Ingress, IngressPolicy, IngressRing, PushError, RingConfig}
 use super::metrics::Metrics;
 use crate::ecc::strategy_by_name;
 use crate::memory::{pool, FaultModel, SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardedBank};
-use crate::model::{load_weights, Manifest};
+use crate::model::{
+    dense_shapes, load_weights, recover_blocks, DenseShape, Manifest, RecoveryMode, RecoverySet,
+};
 use crate::quant::dequantize_into;
 use crate::runtime::guard::{Calibration, Envelope, GuardMode, GuardReport, GuardStats};
 use crate::runtime::{argmax_rows, Runtime};
@@ -77,6 +79,18 @@ pub struct ServerConfig {
     /// Calibrated envelopes (the manifest's `guards` section); required
     /// whenever `guard` needs range supervision.
     pub guard_calibration: Option<Calibration>,
+    /// Recovery tier armed on the scrub loop: detected-uncorrectable
+    /// blocks are escalated to MILR algebraic reconstruction (solve the
+    /// layer equation from the calibration set, re-encode, write back)
+    /// instead of being re-detected — and re-served corrupted — every
+    /// pass. Blocks recovery cannot fix are quarantined in `Metrics`,
+    /// never a panic.
+    pub recovery: RecoveryMode,
+    /// Calibration set + layer shapes the recovery solver needs;
+    /// required whenever `recovery != Off`. `Server::start_pjrt` fills
+    /// it from the `<model>.recovery.json` sidecar (written by `zsecc
+    /// calibrate`) when the caller leaves it empty.
+    pub recovery_calibration: Option<Arc<(RecoverySet, Vec<DenseShape>)>>,
 }
 
 impl Default for ServerConfig {
@@ -97,6 +111,8 @@ impl Default for ServerConfig {
             ring_depth: 8,
             guard: GuardMode::Off,
             guard_calibration: None,
+            recovery: RecoveryMode::Off,
+            recovery_calibration: None,
         }
     }
 }
@@ -115,6 +131,11 @@ pub enum ConfigError {
     GuardNeedsCalibration(GuardMode),
     /// The guard mode is not supported on this execution path.
     GuardUnsupported(GuardMode),
+    /// The recovery mode needs a calibration set (and layer shapes) but
+    /// the config carries none (run `zsecc calibrate` so the
+    /// `<model>.recovery.json` sidecar exists, or fill
+    /// `recovery_calibration` directly).
+    RecoveryNeedsCalibration(RecoveryMode),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -136,6 +157,12 @@ impl std::fmt::Display for ConfigError {
                  linear executables via GuardedExecutable, or runs under \
                  `zsecc campaign --synthetic`); use 'off' or 'range'",
                 g.tag()
+            ),
+            ConfigError::RecoveryNeedsCalibration(r) => write!(
+                f,
+                "recovery mode '{}' needs a calibration set; run `zsecc calibrate` \
+                 so the recovery sidecar exists",
+                r.tag()
             ),
         }
     }
@@ -163,6 +190,9 @@ impl ServerConfig {
                 .is_none()
         {
             return Err(ConfigError::GuardNeedsCalibration(self.guard));
+        }
+        if self.recovery != RecoveryMode::Off && self.recovery_calibration.is_none() {
+            return Err(ConfigError::RecoveryNeedsCalibration(self.recovery));
         }
         Ok(())
     }
@@ -505,6 +535,12 @@ impl Server {
             let signal = stop.clone();
             let rate = cfg.fault_rate_per_interval;
             let seed0 = cfg.fault_seed;
+            // validate() guarantees the calibration exists when armed
+            let recovery = if cfg.recovery == RecoveryMode::Milr {
+                cfg.recovery_calibration.clone()
+            } else {
+                None
+            };
             let sched_cfg = match cfg.scrub_policy {
                 ScrubPolicy::Fixed => SchedulerConfig::fixed(interval),
                 ScrubPolicy::Adaptive => SchedulerConfig::adaptive(
@@ -571,7 +607,17 @@ impl Server {
                         }
                         last_wake = now;
                         let due = sched.due(now);
-                        let per_shard = sb.scrub_subset(&due);
+                        // the recovery tier needs block identities, so an
+                        // armed loop scrubs through the outcome API
+                        let per_shard: Vec<(usize, crate::ecc::DecodeStats)> =
+                            if recovery.is_some() {
+                                sb.scrub_subset_outcome(&due)
+                                    .into_iter()
+                                    .map(|(i, o)| (i, o.stats))
+                                    .collect()
+                            } else {
+                                sb.scrub_subset(&due)
+                            };
                         let mut stats = crate::ecc::DecodeStats::default();
                         for &(i, s) in &per_shard {
                             stats.add(&s);
@@ -584,6 +630,45 @@ impl Server {
                         m.set_shard_schedules(
                             (0..nshards).map(|i| sched.snapshot(i, now)).collect(),
                         );
+                        // Escalate detected-uncorrectable blocks to the
+                        // recovery tier before shipping refreshes, so a
+                        // recovered block (its shard goes dirty) is
+                        // re-served clean this same wakeup. Failures
+                        // quarantine in Metrics — never a panic; the next
+                        // pass re-detects and re-escalates them.
+                        if let Some(ctx) = &recovery {
+                            let (blocks, _overflow) = sb.take_detected();
+                            if !blocks.is_empty() {
+                                let t_rec = Instant::now();
+                                let (calib, shapes) = &**ctx;
+                                let bb = sb.strategy().block_bytes();
+                                // current plaintext view: trusted rows
+                                // feed the solver as truth, implicated
+                                // rows are the unknowns
+                                let mut decoded = pool::lease_i8(sb.n_weights());
+                                sb.read(&mut decoded);
+                                // the solve runs on the process-wide pool
+                                let outcome = pool::run_jobs(vec![blocks], 1, |b| {
+                                    recover_blocks(calib, shapes, &decoded, &b, bb)
+                                })
+                                .pop()
+                                .expect("one recovery job in, one outcome out");
+                                let mut recovered = Vec::with_capacity(outcome.recovered.len());
+                                let mut quarantined: Vec<usize> =
+                                    outcome.quarantined.iter().map(|(b, _)| *b).collect();
+                                for rb in &outcome.recovered {
+                                    match sb.apply_recovery(rb.block, &rb.weights) {
+                                        Ok(()) => recovered.push(rb.block),
+                                        Err(_) => quarantined.push(rb.block),
+                                    }
+                                }
+                                m.record_recovery(
+                                    &recovered,
+                                    &quarantined,
+                                    t_rec.elapsed().as_secs_f64() * 1e6,
+                                );
+                            }
+                        }
                         let dirty = sb.take_dirty();
                         epoch += 1;
                         if dirty.is_empty() {
@@ -648,6 +733,17 @@ impl Server {
         let mut cfg = cfg.clone();
         if cfg.guard.range() && cfg.guard_calibration.is_none() {
             cfg.guard_calibration = man.guards.clone();
+        }
+        // An armed recovery tier without an explicit calibration picks
+        // up the `<model>.recovery.json` sidecar (written by `zsecc
+        // calibrate`); a missing sidecar is a load error here, the same
+        // validate() refusal path as guards.
+        if cfg.recovery != RecoveryMode::Off && cfg.recovery_calibration.is_none() {
+            let path = RecoverySet::sidecar_path(artifacts_dir, model);
+            if path.exists() {
+                let set = RecoverySet::load(&path)?;
+                cfg.recovery_calibration = Some(Arc::new((set, dense_shapes(&man.layers))));
+            }
         }
         let cfg = &cfg;
 
@@ -960,6 +1056,28 @@ mod tests {
             cfg.guard = abft;
             assert_eq!(cfg.validate(), Err(ConfigError::GuardUnsupported(abft)));
         }
+    }
+
+    #[test]
+    fn config_validation_gates_recovery_modes() {
+        let mut cfg = mock_cfg();
+        cfg.recovery = RecoveryMode::Milr;
+        assert_eq!(
+            cfg.validate(),
+            Err(ConfigError::RecoveryNeedsCalibration(RecoveryMode::Milr))
+        );
+        cfg.recovery_calibration = Some(Arc::new((
+            RecoverySet {
+                batch: 1,
+                layers: vec![],
+            },
+            vec![],
+        )));
+        assert_eq!(cfg.validate(), Ok(()));
+        // an unarmed tier never demands a calibration
+        cfg.recovery = RecoveryMode::Off;
+        cfg.recovery_calibration = None;
+        assert_eq!(cfg.validate(), Ok(()));
     }
 
     #[test]
@@ -1494,5 +1612,146 @@ mod tests {
             shards_hit.len() <= 2,
             "at most 2 shards can be dirty from 2 flips, saw {shards_hit:?}"
         );
+    }
+
+    /// A milr-protected bank over the synthetic WOT image plus the
+    /// recovery calibration the solver needs: a `[16 x 8]` dense head at
+    /// scale 0.02 with an 8-batch centered input plane — the serving
+    /// equivalent of the campaign runner's recovery path.
+    fn recovery_fixture() -> (
+        ShardedBank,
+        Vec<crate::model::Layer>,
+        Arc<(RecoverySet, Vec<DenseShape>)>,
+    ) {
+        use crate::ecc::strategy_by_name;
+        use crate::runtime::guard::DenseModel;
+        let weights = crate::harness::ablation::synth_wot(128, 42);
+        let bank = ShardedBank::new(strategy_by_name("milr").unwrap(), &weights, 2, 1).unwrap();
+        let scale = 0.02f32;
+        let w: Vec<f32> = weights.iter().map(|&v| v as f32 * scale).collect();
+        let model = DenseModel::from_flat(&w, &[(16, 8)])
+            .expect("the 16x8 fixture head has a valid shape");
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x: Vec<f32> = (0..8 * 16).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let set = RecoverySet::capture(&model, &["a".to_string()], &x, 8);
+        let shapes = vec![DenseShape {
+            name: "a".into(),
+            offset: 0,
+            rows: 16,
+            cols: 8,
+            scale,
+        }];
+        (bank, test_layers(128), Arc::new((set, shapes)))
+    }
+
+    /// Tentpole, serving path: a detected-uncorrectable milr block is
+    /// escalated by the scrub loop, reconstructed from the calibration
+    /// set, re-encoded clean, and surfaced through the recovery gauges —
+    /// all while requests keep being answered.
+    #[test]
+    fn scrub_loop_escalates_and_recovers_uncorrectable_blocks() {
+        let (mut bank, layers, calib) = recovery_fixture();
+        // bit6 of byte 0 of block 3: probe-visible, uncorrectable by the
+        // zero-redundancy code — exactly what the tier exists for.
+        bank.image_mut().flip_bit(3 * 64 + 6);
+        let mut cfg = mock_cfg();
+        cfg.strategy = "milr".into();
+        cfg.scrub_interval = Some(Duration::from_millis(5));
+        cfg.recovery = RecoveryMode::Milr;
+        cfg.recovery_calibration = Some(calib);
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 1,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            1,
+            &cfg,
+            Some((bank, layers)),
+        )
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while srv.metrics.recovered_blocks.load(Ordering::Relaxed) == 0 {
+            assert!(
+                Instant::now() < deadline,
+                "the scrub loop never recovered the implicated block"
+            );
+            let rx = srv.submit(vec![1.0]).unwrap();
+            assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().pred, 1);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Exact reconstruction: the block re-encoded clean, so it left
+        // the detected set — nothing to quarantine, nothing re-escalated.
+        assert_eq!(srv.metrics.recovered_blocks.load(Ordering::Relaxed), 1);
+        assert_eq!(srv.metrics.quarantined_blocks.load(Ordering::Relaxed), 0);
+        assert!(srv.metrics.quarantined().is_empty());
+        let (mean_us, _, n) = srv.metrics.recovery_summary();
+        assert!(n >= 1 && mean_us > 0.0, "latency series records the pass");
+        let report = srv.metrics.report();
+        assert!(
+            report.contains("recovery recovered=1 quarantined=0"),
+            "report surfaces the recovery tier:\n{report}"
+        );
+        srv.shutdown();
+    }
+
+    /// Graceful degradation: a probe-silent poison flip corrupts a
+    /// *trusted* row of the solver's column system, so verification
+    /// rejects the solve — the implicated block lands on the quarantine
+    /// list (typed, bounded) and the server keeps answering.
+    #[test]
+    fn failed_recovery_quarantines_without_panic() {
+        let (mut bank, layers, calib) = recovery_fixture();
+        // the detected strike, as above ...
+        bank.image_mut().flip_bit(3 * 64 + 6);
+        // ... plus bit5 of element 58 (block 7): invisible to the milr
+        // probe, but it poisons trusted row 7 of column 2 — the recovered
+        // column's residual lands ~66x over the verification threshold.
+        bank.image_mut().flip_bit(58 * 8 + 5);
+        let mut cfg = mock_cfg();
+        cfg.strategy = "milr".into();
+        cfg.scrub_interval = Some(Duration::from_millis(5));
+        cfg.recovery = RecoveryMode::Milr;
+        cfg.recovery_calibration = Some(calib);
+        let srv = Server::start_with(
+            || {
+                Ok(Box::new(Mock {
+                    batch: 4,
+                    dim: 1,
+                    weights_seen: 0,
+                }) as Box<dyn BatchExec>)
+            },
+            1,
+            &cfg,
+            Some((bank, layers)),
+        )
+        .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while srv.metrics.quarantined_blocks.load(Ordering::Relaxed) == 0 {
+            assert!(
+                Instant::now() < deadline,
+                "the failed solve never reached the quarantine gauges"
+            );
+            let rx = srv.submit(vec![2.0]).unwrap();
+            assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().pred, 2);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            srv.metrics.recovered_blocks.load(Ordering::Relaxed),
+            0,
+            "a rejected solve must never be written back"
+        );
+        assert_eq!(srv.metrics.quarantined(), vec![3]);
+        // still serving after the failure
+        let rx = srv.submit(vec![4.0]).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().pred, 4);
+        let report = srv.metrics.report();
+        assert!(
+            report.contains("quarantine n=1 blocks=[3]"),
+            "report lists the quarantined block:\n{report}"
+        );
+        srv.shutdown();
     }
 }

@@ -1,0 +1,190 @@
+//! MILR-style plaintext strategy: zero stored redundancy, algebraic
+//! recovery as the correction tier.
+//!
+//! MILR (see PAPERS.md) observes that CNN layer weights are recoverable
+//! from the layer equation itself — given a calibration batch `X` and
+//! checkpointed pre-activation outputs `Y`, a corrupted row of `W` is the
+//! solution of `Y = X·W` — so no check bits need to be *stored* at all.
+//! This strategy is that extreme point on the in-place/zero-space axis:
+//!
+//! * **storage**: the WOT-constrained weights verbatim, no OOB bytes, no
+//!   in-place check-bit substitution. Overhead is exactly 0 and the
+//!   stored image IS the weight buffer.
+//! * **detection**: the WOT constraint (bytes 0..6 of every 64-bit block
+//!   in [-64, 63], i.e. bit6 == bit7) is itself a free parity-like
+//!   invariant. [`inplace::violation_mask_u64`] probes it in one XOR; a
+//!   nonzero mask means the block was struck. This probe is deliberately
+//!   cheap and *partial*: it sees only flips that break the bit6/bit7
+//!   agreement of bytes 0..6 (14 of the 64 stored bits) — byte-7 flips
+//!   and low-bit flips pass unseen. ABFT/range guards upstream
+//!   ([`crate::runtime::guard`]) and the recovery tier's own residual
+//!   verification cover the gap.
+//! * **correction**: none here. `decode` serves the stored bytes as-is
+//!   and reports detections; `scrub` is a probe-only pass (there is no
+//!   redundancy to heal from). Correction is the job of
+//!   [`crate::model::recovery`], which solves the layer equation for the
+//!   implicated blocks and writes the result back via the bank.
+//!
+//! The strategy still *enforces* WOT at encode time — without it the
+//! detection probe would fire on clean data — so it slots into the same
+//! Table-2 grid as `in-place` with identical model preparation cost.
+
+use super::strategy::{copy_clean, DecodeStats, Encoded, Protection};
+use super::{inplace, tile};
+
+/// MILR plaintext strategy: zero-redundancy storage, WOT-probe detection,
+/// correction delegated to algebraic layer recovery.
+pub struct Milr;
+
+impl Protection for Milr {
+    fn name(&self) -> &'static str {
+        "milr"
+    }
+    fn ecc_hw(&self) -> bool {
+        false
+    }
+    fn overhead(&self) -> f64 {
+        0.0
+    }
+    fn block_bytes(&self) -> usize {
+        8
+    }
+    fn oob_bytes_per_block(&self) -> usize {
+        0
+    }
+    fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
+        anyhow::ensure!(
+            weights.len() % 8 == 0,
+            "weight buffer must be whole 64-bit blocks"
+        );
+        if !inplace::satisfies_constraint(weights) {
+            let viol = inplace::constraint_violations(weights);
+            anyhow::bail!(
+                "WOT constraint violated at {} positions (first: {:?}) — run WOT first",
+                viol.len(),
+                &viol[..viol.len().min(4)]
+            );
+        }
+        Ok(Encoded {
+            data: weights.iter().map(|&w| w as u8).collect(),
+            oob: Vec::new(),
+            n: weights.len(),
+        })
+    }
+    fn decode_span(&self, data: &[u8], _oob: &[u8], out: &mut [i8]) -> DecodeStats {
+        let mut stats = DecodeStats::default();
+        for (bi, chunk) in data.chunks_exact(8).enumerate() {
+            let w = u64::from_le_bytes(chunk.try_into().unwrap());
+            if inplace::violation_mask_u64(w) != 0 {
+                stats.detected += 1;
+            }
+            out[bi * 8..bi * 8 + 8].copy_from_slice(&tile::lane_i8(w));
+        }
+        // encode enforces whole blocks, but serve any ragged window the
+        // caller hands us the same way `copy_clean` would
+        let tail = data.len() - data.len() % 8;
+        if tail < data.len() {
+            copy_clean(&data[tail..], &mut out[tail..]);
+        }
+        stats
+    }
+    fn scrub_span(&self, data: &mut [u8], _oob: &mut [u8]) -> DecodeStats {
+        // probe-only: there is no stored redundancy to heal from, and
+        // rewriting would launder the evidence the recovery tier needs
+        let mut stats = DecodeStats::default();
+        for chunk in data.chunks_exact(8) {
+            if inplace::violation_mask_u64(u64::from_le_bytes(chunk.try_into().unwrap())) != 0 {
+                stats.detected += 1;
+            }
+        }
+        stats
+    }
+    fn tile_is_clean(&self, data: &[u8], _oob: &[u8]) -> bool {
+        data.chunks_exact(8)
+            .map(|c| inplace::violation_mask_u64(u64::from_le_bytes(c.try_into().unwrap())))
+            .fold(0u64, |acc, m| acc | m)
+            == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn wot_weights(n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                if i % 8 == 7 {
+                    (rng.below(256) as i64 - 128) as i8
+                } else {
+                    (rng.below(128) as i64 - 64) as i8
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stores_plaintext_and_roundtrips_clean() {
+        let w = wot_weights(64 * 8 + 16, 11);
+        let s = Milr;
+        let enc = s.encode(&w).unwrap();
+        assert!(enc.oob.is_empty(), "zero stored redundancy");
+        let as_bytes: Vec<u8> = w.iter().map(|&v| v as u8).collect();
+        assert_eq!(enc.data, as_bytes, "stored image IS the weights");
+        let mut out = vec![0i8; w.len()];
+        let stats = s.decode(&enc, &mut out);
+        assert!(stats.is_clean());
+        assert_eq!(out, w);
+        assert!(s.tile_is_clean(&enc.data[..crate::ecc::tile::TILE_BYTES], &[]));
+    }
+
+    #[test]
+    fn probe_sees_wot_breaking_flips_and_serves_stored_bytes() {
+        let w = wot_weights(16 * 8, 12);
+        let s = Milr;
+        let mut enc = s.encode(&w).unwrap();
+        // bit6 of byte 0 in block 3: breaks bit6==bit7 -> detected
+        enc.flip_bit(3 * 64 + 6);
+        let mut out = vec![0i8; w.len()];
+        let stats = s.decode(&enc, &mut out);
+        assert_eq!(stats.detected, 1);
+        assert_eq!(stats.corrected, 0, "milr never corrects");
+        assert_eq!(
+            out[3 * 8] as u8,
+            w[3 * 8] as u8 ^ 0x40,
+            "corrupted byte is served as stored — recovery happens upstream"
+        );
+        // scrub must not touch the image (probe only)
+        let before = enc.data.clone();
+        let sstats = s.scrub(&mut enc);
+        assert_eq!(sstats.detected, 1);
+        assert_eq!(enc.data, before, "scrub is probe-only");
+        assert!(!s.tile_is_clean(&enc.data[..w.len().min(512)], &[]));
+    }
+
+    #[test]
+    fn probe_is_honestly_partial_byte7_flip_passes_unseen() {
+        let w = wot_weights(8 * 8, 13);
+        let s = Milr;
+        let mut enc = s.encode(&w).unwrap();
+        enc.flip_bit(2 * 64 + 7 * 8 + 3); // block 2, free byte 7, bit 3
+        enc.flip_bit(5 * 64 + 2 * 8); // block 5, byte 2, low bit
+        let mut out = vec![0i8; w.len()];
+        let stats = s.decode(&enc, &mut out);
+        assert!(
+            stats.is_clean(),
+            "byte-7 and low-bit flips are outside the probe's coverage"
+        );
+        assert_ne!(out, w, "…so the corruption is served silently");
+    }
+
+    #[test]
+    fn encode_rejects_non_wot_input() {
+        let mut w = wot_weights(4 * 8, 14);
+        w[1] = 100; // byte 1 of block 0 out of [-64, 63]
+        assert!(Milr.encode(&w).is_err());
+        assert!(Milr.encode(&wot_weights(12, 15)).is_err(), "ragged buffer");
+    }
+}

@@ -11,6 +11,9 @@
 //! * [`bch`] — future-work extension (paper section 6): a double-error-
 //!   correcting BCH code fed from the *two* free bits per byte that the
 //!   extended WOT constraint provides.
+//! * [`milr`] — MILR-style plaintext strategy: zero stored redundancy,
+//!   detection via the free WOT bit6==bit7 invariant, correction
+//!   delegated to algebraic layer recovery ([`crate::model::recovery`]).
 //! * [`tile`] — the word-parallel (bitsliced) tile decode engine:
 //!   64 blocks per iteration via a 64x64 bit transpose and XOR-parity
 //!   syndrome planes, with a one-word all-clean proof that turns clean
@@ -21,6 +24,7 @@
 pub mod bch;
 pub mod hsiao;
 pub mod inplace;
+pub mod milr;
 pub mod parity;
 pub mod secded;
 pub mod strategy;
@@ -28,6 +32,6 @@ pub mod tile;
 
 pub use hsiao::{HsiaoCode, Outcome};
 pub use strategy::{
-    all_strategies, all_strategies_ext, strategy_by_name, CleanPath, DecodeStats, Encoded,
-    Protection,
+    all_strategies, all_strategies_ext, strategy_by_name, CleanPath, DecodeOutcome, DecodeStats,
+    Encoded, Protection, DETECTED_BLOCK_CAP,
 };

@@ -97,6 +97,51 @@ impl DecodeStats {
     }
 }
 
+/// Upper bound on the block indices one [`DecodeOutcome`] records.
+/// Beyond the cap the pass keeps counting (the `stats` stay exact) but
+/// stops listing — `overflow` tells callers the list is truncated, the
+/// same bounded-tracking discipline the sharded store's copy-on-write
+/// tracker uses. At fault rates where more than a thousand blocks per
+/// pass go uncorrectable, per-block recovery is hopeless anyway.
+pub const DETECTED_BLOCK_CAP: usize = 1024;
+
+/// A decode/scrub pass's counters plus *which* blocks were left
+/// detected-uncorrectable — the localization the recovery tier needs
+/// to name the weight coordinates to solve for. Block indices are
+/// relative to the `base_block` the pass was given (absolute image
+/// indices when callers pass `start / block_bytes`), ascending, at
+/// most one entry per block.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DecodeOutcome {
+    pub stats: DecodeStats,
+    /// Blocks still detected-uncorrectable when the pass finished,
+    /// truncated at [`DETECTED_BLOCK_CAP`].
+    pub detected_blocks: Vec<usize>,
+    /// True when detections were dropped because the list hit the cap.
+    pub overflow: bool,
+}
+
+impl DecodeOutcome {
+    /// Record one detected-uncorrectable block, respecting the cap.
+    pub fn push_detected(&mut self, block: usize) {
+        if self.detected_blocks.len() < DETECTED_BLOCK_CAP {
+            self.detected_blocks.push(block);
+        } else {
+            self.overflow = true;
+        }
+    }
+
+    /// Merge another pass's outcome (stats add, lists concatenate under
+    /// the cap; overflow is sticky).
+    pub fn add(&mut self, o: &DecodeOutcome) {
+        self.stats.add(&o.stats);
+        for &b in &o.detected_blocks {
+            self.push_detected(b);
+        }
+        self.overflow |= o.overflow;
+    }
+}
+
 /// How a *clean* (syndrome-free) stored data byte maps to its weight
 /// byte — lets the fused decode→dequant path consume clean tiles
 /// straight from the stored image with no intermediate i8 buffer.
@@ -274,6 +319,116 @@ pub trait Protection: Send + Sync {
         debug_assert!(start % b == 0 && (end % b == 0 || end == enc.data.len()));
         let (os, oe) = self.oob_window(start, end, enc.data.len(), enc.oob.len());
         self.scrub_span_tiled(&mut enc.data[start..end], &mut enc.oob[os..oe])
+    }
+
+    /// Like [`Protection::decode_span_tiled`], but also reports *which*
+    /// blocks were detected-uncorrectable (indices offset by
+    /// `base_block`, so passing `start / block_bytes` yields absolute
+    /// image indices). Tile-size chunks take the fast path; only chunks
+    /// whose stats show a detection are re-walked block-by-block to
+    /// locate it, so the clean/correctable common case pays one
+    /// outcome allocation and nothing else.
+    fn decode_span_outcome(
+        &self,
+        data: &[u8],
+        oob: &[u8],
+        out: &mut [i8],
+        base_block: usize,
+    ) -> DecodeOutcome {
+        let b = self.block_bytes();
+        let opb = self.oob_bytes_per_block();
+        let opt = tile::TILE_BYTES / b * opb;
+        let mut outc = DecodeOutcome::default();
+        let (mut d, mut o) = (0usize, 0usize);
+        while d < data.len() {
+            let e = (d + tile::TILE_BYTES).min(data.len());
+            let oe = if e == data.len() { oob.len() } else { o + opt };
+            let stats = if e - d == tile::TILE_BYTES {
+                self.decode_tile(&data[d..e], &oob[o..oe], &mut out[d..e])
+            } else {
+                self.decode_span(&data[d..e], &oob[o..oe], &mut out[d..e])
+            };
+            if stats.detected > 0 {
+                // locate the detections: one block at a time, rewriting
+                // the same output bytes the chunk pass already produced
+                let (mut k, mut ok) = (d, o);
+                while k < e {
+                    let ke = (k + b).min(e);
+                    let oke = if ke == data.len() { oob.len() } else { ok + opb };
+                    let bs = self.decode_span(&data[k..ke], &oob[ok..oke], &mut out[k..ke]);
+                    if bs.detected > 0 {
+                        outc.push_detected(base_block + k / b);
+                    }
+                    k = ke;
+                    ok = oke;
+                }
+            }
+            outc.stats.add(&stats);
+            d = e;
+            o = oe;
+        }
+        outc
+    }
+
+    /// Scrub counterpart of [`Protection::decode_span_outcome`]. Blocks
+    /// must be identified *during* the pass — parity-zero's scrub heals
+    /// its stored image (zeroed weight, cleared parity), so a post-scrub
+    /// decode finds nothing — hence dirty chunks scrub block-by-block.
+    /// Provably-clean tiles still skip via the one-word probe, so at
+    /// realistic fault rates the pass stays tile-speed.
+    fn scrub_span_outcome(&self, data: &mut [u8], oob: &mut [u8], base_block: usize) -> DecodeOutcome {
+        let b = self.block_bytes();
+        let opb = self.oob_bytes_per_block();
+        let opt = tile::TILE_BYTES / b * opb;
+        let mut outc = DecodeOutcome::default();
+        let (mut d, mut o) = (0usize, 0usize);
+        while d < data.len() {
+            let e = (d + tile::TILE_BYTES).min(data.len());
+            let oe = if e == data.len() { oob.len() } else { o + opt };
+            if e - d == tile::TILE_BYTES && self.tile_is_clean(&data[d..e], &oob[o..oe]) {
+                d = e;
+                o = oe;
+                continue;
+            }
+            let (mut k, mut ok) = (d, o);
+            while k < e {
+                let ke = (k + b).min(e);
+                let oke = if ke == data.len() { oob.len() } else { ok + opb };
+                let bs = self.scrub_span(&mut data[k..ke], &mut oob[ok..oke]);
+                if bs.detected > 0 {
+                    outc.push_detected(base_block + k / b);
+                }
+                outc.stats.add(&bs);
+                k = ke;
+                ok = oke;
+            }
+            d = e;
+            o = oe;
+        }
+        outc
+    }
+
+    /// [`Protection::decode_range`] with block localization: decode the
+    /// window `[start, end)` and report absolute detected block indices.
+    fn decode_range_outcome(
+        &self,
+        enc: &Encoded,
+        start: usize,
+        end: usize,
+        out: &mut [i8],
+    ) -> DecodeOutcome {
+        let b = self.block_bytes();
+        debug_assert!(start % b == 0 && (end % b == 0 || end == enc.data.len()));
+        let (os, oe) = self.oob_window(start, end, enc.data.len(), enc.oob.len());
+        self.decode_span_outcome(&enc.data[start..end], &enc.oob[os..oe], out, start / b)
+    }
+
+    /// [`Protection::scrub_range`] with block localization.
+    fn scrub_range_outcome(&self, enc: &mut Encoded, start: usize, end: usize) -> DecodeOutcome {
+        let b = self.block_bytes();
+        debug_assert!(start % b == 0 && (end % b == 0 || end == enc.data.len()));
+        let (os, oe) = self.oob_window(start, end, enc.data.len(), enc.oob.len());
+        self.scrub_span_outcome(&mut enc.data[start..end], &mut enc.oob[os..oe], start / b)
     }
 
     /// Decode the whole stored image into weights, correcting what the
@@ -814,7 +969,11 @@ pub fn all_strategies_ext() -> Vec<Box<dyn Protection>> {
     v
 }
 
-/// Lookup by paper name (includes the bch16 extension).
+/// Lookup by paper name (includes the bch16 extension and the MILR
+/// plaintext-recovery strategy). `milr` deliberately stays out of
+/// `all_strategies`/`all_strategies_ext`: those sets are swept by
+/// equivalence properties that assume single-flip *correction*, which
+/// milr delegates to the algebraic recovery tier instead of the code.
 pub fn strategy_by_name(name: &str) -> anyhow::Result<Box<dyn Protection>> {
     Ok(match name {
         "faulty" => Box::new(Unprotected) as Box<dyn Protection>,
@@ -822,7 +981,8 @@ pub fn strategy_by_name(name: &str) -> anyhow::Result<Box<dyn Protection>> {
         "ecc" => Box::new(Secded7264),
         "in-place" | "inplace" => Box::new(InplaceZs),
         "bch16" => Box::new(Bch16),
-        _ => anyhow::bail!("unknown strategy '{name}' (faulty|zero|ecc|in-place|bch16)"),
+        "milr" => Box::new(super::milr::Milr),
+        _ => anyhow::bail!("unknown strategy '{name}' (faulty|zero|ecc|in-place|bch16|milr)"),
     })
 }
 
@@ -1045,6 +1205,88 @@ mod tests {
                 s.name()
             );
         }
+    }
+
+    #[test]
+    fn decode_outcome_names_the_uncorrectable_blocks() {
+        // multi-tile buffer (2 tiles + ragged 3-block tail); double
+        // flips in chosen blocks must surface as exactly those indices,
+        // with stats identical to the plain decode.
+        let w = wot_weights(2 * 64 * 8 + 3 * 8, 41);
+        let victims = [3usize, 70, 130]; // tile 0, tile 1, ragged tail
+        for name in ["ecc", "in-place"] {
+            let s = strategy_by_name(name).unwrap();
+            let mut enc = s.encode(&w).unwrap();
+            for &bi in &victims {
+                enc.flip_bit(bi as u64 * 64 + 1);
+                enc.flip_bit(bi as u64 * 64 + 9);
+            }
+            let mut a = vec![0i8; w.len()];
+            let mut b = vec![0i8; w.len()];
+            let plain = s.decode(&enc, &mut a);
+            let outc = s.decode_range_outcome(&enc, 0, enc.data.len(), &mut b);
+            assert_eq!(outc.stats, plain, "{name}: outcome stats drifted");
+            assert_eq!(a, b, "{name}: outcome decode output drifted");
+            assert_eq!(outc.detected_blocks, victims, "{name}");
+            assert!(!outc.overflow);
+            // a window starting mid-image reports absolute indices
+            let start = 64 * 8; // tile 1
+            let mut win = vec![0i8; enc.data.len() - start];
+            let outw = s.decode_range_outcome(&enc, start, enc.data.len(), &mut win);
+            assert_eq!(outw.detected_blocks, [70, 130], "{name}: base offset");
+        }
+    }
+
+    #[test]
+    fn scrub_outcome_matches_plain_scrub_and_finds_blocks() {
+        let w = wot_weights(64 * 8 + 5 * 8, 43);
+        for s in all_strategies_ext() {
+            if s.block_bytes() == 1 {
+                continue; // unprotected never detects
+            }
+            let mut enc = s.encode(&w).unwrap();
+            // double-flip data bits of blocks 2 and 66 (block size 8)
+            // or 1 and 33 (block size 16) — same byte positions either way
+            let bb = s.block_bytes();
+            let victims: Vec<usize> = [2usize, 66].iter().map(|&v| v * 8 / bb).collect();
+            // two flips per 64-bit lane defeat the Hsiao codes (even-
+            // weight syndrome -> detect); bch16 corrects doubles, so it
+            // gets a third flip
+            let flips: &[u64] = if bb == 16 { &[2, 11, 21] } else { &[2, 11] };
+            for &v in &[2u64, 66] {
+                for &f in flips {
+                    enc.flip_bit(v * 64 + f);
+                }
+            }
+            let mut plain = enc.clone();
+            let pstats = s.scrub(&mut plain);
+            let len = enc.data.len();
+            let outc = s.scrub_range_outcome(&mut enc, 0, len);
+            assert_eq!(outc.stats, pstats, "{}: scrub outcome stats", s.name());
+            assert_eq!(enc.data, plain.data, "{}: scrub outcome image", s.name());
+            assert_eq!(enc.oob, plain.oob, "{}: scrub outcome oob", s.name());
+            assert!(pstats.detected > 0, "{}: victims must stay detected", s.name());
+            let mut got = outc.detected_blocks.clone();
+            got.dedup();
+            assert_eq!(got, victims, "{}: scrubbed block set", s.name());
+        }
+    }
+
+    #[test]
+    fn outcome_list_caps_and_flags_overflow() {
+        let nblocks = DETECTED_BLOCK_CAP + 40;
+        let w = wot_weights(nblocks * 8, 47);
+        let s = strategy_by_name("ecc").unwrap();
+        let mut enc = s.encode(&w).unwrap();
+        for bi in 0..nblocks as u64 {
+            enc.flip_bit(bi * 64 + 3);
+            enc.flip_bit(bi * 64 + 12);
+        }
+        let mut out = vec![0i8; w.len()];
+        let outc = s.decode_range_outcome(&enc, 0, enc.data.len(), &mut out);
+        assert_eq!(outc.stats.detected, nblocks as u64, "stats stay exact");
+        assert_eq!(outc.detected_blocks.len(), DETECTED_BLOCK_CAP);
+        assert!(outc.overflow, "cap hit must be flagged");
     }
 
     #[test]

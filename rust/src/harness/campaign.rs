@@ -10,7 +10,12 @@
 //! compute-path guards ([`crate::runtime::guard`]); their trial seeds
 //! deliberately exclude the guard mode, so guards-on and guards-off
 //! cells face *identical* fault sequences and the reported residuals
-//! compare at exactly equal injected faults.
+//! compare at exactly equal injected faults. The recovery axis
+//! (`--recovery off|milr`) follows the same discipline: it escalates
+//! detected-uncorrectable weight blocks to algebraic layer
+//! reconstruction ([`crate::model::recovery`]) and is excluded from
+//! trial seeds, so recovery-on and recovery-off cells replay identical
+//! strikes.
 //! Instead of a fixed trial count, each cell runs until the Student-t
 //! confidence interval on its mean accuracy drop is tight enough
 //! (`ci_target` half-width at `confidence`), bounded by
@@ -44,7 +49,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::harness::eval::EvalCtx;
 use crate::memory::{run_jobs, FaultInjector, FaultModel, FaultSite, ShardedBank};
-use crate::model::EvalSet;
+use crate::model::{recover_blocks, DenseShape, EvalSet, RecoveryMode, RecoverySet};
 use crate::runtime::guard::{
     residual_pp, ComputeFault, ComputeFaults, DenseModel, GuardMode, GuardReport,
 };
@@ -57,10 +62,13 @@ use crate::util::stats;
 // ---------------------------------------------------------------- grid --
 
 /// One grid cell: a (model, strategy, rate, fault-model, fault-site,
-/// guard-mode) combination. For compute sites the strategy is inert
-/// (no storage decode happens) and the fault model is always the
-/// uniform transient strike — fault-model geometry describes stored
-/// images; keep `--fault-model uniform` for compute-site sweeps.
+/// guard-mode, recovery-mode) combination. For compute sites the
+/// strategy is inert (no storage decode happens) and the fault model is
+/// always the uniform transient strike — fault-model geometry describes
+/// stored images; keep `--fault-model uniform` for compute-site sweeps.
+/// The recovery mode only changes weights-site trials: with `milr`,
+/// detected-uncorrectable blocks are escalated to algebraic layer
+/// reconstruction before the decoded buffer is scored.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellSpec {
     pub model: String,
@@ -69,11 +77,13 @@ pub struct CellSpec {
     pub fault: FaultModel,
     pub site: FaultSite,
     pub guard: GuardMode,
+    pub recovery: RecoveryMode,
 }
 
 impl CellSpec {
-    /// Stable ledger key. Default axes (weights site, guards off) keep
-    /// the pre-site four-part key, so old ledgers resume unchanged.
+    /// Stable ledger key. Default axes (weights site, guards off,
+    /// recovery off) keep the pre-site four-part key, so old ledgers
+    /// resume unchanged.
     pub fn key(&self) -> String {
         let mut k = format!(
             "{}|{}|{:e}|{}",
@@ -88,13 +98,17 @@ impl CellSpec {
             k.push('|');
             k.push_str(self.guard.tag());
         }
+        if self.recovery != RecoveryMode::Off {
+            k.push_str("|recovery=");
+            k.push_str(self.recovery.tag());
+        }
         k
     }
 
-    /// The trial-seed domain: like [`CellSpec::key`] but guard-blind,
-    /// so guards-on and guards-off cells of the same site draw
-    /// *identical* fault sequences — guard comparisons are at exactly
-    /// equal injected faults.
+    /// The trial-seed domain: like [`CellSpec::key`] but guard- and
+    /// recovery-blind, so answered and unanswered cells of the same
+    /// site draw *identical* fault sequences — guard and recovery
+    /// comparisons are at exactly equal injected faults.
     pub fn seed_key(&self) -> String {
         let mut k = format!(
             "{}|{}|{:e}|{}",
@@ -174,6 +188,11 @@ pub struct Config {
     /// Guards only change compute-site trials — a weights-site cell
     /// runs the storage path regardless of guard mode.
     pub guards: Vec<GuardMode>,
+    /// Recovery modes to sweep; `[Off]` preserves classic behaviour.
+    /// Recovery only changes weights-site trials — it escalates
+    /// detected-uncorrectable stored blocks, of which compute sites
+    /// have none.
+    pub recovery: Vec<RecoveryMode>,
     pub policy: TrialPolicy,
     /// Parallel cell workers (1 = serial in grid order).
     pub jobs: usize,
@@ -202,14 +221,17 @@ impl Config {
                     for &fault in &self.fault_models {
                         for &site in &self.sites {
                             for &guard in &self.guards {
-                                cells.push(CellSpec {
-                                    model: model.clone(),
-                                    strategy: strategy.clone(),
-                                    rate,
-                                    fault,
-                                    site,
-                                    guard,
-                                });
+                                for &recovery in &self.recovery {
+                                    cells.push(CellSpec {
+                                        model: model.clone(),
+                                        strategy: strategy.clone(),
+                                        rate,
+                                        fault,
+                                        site,
+                                        guard,
+                                        recovery,
+                                    });
+                                }
                             }
                         }
                     }
@@ -248,6 +270,10 @@ impl Config {
                 guards.join(",")
             ));
         }
+        if self.recovery != [RecoveryMode::Off] {
+            let modes: Vec<&str> = self.recovery.iter().map(|r| r.tag()).collect();
+            fp.push_str(&format!("|recovery={}", modes.join(",")));
+        }
         fp
     }
 }
@@ -255,7 +281,7 @@ impl Config {
 // -------------------------------------------------------------- runner --
 
 /// One trial's measurements.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct TrialOutcome {
     /// Degradation vs the fault-free baseline, percentage points:
     /// accuracy drop for weights-site trials, magnitude-weighted output
@@ -267,6 +293,12 @@ pub struct TrialOutcome {
     pub detected: u64,
     /// Out-of-envelope activations clamped by the range guard.
     pub clamped: u64,
+    /// Detected-uncorrectable blocks reconstructed by the recovery tier
+    /// (always 0 with recovery off).
+    pub recovered: u64,
+    /// Detected-uncorrectable blocks the recovery tier had to
+    /// quarantine (underdetermined, singular, or failed verification).
+    pub unrecovered: u64,
 }
 
 /// Runs one fault-injection trial of a cell. Implementations must be
@@ -321,6 +353,13 @@ impl TrialRunner for EvalRunner {
             .ctxs
             .get(&spec.model)
             .ok_or_else(|| anyhow::anyhow!("model '{}' not loaded in this campaign", spec.model))?;
+        if spec.recovery != RecoveryMode::Off {
+            anyhow::bail!(
+                "recovery mode '{}' needs the synthetic runner's captured calibration \
+                 set; sweep --recovery with --synthetic",
+                spec.recovery.tag()
+            );
+        }
         let mut ctx = ctx.lock().unwrap();
         let base = ctx.base_acc;
         match spec.site {
@@ -331,16 +370,15 @@ impl TrialRunner for EvalRunner {
                     drop_pp: (base - acc) * 100.0,
                     corrected,
                     detected,
-                    clamped: 0,
+                    ..TrialOutcome::default()
                 })
             }
             FaultSite::Activations => {
                 let (acc, clamped) = ctx.activation_trial(spec.guard, spec.rate, seed)?;
                 Ok(TrialOutcome {
                     drop_pp: (base - acc) * 100.0,
-                    corrected: 0,
-                    detected: 0,
                     clamped,
+                    ..TrialOutcome::default()
                 })
             }
             FaultSite::Accumulators => anyhow::bail!(
@@ -374,6 +412,10 @@ pub struct SyntheticRunner {
     /// synthetic WOT weights, one fixed calibrated input batch, and its
     /// clean logits.
     compute: OnceLock<SynthCompute>,
+    /// Lazily-captured recovery calibration (X plane + checkpointed
+    /// pre-activation Y) over the same dense head geometry, plus the
+    /// solver's shape table — what `--recovery milr` cells escalate to.
+    recovery_calib: OnceLock<(RecoverySet, Vec<DenseShape>)>,
 }
 
 struct SynthCompute {
@@ -394,6 +436,7 @@ impl SyntheticRunner {
             ext: OnceLock::new(),
             banks: Mutex::new(BTreeMap::new()),
             compute: OnceLock::new(),
+            recovery_calib: OnceLock::new(),
         }
     }
 
@@ -434,6 +477,44 @@ impl SyntheticRunner {
             }
         }))
     }
+
+    /// The recovery tier's calibration set: the same `[n_weights/16 x
+    /// 16]` dense head over the synthetic WOT image, with the input
+    /// plane and checkpointed pre-ReLU outputs captured on clean
+    /// weights — exactly what the extended `zsecc calibrate` persists
+    /// as a `.recovery.json` sidecar for real models.
+    fn recovery_path(&self) -> anyhow::Result<&(RecoverySet, Vec<DenseShape>)> {
+        anyhow::ensure!(
+            self.n_weights >= Self::CLASSES && self.n_weights % Self::CLASSES == 0,
+            "recovery cells need n_weights to be a multiple of {} (got {})",
+            Self::CLASSES,
+            self.n_weights
+        );
+        let q = self
+            .wot
+            .get_or_init(|| crate::harness::ablation::synth_wot(self.n_weights, 42));
+        Ok(self.recovery_calib.get_or_init(|| {
+            let dim = self.n_weights / Self::CLASSES;
+            let scale = 0.02f32;
+            let w: Vec<f32> = q.iter().map(|&v| v as f32 * scale).collect();
+            let model = DenseModel::from_flat(&w, &[(dim, Self::CLASSES)])
+                .expect("synthetic dense head has a valid shape by construction");
+            // centered inputs keep the normal equations well-conditioned
+            let mut rng = Rng::new(777);
+            let x: Vec<f32> = (0..Self::BATCH * dim)
+                .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            let set = RecoverySet::capture(&model, &["head".to_string()], &x, Self::BATCH);
+            let shapes = vec![DenseShape {
+                name: "head".into(),
+                offset: 0,
+                rows: dim,
+                cols: Self::CLASSES,
+                scale,
+            }];
+            (set, shapes)
+        }))
+    }
 }
 
 impl Default for SyntheticRunner {
@@ -446,8 +527,18 @@ impl TrialRunner for SyntheticRunner {
     fn run_trial(&self, spec: &CellSpec, _trial: u64, seed: u64) -> anyhow::Result<TrialOutcome> {
         use crate::harness::ablation::{synth_ext, synth_wot};
         if spec.site != FaultSite::Weights {
+            anyhow::ensure!(
+                spec.recovery == RecoveryMode::Off,
+                "recovery escalates stored-block corruption; compute sites have no \
+                 stored blocks — keep --recovery off for compute-site sweeps"
+            );
             return self.compute_trial(spec, seed);
         }
+        anyhow::ensure!(
+            spec.recovery == RecoveryMode::Off || spec.strategy != "bch16",
+            "the recovery calibration covers the WOT image; bch16 cells use the \
+             extended buffer — exclude bch16 from --recovery sweeps"
+        );
         let w: &[i8] = if spec.strategy == "bch16" {
             self.ext.get_or_init(|| synth_ext(self.n_weights, 42))
         } else {
@@ -469,7 +560,31 @@ impl TrialRunner for SyntheticRunner {
         };
         bank.inject(spec.fault, spec.rate, seed);
         let mut out = crate::memory::pool::lease_i8(w.len());
-        let st = bank.read(&mut out);
+        let (st, recovered, unrecovered) = if spec.recovery == RecoveryMode::Milr {
+            let (calib, shapes) = self.recovery_path()?;
+            let outc = bank.read_outcome(&mut out);
+            let bb = bank.strategy().block_bytes();
+            let (mut rec, mut unrec) = (0u64, 0u64);
+            if !outc.detected_blocks.is_empty() {
+                let ro = recover_blocks(calib, shapes, &out, &outc.detected_blocks, bb);
+                unrec = ro.quarantined.len() as u64;
+                for rb in &ro.recovered {
+                    // write back through the verified path, and patch
+                    // the served buffer the trial scores
+                    match bank.apply_recovery(rb.block, &rb.weights) {
+                        Ok(()) => {
+                            out[rb.block * bb..(rb.block + 1) * bb]
+                                .copy_from_slice(&rb.weights);
+                            rec += 1;
+                        }
+                        Err(_) => unrec += 1,
+                    }
+                }
+            }
+            (outc.stats, rec, unrec)
+        } else {
+            (bank.read(&mut out), 0, 0)
+        };
         let wrong = out.iter().zip(w).filter(|(a, b)| a != b).count();
         bank.reset(); // copy-on-write: only fault-touched blocks copied back
         {
@@ -480,7 +595,9 @@ impl TrialRunner for SyntheticRunner {
             drop_pp: 100.0 * wrong as f64 / w.len() as f64,
             corrected: st.corrected,
             detected: st.detected,
-            clamped: 0,
+            recovered,
+            unrecovered,
+            ..TrialOutcome::default()
         })
     }
 }
@@ -523,6 +640,7 @@ impl SyntheticRunner {
             corrected: report.recomputes,
             detected: report.abft_trips,
             clamped: report.range_clamps,
+            ..TrialOutcome::default()
         })
     }
 }
@@ -540,6 +658,11 @@ pub struct CellResult {
     /// Range-guard clamps summed over the cell's trials (compute sites
     /// only; always 0 for weights-site cells).
     pub clamped: u64,
+    /// Blocks reconstructed by the recovery tier, summed over trials
+    /// (always 0 with recovery off).
+    pub recovered: u64,
+    /// Blocks the recovery tier quarantined, summed over trials.
+    pub unrecovered: u64,
     /// CI half-width on the mean drop at the policy's confidence
     /// (infinite when a single trial cannot bound it).
     pub half_width: f64,
@@ -561,6 +684,7 @@ impl CellResult {
             ("fault_model", s(&self.spec.fault.tag())),
             ("site", s(self.spec.site.tag())),
             ("guard", s(self.spec.guard.tag())),
+            ("recovery", s(self.spec.recovery.tag())),
             ("trials", num(self.drops.len() as f64)),
             ("drop_mean", num(stats::mean(&self.drops))),
             ("drop_std", num(stats::std(&self.drops))),
@@ -569,6 +693,8 @@ impl CellResult {
             ("corrected", num(self.corrected as f64)),
             ("detected", num(self.detected as f64)),
             ("clamped", num(self.clamped as f64)),
+            ("recovered", num(self.recovered as f64)),
+            ("unrecovered", num(self.unrecovered as f64)),
         ];
         if timing {
             fields.push(("wall_ms", num(self.wall_ms)));
@@ -614,6 +740,10 @@ impl CellResult {
             Some(tag) => GuardMode::parse(tag)?,
             None => GuardMode::Off,
         };
+        let recovery = match v.get("recovery").and_then(|x| x.as_str()) {
+            Some(tag) => RecoveryMode::parse(tag)?,
+            None => RecoveryMode::Off,
+        };
         Ok(CellResult {
             spec: CellSpec {
                 model: st("model")?,
@@ -622,11 +752,14 @@ impl CellResult {
                 fault: FaultModel::parse(&st("fault_model")?)?,
                 site,
                 guard,
+                recovery,
             },
             drops,
             corrected: f("corrected")? as u64,
             detected: f("detected")? as u64,
             clamped: v.get("clamped").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            recovered: v.get("recovered").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            unrecovered: v.get("unrecovered").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
             half_width,
             wall_ms: v.get("wall_ms").and_then(|x| x.as_f64()).unwrap_or(0.0),
         })
@@ -702,6 +835,7 @@ impl Report {
             "fault",
             "site",
             "guard",
+            "recovery",
             "rate",
             "trials",
             "drop (pp)",
@@ -709,6 +843,8 @@ impl Report {
             "corrected",
             "detected",
             "clamped",
+            "recovered",
+            "unrec",
         ];
         let rows: Vec<Vec<String>> = self
             .cells
@@ -720,6 +856,7 @@ impl Report {
                     c.spec.fault.tag(),
                     c.spec.site.tag().to_string(),
                     c.spec.guard.tag().to_string(),
+                    c.spec.recovery.tag().to_string(),
                     format!("{:.0e}", c.spec.rate),
                     c.trials().to_string(),
                     stats::mean_std_str(&c.drops),
@@ -731,6 +868,8 @@ impl Report {
                     c.corrected.to_string(),
                     c.detected.to_string(),
                     c.clamped.to_string(),
+                    c.recovered.to_string(),
+                    c.unrecovered.to_string(),
                 ]
             })
             .collect();
@@ -831,6 +970,7 @@ fn run_cell(
     let t0 = std::time::Instant::now();
     let mut drops = Vec::with_capacity(policy.min_trials);
     let (mut corrected, mut detected, mut clamped) = (0u64, 0u64, 0u64);
+    let (mut recovered, mut unrecovered) = (0u64, 0u64);
     let prelude = policy.min_trials.min(policy.max_trials).max(1) as u64;
     let outcomes = run_jobs((0..prelude).collect(), jobs, |t| {
         runner.run_trial(spec, t, trial_seed(spec, t))
@@ -841,6 +981,8 @@ fn run_cell(
         corrected += out.corrected;
         detected += out.detected;
         clamped += out.clamped;
+        recovered += out.recovered;
+        unrecovered += out.unrecovered;
     }
     loop {
         let n = drops.len();
@@ -863,6 +1005,8 @@ fn run_cell(
         corrected += out.corrected;
         detected += out.detected;
         clamped += out.clamped;
+        recovered += out.recovered;
+        unrecovered += out.unrecovered;
     }
     Ok(CellResult {
         spec: spec.clone(),
@@ -871,6 +1015,8 @@ fn run_cell(
         corrected,
         detected,
         clamped,
+        recovered,
+        unrecovered,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -963,6 +1109,7 @@ mod tests {
             fault_models: vec![FaultModel::Uniform, FaultModel::Burst { len: 2 }],
             sites: vec![FaultSite::Weights],
             guards: vec![GuardMode::Off],
+            recovery: vec![RecoveryMode::Off],
             policy,
             jobs: 1,
             ledger: None,
@@ -980,8 +1127,7 @@ mod tests {
             Ok(TrialOutcome {
                 drop_pp: self.0,
                 corrected: 1,
-                detected: 0,
-                clamped: 0,
+                ..TrialOutcome::default()
             })
         }
     }
@@ -993,9 +1139,7 @@ mod tests {
         fn run_trial(&self, _s: &CellSpec, t: u64, _seed: u64) -> anyhow::Result<TrialOutcome> {
             Ok(TrialOutcome {
                 drop_pp: (t % 2) as f64 * 10.0,
-                corrected: 0,
-                detected: 0,
-                clamped: 0,
+                ..TrialOutcome::default()
             })
         }
     }
@@ -1019,6 +1163,7 @@ mod tests {
             fault: FaultModel::Uniform,
             site: FaultSite::Weights,
             guard: GuardMode::Off,
+            recovery: RecoveryMode::Off,
         };
         let s0 = trial_seed(&spec, 0);
         assert_eq!(s0, trial_seed(&spec, 0));
@@ -1043,6 +1188,7 @@ mod tests {
             fault: FaultModel::Uniform,
             site: FaultSite::Weights,
             guard: GuardMode::Off,
+            recovery: RecoveryMode::Off,
         };
         // Pre-site ledgers keyed cells as model|strategy|rate|fault;
         // the default axes must reproduce that byte-for-byte.
@@ -1058,6 +1204,14 @@ mod tests {
         assert_ne!(guarded.key(), unguarded.key());
         assert_eq!(guarded.seed_key(), unguarded.seed_key());
         assert_eq!(trial_seed(&guarded, 3), trial_seed(&unguarded, 3));
+
+        // Recovery follows the same discipline: a distinct ledger key,
+        // the same fault sequence as its recovery-off sibling.
+        let mut recovering = classic.clone();
+        recovering.recovery = RecoveryMode::Milr;
+        assert_eq!(recovering.key(), "m|ecc|1e-4|uniform|recovery=milr");
+        assert_eq!(recovering.seed_key(), classic.seed_key());
+        assert_eq!(trial_seed(&recovering, 5), trial_seed(&classic, 5));
     }
 
     #[test]
@@ -1074,6 +1228,7 @@ mod tests {
             fault: FaultModel::Uniform,
             site: FaultSite::Activations,
             guard: GuardMode::Off,
+            recovery: RecoveryMode::Off,
         };
         let seed = trial_seed(&spec, 0);
         let off = runner.run_trial(&spec, 0, seed).unwrap();
@@ -1154,11 +1309,14 @@ mod tests {
                 },
                 site: FaultSite::Activations,
                 guard: GuardMode::Full,
+                recovery: RecoveryMode::Off,
             },
             drops: vec![0.0, 0.125, 3.5],
             corrected: 17,
             detected: 3,
             clamped: 9,
+            recovered: 4,
+            unrecovered: 2,
             half_width: 1.25,
             wall_ms: 12.5,
         };
@@ -1166,19 +1324,25 @@ mod tests {
         assert_eq!(back.spec, cell.spec);
         assert_eq!(back.drops, cell.drops);
         assert_eq!((back.corrected, back.detected, back.clamped), (17, 3, 9));
+        assert_eq!((back.recovered, back.unrecovered), (4, 2));
         assert_eq!(back.half_width, 1.25);
-        // A pre-site ledger cell (no site/guard/clamped fields) loads
-        // with the classic defaults.
+        // A pre-site ledger cell (no site/guard/clamped/recovery
+        // fields) loads with the classic defaults.
         let mut old = cell.to_json(true);
         if let Json::Obj(m) = &mut old {
             m.remove("site");
             m.remove("guard");
             m.remove("clamped");
+            m.remove("recovery");
+            m.remove("recovered");
+            m.remove("unrecovered");
         }
         let back = CellResult::from_json(&old).unwrap();
         assert_eq!(back.spec.site, FaultSite::Weights);
         assert_eq!(back.spec.guard, GuardMode::Off);
+        assert_eq!(back.spec.recovery, RecoveryMode::Off);
         assert_eq!(back.clamped, 0);
+        assert_eq!((back.recovered, back.unrecovered), (0, 0));
         // infinite half-width survives as null
         let single = CellResult {
             half_width: f64::INFINITY,
@@ -1216,5 +1380,65 @@ mod tests {
         c = cfg(TrialPolicy::fixed(5));
         c.guards = vec![GuardMode::Off, GuardMode::Full];
         assert_ne!(a.fingerprint(), c.fingerprint());
+        c = cfg(TrialPolicy::fixed(5));
+        assert!(!a.fingerprint().contains("recovery="));
+        c.recovery = vec![RecoveryMode::Off, RecoveryMode::Milr];
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn milr_recovery_reduces_synthetic_drop_at_equal_faults() {
+        // Scan trials of the zero-redundancy milr strategy, scoring
+        // each with and without the recovery tier. Seeds exclude the
+        // recovery mode, so each pair faces identical strikes. At 2e-4
+        // over 2048x8 stored bits ~3 flips land per trial: some trials
+        // carry no probe-visible flip (skipped), some carry silent
+        // corruption in the implicated columns (verification rejects
+        // the solve and quarantines), and at least one trial must
+        // recover a block and strictly shrink the accuracy drop.
+        let runner = SyntheticRunner::new(2048, 4, 2);
+        let spec = CellSpec {
+            model: "synthetic".into(),
+            strategy: "milr".into(),
+            rate: 2e-4,
+            fault: FaultModel::Uniform,
+            site: FaultSite::Weights,
+            guard: GuardMode::Off,
+            recovery: RecoveryMode::Off,
+        };
+        let mut rec_spec = spec.clone();
+        rec_spec.recovery = RecoveryMode::Milr;
+
+        let mut detections = 0u64;
+        let mut strict: Option<(u64, TrialOutcome)> = None;
+        for t in 0..32 {
+            let off = runner.run_trial(&spec, t, trial_seed(&spec, t)).unwrap();
+            assert_eq!(off.recovered, 0, "recovery off must never recover");
+            if off.detected == 0 {
+                continue;
+            }
+            detections += 1;
+            let on = runner
+                .run_trial(&rec_spec, t, trial_seed(&rec_spec, t))
+                .unwrap();
+            assert_eq!(
+                on.detected, off.detected,
+                "trial {t}: equal faults must implicate the same blocks"
+            );
+            if on.recovered > 0 && on.drop_pp < off.drop_pp {
+                strict = Some((t, on));
+                break;
+            }
+        }
+        assert!(detections > 0, "the scan must hit probe-visible strikes");
+        let (t, on) =
+            strict.expect("no trial in 0..32 strictly improved under recovery");
+        // Deterministic: the winning cell replays identically.
+        let again = runner
+            .run_trial(&rec_spec, t, trial_seed(&rec_spec, t))
+            .unwrap();
+        assert_eq!(again.drop_pp, on.drop_pp);
+        assert_eq!(again.recovered, on.recovered);
+        assert_eq!(again.unrecovered, on.unrecovered);
     }
 }

@@ -7,9 +7,9 @@ use std::sync::Arc;
 
 use crate::ecc::strategy_by_name;
 use crate::memory::{FaultInjector, FaultModel, ShardedBank};
-use crate::model::{load_weights, EvalSet, Manifest};
+use crate::model::{load_weights, EvalSet, Manifest, RecoverySet};
 use crate::quant::dequantize_into;
-use crate::runtime::guard::{Calibration, Envelope, GuardMode, LayerEnvelope};
+use crate::runtime::guard::{Calibration, DenseModel, Envelope, GuardMode, LayerEnvelope};
 use crate::runtime::{accuracy, Executable, Runtime};
 use crate::util::rng::Rng;
 
@@ -161,6 +161,38 @@ impl EvalCtx {
                 },
             ],
         })
+    }
+
+    /// Capture the recovery tier's calibration sidecar: per dense
+    /// layer, the input plane and the checkpointed pre-ReLU output on
+    /// clean weights — the `Y = X · W` equations
+    /// [`recover_blocks`](crate::model::recover_blocks) inverts. Only a
+    /// pure dense-chain manifest has those equations; a model with conv
+    /// layers returns `None` and its recovery tier stays unarmed.
+    pub fn calibrate_recovery(&mut self, batch: usize) -> anyhow::Result<Option<RecoverySet>> {
+        let mut dims = Vec::with_capacity(self.man.layers.len());
+        for l in &self.man.layers {
+            match l.shape[..] {
+                [r, c] => dims.push((r, c)),
+                _ => return Ok(None),
+            }
+        }
+        anyhow::ensure!(
+            self.ds.dim == dims[0].0,
+            "dataset dim {} does not feed the first dense layer ({} rows)",
+            self.ds.dim,
+            dims[0].0
+        );
+        let batch = batch.min(self.ds.n).max(1);
+        dequantize_into(&self.weights, &self.man.layers, &mut self.fbuf);
+        let model = DenseModel::from_flat(&self.fbuf, &dims)?;
+        let names: Vec<String> = self.man.layers.iter().map(|l| l.name.clone()).collect();
+        Ok(Some(RecoverySet::capture(
+            &model,
+            &names,
+            self.ds.batch(0, batch),
+            batch,
+        )))
     }
 
     /// One activation-site trial through PJRT: transient single-bit

@@ -34,7 +34,15 @@
 //! * [`quant`] — int8 weight buffers and per-layer dequantization,
 //!   including the fused `decode_dequant_range` used by the scrub
 //!   epoch's per-shard delta path (no full-buffer i8 intermediate).
-//! * [`model`] — artifact manifests, weight/dataset loaders.
+//! * [`model`] — artifact manifests, weight/dataset loaders, plus
+//!   [`model::recovery`]: the MILR-style recovery tier. Given layer
+//!   shapes and a calibration sidecar persisted by `zsecc calibrate`
+//!   (`<model>.recovery.json`), detected-uncorrectable weight blocks
+//!   are reconstructed by solving the layer equation `Y = XW` for the
+//!   implicated rows (least-squares), snapped to the quantization
+//!   grid and verified against the held-out calibration residual —
+//!   zero stored redundancy. The front-door detector is `ecc`'s
+//!   sixth strategy, `milr` (plaintext probe, block 8).
 //! * [`runtime`] — PJRT CPU client wrapper (HLO text -> executable),
 //!   plus [`runtime::guard`]: compute-path protection (ABFT
 //!   checksummed matmul with bitwise recompute-on-mismatch, calibrated
@@ -45,7 +53,11 @@
 //!   protected weight store, metrics (global + per-shard). The scrub
 //!   loop ships `WeightUpdate::Deltas` (offset + f32 window per dirty
 //!   shard) over the refresh channel; a full buffer crosses only when
-//!   every shard is dirty. See rust/README.md for the data-flow diagram.
+//!   every shard is dirty. Under `--recovery milr` the scrub loop
+//!   escalates detected-uncorrectable blocks to the recovery tier on
+//!   the shared pool — reconstructed blocks are written back and
+//!   re-shipped, failed ones land in a typed quarantine gauge.
+//!   See rust/README.md for the data-flow diagram.
 //! * [`harness`] — Table 1 / Table 2 / Fig 1 / Fig 3 / Fig 4 + ablations,
 //!   all fault-injection experiments riding on `harness::campaign`: a
 //!   parallel Monte-Carlo campaign engine with adaptive

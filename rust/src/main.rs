@@ -17,6 +17,7 @@ use zsecc::coordinator::{BatchPolicy, Server, ServerConfig};
 use zsecc::harness::{ablation, campaign, fig1, fig34, scrubsim, table1, table2};
 use zsecc::memory::{FaultModel, FaultSite, ScrubPolicy};
 use zsecc::model::manifest::list_models;
+use zsecc::model::{RecoveryMode, RecoverySet};
 use zsecc::runtime::GuardMode;
 use zsecc::util::cli::Args;
 use zsecc::util::rng::Rng;
@@ -164,6 +165,24 @@ fn main() -> anyhow::Result<()> {
                 for l in &calib.layers {
                     println!("  {:<8} [{:+.4}, {:+.4}]", l.name, l.env.lo, l.env.hi);
                 }
+                // Extended capture: the recovery tier's sidecar. Only a
+                // pure dense-chain manifest has the Y = X·W equations
+                // the MILR solver inverts; conv models skip with a note.
+                match ctx.calibrate_recovery(batch)? {
+                    Some(set) => {
+                        let path = RecoverySet::sidecar_path(&artifacts, model);
+                        set.save(&path)?;
+                        println!(
+                            "  recovery sidecar: {} layers, batch {} -> {}",
+                            set.layers.len(),
+                            set.batch,
+                            path.display()
+                        );
+                    }
+                    None => println!(
+                        "  (recovery sidecar skipped: manifest is not a pure dense chain)"
+                    ),
+                }
             }
         }
         Some("scrubsim") => run_scrubsim(&args)?,
@@ -196,8 +215,15 @@ fn main() -> anyhow::Result<()> {
                 // start_pjrt fills this from the manifest's calibrated
                 // envelopes (`zsecc calibrate`) when the mode needs it.
                 guard_calibration: None,
+                recovery: RecoveryMode::parse(&args.str_or("recovery", "off"))?,
+                // start_pjrt fills this from the `<model>.recovery.json`
+                // sidecar (`zsecc calibrate`) when the tier is armed.
+                recovery_calibration: None,
             };
-            cfg.validate()?;
+            // No validate() here: start_pjrt first fills the guard and
+            // recovery calibrations from the manifest/sidecar, *then*
+            // validates — an early check would refuse modes whose
+            // calibration exists on disk.
             serve_demo(&artifacts, &model, cfg, secs, rps)?;
         }
         _ => {
@@ -208,16 +234,18 @@ fn main() -> anyhow::Result<()> {
                  table2:   --trials N --rates 1e-6,1e-5 --strategies faulty,ecc --batch B --jobs J --fault-model M --verbose\n\
                  campaign: --fault-model uniform,burst:4,stuckat:1,rowburst:8192:4,hotspot:0.05,hotspotat:0.4:0.05\n\
                  \x20         --site weights,activations,accumulators --guards off,range,abft,full\n\
+                 \x20         --recovery off,milr (escalate uncorrectable blocks to algebraic reconstruction)\n\
                  \x20         --ci-target HW --confidence C --min-trials N --max-trials N --jobs J\n\
                  \x20         --ledger FILE --resume --out FILE --synthetic --n WEIGHTS --verbose\n\
-                 calibrate: --models a,b --batch B --margin M   (writes envelopes into the manifest)\n\
+                 calibrate: --models a,b --batch B --margin M   (writes envelopes into the manifest\n\
+                 \x20         and the <model>.recovery.json sidecar for dense-chain models)\n\
                  scrubsim: --scenario ramp|migrate --scrub-policy fixed|adaptive|both --seed N\n\
                  \x20         --strategy S --n WEIGHTS --shards S --budget PASSES --max-interval TICKS\n\
                  \x20         --trace --out FILE --json\n\
                  serve:    --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS\n\
                  \x20         --scrub-policy fixed|adaptive --scrub-max-ms MS --fault-rate F --shards S --scrub-workers W\n\
                  \x20         --ingress ring|locked (lock-free slab ring vs mutex batcher) --ring-depth N\n\
-                 \x20         --guards off|range (range needs a prior `zsecc calibrate`)"
+                 \x20         --guards off|range --recovery off|milr (both need a prior `zsecc calibrate`)"
             );
         }
     }
@@ -289,6 +317,13 @@ fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> 
             .map(GuardMode::parse)
             .collect::<anyhow::Result<Vec<_>>>()?,
     };
+    let recovery = match args.str_opt("recovery") {
+        None => vec![RecoveryMode::Off],
+        Some(s) => s
+            .split(',')
+            .map(RecoveryMode::parse)
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
     let cfg = campaign::Config {
         models,
         strategies: args.list_or("strategies", &table2::PAPER_STRATEGIES),
@@ -296,6 +331,7 @@ fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> 
         fault_models,
         sites,
         guards,
+        recovery,
         policy,
         jobs: args.usize_or("jobs", 2)?,
         ledger: args.str_opt("ledger").map(PathBuf::from),
@@ -317,6 +353,7 @@ fn run_campaign(args: &Args, artifacts: &std::path::Path) -> anyhow::Result<()> 
     };
     println!("{}", report.render());
     print_guard_comparisons(&report);
+    print_recovery_comparisons(&report);
     if let Some(out) = args.str_opt("out") {
         std::fs::write(out, report.canonical_json().to_string())?;
         println!("(canonical JSON written to {out})");
@@ -357,6 +394,62 @@ fn print_guard_comparisons(report: &campaign::Report) {
                 base,
                 c.clamped,
                 if mean(&c.drops) < base { "guards ok" } else { "guards FAIL" }
+            );
+        }
+    }
+}
+
+/// For every recovery-armed cell that has a recovery-off sibling (same
+/// model, strategy, rate, fault model, site, and guard — and, because
+/// recovery modes are excluded from trial seeds, the *same* injected
+/// fault sequence), print the mean-residual comparison. CI greps for
+/// `[recovery ok]` (strictly lower residual drop at equal faults) and
+/// fails on `[recovery FAIL]`; a cell whose solves never fired (0
+/// blocks recovered) prints `[recovery idle]`.
+fn print_recovery_comparisons(report: &campaign::Report) {
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let sibling_key = |s: &campaign::CellSpec| {
+        format!(
+            "{}|{}|{:e}|{}|{}|{}",
+            s.model,
+            s.strategy,
+            s.rate,
+            s.fault.tag(),
+            s.site.tag(),
+            s.guard.tag()
+        )
+    };
+    let mut off = std::collections::BTreeMap::new();
+    for c in &report.cells {
+        if c.spec.recovery == RecoveryMode::Off && !c.drops.is_empty() {
+            off.insert(sibling_key(&c.spec), mean(&c.drops));
+        }
+    }
+    for c in &report.cells {
+        if c.spec.recovery == RecoveryMode::Off || c.drops.is_empty() {
+            continue;
+        }
+        if let Some(&base) = off.get(&sibling_key(&c.spec)) {
+            let m = mean(&c.drops);
+            let verdict = if c.recovered == 0 {
+                "recovery idle"
+            } else if m < base {
+                "recovery ok"
+            } else {
+                "recovery FAIL"
+            };
+            println!(
+                "recovery: {} strategy={} rate={:e} {}={:.4}pp off={:.4}pp \
+                 recovered={} quarantined={} [{}]",
+                c.spec.model,
+                c.spec.strategy,
+                c.spec.rate,
+                c.spec.recovery.tag(),
+                m,
+                base,
+                c.recovered,
+                c.unrecovered,
+                verdict
             );
         }
     }

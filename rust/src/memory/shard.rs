@@ -20,10 +20,11 @@
 //! (same fault-position sequence per seed, same decode output, same
 //! stats) — the shard-equivalence proptests pin this down.
 
-use crate::ecc::{DecodeStats, Encoded, Protection};
+use crate::ecc::{DecodeOutcome, DecodeStats, Encoded, Protection, DETECTED_BLOCK_CAP};
 use crate::memory::fault::{FaultInjector, FaultModel};
 use crate::memory::pool::{self, run_jobs};
 use crate::model::manifest::Layer;
+use std::collections::BTreeMap;
 
 /// Per-shard bookkeeping.
 #[derive(Clone, Debug, Default)]
@@ -77,6 +78,15 @@ pub struct ShardedBank {
     /// [`ShardedBank::image_mut`] mutation — [`ShardedBank::reset`]
     /// then falls back to a full pristine restore.
     touched: Option<Vec<usize>>,
+    /// Detected-uncorrectable block indices (absolute, image-wide), keyed
+    /// by owning shard. *Replacement* semantics: every outcome-reporting
+    /// pass over a shard replaces that shard's entry with what the final
+    /// decode of that pass saw — a block healed by a later scrub drops
+    /// out instead of lingering as a stale detection. Bounded at
+    /// [`DETECTED_BLOCK_CAP`] entries bank-wide (overflow flagged), the
+    /// same discipline as the copy-on-write `touched` log.
+    detected: BTreeMap<usize, Vec<usize>>,
+    detected_overflow: bool,
     /// Cumulative decode statistics across all shards.
     pub lifetime: DecodeStats,
     /// Cumulative bits injected.
@@ -118,6 +128,8 @@ impl ShardedBank {
             shards,
             workers: workers.max(1),
             touched: Some(Vec::new()),
+            detected: BTreeMap::new(),
+            detected_overflow: false,
             lifetime: DecodeStats::default(),
             faults_injected: 0,
         }
@@ -262,6 +274,171 @@ impl ShardedBank {
             self.workers,
         );
         self.merge_pass(&per_shard, false)
+    }
+
+    /// Protected read that also reports *which* blocks stayed
+    /// detected-uncorrectable: decodes every shard in parallel via the
+    /// outcome range APIs, replaces the whole detected-block set (a full
+    /// read sees every shard), and returns the aggregate outcome with
+    /// absolute block indices.
+    pub fn read_outcome(&mut self, out: &mut [i8]) -> DecodeOutcome {
+        assert_eq!(out.len(), self.image.n);
+        let ranges = ranges_of(&self.shards);
+        let strategy = self.strategy.as_ref();
+        let image = &self.image;
+        let jobs = split_windows(&ranges, out);
+        let per_shard = run_jobs(jobs, self.workers, |(i, s, e, win)| {
+            (i, strategy.decode_range_outcome(image, s, e, win))
+        });
+        self.finish_outcome_pass(per_shard, false)
+    }
+
+    /// Full scrub pass reporting per-block detections (see
+    /// [`ShardedBank::read_outcome`]); replaces the whole detected set.
+    pub fn scrub_outcome(&mut self) -> DecodeOutcome {
+        let ranges = ranges_of(&self.shards);
+        let per_shard = scrub_shards_outcome(
+            self.strategy.as_ref(),
+            &mut self.image,
+            &ranges,
+            None,
+            self.workers,
+        );
+        self.finish_outcome_pass(per_shard, true)
+    }
+
+    /// [`ShardedBank::scrub_subset`] with per-block detection reporting:
+    /// each selected shard's detected-set entry is *replaced* by what
+    /// this pass saw (unselected shards keep their recorded detections).
+    /// Returns `(shard, outcome)` in sorted shard order regardless of
+    /// worker fan-out interleaving.
+    pub fn scrub_subset_outcome(&mut self, indices: &[usize]) -> Vec<(usize, DecodeOutcome)> {
+        let mut sel: Vec<usize> = indices.to_vec();
+        sel.sort_unstable();
+        sel.dedup();
+        assert!(sel.last().is_none_or(|&i| i < self.shards.len()), "shard index out of range");
+        let ranges = ranges_of(&self.shards);
+        let per_shard = scrub_shards_outcome(
+            self.strategy.as_ref(),
+            &mut self.image,
+            &ranges,
+            Some(&sel),
+            self.workers,
+        );
+        self.finish_outcome_pass(per_shard.clone(), true);
+        per_shard
+    }
+
+    /// Merge an outcome pass into stats/dirty bookkeeping and the
+    /// detected-block set, returning the aggregate outcome.
+    fn finish_outcome_pass(
+        &mut self,
+        per_shard: Vec<(usize, DecodeOutcome)>,
+        is_scrub: bool,
+    ) -> DecodeOutcome {
+        let stats: Vec<(usize, DecodeStats)> =
+            per_shard.iter().map(|(i, o)| (*i, o.stats)).collect();
+        self.merge_pass(&stats, is_scrub);
+        let mut total = DecodeOutcome::default();
+        for (idx, outc) in per_shard {
+            total.stats.add(&outc.stats);
+            for &b in &outc.detected_blocks {
+                total.push_detected(b);
+            }
+            total.overflow |= outc.overflow;
+            self.detected_overflow |= outc.overflow;
+            if outc.detected_blocks.is_empty() {
+                self.detected.remove(&idx);
+            } else {
+                self.detected.insert(idx, outc.detected_blocks);
+            }
+        }
+        self.enforce_detected_cap();
+        total
+    }
+
+    /// Keep the bank-wide detected set bounded, flagging the drop.
+    fn enforce_detected_cap(&mut self) {
+        let mut budget = DETECTED_BLOCK_CAP;
+        for list in self.detected.values_mut() {
+            if list.len() <= budget {
+                budget -= list.len();
+            } else {
+                list.truncate(budget);
+                budget = 0;
+                self.detected_overflow = true;
+            }
+        }
+    }
+
+    /// Absolute block indices currently recorded as detected-
+    /// uncorrectable (sorted), per the replacement semantics above.
+    pub fn detected_blocks(&self) -> Vec<usize> {
+        let mut all: Vec<usize> = self.detected.values().flatten().copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+
+    /// True when detections were dropped at the bank-wide cap.
+    pub fn detected_overflow(&self) -> bool {
+        self.detected_overflow
+    }
+
+    /// Drain the detected-block set for escalation to the recovery tier:
+    /// returns `(sorted blocks, overflow)` and clears the record (a
+    /// later pass re-detects anything recovery could not fix).
+    pub fn take_detected(&mut self) -> (Vec<usize>, bool) {
+        let blocks = self.detected_blocks();
+        self.detected.clear();
+        let ovf = std::mem::take(&mut self.detected_overflow);
+        (blocks, ovf)
+    }
+
+    /// Write an algebraically recovered block back into the stored
+    /// image: re-encode `weights` (length = one block of weights) with
+    /// the bank's strategy, store its data/oob bytes at `block`, and
+    /// verify the syndrome goes clean. On success the owning shard is
+    /// marked dirty (the serving layer must re-ship it — the bytes
+    /// changed under it), the block joins the copy-on-write touched log,
+    /// and it leaves the detected set.
+    pub fn apply_recovery(&mut self, block: usize, weights: &[i8]) -> anyhow::Result<()> {
+        let bb = self.strategy.block_bytes();
+        let opb = self.strategy.oob_bytes_per_block();
+        anyhow::ensure!(weights.len() == bb, "recovered block must be {bb} weights");
+        anyhow::ensure!((block + 1) * bb <= self.image.data.len(), "block out of range");
+        let enc = self.strategy.encode(weights)?;
+        self.image.data[block * bb..(block + 1) * bb].copy_from_slice(&enc.data);
+        if opb > 0 {
+            self.image.oob[block * opb..(block + 1) * opb].copy_from_slice(&enc.oob);
+        }
+        let mut check = vec![0i8; bb];
+        let outc =
+            self.strategy
+                .decode_range_outcome(&self.image, block * bb, (block + 1) * bb, &mut check);
+        anyhow::ensure!(
+            outc.stats.is_clean() && outc.detected_blocks.is_empty(),
+            "recovered block {block} does not re-encode to a clean syndrome"
+        );
+        // direct write: merge_pass's corrected/zeroed rule never sees it,
+        // so the dirty + COW bookkeeping is explicit here
+        let shard = self
+            .shards
+            .partition_point(|s| s.range.1 <= block * bb)
+            .min(self.shards.len() - 1);
+        self.shards[shard].dirty = true;
+        if let Some(t) = &mut self.touched {
+            if t.last() != Some(&block) {
+                t.push(block);
+            }
+        }
+        if let Some(list) = self.detected.get_mut(&shard) {
+            list.retain(|&b| b != block);
+            if list.is_empty() {
+                self.detected.remove(&shard);
+            }
+        }
+        Ok(())
     }
 
     /// Decode one shard's window into `out` (`out.len()` == window size).
@@ -428,6 +605,8 @@ impl ShardedBank {
             }
         }
         self.touched = Some(Vec::new());
+        self.detected.clear();
+        self.detected_overflow = false;
         for s in &mut self.shards {
             s.dirty = false;
             s.last_scrub = DecodeStats::default();
@@ -532,6 +711,43 @@ fn scrub_shards(
         // tiled form: the worker walks 64-block tiles, the word-parallel
         // clean proof makes a fault-free shard scrub a read-only pass
         (i, strategy.scrub_span_tiled(d_win, o_win))
+    })
+}
+
+/// Outcome-reporting variant of [`scrub_shards`]: identical span split
+/// and fan-out, but each job runs `scrub_span_outcome` with the shard's
+/// starting block as the base, so the per-shard detected-block lists
+/// carry *absolute* image-wide indices. `run_jobs` returns results in
+/// submission (sorted shard) order, independent of worker interleaving.
+fn scrub_shards_outcome(
+    strategy: &dyn Protection,
+    image: &mut Encoded,
+    ranges: &[(usize, usize)],
+    selected: Option<&[usize]>,
+    workers: usize,
+) -> Vec<(usize, DecodeOutcome)> {
+    let (data_len, oob_len) = (image.data.len(), image.oob.len());
+    let block = strategy.block_bytes().max(1);
+    let mut jobs = Vec::with_capacity(selected.map_or(ranges.len(), <[usize]>::len));
+    let mut d_rest: &mut [u8] = &mut image.data;
+    let mut o_rest: &mut [u8] = &mut image.oob;
+    let (mut d_off, mut o_off) = (0usize, 0usize);
+    for (i, &(s, e)) in ranges.iter().enumerate() {
+        debug_assert_eq!(s, d_off);
+        let (os, oe) = strategy.oob_window(s, e, data_len, oob_len);
+        debug_assert_eq!(os, o_off);
+        let (d_win, d_next) = d_rest.split_at_mut(e - d_off);
+        let (o_win, o_next) = o_rest.split_at_mut(oe - o_off);
+        if selected.is_none_or(|sel| sel.binary_search(&i).is_ok()) {
+            jobs.push((i, s / block, d_win, o_win));
+        }
+        d_rest = d_next;
+        o_rest = o_next;
+        d_off = e;
+        o_off = oe;
+    }
+    run_jobs(jobs, workers, |(i, base, d_win, o_win)| {
+        (i, strategy.scrub_span_outcome(d_win, o_win, base))
     })
 }
 
@@ -810,5 +1026,81 @@ mod tests {
         }
         assert_eq!(sum, sb.lifetime);
         assert!(sb.shard_states().iter().all(|s| s.scrubs == 1));
+    }
+
+    #[test]
+    fn detected_blocks_survive_scrub_subset_fanout() {
+        // regression: per-shard stats used to lose *which* blocks were
+        // uncorrectable. Indices must come back absolute and in sorted
+        // shard order even when the worker pool interleaves the jobs.
+        let w = wot_weights(8 * 64, 61);
+        let mut sb = ShardedBank::new(strategy_by_name("ecc").unwrap(), &w, 8, 4).unwrap();
+        // 8 shards x 8 blocks; double-flip blocks 9 (shard 1), 26
+        // (shard 3), 44 and 45 (shard 5) — uncorrectable for SEC-DED
+        let victims = [9u64, 26, 44, 45];
+        for &b in &victims {
+            sb.image_mut().flip_bit(b * 64 + 2);
+            sb.image_mut().flip_bit(b * 64 + 11);
+        }
+        let per = sb.scrub_subset_outcome(&[5, 1, 5, 3]);
+        assert_eq!(
+            per.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+            vec![1, 3, 5],
+            "fan-out must not reorder the per-shard results"
+        );
+        assert_eq!(per[0].1.detected_blocks, [9], "shard 1");
+        assert_eq!(per[1].1.detected_blocks, [26], "shard 3");
+        assert_eq!(per[2].1.detected_blocks, [44, 45], "shard 5");
+        assert_eq!(sb.detected_blocks(), vec![9, 26, 44, 45]);
+        assert!(!sb.detected_overflow());
+        // replacement semantics: heal block 9 and re-scrub only shard 1
+        // — its entry is replaced by the now-clean pass, others persist
+        sb.image_mut().flip_bit(9 * 64 + 2);
+        sb.image_mut().flip_bit(9 * 64 + 11);
+        let per = sb.scrub_subset_outcome(&[1]);
+        assert!(per[0].1.detected_blocks.is_empty());
+        assert_eq!(sb.detected_blocks(), vec![26, 44, 45]);
+        // a full read replaces the whole set
+        let mut out = vec![0i8; w.len()];
+        let outc = sb.read_outcome(&mut out);
+        assert_eq!(outc.detected_blocks, vec![26, 44, 45]);
+        assert_eq!(sb.detected_blocks(), vec![26, 44, 45]);
+    }
+
+    #[test]
+    fn apply_recovery_reencodes_clean_and_marks_dirty() {
+        let w = wot_weights(8 * 32, 63);
+        for name in ["milr", "ecc", "in-place"] {
+            let mut sb = ShardedBank::new(strategy_by_name(name).unwrap(), &w, 4, 2).unwrap();
+            // corrupt block 4 beyond correction
+            if name == "milr" {
+                sb.image_mut().flip_bit(4 * 64 + 6); // WOT-breaking bit6 flip
+            } else {
+                sb.image_mut().flip_bit(4 * 64 + 2);
+                sb.image_mut().flip_bit(4 * 64 + 11);
+            }
+            let mut out = vec![0i8; w.len()];
+            let outc = sb.read_outcome(&mut out);
+            assert_eq!(outc.detected_blocks, [4], "{name}: corruption detected");
+            sb.take_dirty();
+            // recovery hands back the true weights of the block
+            sb.apply_recovery(4, &w[4 * 8..5 * 8]).unwrap();
+            assert!(sb.detected_blocks().is_empty(), "{name}: block leaves the set");
+            assert_eq!(sb.take_dirty(), vec![0], "{name}: owning shard re-ships");
+            let outc = sb.read_outcome(&mut out);
+            assert!(outc.stats.is_clean(), "{name}: syndrome clean after recovery");
+            assert_eq!(out, w, "{name}: recovered weights are served");
+        }
+    }
+
+    #[test]
+    fn apply_recovery_rejects_bad_blocks() {
+        let w = wot_weights(8 * 16, 65);
+        let mut sb = ShardedBank::new(strategy_by_name("milr").unwrap(), &w, 2, 1).unwrap();
+        // non-WOT "recovered" values cannot re-encode to a clean probe
+        let bad = [100i8, 0, 0, 0, 0, 0, 0, 0];
+        assert!(sb.apply_recovery(3, &bad).is_err());
+        assert!(sb.apply_recovery(0, &w[..4]).is_err(), "wrong length");
+        assert!(sb.apply_recovery(999, &w[..8]).is_err(), "out of range");
     }
 }

@@ -1,10 +1,18 @@
-//! Artifact loaders: model manifests, int8 weight buffers, eval dataset.
+//! Artifact loaders (model manifests, int8 weight buffers, eval
+//! dataset) plus the MILR recovery tier: [`recovery`] reconstructs
+//! detected-uncorrectable weight blocks from the layer equation using a
+//! persisted calibration sidecar (`<model>.recovery.json`).
 
 pub mod dataset;
 pub mod manifest;
+pub mod recovery;
 
 pub use dataset::EvalSet;
 pub use manifest::{Layer, Manifest};
+pub use recovery::{
+    dense_shapes, recover_blocks, DenseShape, RecoveredBlock, RecoveryError, RecoveryMode,
+    RecoveryOutcome, RecoverySet,
+};
 
 use std::path::Path;
 

@@ -1,0 +1,859 @@
+//! MILR-style algebraic weight recovery: reconstruct detected-
+//! uncorrectable blocks from the layer equation instead of serving them
+//! corrupted.
+//!
+//! The idea (MILR, PAPERS.md): a dense layer computes `Y = X · W`, so a
+//! corrupted entry of `W` is over-determined by a calibration batch of
+//! inputs `X` and checkpointed pre-activation outputs `Y` — solve the
+//! layer equation for exactly the implicated coordinates and write the
+//! result back. This is the recovery-of-last-resort tier behind every
+//! stored-ECC strategy's uncorrectable path, and the *only* correction
+//! tier of the zero-redundancy [`crate::ecc::milr`] strategy.
+//!
+//! The ladder, end to end:
+//!
+//! 1. **detect** — a decode/scrub pass reports the uncorrectable block
+//!    set ([`crate::ecc::DecodeOutcome`]).
+//! 2. **correct** — the stored code already fixed what it could.
+//! 3. **recover** — [`recover_blocks`] maps each block through the
+//!    manifest's layer table to `(layer, row, col)` coordinates, groups
+//!    unknowns by `(layer, column)` (one linear system per column,
+//!    jointly over every implicated block), solves the normal equations
+//!    of `Y[:,c] = X · W[:,c]` by partial-pivot Gaussian elimination in
+//!    f64, and re-quantizes to int8 on the WOT grid.
+//! 4. **quarantine** — blocks whose system is underdetermined, singular,
+//!    or fails verification come back on [`RecoveryOutcome`]'s typed
+//!    quarantine list, not as panics; the caller records them and keeps
+//!    serving. Failures are per column group, so one poisoned column
+//!    never sinks the rest of the implicated set.
+//!
+//! Verification is two-fold: the residual of the recovered column
+//! against the checkpointed `Y` must sit at the numerical noise floor
+//! (a wrong solve is off by whole quantization steps), *and* the caller
+//! re-encodes the block and checks the syndrome goes clean
+//! ([`crate::memory::ShardedBank::apply_recovery`]) — the milr probe
+//! alone cannot see byte-7/low-bit corruption, the residual can.
+//!
+//! Calibration data (`X` per layer, pre-ReLU `Y` per layer) is captured
+//! by an extended `zsecc calibrate` and persisted as a
+//! `<model>.recovery.json` sidecar next to the manifest — it holds float
+//! activation planes, far too large to inline into the manifest itself.
+
+use crate::model::manifest::Layer;
+use crate::runtime::guard::DenseModel;
+use crate::util::json::{arr, num, obj, s, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------- mode --
+
+/// Whether the recovery tier is armed (campaign axis, serve flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// Detected-uncorrectable blocks are served as stored (the pre-PR-8
+    /// behavior, and the ledger-compatible default).
+    Off,
+    /// Escalate to algebraic layer reconstruction.
+    Milr,
+}
+
+impl RecoveryMode {
+    /// Stable tag — ledger keys, JSON reports, CLI. `parse` accepts
+    /// every string `tag` produces.
+    pub fn tag(self) -> &'static str {
+        match self {
+            RecoveryMode::Off => "off",
+            RecoveryMode::Milr => "milr",
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<RecoveryMode> {
+        match text {
+            "off" => Ok(RecoveryMode::Off),
+            "milr" => Ok(RecoveryMode::Milr),
+            _ => anyhow::bail!("unknown recovery mode '{text}' (off | milr)"),
+        }
+    }
+}
+
+// ------------------------------------------------------------- dataset --
+
+/// Calibration record of one dense layer: the input plane `x` (batch ×
+/// rows) and the checkpointed pre-activation output `y = x · w`
+/// (batch × cols), both captured on clean weights.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerCalib {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+}
+
+/// The persisted recovery calibration set (`<model>.recovery.json`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoverySet {
+    /// Calibration batch size — the row count of every system; recovery
+    /// of `k` joint unknowns in one column needs `batch >= k`.
+    pub batch: usize,
+    pub layers: Vec<LayerCalib>,
+}
+
+impl RecoverySet {
+    /// Capture a recovery set from a guarded dense model on one clean
+    /// batch: per layer, the input plane and the *pre-ReLU* matmul
+    /// output (the exact `Y = X · W` relation the solver inverts).
+    /// `names[l]` labels layer `l` (use the manifest layer names so the
+    /// block map can find its calibration).
+    pub fn capture(model: &DenseModel, names: &[String], x: &[f32], batch: usize) -> RecoverySet {
+        assert_eq!(names.len(), model.layers.len(), "one name per layer");
+        let mut layers = Vec::with_capacity(model.layers.len());
+        let mut act = x.to_vec();
+        for (l, layer) in model.layers.iter().enumerate() {
+            let mut y = vec![0f32; batch * layer.cols];
+            layer.matmul(&act, batch, &mut y);
+            layers.push(LayerCalib {
+                name: names[l].clone(),
+                rows: layer.rows,
+                cols: layer.cols,
+                x: act.clone(),
+                y: y.clone(),
+            });
+            if l + 1 < model.layers.len() {
+                y.iter_mut().for_each(|v| *v = v.max(0.0));
+            }
+            act = y;
+        }
+        RecoverySet { batch, layers }
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&LayerCalib> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("batch", num(self.batch as f64)),
+            (
+                "layers",
+                arr(self.layers.iter().map(|l| {
+                    obj(vec![
+                        ("name", s(&l.name)),
+                        ("rows", num(l.rows as f64)),
+                        ("cols", num(l.cols as f64)),
+                        ("x", arr(l.x.iter().map(|&v| num(f64::from(v))))),
+                        ("y", arr(l.y.iter().map(|&v| num(f64::from(v))))),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<RecoverySet> {
+        let batch = v
+            .req("batch")?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("recovery 'batch' must be a number"))?;
+        let mut layers = Vec::new();
+        for lv in v
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("recovery 'layers' must be an array"))?
+        {
+            let name = lv
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("recovery layer 'name' must be a string"))?
+                .to_string();
+            let rows = lv.req("rows")?.as_usize().unwrap_or(0);
+            let cols = lv.req("cols")?.as_usize().unwrap_or(0);
+            let plane = |k: &str, want: usize| -> anyhow::Result<Vec<f32>> {
+                let xs: Vec<f32> = lv
+                    .req(k)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("recovery layer '{name}' '{k}' must be an array"))?
+                    .iter()
+                    .filter_map(|x| x.as_f64())
+                    .map(|x| x as f32)
+                    .collect();
+                anyhow::ensure!(
+                    xs.len() == want,
+                    "recovery layer '{name}' '{k}' holds {} values, wants {want}",
+                    xs.len()
+                );
+                Ok(xs)
+            };
+            let x = plane("x", batch * rows)?;
+            let y = plane("y", batch * cols)?;
+            layers.push(LayerCalib {
+                name,
+                rows,
+                cols,
+                x,
+                y,
+            });
+        }
+        anyhow::ensure!(!layers.is_empty(), "recovery set holds no layers");
+        Ok(RecoverySet { batch, layers })
+    }
+
+    /// `<model>.recovery.json` next to the manifest.
+    pub fn sidecar_path(dir: &Path, model: &str) -> PathBuf {
+        dir.join(format!("{model}.recovery.json"))
+    }
+
+    /// Persist (write-to-temp + rename, like the manifest's guards key).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("publishing {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<RecoverySet> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        RecoverySet::from_json(&Json::parse(&text)?)
+    }
+}
+
+// ----------------------------------------------------------- block map --
+
+/// One dense layer's geometry in the flat weight buffer — the shape the
+/// solver understands. Derived from manifest [`Layer`]s (2-D shapes) or
+/// built directly by synthetic runners.
+#[derive(Clone, Debug)]
+pub struct DenseShape {
+    pub name: String,
+    /// Element offset into the flat int8 buffer.
+    pub offset: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// Dequantization scale: `w_f32 = w_i8 * scale`.
+    pub scale: f32,
+}
+
+impl DenseShape {
+    pub fn size(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Convert a manifest layer table into solver shapes. Layers whose
+/// shape is not 2-D are kept as placeholders with `rows = 0` — mapping
+/// a block into one yields [`RecoveryError::NotDense`] rather than a
+/// silent skip.
+pub fn dense_shapes(layers: &[Layer]) -> Vec<DenseShape> {
+    layers
+        .iter()
+        .map(|l| {
+            let (rows, cols) = match l.shape[..] {
+                [r, c] => (r, c),
+                _ => (0, l.size),
+            };
+            DenseShape {
+                name: l.name.clone(),
+                offset: l.offset,
+                rows,
+                cols,
+                scale: l.scale,
+            }
+        })
+        .collect()
+}
+
+// -------------------------------------------------------------- errors --
+
+/// Typed graceful-degradation signal: why a block could not be
+/// recovered. Callers quarantine, they do not panic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecoveryError {
+    /// No calibration record for the layer the block lives in.
+    NoCalibration(String),
+    /// The block maps into a layer the solver has no equation for.
+    NotDense(String),
+    /// More joint unknowns in one column than calibration rows.
+    Underdetermined {
+        layer: String,
+        col: usize,
+        unknowns: usize,
+        batch: usize,
+    },
+    /// The normal equations are rank-deficient (degenerate inputs).
+    Singular { layer: String, col: usize },
+    /// The recovered column does not reproduce the checkpointed `Y`.
+    VerifyFailed {
+        layer: String,
+        col: usize,
+        residual: f64,
+    },
+}
+
+impl std::fmt::Display for RecoveryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecoveryError::NoCalibration(l) => {
+                write!(f, "no recovery calibration for layer '{l}' (run `zsecc calibrate`)")
+            }
+            RecoveryError::NotDense(l) => {
+                write!(f, "layer '{l}' is not a dense matrix — no layer equation to solve")
+            }
+            RecoveryError::Underdetermined {
+                layer,
+                col,
+                unknowns,
+                batch,
+            } => write!(
+                f,
+                "layer '{layer}' column {col}: {unknowns} joint unknowns exceed the \
+                 {batch}-row calibration batch"
+            ),
+            RecoveryError::Singular { layer, col } => {
+                write!(f, "layer '{layer}' column {col}: normal equations are singular")
+            }
+            RecoveryError::VerifyFailed {
+                layer,
+                col,
+                residual,
+            } => write!(
+                f,
+                "layer '{layer}' column {col}: recovered weights miss the checkpointed \
+                 outputs (residual {residual:.3e})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RecoveryError {}
+
+// -------------------------------------------------------------- solver --
+
+/// One recovered block: the int8 weights to hand to
+/// [`crate::memory::ShardedBank::apply_recovery`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RecoveredBlock {
+    pub block: usize,
+    pub weights: Vec<i8>,
+}
+
+/// The recovery tier's answer: fully reconstructed blocks plus the
+/// typed quarantine list for everything it could not vouch for. Never
+/// a panic, never a partial block — a block is recovered only when
+/// *every* column system it touches solved and verified.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryOutcome {
+    /// Blocks whose every column solved and verified, in block order.
+    pub recovered: Vec<RecoveredBlock>,
+    /// Quarantined blocks, in block order, each with the first error
+    /// that implicated it. The caller keeps serving the stored bytes
+    /// for these and records them — graceful degradation, not a crash.
+    pub quarantined: Vec<(usize, RecoveryError)>,
+}
+
+/// Solve the layer equations for every implicated block.
+///
+/// * `weights` — the current decoded flat int8 buffer; entries outside
+///   the implicated blocks are trusted and move to the right-hand side.
+/// * `blocks` — detected-uncorrectable block indices (each covers
+///   `block_bytes` consecutive flat elements; every element of an
+///   implicated block is treated as unknown).
+///
+/// Unknowns are grouped by `(layer, column)` and solved *jointly*
+/// across blocks — two implicated blocks sharing a column become one
+/// system, not two inconsistent ones. Each recovered column is verified
+/// against the checkpointed `Y` before anything is accepted: a residual
+/// above the noise floor (a wrong solve is off by whole quantization
+/// steps) quarantines the column's blocks rather than handing back
+/// plausible garbage. Failures are *per column group*: silent
+/// corruption poisoning one column (e.g. flips the milr probe cannot
+/// see) quarantines only the blocks sharing that column — every other
+/// implicated block still recovers.
+pub fn recover_blocks(
+    set: &RecoverySet,
+    shapes: &[DenseShape],
+    weights: &[i8],
+    blocks: &[usize],
+    block_bytes: usize,
+) -> RecoveryOutcome {
+    let bb = block_bytes.max(1);
+    let mut blist: Vec<usize> = blocks.to_vec();
+    blist.sort_unstable();
+    blist.dedup();
+    // map blocks -> per-(layer, col) unknown row sets + member blocks
+    let mut unknown: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    let mut members: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    let mut failed: BTreeMap<usize, RecoveryError> = BTreeMap::new();
+    'blocks: for &b in &blist {
+        // map the whole block before committing any unknowns: a block
+        // that half-maps must not leave stray unknowns behind
+        let mut coords = Vec::with_capacity(bb);
+        for e in b * bb..(b + 1) * bb {
+            let li = shapes
+                .iter()
+                .position(|sh| e >= sh.offset && e < sh.offset + sh.size().max(1));
+            let li = match li {
+                Some(li) if shapes[li].rows > 0 => li,
+                Some(li) => {
+                    failed.insert(b, RecoveryError::NotDense(shapes[li].name.clone()));
+                    continue 'blocks;
+                }
+                None => {
+                    failed.insert(b, RecoveryError::NotDense(format!("element {e}")));
+                    continue 'blocks;
+                }
+            };
+            let el = e - shapes[li].offset;
+            coords.push((li, el / shapes[li].cols, el % shapes[li].cols));
+        }
+        for (li, row, col) in coords {
+            let rows = unknown.entry((li, col)).or_default();
+            if !rows.contains(&row) {
+                rows.push(row);
+            }
+            let mem = members.entry((li, col)).or_default();
+            if !mem.contains(&b) {
+                mem.push(b);
+            }
+        }
+    }
+    // recovered flat values, keyed by element index
+    let mut recovered: BTreeMap<usize, i8> = BTreeMap::new();
+    for ((li, col), mut rows) in unknown {
+        rows.sort_unstable();
+        match solve_column(set, &shapes[li], weights, &rows, col) {
+            Ok(vals) => recovered.extend(vals),
+            Err(e) => {
+                for &b in &members[&(li, col)] {
+                    failed.entry(b).or_insert_with(|| e.clone());
+                }
+            }
+        }
+    }
+    let mut out = RecoveryOutcome::default();
+    for b in blist {
+        match failed.remove(&b) {
+            Some(err) => out.quarantined.push((b, err)),
+            None => out.recovered.push(RecoveredBlock {
+                block: b,
+                weights: (b * bb..(b + 1) * bb)
+                    .map(|e| recovered.get(&e).copied().unwrap_or(weights[e]))
+                    .collect(),
+            }),
+        }
+    }
+    out
+}
+
+/// Solve one `(layer, column)` system: least squares over the
+/// calibration batch for the unknown `rows`, re-quantized to the WOT
+/// int8 grid and verified against the checkpointed `Y`. Returns the
+/// recovered `(flat element, value)` pairs, or the typed reason the
+/// column cannot be trusted.
+fn solve_column(
+    set: &RecoverySet,
+    sh: &DenseShape,
+    weights: &[i8],
+    rows: &[usize],
+    col: usize,
+) -> Result<Vec<(usize, i8)>, RecoveryError> {
+    let calib = set
+        .layer(&sh.name)
+        .ok_or_else(|| RecoveryError::NoCalibration(sh.name.clone()))?;
+    let k = rows.len();
+    let bsz = set.batch;
+    if bsz < k {
+        return Err(RecoveryError::Underdetermined {
+            layer: sh.name.clone(),
+            col,
+            unknowns: k,
+            batch: bsz,
+        });
+    }
+    let scale = f64::from(sh.scale);
+    // rhs_b = Y[b, col] - sum_{d not unknown} X[b, d] * w[d, col]
+    let mut a = vec![0f64; bsz * k]; // X restricted to unknown rows
+    let mut rhs = vec![0f64; bsz];
+    for b in 0..bsz {
+        let xr = &calib.x[b * calib.rows..(b + 1) * calib.rows];
+        let mut acc = f64::from(calib.y[b * calib.cols + col]);
+        let mut next = 0usize;
+        for (d, &xv) in xr.iter().enumerate() {
+            if next < k && rows[next] == d {
+                a[b * k + next] = f64::from(xv);
+                next += 1;
+            } else {
+                let w = f64::from(weights[sh.offset + d * sh.cols + col]) * scale;
+                acc -= f64::from(xv) * w;
+            }
+        }
+        rhs[b] = acc;
+    }
+    // normal equations M z = g
+    let mut m = vec![0f64; k * k];
+    let mut g = vec![0f64; k];
+    for b in 0..bsz {
+        for i in 0..k {
+            let ai = a[b * k + i];
+            g[i] += ai * rhs[b];
+            for j in 0..k {
+                m[i * k + j] += ai * a[b * k + j];
+            }
+        }
+    }
+    let z = solve_gauss(&mut m, &mut g, k).ok_or(RecoveryError::Singular {
+        layer: sh.name.clone(),
+        col,
+    })?;
+    // re-quantize onto the WOT int8 grid
+    let vals: Vec<(usize, i8)> = rows
+        .iter()
+        .zip(&z)
+        .map(|(&r, &zi)| {
+            let e = sh.offset + r * sh.cols + col;
+            let q = (zi / scale).round();
+            let (lo, hi) = if e % 8 == 7 { (-128.0, 127.0) } else { (-64.0, 63.0) };
+            (e, q.clamp(lo, hi) as i8)
+        })
+        .collect();
+    // verify: the recovered column must reproduce the checkpointed Y
+    // at the float noise floor — a wrong solve misses by whole
+    // quantization steps
+    let (mut res, mut mass) = (0f64, 0f64);
+    for b in 0..bsz {
+        let xr = &calib.x[b * calib.rows..(b + 1) * calib.rows];
+        let mut yhat = 0f64;
+        let mut next = 0usize;
+        for (d, &xv) in xr.iter().enumerate() {
+            let e = sh.offset + d * sh.cols + col;
+            let q = if next < k && rows[next] == d {
+                next += 1;
+                vals[next - 1].1
+            } else {
+                weights[e]
+            };
+            let w = f64::from(q) * scale;
+            yhat += f64::from(xv) * w;
+            mass += f64::from(xv).abs() * w.abs();
+        }
+        res += (yhat - f64::from(calib.y[b * calib.cols + col])).abs();
+    }
+    if res > 1e-3 * mass + 1e-6 {
+        return Err(RecoveryError::VerifyFailed {
+            layer: sh.name.clone(),
+            col,
+            residual: res,
+        });
+    }
+    Ok(vals)
+}
+
+/// Gaussian elimination with partial pivoting on `m` (k×k, row-major)
+/// and `g` (k); returns the solution or `None` on a (near-)singular
+/// pivot.
+fn solve_gauss(m: &mut [f64], g: &mut [f64], k: usize) -> Option<Vec<f64>> {
+    let scale = m
+        .iter()
+        .fold(0f64, |acc, &v| acc.max(v.abs()))
+        .max(f64::MIN_POSITIVE);
+    for p in 0..k {
+        let (mut best, mut mag) = (p, m[p * k + p].abs());
+        for r in p + 1..k {
+            if m[r * k + p].abs() > mag {
+                best = r;
+                mag = m[r * k + p].abs();
+            }
+        }
+        if mag <= 1e-12 * scale {
+            return None;
+        }
+        if best != p {
+            for c in 0..k {
+                m.swap(p * k + c, best * k + c);
+            }
+            g.swap(p, best);
+        }
+        let piv = m[p * k + p];
+        for r in p + 1..k {
+            let f = m[r * k + p] / piv;
+            if f == 0.0 {
+                continue;
+            }
+            for c in p..k {
+                m[r * k + c] -= f * m[p * k + c];
+            }
+            g[r] -= f * g[p];
+        }
+    }
+    let mut z = vec![0f64; k];
+    for p in (0..k).rev() {
+        let mut acc = g[p];
+        for c in p + 1..k {
+            acc -= m[p * k + c] * z[c];
+        }
+        z[p] = acc / m[p * k + p];
+    }
+    Some(z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::guard::DenseLayer;
+    use crate::util::rng::Rng;
+
+    /// A quantized dense model plus its exact calibration set: weights
+    /// on the WOT grid, X random, Y = X · (W * scale) in f32 — the same
+    /// arithmetic the serving forward pass uses.
+    fn synth(
+        rows: usize,
+        cols: usize,
+        batch: usize,
+        scale: f32,
+        seed: u64,
+    ) -> (Vec<i8>, DenseShape, RecoverySet) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<i8> = (0..rows * cols)
+            .map(|i| {
+                if i % 8 == 7 {
+                    (rng.below(256) as i64 - 128) as i8
+                } else {
+                    (rng.below(128) as i64 - 64) as i8
+                }
+            })
+            .collect();
+        let wf: Vec<f32> = w.iter().map(|&v| f32::from(v) * scale).collect();
+        let layer = DenseLayer::new(wf, rows, cols).unwrap();
+        let x: Vec<f32> = (0..batch * rows)
+            .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+            .collect();
+        let mut y = vec![0f32; batch * cols];
+        layer.matmul(&x, batch, &mut y);
+        let shape = DenseShape {
+            name: "w".into(),
+            offset: 0,
+            rows,
+            cols,
+            scale,
+        };
+        let set = RecoverySet {
+            batch,
+            layers: vec![LayerCalib {
+                name: "w".into(),
+                rows,
+                cols,
+                x,
+                y,
+            }],
+        };
+        (w, shape, set)
+    }
+
+    #[test]
+    fn recovers_a_corrupted_block_exactly() {
+        let (w, shape, set) = synth(16, 8, 32, 0.02, 5);
+        let mut bad = w.clone();
+        // block 3 = elements 24..32 = row 3 of the 16x8 matrix, trashed
+        for e in 24..32 {
+            bad[e] = bad[e].wrapping_add(37);
+        }
+        let out = recover_blocks(&set, &[shape], &bad, &[3], 8);
+        assert!(out.quarantined.is_empty());
+        let rec = out.recovered;
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].block, 3);
+        assert_eq!(rec[0].weights, w[24..32], "exact reconstruction");
+    }
+
+    #[test]
+    fn joint_recovery_of_blocks_sharing_columns() {
+        // 8-column rows: blocks 2 and 6 are rows 2 and 6 — every column
+        // has two joint unknowns, exercising the k=2 solve
+        let (w, shape, set) = synth(8, 8, 24, 0.05, 7);
+        let mut bad = w.clone();
+        for e in (2 * 8..3 * 8).chain(6 * 8..7 * 8) {
+            bad[e] ^= 0x55;
+        }
+        let out = recover_blocks(&set, &[shape], &bad, &[6, 2, 6], 8);
+        assert!(out.quarantined.is_empty());
+        let rec = out.recovered;
+        assert_eq!(rec.len(), 2, "deduped, sorted");
+        assert_eq!(rec[0].block, 2);
+        assert_eq!(rec[0].weights, w[16..24]);
+        assert_eq!(rec[1].weights, w[48..56]);
+    }
+
+    #[test]
+    fn ragged_blocks_span_rows_and_still_recover() {
+        // cols = 12: an 8-element block covers parts of two rows, so the
+        // per-column systems have one unknown each but the block map
+        // must split coordinates correctly
+        let (w, shape, set) = synth(6, 12, 16, 0.03, 9);
+        let mut bad = w.clone();
+        for e in 8..16 {
+            bad[e] = bad[e].wrapping_sub(19);
+        }
+        let out = recover_blocks(&set, &[shape], &bad, &[1], 8);
+        assert!(out.quarantined.is_empty());
+        assert_eq!(out.recovered[0].weights, w[8..16]);
+    }
+
+    #[test]
+    fn underdetermined_and_missing_calibration_are_typed() {
+        let (w, shape, mut set) = synth(16, 8, 2, 0.02, 11);
+        // batch 2 < 3 joint unknowns per column (blocks 0, 1, 2 = rows 0..3)
+        let out = recover_blocks(&set, &[shape.clone()], &w, &[0, 1, 2], 8);
+        assert!(out.recovered.is_empty());
+        assert_eq!(out.quarantined.len(), 3, "every implicated block quarantined");
+        assert!(
+            matches!(
+                out.quarantined[0].1,
+                RecoveryError::Underdetermined { unknowns: 3, batch: 2, .. }
+            ),
+            "{}",
+            out.quarantined[0].1
+        );
+        set.layers[0].name = "other".into();
+        let out = recover_blocks(&set, &[shape.clone()], &w, &[0], 8);
+        assert!(matches!(out.quarantined[..], [(0, RecoveryError::NoCalibration(_))]));
+        // a non-dense placeholder refuses with NotDense
+        let flat = DenseShape {
+            rows: 0,
+            ..shape
+        };
+        let out = recover_blocks(&set, &[flat], &w, &[0], 8);
+        assert!(matches!(out.quarantined[..], [(0, RecoveryError::NotDense(_))]));
+    }
+
+    #[test]
+    fn degenerate_inputs_are_singular_not_wrong() {
+        let (w, shape, mut set) = synth(8, 8, 16, 0.05, 13);
+        // zero out the calibration column for row 4: block 4's unknowns
+        // have no observable effect -> singular normal equations
+        for b in 0..16 {
+            set.layers[0].x[b * 8 + 4] = 0.0;
+        }
+        // recompute y to stay consistent with the zeroed inputs
+        let wf: Vec<f32> = w.iter().map(|&v| f32::from(v) * 0.05).collect();
+        let layer = DenseLayer::new(wf, 8, 8).unwrap();
+        let mut y = vec![0f32; 16 * 8];
+        layer.matmul(&set.layers[0].x, 16, &mut y);
+        set.layers[0].y = y;
+        let out = recover_blocks(&set, &[shape], &w, &[4], 8);
+        assert!(out.recovered.is_empty());
+        assert!(
+            matches!(out.quarantined[..], [(4, RecoveryError::Singular { .. })]),
+            "{:?}",
+            out.quarantined
+        );
+    }
+
+    #[test]
+    fn inconsistent_calibration_fails_verification() {
+        let (w, shape, mut set) = synth(16, 8, 32, 0.02, 15);
+        // poison the checkpointed outputs: the solve cannot reproduce
+        // them on the int8 grid and must refuse
+        for v in &mut set.layers[0].y {
+            *v += 1000.0 * (0.5 - (*v).signum() as f32 * 0.25);
+        }
+        // make the corruption non-affine so no exact solution exists
+        set.layers[0].y[3] *= -7.0;
+        let out = recover_blocks(&set, &[shape], &w, &[2], 8);
+        assert!(
+            out.recovered.is_empty(),
+            "poisoned Y must not yield a 'recovered' block: {out:?}"
+        );
+        assert!(matches!(
+            out.quarantined[..],
+            [(2, RecoveryError::VerifyFailed { .. })] | [(2, RecoveryError::Singular { .. })]
+        ));
+    }
+
+    #[test]
+    fn partial_failure_quarantines_only_the_implicated_blocks() {
+        // 16-column rows: block 0 covers row 0 / cols 0..8, block 5
+        // covers row 2 / cols 8..16 — disjoint column groups. Poisoning
+        // checkpointed column 3 must quarantine block 0 alone; block 5
+        // still recovers exactly.
+        let (w, shape, mut set) = synth(8, 16, 24, 0.02, 21);
+        let mut bad = w.clone();
+        for e in 0..8 {
+            bad[e] = bad[e].wrapping_add(23);
+        }
+        for e in 40..48 {
+            bad[e] = bad[e].wrapping_sub(17);
+        }
+        for b in 0..24 {
+            set.layers[0].y[b * 16 + 3] = -1e3;
+        }
+        let out = recover_blocks(&set, &[shape], &bad, &[0, 5], 8);
+        assert_eq!(out.recovered.len(), 1, "{:?}", out.quarantined);
+        assert_eq!(out.recovered[0].block, 5);
+        assert_eq!(out.recovered[0].weights, w[40..48], "exact reconstruction");
+        assert!(matches!(
+            out.quarantined[..],
+            [(0, RecoveryError::VerifyFailed { .. })]
+        ));
+    }
+
+    #[test]
+    fn recovery_set_json_roundtrips_via_sidecar() {
+        let (_, _, set) = synth(8, 8, 4, 0.05, 17);
+        let back = RecoverySet::from_json(&set.to_json()).unwrap();
+        assert_eq!(back, set);
+        let dir = std::env::temp_dir().join("zsecc_recovery_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = RecoverySet::sidecar_path(&dir, "m");
+        assert!(path.ends_with("m.recovery.json"));
+        set.save(&path).unwrap();
+        assert_eq!(RecoverySet::load(&path).unwrap(), set);
+    }
+
+    #[test]
+    fn capture_records_pre_relu_planes() {
+        let mut rng = Rng::new(19);
+        let w: Vec<f32> = (0..16 * 8 + 8 * 4).map(|_| (rng.f64() - 0.5) as f32).collect();
+        let model = DenseModel::from_flat(&w, &[(16, 8), (8, 4)]).unwrap();
+        let x: Vec<f32> = (0..3 * 16).map(|_| rng.f64() as f32).collect();
+        let set = RecoverySet::capture(&model, &["a".into(), "b".into()], &x, 3);
+        assert_eq!(set.batch, 3);
+        assert_eq!(set.layers[0].name, "a");
+        assert_eq!(set.layers[0].x, x);
+        // layer 1's input is ReLU(layer 0 pre-activation)
+        let relu: Vec<f32> = set.layers[0].y.iter().map(|v| v.max(0.0)).collect();
+        assert_eq!(set.layers[1].x, relu);
+        // y really is X · W (check one element in f64)
+        let mut want = 0f64;
+        for d in 0..16 {
+            want += f64::from(x[d]) * f64::from(w[d * 8]);
+        }
+        assert!((f64::from(set.layers[0].y[0]) - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dense_shapes_follow_the_manifest() {
+        let layers = vec![
+            Layer {
+                name: "a".into(),
+                shape: vec![4, 8],
+                offset: 0,
+                size: 32,
+                scale: 0.5,
+                scale_prewot: 0.5,
+            },
+            Layer {
+                name: "b".into(),
+                shape: vec![16],
+                offset: 32,
+                size: 16,
+                scale: 0.25,
+                scale_prewot: 0.25,
+            },
+        ];
+        let shapes = dense_shapes(&layers);
+        assert_eq!((shapes[0].rows, shapes[0].cols), (4, 8));
+        assert_eq!(shapes[0].offset, 0);
+        assert_eq!(shapes[1].rows, 0, "1-D layer is a NotDense placeholder");
+    }
+}

@@ -6,6 +6,7 @@ use std::path::PathBuf;
 
 use zsecc::harness::campaign::{self, Config, SyntheticRunner, TrialPolicy};
 use zsecc::memory::{FaultModel, FaultSite};
+use zsecc::model::RecoveryMode;
 use zsecc::runtime::GuardMode;
 use zsecc::util::json::Json;
 
@@ -21,6 +22,7 @@ fn base_cfg(ledger: Option<PathBuf>, jobs: usize) -> Config {
         fault_models: vec![FaultModel::Uniform, FaultModel::Burst { len: 2 }],
         sites: vec![FaultSite::Weights],
         guards: vec![GuardMode::Off],
+        recovery: vec![RecoveryMode::Off],
         policy: TrialPolicy::adaptive(3, 8, 0.05, 0.95),
         jobs,
         ledger,
@@ -188,6 +190,65 @@ fn compute_site_cells_checkpoint_resume_and_beat_unguarded() {
         oneshot.canonical_json().to_string(),
         "compute-site resume must be bit-identical to a one-shot run"
     );
+}
+
+/// The recovery axis rides the same grid/ledger machinery as guards:
+/// at equal injected faults (recovery modes are excluded from trial
+/// seeds), the milr cell reconstructs implicated blocks and lands at a
+/// strictly lower mean residual than its off sibling — and the axis is
+/// part of the resume fingerprint.
+#[test]
+fn recovery_axis_beats_off_at_equal_faults_and_fingerprints() {
+    let mk = |ledger: Option<PathBuf>| {
+        let mut cfg = base_cfg(ledger, 2);
+        cfg.strategies = vec!["milr".to_string()];
+        // ~3 flips per trial over 2048x8 stored bits: enough strikes
+        // for probe-visible detections, sparse enough that several
+        // trials leave the solver's trusted rows clean.
+        cfg.rates = vec![2e-4];
+        cfg.fault_models = vec![FaultModel::Uniform];
+        cfg.recovery = vec![RecoveryMode::Off, RecoveryMode::Milr];
+        cfg.policy = TrialPolicy::fixed(32);
+        cfg
+    };
+    let report = campaign::run(&mk(None), &runner()).unwrap();
+    assert!(report.complete);
+    assert_eq!(report.cells.len(), 2, "one off cell, one milr cell");
+    let cell = |mode: RecoveryMode| {
+        report
+            .cells
+            .iter()
+            .find(|c| c.spec.recovery == mode)
+            .unwrap()
+    };
+    let (off, on) = (cell(RecoveryMode::Off), cell(RecoveryMode::Milr));
+    assert_eq!(off.recovered, 0, "an unarmed tier never recovers");
+    assert_eq!(
+        off.detected, on.detected,
+        "equal fault sequences must implicate the same blocks"
+    );
+    assert!(
+        on.recovered > 0,
+        "32 trials at 2e-4 must reconstruct at least one block"
+    );
+    let mean = |c: &campaign::CellResult| c.drops.iter().sum::<f64>() / c.drops.len() as f64;
+    assert!(
+        mean(on) < mean(off),
+        "recovered blocks must strictly reduce the residual: {} vs {}",
+        mean(on),
+        mean(off)
+    );
+
+    // a ledger written for the swept axis refuses a grid without it
+    let ledger = temp_ledger("recovery_axis");
+    let mut cfg = mk(Some(ledger.clone()));
+    cfg.stop_after = Some(1);
+    campaign::run(&cfg, &runner()).unwrap();
+    let mut other = mk(Some(ledger));
+    other.recovery = vec![RecoveryMode::Off];
+    other.resume = true;
+    let err = campaign::run(&other, &runner()).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "unexpected error: {err}");
 }
 
 #[test]

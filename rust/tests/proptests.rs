@@ -373,6 +373,88 @@ fn prop_tiled_range_windows_equal_scalar_span() {
     });
 }
 
+#[test]
+fn prop_range_outcome_detected_sets_equal_scalar_reference() {
+    use zsecc::ecc::all_strategies_ext;
+    // The recovery tier trusts DecodeOutcome's block list to name its
+    // unknowns: for every strategy (milr's probe-only detection
+    // included — safe here because this property asserts nothing about
+    // correction), any fault mask, and ragged / tile-unaligned windows,
+    // decode_range_outcome and scrub_range_outcome must report exactly
+    // the ascending block set a per-block scalar decode of the same
+    // window finds, with stats and output identical to the plain forms.
+    check("range outcome detected set == scalar", 25, |rng, size| {
+        let nblocks = 2 + rng.below(2 * size as u64 + 80) as usize;
+        let w8 = wot_weights(rng, nblocks);
+        let w16 = ext_weights(rng, nblocks);
+        let seed = rng.next_u64();
+        let mut strategies = all_strategies_ext();
+        strategies.push(strategy_by_name("milr").unwrap());
+        for s in strategies {
+            let w: &[i8] = if s.name() == "bch16" { &w16 } else { &w8 };
+            let mut enc = s.encode(w).map_err(|e| e.to_string())?;
+            let mut mask_rng = Rng::new(seed);
+            random_fault_mask(&mut mask_rng, &mut enc);
+            let block = s.block_bytes().max(1);
+            let blocks_total = enc.data.len() / block;
+            let lo = rng.below(blocks_total as u64) as usize * block;
+            let span_blocks = (enc.data.len() - lo) / block;
+            let hi = (lo + block + rng.below(span_blocks as u64) as usize * block)
+                .min(enc.data.len());
+            // scalar reference: decode every block of the window alone
+            let mut want = Vec::new();
+            let mut k = lo;
+            while k < hi {
+                let ke = (k + block).min(hi);
+                let (os, oe) = s.oob_window(k, ke, enc.data.len(), enc.oob.len());
+                let mut out = vec![0i8; ke - k];
+                if s.decode_span(&enc.data[k..ke], &enc.oob[os..oe], &mut out).detected > 0 {
+                    want.push(k / block);
+                }
+                k = ke;
+            }
+            // decode window: same set, same stats/output as decode_range
+            let mut a = vec![0i8; hi - lo];
+            let mut b = vec![0i8; hi - lo];
+            let outc = s.decode_range_outcome(&enc, lo, hi, &mut a);
+            let stats = s.decode_range(&enc, lo, hi, &mut b);
+            if outc.detected_blocks != want {
+                return Err(format!(
+                    "{} [{lo},{hi}): decode outcome blocks {:?} != scalar {:?}",
+                    s.name(),
+                    outc.detected_blocks,
+                    want
+                ));
+            }
+            if outc.overflow {
+                return Err(format!("{}: window this small must not overflow", s.name()));
+            }
+            if outc.stats != stats || a != b {
+                return Err(format!("{} [{lo},{hi}): outcome decode diverged", s.name()));
+            }
+            // scrub window: block identities recorded during the pass
+            // (parity-zero heals its image, a post-scrub decode finds
+            // nothing), and the scrubbed image matches the plain form
+            let mut tiled = enc.clone();
+            let soutc = s.scrub_range_outcome(&mut tiled, lo, hi);
+            let mut plain = enc.clone();
+            let sstats = s.scrub_range(&mut plain, lo, hi);
+            if soutc.detected_blocks != want {
+                return Err(format!(
+                    "{} [{lo},{hi}): scrub outcome blocks {:?} != scalar {:?}",
+                    s.name(),
+                    soutc.detected_blocks,
+                    want
+                ));
+            }
+            if soutc.stats != sstats || tiled.data != plain.data || tiled.oob != plain.oob {
+                return Err(format!("{} [{lo},{hi}): outcome scrub diverged", s.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
 // --------------------------------------------------- shard equivalence --
 
 #[test]
