@@ -21,6 +21,10 @@
 //! fault rate, and the algebraic least-squares solve in µs per
 //! recovered block (eight blocks solved jointly on a dense head).
 //!
+//! The `fleet` section prices the process-wide scrub arbiter:
+//! `FleetArbitration::plan` per wakeup at N models × S shards with
+//! every shard due (worst-case demand width).
+//!
 //! `--json` appends one machine-readable record (for the BENCH_*.json
 //! trajectory) after the human-readable output; `--out FILE` appends
 //! the same record to FILE (the repo-root `BENCH_ecc.json` ledger is a
@@ -507,6 +511,51 @@ fn main() {
         (fixed, adaptive)
     };
 
+    // fleet arbitration: FleetArbitration::plan overhead per wakeup at
+    // N models x S shards with every shard due — the worst-case demand
+    // set, so deferral bookkeeping, the two-class sort, and the greedy
+    // fit all run at full width. Prices the arbiter a serving process
+    // pays per wakeup; ledger-only, not a regression gate.
+    let fleet_rows: Vec<(usize, usize, f64)> = {
+        use std::time::Duration;
+        use zsecc::memory::{FleetArbitration, SchedulerConfig, ScrubScheduler};
+        println!("== fleet: arbitration plan() per wakeup, all shards due ==");
+        let tick = Duration::from_secs(1);
+        let mut rows = Vec::new();
+        for &(nmodels, shards) in &[(2usize, 16usize), (8, 32), (16, 64)] {
+            let shard_bits = 32 * 1024u64;
+            // budget = half the due demand: both grant classes and the
+            // deficit books stay busy at every wakeup
+            let budget = (nmodels * shards) as u64 / 2 * shard_bits;
+            let mut fleet = FleetArbitration::new(Some(budget), 4);
+            let scheds: Vec<ScrubScheduler> = (0..nmodels)
+                .map(|_| {
+                    ScrubScheduler::new(
+                        SchedulerConfig::fixed(tick),
+                        &vec![shard_bits; shards],
+                        Duration::ZERO,
+                    )
+                })
+                .collect();
+            let slots: Vec<usize> = (0..nmodels).map(|_| fleet.register(shards)).collect();
+            let refs: Vec<(usize, &ScrubScheduler)> =
+                slots.iter().copied().zip(scheds.iter()).collect();
+            let now = tick * 2; // every deadline passed: all shards due
+            let r = bench(&format!("plan ({nmodels} models x {shards} shards)"), || {
+                let g = fleet.plan(std::hint::black_box(&refs), now);
+                std::hint::black_box(&g);
+            });
+            let due = (nmodels * shards) as f64;
+            println!(
+                "    -> {:.1} us/wakeup | {:.0} ns per due shard",
+                r.ns_per_iter / 1e3,
+                r.ns_per_iter / due
+            );
+            rows.push((nmodels, shards, r.ns_per_iter));
+        }
+        rows
+    };
+
     // compute-path guards: the guarded software executor's dense-head
     // forward under each guard mode vs the unguarded pass (same model,
     // same inputs, no faults — the steady-state serve cost), plus the
@@ -570,6 +619,7 @@ fn main() {
     // algebraic solve itself — µs per recovered block, eight blocks
     // solved jointly (8 unknowns per column system) on a dense head.
     let (milr_probe_gbps, milr_outcome_gbps, solve_us_per_block) = {
+        use zsecc::ecc::QuantGrid;
         use zsecc::model::{recover_blocks, DenseShape, RecoverySet};
         use zsecc::runtime::guard::DenseModel;
         let s = strategy_by_name("milr").unwrap();
@@ -615,7 +665,14 @@ fn main() {
         // for this batch size short of underdetermination
         let blocks: Vec<usize> = (0..8).map(|i| 2 * i).collect();
         let rs = bench("milr: recover_blocks (8 joint blocks)", || {
-            let o = recover_blocks(&set, &shapes, std::hint::black_box(&w8), &blocks, 8);
+            let o = recover_blocks(
+                &set,
+                &shapes,
+                std::hint::black_box(&w8),
+                &blocks,
+                8,
+                QuantGrid::WOT8,
+            );
             std::hint::black_box(&o);
         });
         let us = rs.ns_per_iter / 1e3 / blocks.len() as f64;
@@ -698,6 +755,23 @@ fn main() {
                             sched_adaptive.residual_uncorrectable
                                 < sched_fixed.residual_uncorrectable,
                         ),
+                    ),
+                ]),
+            ),
+            (
+                "fleet",
+                obj(vec![
+                    (
+                        "combos",
+                        arr(fleet_rows.iter().map(|&(m, sh, _)| s(&format!("{m}x{sh}")))),
+                    ),
+                    (
+                        "plan_us_per_wakeup",
+                        arr(fleet_rows.iter().map(|&(_, _, ns)| num(ns / 1e3))),
+                    ),
+                    (
+                        "ns_per_due_shard",
+                        arr(fleet_rows.iter().map(|&(m, sh, ns)| num(ns / (m * sh) as f64))),
                     ),
                 ]),
             ),

@@ -1,0 +1,494 @@
+//! Fleet scrub arbitration: one process-wide control loop scrubbing
+//! every registered model's protected weight store.
+//!
+//! Before this module each `Server` ran its own scrub thread at its own
+//! cadence; N co-hosted models meant N loops competing blindly for the
+//! same memory bandwidth and worker pool. The [`FleetArbiter`] replaces
+//! them with a single control thread that owns every model's
+//! [`ShardedBank`] + [`ScrubScheduler`] pair (a [`ScrubUnit`], enrolled
+//! by `Server::start_with_fleet`) and, each wakeup, asks the pure
+//! planner in [`crate::memory::scheduler`] which due shards — across
+//! all models — deserve the fleet's per-wakeup scrub budget:
+//!
+//! * due shards are ranked by Wilson-upper BER urgency
+//!   (`ber_upper x bits x lateness`), so a hot shard on model A
+//!   preempts a routine pass on idle model B;
+//! * a deferral counter per shard caps how long preemption can hold a
+//!   shard back ([`FleetConfig::starve_after`]) — overdue work is
+//!   eventually forced through regardless of ranking, giving every
+//!   shard a bounded wait;
+//! * denied work accrues into per-model [`ModelDeficit`] accounting,
+//!   published as the `fleet` gauge on each model's [`Metrics`] — a
+//!   growing deficit is the typed "this fleet is overcommitted"
+//!   degraded-mode signal, long before residual errors show up in
+//!   served predictions.
+//!
+//! A server without a shared arbiter gets a private fleet-of-one with
+//! no budget cap, which degenerates to exactly the old per-server scrub
+//! loop (every due shard granted every wakeup). The arbiter thread
+//! never holds an `Arc<FleetArbiter>` — only the inner shared state —
+//! so dropping the last handle can always stop and join it.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::{FleetGauge, Metrics};
+use super::server::{FlipBudget, WeightDelta, WeightUpdate};
+use crate::memory::{
+    pool, FaultModel, FleetArbitration, ModelDeficit, SchedulerConfig, ScrubScheduler, ShardedBank,
+};
+use crate::model::{recover_blocks, DenseShape, Layer, RecoverySet};
+
+/// How long the control thread parks when no model is enrolled (a poke
+/// from `enroll`/`wake`/`Drop` interrupts it immediately).
+const IDLE_PARK: Duration = Duration::from_secs(3600);
+
+/// Fleet-level scrub bandwidth policy.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Stored bits the whole fleet may scrub per wakeup; `None` grants
+    /// every due shard (the single-model legacy behavior). The
+    /// starvation bound needs the budget to fit the largest single
+    /// shard — a smaller budget can never grant that shard at all.
+    pub budget_bits: Option<u64>,
+    /// Wakeups a due shard may lose the urgency ranking before the
+    /// arbiter force-grants it (clamped to >= 1).
+    pub starve_after: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            budget_bits: None,
+            starve_after: 4,
+        }
+    }
+}
+
+/// Everything the fleet control loop needs to scrub one model: the
+/// protected store, its refresh plumbing toward the inference thread,
+/// fault-injection knobs and the recovery tier. Built by
+/// `Server::start_with_fleet`, moved into the arbiter at enrollment.
+pub(crate) struct ScrubUnit {
+    /// Operator-facing lane name (the model name under `start_pjrt`).
+    pub(crate) label: String,
+    pub(crate) bank: ShardedBank,
+    pub(crate) layers: Vec<Layer>,
+    pub(crate) metrics: Arc<Metrics>,
+    /// Refresh channel toward this model's inference thread.
+    pub(crate) weights_tx: std::sync::mpsc::Sender<WeightUpdate>,
+    /// Applied f32 buffers coming back for the scratch arena.
+    pub(crate) give_rx: std::sync::mpsc::Receiver<Vec<f32>>,
+    /// Expected flips per stored bit per `interval` (0 = no injection).
+    pub(crate) rate: f64,
+    pub(crate) seed: u64,
+    /// Base scrub interval (rate scaling + scheduler hot clamp).
+    pub(crate) interval: Duration,
+    pub(crate) sched_cfg: SchedulerConfig,
+    /// MILR escalation context; `None` leaves uncorrectables as stored.
+    pub(crate) recovery: Option<Arc<(RecoverySet, Vec<DenseShape>)>>,
+    /// Set by `Server::shutdown`; the arbiter drops the unit (bank,
+    /// channels and all) at its next wakeup.
+    pub(crate) stop: Arc<AtomicBool>,
+}
+
+/// One enrolled model's runtime state inside the control loop.
+struct Lane {
+    /// Slot in the [`FleetArbitration`] deferral/deficit tables.
+    slot: usize,
+    unit: ScrubUnit,
+    sched: ScrubScheduler,
+    budget: FlipBudget,
+    epoch: u64,
+    last_wake: Duration,
+    /// Blocks whose recovery already failed and which are still
+    /// detected: bch16/milr scrubs re-detect an uncorrectable block
+    /// every pass, and without this set every pass would re-run the
+    /// same doomed algebraic solve. Entries leave when a scrub of
+    /// their shard stops reporting them (healed or rewritten).
+    quarantine: BTreeSet<usize>,
+}
+
+/// Per-model lane view inside a [`FleetSnapshot`].
+#[derive(Clone, Debug, Default)]
+pub struct ModelLane {
+    pub label: String,
+    pub shards: usize,
+    pub deficit: ModelDeficit,
+}
+
+/// Point-in-time view of the whole fleet, refreshed after every arbiter
+/// wakeup; the router folds it into its merged report.
+#[derive(Clone, Debug, Default)]
+pub struct FleetSnapshot {
+    /// `None` = unbounded (every due shard granted).
+    pub budget_bits: Option<u64>,
+    pub starve_after: u32,
+    pub wakeups: u64,
+    pub models: Vec<ModelLane>,
+}
+
+impl FleetSnapshot {
+    /// True when any lane was denied scrub work on the latest wakeup.
+    pub fn degraded(&self) -> bool {
+        self.models.iter().any(|m| m.deficit.last_deficit_bits > 0)
+    }
+}
+
+#[derive(Default)]
+struct SharedState {
+    /// Units enrolled but not yet adopted by the control thread.
+    pending: Vec<ScrubUnit>,
+    stopped: bool,
+    /// Wake request (enrollment, shutdown of a member, external poke).
+    poke: bool,
+    snapshot: FleetSnapshot,
+}
+
+struct FleetShared {
+    cfg: FleetConfig,
+    state: Mutex<SharedState>,
+    cv: Condvar,
+}
+
+impl FleetShared {
+    /// Set `f` on the state and wake the control thread.
+    fn poke_with(&self, f: impl FnOnce(&mut SharedState)) {
+        let mut st = self.state.lock().unwrap();
+        f(&mut st);
+        st.poke = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Handle to the process-wide scrub control loop. Clone the `Arc` into
+/// every `Server::start_with_fleet` call that should share the budget;
+/// dropping the last handle stops and joins the control thread (each
+/// enrolled unit is dropped with it, releasing its bank).
+pub struct FleetArbiter {
+    shared: Arc<FleetShared>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl FleetArbiter {
+    /// Spawn the control thread (idle-parked until the first
+    /// enrollment).
+    pub fn new(cfg: FleetConfig) -> anyhow::Result<FleetArbiter> {
+        let cfg = FleetConfig {
+            budget_bits: cfg.budget_bits,
+            starve_after: cfg.starve_after.max(1),
+        };
+        let shared = Arc::new(FleetShared {
+            cfg,
+            state: Mutex::new(SharedState {
+                snapshot: FleetSnapshot {
+                    budget_bits: cfg.budget_bits,
+                    starve_after: cfg.starve_after,
+                    ..FleetSnapshot::default()
+                },
+                ..SharedState::default()
+            }),
+            cv: Condvar::new(),
+        });
+        let inner = shared.clone();
+        let thread = std::thread::Builder::new()
+            .name("zsecc-fleet".into())
+            .spawn(move || control_loop(&inner))?;
+        Ok(FleetArbiter {
+            shared,
+            thread: Mutex::new(Some(thread)),
+        })
+    }
+
+    pub fn config(&self) -> FleetConfig {
+        self.shared.cfg
+    }
+
+    /// Hand a model's scrub state to the control loop (adopted at the
+    /// next wakeup, which this call triggers immediately).
+    pub(crate) fn enroll(&self, unit: ScrubUnit) {
+        self.shared.poke_with(|st| st.pending.push(unit));
+    }
+
+    /// Wake the control thread out of its park (used by
+    /// `Server::shutdown` after setting a unit's stop flag, so the
+    /// retiring model's bank is released promptly).
+    pub fn wake(&self) {
+        self.shared.poke_with(|_| {});
+    }
+
+    /// Latest fleet snapshot (empty `models` before the first wakeup
+    /// that saw an enrolled unit).
+    pub fn snapshot(&self) -> FleetSnapshot {
+        self.shared.state.lock().unwrap().snapshot.clone()
+    }
+}
+
+impl Drop for FleetArbiter {
+    fn drop(&mut self) {
+        self.shared.poke_with(|st| st.stopped = true);
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The control loop: park until the earliest shard deadline across
+/// every lane (or a poke), adopt/retire lanes, inject each lane's
+/// environmental faults, let the [`FleetArbitration`] planner pick the
+/// wakeup's grants, then scrub / escalate / refresh each granted lane
+/// exactly as the old per-server loop did.
+fn control_loop(shared: &FleetShared) {
+    let t0 = Instant::now();
+    let mut fleet = FleetArbitration::new(shared.cfg.budget_bits, shared.cfg.starve_after);
+    let mut lanes: Vec<Lane> = Vec::new();
+    loop {
+        let sleep = lanes
+            .iter()
+            .map(|l| l.sched.next_deadline())
+            .min()
+            .map(|d| d.saturating_sub(t0.elapsed()))
+            .unwrap_or(IDLE_PARK);
+        let fresh: Vec<ScrubUnit> = {
+            let mut st = shared.state.lock().unwrap();
+            let deadline = Instant::now() + sleep;
+            while !st.stopped && !st.poke {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _) = shared.cv.wait_timeout(st, deadline - now).unwrap();
+                st = g;
+            }
+            if st.stopped {
+                return;
+            }
+            st.poke = false;
+            st.pending.drain(..).collect()
+        };
+        for unit in fresh {
+            // Registration-relative start: every shard of the new lane
+            // is due immediately, and its deadlines live on the same
+            // arbiter clock as everyone else's.
+            let now = t0.elapsed();
+            let nshards = unit.bank.num_shards();
+            let shard_bits: Vec<u64> = (0..nshards).map(|i| unit.bank.shard_bits(i)).collect();
+            let sched = ScrubScheduler::new(unit.sched_cfg, &shard_bits, now);
+            let slot = fleet.register(nshards);
+            lanes.push(Lane {
+                slot,
+                unit,
+                sched,
+                budget: FlipBudget::default(),
+                epoch: 0,
+                last_wake: now,
+                quarantine: BTreeSet::new(),
+            });
+        }
+        // A retiring lane's Server set its stop flag: dropping the lane
+        // releases the bank and closes the refresh channel.
+        lanes.retain(|l| !l.unit.stop.load(Ordering::Acquire));
+        if lanes.is_empty() {
+            shared.state.lock().unwrap().snapshot.models.clear();
+            continue;
+        }
+        let now = t0.elapsed();
+        for l in &mut lanes {
+            inject_faults(l, now);
+            l.last_wake = now;
+        }
+        let grants = {
+            let refs: Vec<(usize, &ScrubScheduler)> =
+                lanes.iter().map(|l| (l.slot, &l.sched)).collect();
+            fleet.plan(&refs, now)
+        };
+        for l in &mut lanes {
+            let due: Vec<usize> = grants
+                .iter()
+                .filter(|g| g.model == l.slot)
+                .map(|g| g.shard)
+                .collect();
+            scrub_lane(l, &due, now);
+        }
+        publish(shared, &fleet, &lanes);
+    }
+}
+
+/// Drain the lane's arena give-backs and apply its fault pressure for
+/// the elapsed wall clock (identical semantics to the old per-server
+/// loop: rate is "per base interval", scaled by time since the lane's
+/// last wakeup, fractional expectations carried in [`FlipBudget`]).
+fn inject_faults(l: &mut Lane, now: Duration) {
+    while let Ok(buf) = l.unit.give_rx.try_recv() {
+        pool::give(buf);
+    }
+    if l.unit.rate <= 0.0 {
+        return;
+    }
+    let scale = if l.unit.interval > Duration::ZERO {
+        (now - l.last_wake).as_secs_f64() / l.unit.interval.as_secs_f64()
+    } else {
+        1.0
+    };
+    let bits = l.unit.bank.total_bits();
+    let whole = l.budget.take(bits, l.unit.rate, scale);
+    if whole > 0 {
+        // adjusted rate injects exactly `whole` flips
+        let n = l.unit.bank.inject(
+            FaultModel::Uniform,
+            whole as f64 / bits as f64,
+            l.unit.seed ^ l.epoch,
+        );
+        l.unit.metrics.faults_injected.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Scrub the granted shards of one lane, escalate its uncorrectables,
+/// and ship its weight refreshes — the body of the old per-server scrub
+/// wakeup, now driven by the arbiter's grant list instead of the lane's
+/// own due list.
+fn scrub_lane(l: &mut Lane, due: &[usize], now: Duration) {
+    let m = &l.unit.metrics;
+    let sb = &mut l.unit.bank;
+    let nshards = sb.num_shards();
+    // the recovery tier needs block identities, so an armed lane scrubs
+    // through the outcome API
+    let per_shard: Vec<(usize, crate::ecc::DecodeStats)> = if l.unit.recovery.is_some() {
+        sb.scrub_subset_outcome(due)
+            .into_iter()
+            .map(|(i, o)| (i, o.stats))
+            .collect()
+    } else {
+        sb.scrub_subset(due)
+    };
+    let mut stats = crate::ecc::DecodeStats::default();
+    for &(i, s) in &per_shard {
+        stats.add(&s);
+        l.sched.record_pass(i, &s, now);
+        m.record_shard_scrub(i, &s);
+    }
+    m.corrected.fetch_add(stats.corrected, Ordering::Relaxed);
+    m.detected.fetch_add(stats.detected, Ordering::Relaxed);
+    m.scrubs.fetch_add(1, Ordering::Relaxed);
+    m.set_shard_schedules((0..nshards).map(|i| l.sched.snapshot(i, now)).collect());
+    // Escalate detected-uncorrectable blocks to the recovery tier
+    // before shipping refreshes, so a recovered block (its shard goes
+    // dirty) is re-served clean this same wakeup. Failures quarantine —
+    // never a panic — and the quarantine set dedupes them out of later
+    // escalations: a block whose solve failed once is not re-solved
+    // every pass while nothing about it changed.
+    if let Some(ctx) = &l.unit.recovery {
+        let (blocks, _overflow) = sb.take_detected();
+        let detected: BTreeSet<usize> = blocks.into_iter().collect();
+        // A quarantined block heals when a scrub of its shard stops
+        // detecting it (corrected, rewritten, or re-randomized into a
+        // valid codeword). Prune only within the shards scrubbed this
+        // wakeup: an unscrubbed shard reported nothing, and absence
+        // there means stale information, not health.
+        let bb = sb.strategy().block_bytes();
+        for &i in due {
+            let (s, e) = sb.shard_range(i);
+            let (bs, be) = (s / bb, e.div_ceil(bb));
+            l.quarantine
+                .retain(|&b| !(bs..be).contains(&b) || detected.contains(&b));
+        }
+        let fresh = detected.iter().any(|b| !l.quarantine.contains(b));
+        if fresh {
+            let t_rec = Instant::now();
+            let (calib, shapes) = &**ctx;
+            // the whole detected set goes to the solver — a fresh block
+            // can share columns with a quarantined one, and the joint
+            // solve may now succeed where the lone one failed
+            let batch: Vec<usize> = detected.iter().copied().collect();
+            m.recovery_solve_attempts
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            // current plaintext view: trusted rows feed the solver as
+            // truth, implicated rows are the unknowns
+            let mut decoded = pool::lease_i8(sb.n_weights());
+            sb.read(&mut decoded);
+            let grid = sb.strategy().quant_grid();
+            // the solve runs on the process-wide pool
+            let outcome = pool::run_jobs(vec![batch], 1, |b| {
+                recover_blocks(calib, shapes, &decoded, &b, bb, grid)
+            })
+            .pop()
+            .expect("one recovery job in, one outcome out");
+            let mut recovered = Vec::with_capacity(outcome.recovered.len());
+            let mut quarantined: Vec<usize> =
+                outcome.quarantined.iter().map(|(b, _)| *b).collect();
+            for rb in &outcome.recovered {
+                match sb.apply_recovery(rb.block, &rb.weights) {
+                    Ok(()) => recovered.push(rb.block),
+                    Err(_) => quarantined.push(rb.block),
+                }
+            }
+            for b in &recovered {
+                l.quarantine.remove(b);
+            }
+            l.quarantine.extend(quarantined.iter().copied());
+            m.record_recovery(&recovered, &quarantined, t_rec.elapsed().as_secs_f64() * 1e6);
+        }
+    }
+    let dirty = sb.take_dirty();
+    l.epoch += 1;
+    if dirty.is_empty() {
+        return; // nothing decoded, nothing sent
+    }
+    let update = if dirty.len() == nshards {
+        // Whole image dirty: one full buffer beats nshards deltas.
+        // Fused decode → dequant over the worker pool into an arena
+        // buffer.
+        let mut w = pool::lease_f32(sb.n_weights());
+        sb.decode_dequant_all(&l.unit.layers, &mut w);
+        m.full_refreshes.fetch_add(1, Ordering::Relaxed);
+        WeightUpdate::Full(w.take())
+    } else {
+        let mut scratch = pool::lease_i8(0);
+        let mut deltas = Vec::with_capacity(dirty.len());
+        for i in dirty {
+            let (s, e) = sb.shard_range(i);
+            let mut values = pool::lease_f32(e - s);
+            sb.decode_dequant_shard(i, &l.unit.layers, &mut scratch, &mut values);
+            m.record_shard_refresh(i);
+            deltas.push(WeightDelta {
+                offset: s,
+                values: values.take(),
+            });
+        }
+        WeightUpdate::Deltas(deltas)
+    };
+    if l.unit.weights_tx.send(update).is_err() {
+        // inference thread gone: retire the lane at the next wakeup
+        l.unit.stop.store(true, Ordering::Release);
+    }
+}
+
+/// Refresh every lane's `fleet` gauge and the shared snapshot.
+fn publish(shared: &FleetShared, fleet: &FleetArbitration, lanes: &[Lane]) {
+    let budget_gauge = shared.cfg.budget_bits.unwrap_or(0);
+    let mut snap = FleetSnapshot {
+        budget_bits: shared.cfg.budget_bits,
+        starve_after: fleet.starve_after(),
+        wakeups: fleet.wakeups(),
+        models: Vec::with_capacity(lanes.len()),
+    };
+    for l in lanes {
+        let d = fleet.deficit(l.slot);
+        l.unit.metrics.set_fleet(FleetGauge {
+            budget_bits: budget_gauge,
+            deficit_bits: d.deficit_bits,
+            last_deficit_bits: d.last_deficit_bits,
+            starved_grants: d.starved_grants,
+            wakeups: fleet.wakeups(),
+        });
+        snap.models.push(ModelLane {
+            label: l.unit.label.clone(),
+            shards: l.unit.bank.num_shards(),
+            deficit: d,
+        });
+    }
+    shared.state.lock().unwrap().snapshot = snap;
+}

@@ -11,6 +11,38 @@ use crate::util::stats::Series;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// Fleet-arbiter gauges for one model lane, published after every
+/// arbiter wakeup. `budget_bits == 0` means the fleet is unbounded
+/// (every due shard is granted, deficits stay zero).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetGauge {
+    /// Fleet-wide scrub budget per wakeup, in stored bits (0 = unbounded).
+    pub budget_bits: u64,
+    /// Cumulative bits of due-but-denied scrub work for this model —
+    /// the residual-error budget deficit. Monotone growth means the
+    /// fleet is overcommitted: this model's shards are being scrubbed
+    /// later than its `target_residual` asks for.
+    pub deficit_bits: u64,
+    /// Bits denied on the most recent wakeup alone. Nonzero here is the
+    /// degraded-mode signal; zero with a large `deficit_bits` means the
+    /// overload was transient and has cleared.
+    pub last_deficit_bits: u64,
+    /// Grants this model received via the starvation guarantee rather
+    /// than by urgency ranking — how often it only got bandwidth
+    /// because the arbiter forced fairness.
+    pub starved_grants: u64,
+    /// Fleet arbiter wakeups observed so far (shared across models).
+    pub wakeups: u64,
+}
+
+impl FleetGauge {
+    /// True when the most recent wakeup denied scrub work to this
+    /// model — the operator-facing degraded-mode predicate.
+    pub fn degraded(&self) -> bool {
+        self.last_deficit_bits > 0
+    }
+}
+
 /// Per-shard counter snapshot (scrub loop + refresh channel activity).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ShardCounters {
@@ -57,6 +89,12 @@ pub struct Metrics {
     /// Blocks recovery gave up on — quarantined, served as decoded until
     /// a later scrub or refresh clears them.
     pub quarantined_blocks: AtomicU64,
+    /// Blocks submitted to the algebraic solver, across all escalations.
+    /// The scrub loop dedupes against the quarantine set, so a block
+    /// whose recovery failed once is not re-solved every pass — this
+    /// counter staying flat while the block stays detected is the
+    /// regression signal that dedupe works.
+    pub recovery_solve_attempts: AtomicU64,
     latency_us: Mutex<Series>,
     /// Wall-clock cost of each recovery escalation (solve + re-encode +
     /// write-back for one batch of implicated blocks).
@@ -81,6 +119,10 @@ pub struct Metrics {
     /// interval, deadline headroom, cumulative overdue passes. Written
     /// wholesale by the scrub loop after each wakeup.
     sched: Mutex<Vec<ShardSchedule>>,
+    /// Fleet-arbiter lane gauges for this model; `None` until the fleet
+    /// control loop's first wakeup (or forever, when the server runs
+    /// without a scrub loop).
+    fleet: Mutex<Option<FleetGauge>>,
 }
 
 impl Metrics {
@@ -207,6 +249,17 @@ impl Metrics {
         self.sched.lock().unwrap().clone()
     }
 
+    /// Publish this model's fleet-arbiter lane gauges (done by the
+    /// fleet control loop after every wakeup).
+    pub fn set_fleet(&self, gauge: FleetGauge) {
+        *self.fleet.lock().unwrap() = Some(gauge);
+    }
+
+    /// Latest fleet lane gauges; `None` before the first fleet wakeup.
+    pub fn fleet(&self) -> Option<FleetGauge> {
+        *self.fleet.lock().unwrap()
+    }
+
     pub fn report(&self) -> String {
         let (mean, p50, p99, n) = self.latency_summary();
         let mut s = format!(
@@ -247,6 +300,17 @@ impl Metrics {
                     shown.join(", ")
                 ));
             }
+        }
+        if let Some(f) = self.fleet() {
+            s.push_str(&format!(
+                "\n  fleet mode={} budget_bits={} deficit_bits={} last_deficit={} starved_grants={} wakeups={}",
+                if f.degraded() { "degraded" } else { "ok" },
+                f.budget_bits,
+                f.deficit_bits,
+                f.last_deficit_bits,
+                f.starved_grants,
+                f.wakeups,
+            ));
         }
         if let Some(g) = self.guard_snapshot() {
             s.push_str(&format!(
@@ -534,6 +598,37 @@ mod tests {
         // a later escalation that recovers a quarantined block clears it
         m.record_recovery(&[9], &[], 100.0);
         assert_eq!(m.quarantined(), vec![4]);
+    }
+
+    #[test]
+    fn fleet_gauges_attach_and_render_degraded_mode() {
+        let m = Metrics::new();
+        assert!(m.fleet().is_none(), "no fleet gauges before first wakeup");
+        assert!(!m.report().contains("fleet"), "{}", m.report());
+        let healthy = FleetGauge {
+            budget_bits: 4096,
+            deficit_bits: 512,
+            last_deficit_bits: 0,
+            starved_grants: 1,
+            wakeups: 10,
+        };
+        assert!(!healthy.degraded(), "stale deficit alone is not degraded");
+        m.set_fleet(healthy);
+        assert_eq!(m.fleet(), Some(healthy));
+        let report = m.report();
+        assert!(report.contains("fleet mode=ok budget_bits=4096"), "{report}");
+        // an overcommitted wakeup flips the lane to degraded
+        m.set_fleet(FleetGauge {
+            budget_bits: 4096,
+            deficit_bits: 1536,
+            last_deficit_bits: 1024,
+            starved_grants: 1,
+            wakeups: 11,
+        });
+        let report = m.report();
+        assert!(report.contains("fleet mode=degraded"), "{report}");
+        assert!(report.contains("deficit_bits=1536"), "{report}");
+        assert!(report.contains("last_deficit=1024"), "{report}");
     }
 
     #[test]

@@ -10,10 +10,14 @@
 //!                               or Mutex+Condvar queue    (Locked) ]
 //!                                  --sealed batches--> inference thread
 //!                                                      (owns PJRT: !Send)
-//!   scrub thread --(WeightUpdate: full | dirty-shard deltas)--> inference
-//!        |                                                thread (rebind)
-//!        `-- owns the ShardedBank: fault injection + parallel per-shard
-//!            scrub on a scoped worker pool + dirty tracking
+//!   fleet arbiter --(WeightUpdate: full | dirty-shard deltas)--> inference
+//!        |                                                 thread (rebind)
+//!        `-- one process-wide control loop ([`fleet`]) owning every
+//!            enrolled model's ShardedBank + ScrubScheduler: fault
+//!            injection, cross-model urgency ranking of due shards
+//!            under one scrub budget (starvation-bounded, per-model
+//!            deficit accounting), parallel per-shard scrub on a scoped
+//!            worker pool, dirty tracking, MILR escalation
 //! ```
 //!
 //! Under the ring front door producers CAS-reserve a slot and write
@@ -31,16 +35,18 @@
 //! deltas; a full buffer crosses only when every shard is dirty.
 
 pub mod batcher;
+pub mod fleet;
 pub mod ingress;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batcher, BatchPolicy, Request, Response};
+pub use fleet::{FleetArbiter, FleetConfig, FleetSnapshot, ModelLane};
 pub use ingress::{
     Ingress, IngressPolicy, IngressRing, IngressSnapshot, IngressStats, PushError, RingConfig,
     SealCause, SealedBatch,
 };
-pub use metrics::{Metrics, ShardCounters};
+pub use metrics::{FleetGauge, Metrics, ShardCounters};
 pub use router::Router;
 pub use server::{BatchExec, Server, ServerConfig, WeightDelta, WeightUpdate};

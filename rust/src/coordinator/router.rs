@@ -1,11 +1,15 @@
 //! Multi-model request router: name -> `Server` dispatch plus shared
-//! admission control (a global in-flight cap provides backpressure).
+//! admission control (a global in-flight cap provides backpressure)
+//! and, when the models share a [`FleetArbiter`], the merged
+//! fleet-level operator report.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 
 use super::batcher::Response;
+use super::fleet::FleetArbiter;
 use super::ingress::PushError;
 use super::server::Server;
 
@@ -20,6 +24,10 @@ pub struct Router {
     /// router's own cap, visible separately so operators can tell
     /// "router cap too low" from "model ring too shallow".
     pub shed: AtomicU64,
+    /// The fleet arbiter shared by this router's models, when they run
+    /// under one ([`Router::attach_fleet`]); folded into
+    /// [`Router::fleet_report`].
+    fleet: Option<Arc<FleetArbiter>>,
 }
 
 impl Router {
@@ -30,6 +38,7 @@ impl Router {
             max_inflight,
             rejected: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            fleet: None,
         }
     }
 
@@ -43,6 +52,52 @@ impl Router {
 
     pub fn server(&self, name: &str) -> Option<&Server> {
         self.servers.get(name)
+    }
+
+    /// Attach the fleet arbiter this router's models were started with
+    /// (`Server::start_with_fleet`), so `fleet_report` can lead with
+    /// the cross-model arbitration state.
+    pub fn attach_fleet(&mut self, fleet: Arc<FleetArbiter>) {
+        self.fleet = Some(fleet);
+    }
+
+    pub fn fleet(&self) -> Option<&Arc<FleetArbiter>> {
+        self.fleet.as_ref()
+    }
+
+    /// Merged operator report: the fleet arbitration snapshot (budget,
+    /// wakeups, per-lane deficits — `mode=degraded` the moment any lane
+    /// was denied scrub work on the latest wakeup), then every model's
+    /// own metrics report.
+    pub fn fleet_report(&self) -> String {
+        let mut s = String::new();
+        if let Some(fleet) = &self.fleet {
+            let snap = fleet.snapshot();
+            s.push_str(&format!(
+                "fleet mode={} budget_bits={} starve_after={} wakeups={} models={}",
+                if snap.degraded() { "degraded" } else { "ok" },
+                snap.budget_bits
+                    .map_or_else(|| "unbounded".into(), |b| b.to_string()),
+                snap.starve_after,
+                snap.wakeups,
+                snap.models.len(),
+            ));
+            for lane in &snap.models {
+                s.push_str(&format!(
+                    "\n  lane {} shards={} deficit_bits={} last_deficit={} starved_grants={}",
+                    lane.label,
+                    lane.shards,
+                    lane.deficit.deficit_bits,
+                    lane.deficit.last_deficit_bits,
+                    lane.deficit.starved_grants,
+                ));
+            }
+            s.push('\n');
+        }
+        for (name, srv) in &self.servers {
+            s.push_str(&format!("model {name}\n{}\n", srv.metrics.report()));
+        }
+        s
     }
 
     /// Admission-controlled submit. `Ticket` decrements the in-flight
@@ -251,5 +306,111 @@ mod tests {
         }
         assert_eq!(router.in_flight(), 0);
         router.shutdown();
+    }
+
+    /// An overcommitted fleet (two models, scrub budget = one shard per
+    /// wakeup) must surface nonzero per-model deficit gauges and flip
+    /// the merged router report to degraded mode — the typed signal
+    /// that residual-error budgets are not being honored.
+    #[test]
+    fn overcommitted_fleet_reports_per_model_deficit() {
+        use crate::coordinator::fleet::{FleetArbiter, FleetConfig};
+        use crate::ecc::strategy_by_name;
+        use crate::memory::ShardedBank;
+
+        fn scrubbed_server(fleet: &Arc<FleetArbiter>, label: &str) -> Server {
+            let n = 256;
+            let w: Vec<i8> = (0..n).map(|i| (i % 50) as i8 - 25).collect();
+            let bank =
+                ShardedBank::new(strategy_by_name("in-place").unwrap(), &w, 4, 2).unwrap();
+            let layers = vec![crate::model::Layer {
+                name: "a".into(),
+                shape: vec![n],
+                offset: 0,
+                size: n,
+                scale: 1.0,
+                scale_prewot: 1.0,
+            }];
+            let cfg = ServerConfig {
+                strategy: "in-place".into(),
+                policy: BatchPolicy {
+                    max_batch: 2,
+                    max_wait: Duration::from_millis(1),
+                },
+                scrub_interval: Some(Duration::from_millis(2)),
+                fleet_label: label.into(),
+                ..ServerConfig::default()
+            };
+            Server::start_with_fleet(
+                || Ok(Box::new(Echo { dim: 1 }) as Box<dyn BatchExec>),
+                1,
+                &cfg,
+                Some((bank, layers)),
+                Some(fleet.clone()),
+            )
+            .unwrap()
+        }
+
+        // 4 shards x 64 in-place bytes = 512 stored bits per shard; the
+        // fixed 2ms policy keeps all 8 shards (2 models) due every
+        // wakeup, so a one-shard budget denies 7 of them each time.
+        let fleet = Arc::new(
+            FleetArbiter::new(FleetConfig {
+                budget_bits: Some(512),
+                starve_after: 2,
+            })
+            .unwrap(),
+        );
+        let a = scrubbed_server(&fleet, "alpha");
+        let b = scrubbed_server(&fleet, "beta");
+        let (ma, mb) = (a.metrics.clone(), b.metrics.clone());
+        let mut router = Router::new(64);
+        router.add("alpha", a);
+        router.add("beta", b);
+        router.attach_fleet(fleet.clone());
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let both = [&ma, &mb].iter().all(|m| {
+                m.fleet()
+                    .is_some_and(|g| g.deficit_bits > 0 && g.budget_bits == 512)
+            });
+            if both {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "fleet gauges never showed a deficit: alpha={:?} beta={:?}",
+                ma.fleet(),
+                mb.fleet(),
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // per-server reports carry the lane gauge...
+        assert!(ma.report().contains("fleet mode="), "{}", ma.report());
+        // ...and the merged report leads with the arbitration state
+        let report = router.fleet_report();
+        assert!(report.contains("budget_bits=512"), "{report}");
+        assert!(report.contains("lane alpha"), "{report}");
+        assert!(report.contains("lane beta"), "{report}");
+        assert!(report.contains("fleet mode=degraded"), "{report}");
+        let snap = fleet.snapshot();
+        assert_eq!(snap.models.len(), 2);
+        assert!(
+            snap.models.iter().all(|l| l.deficit.deficit_bits > 0),
+            "{snap:?}"
+        );
+        assert!(snap.degraded(), "{snap:?}");
+        router.shutdown();
+        // after shutdown the shared arbiter retires both lanes
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while !fleet.snapshot().models.is_empty() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "lanes never retired: {:?}",
+                fleet.snapshot()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 }

@@ -33,5 +33,5 @@ pub mod tile;
 pub use hsiao::{HsiaoCode, Outcome};
 pub use strategy::{
     all_strategies, all_strategies_ext, strategy_by_name, CleanPath, DecodeOutcome, DecodeStats,
-    Encoded, Protection, DETECTED_BLOCK_CAP,
+    Encoded, Protection, QuantGrid, DETECTED_BLOCK_CAP,
 };

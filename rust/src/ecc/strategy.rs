@@ -171,6 +171,49 @@ pub(crate) fn copy_clean(data: &[u8], out: &mut [i8]) {
     }
 }
 
+/// The quantization grid a strategy's weights were trained onto —
+/// which values a *reconstructed* weight may legally take. The paper's
+/// WOT training leaves every `period`-th element full-range int8 and
+/// constrains the rest to `[lo, hi]`; the recovery tier snaps its
+/// least-squares solves onto this grid and the re-encode enforces it,
+/// so a solver using the wrong grid either hands back out-of-range
+/// weights (bch16 under the plain-WOT grid) or silently legalizes
+/// garbage. Exposed per strategy so escalation callers never guess.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantGrid {
+    /// Constraint period in elements; element `i` with
+    /// `i % period == period - 1` is unconstrained (full int8 range).
+    pub period: usize,
+    /// Inclusive bounds for the constrained elements.
+    pub lo: i8,
+    pub hi: i8,
+}
+
+impl QuantGrid {
+    /// Plain WOT: every 8th weight full-range, the rest in `[-64, 63]`.
+    pub const WOT8: QuantGrid = QuantGrid {
+        period: 8,
+        lo: -64,
+        hi: 63,
+    };
+    /// Extended WOT for the 128-bit BCH blocks: every 16th weight
+    /// full-range, the rest in `[-32, 31]`.
+    pub const WOT16_EXT: QuantGrid = QuantGrid {
+        period: 16,
+        lo: -32,
+        hi: 31,
+    };
+
+    /// Legal `(lo, hi)` for flat element index `e`.
+    pub fn bounds(&self, e: usize) -> (f64, f64) {
+        if self.period > 0 && e % self.period == self.period - 1 {
+            (-128.0, 127.0)
+        } else {
+            (f64::from(self.lo), f64::from(self.hi))
+        }
+    }
+}
+
 /// A memory-protection strategy.
 ///
 /// `decode_span` is the one required decode primitive; `scrub_span`,
@@ -195,6 +238,14 @@ pub trait Protection: Send + Sync {
     /// Encode a weight buffer (length % block_bytes == 0) into a stored
     /// image.
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded>;
+
+    /// The quantization grid this strategy's weights live on — what the
+    /// recovery tier must snap reconstructed values to so the re-encode
+    /// accepts them. Every paper strategy trains plain WOT except
+    /// `bch16`, which overrides with the extended grid.
+    fn quant_grid(&self) -> QuantGrid {
+        QuantGrid::WOT8
+    }
 
     /// Decode a block-aligned window of a stored image. `data`/`oob` are
     /// the window's slices (`oob` covers exactly `data`'s blocks) and
@@ -887,6 +938,9 @@ impl Protection for Bch16 {
     }
     fn oob_bytes_per_block(&self) -> usize {
         0
+    }
+    fn quant_grid(&self) -> QuantGrid {
+        QuantGrid::WOT16_EXT
     }
     fn encode(&self, weights: &[i8]) -> anyhow::Result<Encoded> {
         anyhow::ensure!(

@@ -566,7 +566,14 @@ impl TrialRunner for SyntheticRunner {
             let bb = bank.strategy().block_bytes();
             let (mut rec, mut unrec) = (0u64, 0u64);
             if !outc.detected_blocks.is_empty() {
-                let ro = recover_blocks(calib, shapes, &out, &outc.detected_blocks, bb);
+                let ro = recover_blocks(
+                    calib,
+                    shapes,
+                    &out,
+                    &outc.detected_blocks,
+                    bb,
+                    bank.strategy().quant_grid(),
+                );
                 unrec = ro.quarantined.len() as u64;
                 for rb in &ro.recovered {
                     // write back through the verified path, and patch

@@ -27,11 +27,22 @@
 //! tick = one virtual second), per-tick injection seeds derived from
 //! `seed ^ tick`, and the worker-count-independent scrub passes the
 //! shard-equivalence proptests already pin down.
+//!
+//! The **fleet simulation** ([`run_fleet_sim`]) extends the same
+//! machinery across model boundaries: several banks with independent
+//! fault scenarios compete for one process-wide scrub budget, and the
+//! arbitrated allocation ([`FleetArbitration`]) is compared against a
+//! static per-model partition (`isolated`) and a naive rotation
+//! (`roundrobin`) at equal total bandwidth and identical fault
+//! streams. [`fleet_verdict`] is the deterministic acceptance gate the
+//! CI smoke greps for.
 
 use std::time::Duration;
 
 use crate::ecc::strategy_by_name;
-use crate::memory::{FaultModel, SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardedBank};
+use crate::memory::{
+    FaultModel, FleetArbitration, SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardedBank,
+};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::plot;
 
@@ -313,6 +324,417 @@ pub fn render(results: &[&SimResult]) -> String {
     plot::table(&headers, &rows)
 }
 
+// ---------------------------------------------------------------------------
+// Fleet simulation: many models, one scrub budget
+// ---------------------------------------------------------------------------
+
+/// One model lane in the fleet simulation: its own weights, bank and
+/// fault scenario, competing for the shared scrub budget.
+#[derive(Clone, Debug)]
+pub struct FleetModel {
+    pub name: String,
+    pub n_weights: usize,
+    pub scenario: Scenario,
+}
+
+/// Knobs shared by every allocation policy in a fleet comparison.
+#[derive(Clone, Debug)]
+pub struct FleetSimConfig {
+    pub strategy: String,
+    /// Shards per model bank.
+    pub shards: usize,
+    /// Scrub passes dispatched per tick **across the whole fleet** —
+    /// the bandwidth every allocation policy gets.
+    pub budget_passes: usize,
+    /// Adaptive upper clamp, in ticks.
+    pub max_interval_ticks: u64,
+    /// Pool workers for the per-shard scrub fan-out.
+    pub workers: usize,
+    /// Deferral cap for the arbitrated allocation's starvation guard.
+    pub starve_after: u32,
+}
+
+impl Default for FleetSimConfig {
+    fn default() -> Self {
+        FleetSimConfig {
+            strategy: "in-place".into(),
+            shards: 8,
+            budget_passes: 3,
+            max_interval_ticks: 16,
+            workers: 2,
+            starve_after: 4,
+        }
+    }
+}
+
+/// How the per-tick scrub budget is split across models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetAllocation {
+    /// Static partition: every model runs its own scheduler on
+    /// `budget / n_models` passes per tick — per-server scrub loops
+    /// with fair shares, the pre-fleet baseline.
+    Isolated,
+    /// Naive rotation: each tick the whole budget goes to the next
+    /// model in round-robin order, blind to urgency.
+    RoundRobin,
+    /// The fleet arbiter: one [`FleetArbitration`] ranking due shards
+    /// across all models by Wilson-upper urgency under one budget.
+    Arbitrated,
+}
+
+impl FleetAllocation {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FleetAllocation::Isolated => "isolated",
+            FleetAllocation::RoundRobin => "roundrobin",
+            FleetAllocation::Arbitrated => "fleet",
+        }
+    }
+}
+
+/// One model's outcome under a fleet allocation.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FleetLaneResult {
+    pub model: String,
+    pub scrub_passes: u64,
+    pub faults_injected: u64,
+    pub corrected: u64,
+    /// Blocks still detected-uncorrectable at the final decode.
+    pub residual_uncorrectable: u64,
+    /// Weights decoded wrong at the final decode.
+    pub residual_wrong_weights: u64,
+    /// Cumulative due-but-denied bits (arbitrated allocation only).
+    pub deficit_bits: u64,
+    /// Grants received through the starvation guard (arbitrated only).
+    pub starved_grants: u64,
+}
+
+/// A whole fleet's run under one allocation policy.
+#[derive(Clone, Debug)]
+pub struct FleetSimResult {
+    pub allocation: FleetAllocation,
+    pub lanes: Vec<FleetLaneResult>,
+    pub total_passes: u64,
+    /// Worst inter-scrub gap over every (model, shard), in ticks,
+    /// including the tail from the last pass to the end of the clock —
+    /// the observable the starvation bound is asserted on.
+    pub max_gap_ticks: u64,
+}
+
+impl FleetSimResult {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("allocation", s(self.allocation.tag())),
+            ("total_passes", num(self.total_passes as f64)),
+            ("max_gap_ticks", num(self.max_gap_ticks as f64)),
+            (
+                "lanes",
+                arr(self.lanes.iter().map(|l| {
+                    obj(vec![
+                        ("model", s(&l.model)),
+                        ("scrub_passes", num(l.scrub_passes as f64)),
+                        ("faults_injected", num(l.faults_injected as f64)),
+                        ("corrected", num(l.corrected as f64)),
+                        ("residual_uncorrectable", num(l.residual_uncorrectable as f64)),
+                        ("residual_wrong_weights", num(l.residual_wrong_weights as f64)),
+                        ("deficit_bits", num(l.deficit_bits as f64)),
+                        ("starved_grants", num(l.starved_grants as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// The canonical fleet scenario: model `a` takes a stationary in-shard
+/// hotspot while models `b` and `c` see only faint background flips —
+/// the case fleet arbitration exists for. Bandwidth should chase the
+/// hotspot across model boundaries without pushing any quiet model
+/// past its residual budget.
+pub fn fleet_models(seed: u64) -> Vec<FleetModel> {
+    let quiet = |name: &str, seed: u64| FleetModel {
+        name: name.into(),
+        n_weights: 32 * 1024,
+        scenario: Scenario {
+            name: name.into(),
+            seed,
+            phases: vec![Phase {
+                model: FaultModel::Uniform,
+                rate: 2e-7,
+                ticks: 120,
+            }],
+        },
+    };
+    vec![
+        FleetModel {
+            name: "a".into(),
+            n_weights: 32 * 1024,
+            scenario: Scenario {
+                name: "a".into(),
+                seed,
+                phases: vec![Phase {
+                    // the 5%-wide window at 30% sits inside shard 2 of
+                    // the 8-shard split (25% .. 37.5%): one hot shard
+                    model: FaultModel::HotspotAt { start: 0.30, frac: 0.05 },
+                    rate: 4e-5,
+                    ticks: 120,
+                }],
+            },
+        },
+        quiet("b", seed ^ 0x5EED_C01D),
+        quiet("c", seed ^ 0xC01D_5EED),
+    ]
+}
+
+/// Replay every model's scenario against one scrub budget split by
+/// `alloc`. Fault streams are derived from each model's scenario seed
+/// alone, so two runs with different allocations see bit-identical
+/// injections — the comparison isolates bandwidth *allocation*.
+pub fn run_fleet_sim(
+    cfg: &FleetSimConfig,
+    models: &[FleetModel],
+    alloc: FleetAllocation,
+) -> anyhow::Result<FleetSimResult> {
+    anyhow::ensure!(!models.is_empty(), "fleet sim needs at least one model");
+    anyhow::ensure!(cfg.budget_passes >= 1, "scrub budget must be at least 1 pass/tick");
+    if alloc == FleetAllocation::Isolated {
+        anyhow::ensure!(
+            cfg.budget_passes % models.len() == 0,
+            "isolated allocation needs a budget divisible by the model count \
+             ({} passes over {} models)",
+            cfg.budget_passes,
+            models.len()
+        );
+    }
+    let total_ticks = models[0].scenario.total_ticks();
+    anyhow::ensure!(
+        models.iter().all(|m| m.scenario.total_ticks() == total_ticks),
+        "fleet models must share one clock"
+    );
+    let tick = Duration::from_secs(1);
+    let mut banks = Vec::with_capacity(models.len());
+    let mut scheds = Vec::with_capacity(models.len());
+    let mut goldens = Vec::with_capacity(models.len());
+    for (mi, m) in models.iter().enumerate() {
+        let weights = crate::harness::ablation::synth_wot(m.n_weights, 42 + mi as u64);
+        let bank = ShardedBank::new(
+            strategy_by_name(&cfg.strategy)?,
+            &weights,
+            cfg.shards,
+            cfg.workers,
+        )?;
+        let shard_bits: Vec<u64> = (0..bank.num_shards()).map(|i| bank.shard_bits(i)).collect();
+        scheds.push(ScrubScheduler::new(
+            SchedulerConfig::adaptive(tick, tick * (cfg.max_interval_ticks as u32)),
+            &shard_bits,
+            Duration::ZERO,
+        ));
+        banks.push(bank);
+        goldens.push(weights);
+    }
+    // Arbitrated budget in bits: `budget_passes` passes over the
+    // fleet's widest shard, so a grant is never denied for byte-count
+    // rounding between models of different sizes.
+    let pass_bits = banks
+        .iter()
+        .flat_map(|b| (0..b.num_shards()).map(|i| b.shard_bits(i)))
+        .max()
+        .unwrap_or(0);
+    let mut fleet =
+        FleetArbitration::new(Some(cfg.budget_passes as u64 * pass_bits), cfg.starve_after);
+    let slots: Vec<usize> = banks.iter().map(|b| fleet.register(b.num_shards())).collect();
+    let mut lanes: Vec<FleetLaneResult> = models
+        .iter()
+        .map(|m| FleetLaneResult { model: m.name.clone(), ..FleetLaneResult::default() })
+        .collect();
+    let mut last_scrub: Vec<Vec<u64>> =
+        banks.iter().map(|b| vec![0u64; b.num_shards()]).collect();
+    let mut max_gap = 0u64;
+    let mut total_passes = 0u64;
+    let mut rr_cursor = 0usize;
+    for t in 0..total_ticks {
+        let now = tick * (t as u32);
+        for (mi, m) in models.iter().enumerate() {
+            let phase = m.scenario.phase_at(t);
+            let seed = m.scenario.seed ^ (t + 1).wrapping_mul(0x9E3779B97F4A7C15);
+            lanes[mi].faults_injected += banks[mi].inject(phase.model, phase.rate, seed);
+        }
+        let grants: Vec<(usize, Vec<usize>)> = match alloc {
+            FleetAllocation::Isolated => {
+                let per = cfg.budget_passes / models.len();
+                scheds
+                    .iter()
+                    .enumerate()
+                    .map(|(mi, sc)| (mi, sc.most_urgent(per)))
+                    .collect()
+            }
+            FleetAllocation::RoundRobin => {
+                let mi = rr_cursor;
+                rr_cursor = (rr_cursor + 1) % models.len();
+                vec![(mi, scheds[mi].most_urgent(cfg.budget_passes))]
+            }
+            FleetAllocation::Arbitrated => {
+                let refs: Vec<(usize, &ScrubScheduler)> =
+                    slots.iter().copied().zip(scheds.iter()).collect();
+                let planned = fleet.plan(&refs, now);
+                let mut by_model: Vec<Vec<usize>> = vec![Vec::new(); models.len()];
+                for g in planned {
+                    by_model[g.model].push(g.shard);
+                }
+                by_model.into_iter().enumerate().collect()
+            }
+        };
+        for (mi, chosen) in grants {
+            if chosen.is_empty() {
+                continue;
+            }
+            let per_shard = banks[mi].scrub_subset(&chosen);
+            for &(i, stats) in &per_shard {
+                lanes[mi].corrected += stats.corrected + stats.zeroed;
+                scheds[mi].record_pass(i, &stats, now);
+                lanes[mi].scrub_passes += 1;
+                total_passes += 1;
+                max_gap = max_gap.max(t - last_scrub[mi][i]);
+                last_scrub[mi][i] = t;
+            }
+        }
+    }
+    for (mi, last) in last_scrub.iter().enumerate() {
+        for &l in last {
+            max_gap = max_gap.max(total_ticks - l);
+        }
+        let (uncorr, wrong) = final_residual(&mut banks[mi], &goldens[mi]);
+        lanes[mi].residual_uncorrectable = uncorr;
+        lanes[mi].residual_wrong_weights = wrong;
+        if alloc == FleetAllocation::Arbitrated {
+            let d = fleet.deficit(slots[mi]);
+            lanes[mi].deficit_bits = d.deficit_bits;
+            lanes[mi].starved_grants = d.starved_grants;
+        }
+    }
+    Ok(FleetSimResult { allocation: alloc, lanes, total_passes, max_gap_ticks: max_gap })
+}
+
+/// Run all three allocations over the same fleet at equal bandwidth.
+pub fn fleet_compare(
+    cfg: &FleetSimConfig,
+    models: &[FleetModel],
+) -> anyhow::Result<(FleetSimResult, FleetSimResult, FleetSimResult)> {
+    let iso = run_fleet_sim(cfg, models, FleetAllocation::Isolated)?;
+    let rr = run_fleet_sim(cfg, models, FleetAllocation::RoundRobin)?;
+    let arb = run_fleet_sim(cfg, models, FleetAllocation::Arbitrated)?;
+    Ok((iso, rr, arb))
+}
+
+pub fn fleet_render(results: &[&FleetSimResult]) -> String {
+    let headers = [
+        "allocation",
+        "model",
+        "passes",
+        "faults",
+        "corrected",
+        "resid-uncorr",
+        "resid-wrong",
+        "deficit-bits",
+    ];
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .flat_map(|r| {
+            r.lanes.iter().map(move |l| {
+                vec![
+                    r.allocation.tag().to_string(),
+                    l.model.clone(),
+                    l.scrub_passes.to_string(),
+                    l.faults_injected.to_string(),
+                    l.corrected.to_string(),
+                    l.residual_uncorrectable.to_string(),
+                    l.residual_wrong_weights.to_string(),
+                    l.deficit_bits.to_string(),
+                ]
+            })
+        })
+        .collect();
+    plot::table(&headers, &rows)
+}
+
+/// Deterministic fleet acceptance gate. At equal total bandwidth and
+/// identical fault streams the arbitrated allocation must
+///
+/// 1. keep every quiet model's residual no worse than its isolated
+///    fair share (the per-model residual budget holds),
+/// 2. strictly beat naive round-robin on the hot model (the budget
+///    actually chases urgency across model boundaries), and
+/// 3. never let any shard's inter-scrub gap exceed the starvation
+///    bound `max_interval + starve_after + total_shards + 1` ticks.
+///
+/// Returns the `[fleet ok]` verdict line the CI smoke greps for; a
+/// violated inequality becomes the error.
+pub fn fleet_verdict(
+    cfg: &FleetSimConfig,
+    iso: &FleetSimResult,
+    rr: &FleetSimResult,
+    arb: &FleetSimResult,
+) -> anyhow::Result<String> {
+    let n = iso.lanes.len();
+    anyhow::ensure!(
+        rr.lanes.len() == n && arb.lanes.len() == n,
+        "allocations ran different fleets"
+    );
+    for i in 0..n {
+        anyhow::ensure!(
+            iso.lanes[i].faults_injected == rr.lanes[i].faults_injected
+                && iso.lanes[i].faults_injected == arb.lanes[i].faults_injected,
+            "allocations saw different fault streams for model '{}'",
+            iso.lanes[i].model
+        );
+    }
+    anyhow::ensure!(
+        arb.total_passes <= iso.total_passes && arb.total_passes <= rr.total_passes,
+        "arbitrated allocation outspent the baselines: {} passes vs isolated {} / roundrobin {}",
+        arb.total_passes,
+        iso.total_passes,
+        rr.total_passes
+    );
+    let hot = (0..n)
+        .max_by_key(|&i| iso.lanes[i].faults_injected)
+        .expect("fleet has lanes");
+    anyhow::ensure!(
+        arb.lanes[hot].residual_uncorrectable < rr.lanes[hot].residual_uncorrectable,
+        "hot model '{}' must strictly beat round-robin: fleet {} vs roundrobin {}",
+        iso.lanes[hot].model,
+        arb.lanes[hot].residual_uncorrectable,
+        rr.lanes[hot].residual_uncorrectable
+    );
+    for i in (0..n).filter(|&i| i != hot) {
+        anyhow::ensure!(
+            arb.lanes[i].residual_uncorrectable <= iso.lanes[i].residual_uncorrectable,
+            "quiet model '{}' regressed past its isolated budget: fleet {} vs isolated {}",
+            iso.lanes[i].model,
+            arb.lanes[i].residual_uncorrectable,
+            iso.lanes[i].residual_uncorrectable
+        );
+    }
+    let bound =
+        cfg.max_interval_ticks + u64::from(cfg.starve_after) + (cfg.shards * n) as u64 + 1;
+    anyhow::ensure!(
+        arb.max_gap_ticks <= bound,
+        "starvation: a shard waited {} ticks between scrubs (bound {})",
+        arb.max_gap_ticks,
+        bound
+    );
+    Ok(format!(
+        "[fleet ok] hot '{}' resid fleet={} < roundrobin={} (isolated={}); \
+         quiet lanes within isolated budgets; max gap {} <= {} ticks at {} passes",
+        iso.lanes[hot].model,
+        arb.lanes[hot].residual_uncorrectable,
+        rr.lanes[hot].residual_uncorrectable,
+        iso.lanes[hot].residual_uncorrectable,
+        arb.max_gap_ticks,
+        bound,
+        arb.total_passes
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -444,5 +866,93 @@ mod tests {
         let no_trace = r.to_json(false);
         assert!(no_trace.get("ber_trace").is_none());
         assert!(render(&[&r]).contains("adaptive"));
+    }
+
+    /// The fleet acceptance test from the issue: a hotspot on model
+    /// `a` with models `b` and `c` quiet. At equal total bandwidth the
+    /// arbitrated allocation must keep every quiet model at or below
+    /// its isolated-fair-share residual while strictly beating naive
+    /// round-robin on the hot model — the budget visibly chases
+    /// urgency across model boundaries.
+    #[test]
+    fn fleet_arbitration_beats_roundrobin_without_hurting_quiet_models() {
+        let cfg = FleetSimConfig::default();
+        let models = fleet_models(7);
+        let (iso, rr, arb) = fleet_compare(&cfg, &models).unwrap();
+        // equal fault streams and bandwidth no greater than the baselines
+        for i in 0..models.len() {
+            assert_eq!(iso.lanes[i].faults_injected, arb.lanes[i].faults_injected);
+            assert_eq!(iso.lanes[i].faults_injected, rr.lanes[i].faults_injected);
+        }
+        assert_eq!(iso.total_passes, rr.total_passes);
+        assert!(
+            arb.total_passes <= iso.total_passes,
+            "arbitrated must not outspend the baselines: {} vs {}",
+            arb.total_passes,
+            iso.total_passes
+        );
+        // hot model: strictly better than blind rotation
+        assert!(
+            arb.lanes[0].residual_uncorrectable < rr.lanes[0].residual_uncorrectable,
+            "fleet {} vs roundrobin {}",
+            arb.lanes[0].residual_uncorrectable,
+            rr.lanes[0].residual_uncorrectable
+        );
+        // quiet models: no worse than their isolated fair share
+        for i in 1..models.len() {
+            assert!(
+                arb.lanes[i].residual_uncorrectable <= iso.lanes[i].residual_uncorrectable,
+                "quiet lane {i}: fleet {} vs isolated {}",
+                arb.lanes[i].residual_uncorrectable,
+                iso.lanes[i].residual_uncorrectable
+            );
+        }
+        // the verdict helper agrees and the CI marker is present
+        let verdict = fleet_verdict(&cfg, &iso, &rr, &arb).unwrap();
+        assert!(verdict.starts_with("[fleet ok]"), "{verdict}");
+        assert!(fleet_render(&[&iso, &rr, &arb]).contains("roundrobin"));
+    }
+
+    /// Starvation-freedom observable: under the arbitrated allocation
+    /// no shard's inter-scrub gap may exceed
+    /// `max_interval + starve_after + total_shards + 1` ticks, even
+    /// with a hot shard soaking up budget every wakeup.
+    #[test]
+    fn fleet_gaps_stay_within_the_starvation_bound() {
+        let cfg = FleetSimConfig::default();
+        let models = fleet_models(13);
+        let arb = run_fleet_sim(&cfg, &models, FleetAllocation::Arbitrated).unwrap();
+        let bound = cfg.max_interval_ticks
+            + u64::from(cfg.starve_after)
+            + (cfg.shards * models.len()) as u64
+            + 1;
+        assert!(
+            arb.max_gap_ticks <= bound,
+            "gap {} exceeds bound {}",
+            arb.max_gap_ticks,
+            bound
+        );
+    }
+
+    /// Fleet determinism: same seeds, same lanes, pass for pass.
+    #[test]
+    fn fleet_sim_is_deterministic_in_the_seed() {
+        let cfg = FleetSimConfig::default();
+        let models = fleet_models(3);
+        let a = run_fleet_sim(&cfg, &models, FleetAllocation::Arbitrated).unwrap();
+        let b = run_fleet_sim(&cfg, &models, FleetAllocation::Arbitrated).unwrap();
+        assert_eq!(a.lanes, b.lanes);
+        assert_eq!(a.total_passes, b.total_passes);
+        assert_eq!(a.max_gap_ticks, b.max_gap_ticks);
+    }
+
+    #[test]
+    fn fleet_json_record_carries_every_lane() {
+        let cfg = FleetSimConfig::default();
+        let models = fleet_models(5);
+        let arb = run_fleet_sim(&cfg, &models, FleetAllocation::Arbitrated).unwrap();
+        let j = arb.to_json();
+        assert_eq!(j.req("allocation").unwrap().as_str(), Some("fleet"));
+        assert_eq!(j.req("lanes").unwrap().as_arr().unwrap().len(), models.len());
     }
 }

@@ -219,6 +219,13 @@ fn main() -> anyhow::Result<()> {
                 // start_pjrt fills this from the `<model>.recovery.json`
                 // sidecar (`zsecc calibrate`) when the tier is armed.
                 recovery_calibration: None,
+                // Residual-error budget for the fleet arbiter: expected
+                // new error bits per shard per scrub interval the model
+                // is willing to tolerate.
+                target_residual: args.f64_or("target-residual", 0.5)?,
+                // start_pjrt replaces the default label with the model
+                // name; an explicit flag wins.
+                fleet_label: args.str_or("fleet-label", "model"),
             };
             // No validate() here: start_pjrt first fills the guard and
             // recovery calibrations from the manifest/sidecar, *then*
@@ -239,13 +246,14 @@ fn main() -> anyhow::Result<()> {
                  \x20         --ledger FILE --resume --out FILE --synthetic --n WEIGHTS --verbose\n\
                  calibrate: --models a,b --batch B --margin M   (writes envelopes into the manifest\n\
                  \x20         and the <model>.recovery.json sidecar for dense-chain models)\n\
-                 scrubsim: --scenario ramp|migrate --scrub-policy fixed|adaptive|both --seed N\n\
+                 scrubsim: --scenario ramp|migrate|fleet --scrub-policy fixed|adaptive|both --seed N\n\
                  \x20         --strategy S --n WEIGHTS --shards S --budget PASSES --max-interval TICKS\n\
-                 \x20         --trace --out FILE --json\n\
+                 \x20         --starve-after K (fleet: deferral cap) --trace --out FILE --json\n\
                  serve:    --model M --strategy S --seconds T --rps R --batch B --scrub-ms MS\n\
                  \x20         --scrub-policy fixed|adaptive --scrub-max-ms MS --fault-rate F --shards S --scrub-workers W\n\
                  \x20         --ingress ring|locked (lock-free slab ring vs mutex batcher) --ring-depth N\n\
-                 \x20         --guards off|range --recovery off|milr (both need a prior `zsecc calibrate`)"
+                 \x20         --guards off|range --recovery off|milr (both need a prior `zsecc calibrate`)\n\
+                 \x20         --target-residual BITS (per-shard residual budget for the fleet scrub arbiter)"
             );
         }
     }
@@ -462,6 +470,9 @@ fn print_recovery_comparisons(report: &campaign::Report) {
 /// record including the per-shard BER traces (the nightly campaign's
 /// build artifact).
 fn run_scrubsim(args: &Args) -> anyhow::Result<()> {
+    if args.str_or("scenario", "migrate") == "fleet" {
+        return run_fleet_scrubsim(args);
+    }
     let cfg = scrubsim::SimConfig {
         strategy: args.str_or("strategy", "in-place"),
         n_weights: args.usize_or("n", 64 * 1024)?,
@@ -517,6 +528,55 @@ fn run_scrubsim(args: &Args) -> anyhow::Result<()> {
     if args.bool("json") {
         println!("{record}");
     }
+    Ok(())
+}
+
+/// `scrubsim --scenario fleet`: several models with independent fault
+/// scenarios competing for one process-wide scrub budget. Runs the
+/// isolated / round-robin / arbitrated allocations at equal total
+/// bandwidth and identical fault streams, prints the comparison, and
+/// ends with the `[fleet ok]` verdict line CI greps for (a violated
+/// inequality exits nonzero instead).
+fn run_fleet_scrubsim(args: &Args) -> anyhow::Result<()> {
+    let cfg = scrubsim::FleetSimConfig {
+        strategy: args.str_or("strategy", "in-place"),
+        shards: args.usize_or("shards", 8)?,
+        budget_passes: args.usize_or("budget", 3)?,
+        max_interval_ticks: args.u64_or("max-interval", 16)?,
+        workers: args.usize_or("workers", 2)?,
+        starve_after: args.u64_or("starve-after", 4)? as u32,
+    };
+    let seed = args.u64_or("seed", 7)?;
+    let models = scrubsim::fleet_models(seed);
+    let ticks = models[0].scenario.total_ticks();
+    println!(
+        "scrubsim: scenario=fleet seed={seed} strategy={} models={} shards={}/model \
+         budget={}/tick starve-after={} ticks={ticks}",
+        cfg.strategy,
+        models.len(),
+        cfg.shards,
+        cfg.budget_passes,
+        cfg.starve_after
+    );
+    let (iso, rr, arb) = scrubsim::fleet_compare(&cfg, &models)?;
+    println!("{}", scrubsim::fleet_render(&[&iso, &rr, &arb]));
+    let record = zsecc::util::json::obj(vec![
+        ("scenario", zsecc::util::json::s("fleet")),
+        ("seed", zsecc::util::json::num(seed as f64)),
+        (
+            "results",
+            zsecc::util::json::arr([&iso, &rr, &arb].iter().map(|r| r.to_json())),
+        ),
+    ]);
+    if let Some(out) = args.str_opt("out") {
+        std::fs::write(out, record.to_string())?;
+        println!("(JSON written to {out})");
+    }
+    if args.bool("json") {
+        println!("{record}");
+    }
+    // Verdict last so the pass/fail line is the tail of the output.
+    println!("{}", scrubsim::fleet_verdict(&cfg, &iso, &rr, &arb)?);
     Ok(())
 }
 

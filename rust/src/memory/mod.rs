@@ -26,7 +26,12 @@
 //!   with Wilson confidence bounds) feeding per-shard scrub deadlines.
 //!   Hot shards clamp to the base interval, provably-clean shards
 //!   decay toward a configured maximum; the serving loop and the
-//!   `harness::scrubsim` scenarios both drive it.
+//!   `harness::scrubsim` scenarios both drive it. The same module
+//!   hosts the fleet arbitration core ([`scheduler::arbitrate`],
+//!   [`scheduler::FleetArbitration`]): cross-model urgency ranking of
+//!   due shards under one bit budget, with a deferral-capped
+//!   starvation guarantee and per-model deficit accounting — the pure
+//!   planner behind `coordinator::fleet`.
 
 pub mod bank;
 pub mod fault;
@@ -37,5 +42,8 @@ pub mod shard;
 pub use bank::MemoryBank;
 pub use fault::{FaultInjector, FaultModel, FaultSite};
 pub use pool::{run_jobs, Pool};
-pub use scheduler::{SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardSchedule};
+pub use scheduler::{
+    arbitrate, FleetArbitration, FleetGrant, ModelDeficit, SchedulerConfig, ScrubDemand,
+    ScrubPolicy, ScrubScheduler, ShardSchedule,
+};
 pub use shard::{plan_shards, ShardState, ShardedBank};

@@ -130,6 +130,17 @@ impl SchedulerConfig {
             growth: 1.5,
         }
     }
+
+    /// Override the per-model residual budget (expected new error bits
+    /// per shard per interval) — the knob `ServerConfig::target_residual`
+    /// feeds through. Non-finite or non-positive values keep the
+    /// default.
+    pub fn with_target_residual(mut self, target: f64) -> SchedulerConfig {
+        if target.is_finite() && target > 0.0 {
+            self.target_residual = target;
+        }
+        self
+    }
 }
 
 /// Per-shard estimator + deadline state.
@@ -249,6 +260,12 @@ impl ScrubScheduler {
         self.shards[idx].interval
     }
 
+    /// Stored bits shard `idx` exposes (what its scrub pass costs the
+    /// fleet budget).
+    pub fn shard_bits(&self, idx: usize) -> u64 {
+        self.shards[idx].bits
+    }
+
     pub fn deadline(&self, idx: usize) -> Duration {
         self.shards[idx].deadline
     }
@@ -335,6 +352,228 @@ fn derive_interval(
         )
     } else {
         cfg.max_interval
+    }
+}
+
+// ------------------------------------------------------------- fleet --
+
+/// One due shard's demand on the fleet scrub budget: everything the
+/// cross-model arbiter ranks on. Built by [`FleetArbitration::plan`]
+/// from each model's [`ScrubScheduler`]; public (and plain data) so the
+/// arbitration invariants are provable on synthetic demand sets without
+/// standing up banks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScrubDemand {
+    /// Registration slot of the owning model.
+    pub model: usize,
+    pub shard: usize,
+    /// Stored bits a pass over this shard costs the budget.
+    pub bits: u64,
+    /// Wilson upper bound on the shard's error arrival rate — the
+    /// urgency signal.
+    pub ber_upper: f64,
+    /// Seconds past the shard's deadline (0 when exactly due).
+    pub lateness_secs: f64,
+    /// Consecutive wakeups this shard has been due but not granted.
+    pub deferrals: u32,
+}
+
+impl ScrubDemand {
+    /// Urgency score: expected error bits already accrued past the
+    /// deadline — Wilson-upper arrival rate × exposed bits, scaled up
+    /// by how late the shard already is. Deterministic total order via
+    /// the `(model, shard)` tie-break in [`arbitrate`].
+    pub fn urgency(&self) -> f64 {
+        self.ber_upper.max(f64::MIN_POSITIVE) * self.bits as f64 * (1.0 + self.lateness_secs)
+    }
+}
+
+/// One scrub pass granted by the arbiter this wakeup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FleetGrant {
+    pub model: usize,
+    pub shard: usize,
+    /// Granted through the starvation guarantee (deferral cap), not by
+    /// outranking the field on urgency.
+    pub starved: bool,
+}
+
+/// Pick which due shards scrub this wakeup, spending at most
+/// `budget_bits` of scrub bandwidth.
+///
+/// Two classes, in order:
+///
+/// 1. **Starved** (`deferrals >= starve_after`): served
+///    most-deferred-first regardless of urgency. As long as
+///    `budget_bits` covers the largest single shard, every wakeup
+///    grants at least the front starved candidate, so no due shard
+///    waits more than `starve_after + total_shards` wakeups — the
+///    starvation-freedom bound the proptests pin.
+/// 2. **Urgent**: remaining budget goes greedy by
+///    [`ScrubDemand::urgency`], skipping candidates that no longer
+///    fit (first-fit over the ranked order).
+///
+/// Granted bits never exceed `budget_bits` (conservation) — a shard
+/// that does not fit is deferred, never partially scrubbed.
+pub fn arbitrate(demands: &[ScrubDemand], budget_bits: u64, starve_after: u32) -> Vec<FleetGrant> {
+    let mut starved: Vec<&ScrubDemand> = Vec::new();
+    let mut urgent: Vec<&ScrubDemand> = Vec::new();
+    for d in demands {
+        if d.deferrals >= starve_after {
+            starved.push(d);
+        } else {
+            urgent.push(d);
+        }
+    }
+    starved.sort_by(|a, b| {
+        b.deferrals
+            .cmp(&a.deferrals)
+            .then(a.model.cmp(&b.model))
+            .then(a.shard.cmp(&b.shard))
+    });
+    urgent.sort_by(|a, b| {
+        b.urgency()
+            .partial_cmp(&a.urgency())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.model.cmp(&b.model))
+            .then(a.shard.cmp(&b.shard))
+    });
+    let mut grants = Vec::new();
+    let mut left = budget_bits;
+    for (class, starved_class) in [(starved, true), (urgent, false)] {
+        for d in class {
+            if d.bits <= left {
+                left -= d.bits;
+                grants.push(FleetGrant {
+                    model: d.model,
+                    shard: d.shard,
+                    starved: starved_class,
+                });
+            }
+        }
+    }
+    grants
+}
+
+/// Per-model budget-deficit gauges (degraded-mode observability): how
+/// much due scrub work the arbiter could *not* place, per model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ModelDeficit {
+    /// Cumulative bits of due-but-denied scrub demand.
+    pub deficit_bits: u64,
+    /// Denied bits at the most recent wakeup (0 = keeping up now).
+    pub last_deficit_bits: u64,
+    /// Grants this model received through the starvation guarantee.
+    pub starved_grants: u64,
+}
+
+/// Cross-model scrub arbitration state: per-shard deferral counters and
+/// per-model deficit accounting over a shared bit budget. The live
+/// fleet control loop ([`crate::coordinator::fleet`]) and the scrubsim
+/// harness drive the *same* planner, which is what makes the
+/// starvation/conservation guarantees deterministically testable.
+#[derive(Clone, Debug)]
+pub struct FleetArbitration {
+    /// Scrub bits the whole fleet may spend per wakeup; `None` scrubs
+    /// every due shard (a fleet of one degenerates to the old
+    /// per-server loop).
+    budget_bits: Option<u64>,
+    starve_after: u32,
+    deferrals: Vec<Vec<u32>>,
+    deficits: Vec<ModelDeficit>,
+    wakeups: u64,
+}
+
+impl FleetArbitration {
+    /// `starve_after` is clamped to >= 1: with a cap of 0 every due
+    /// shard is "starved" and urgency ranking never happens.
+    pub fn new(budget_bits: Option<u64>, starve_after: u32) -> FleetArbitration {
+        FleetArbitration {
+            budget_bits,
+            starve_after: starve_after.max(1),
+            deferrals: Vec::new(),
+            deficits: Vec::new(),
+            wakeups: 0,
+        }
+    }
+
+    /// Register a model; returns its slot (the `model` field of every
+    /// demand/grant).
+    pub fn register(&mut self, num_shards: usize) -> usize {
+        self.deferrals.push(vec![0; num_shards]);
+        self.deficits.push(ModelDeficit::default());
+        self.deferrals.len() - 1
+    }
+
+    pub fn budget_bits(&self) -> Option<u64> {
+        self.budget_bits
+    }
+
+    pub fn starve_after(&self) -> u32 {
+        self.starve_after
+    }
+
+    pub fn wakeups(&self) -> u64 {
+        self.wakeups
+    }
+
+    pub fn num_models(&self) -> usize {
+        self.deferrals.len()
+    }
+
+    pub fn deficit(&self, model: usize) -> ModelDeficit {
+        self.deficits[model]
+    }
+
+    /// Plan one wakeup: collect every registered scheduler's due shards
+    /// as demands, arbitrate them under the budget, and fold the
+    /// outcome back into the deferral/deficit books. `scheds[i]` pairs
+    /// a registration slot with its scheduler; a retired model is
+    /// simply absent. Grants come back grouped as the caller passed the
+    /// models, ready for per-bank `scrub_subset` dispatch.
+    pub fn plan(&mut self, scheds: &[(usize, &ScrubScheduler)], now: Duration) -> Vec<FleetGrant> {
+        let mut demands: Vec<ScrubDemand> = Vec::new();
+        for &(slot, sched) in scheds {
+            for shard in sched.due(now) {
+                let (_, ber_upper) = sched.ber_bounds(shard);
+                demands.push(ScrubDemand {
+                    model: slot,
+                    shard,
+                    bits: sched.shard_bits(shard),
+                    ber_upper,
+                    lateness_secs: now.saturating_sub(sched.deadline(shard)).as_secs_f64(),
+                    deferrals: self.deferrals[slot][shard],
+                });
+            }
+        }
+        let grants = match self.budget_bits {
+            // Unbounded: everything due is granted, ranked all the same
+            // so dispatch order stays urgency-first.
+            None => arbitrate(&demands, u64::MAX, self.starve_after),
+            Some(b) => arbitrate(&demands, b, self.starve_after),
+        };
+        self.wakeups += 1;
+        for def in self.deficits.iter_mut() {
+            def.last_deficit_bits = 0;
+        }
+        let granted: std::collections::BTreeSet<(usize, usize)> =
+            grants.iter().map(|g| (g.model, g.shard)).collect();
+        for d in &demands {
+            if granted.contains(&(d.model, d.shard)) {
+                continue;
+            }
+            self.deferrals[d.model][d.shard] = self.deferrals[d.model][d.shard].saturating_add(1);
+            let def = &mut self.deficits[d.model];
+            def.deficit_bits = def.deficit_bits.saturating_add(d.bits);
+            def.last_deficit_bits = def.last_deficit_bits.saturating_add(d.bits);
+        }
+        for g in &grants {
+            self.deferrals[g.model][g.shard] = 0;
+            if g.starved {
+                self.deficits[g.model].starved_grants += 1;
+            }
+        }
+        grants
     }
 }
 
@@ -514,6 +753,118 @@ mod tests {
         let due = sched.due(secs(2));
         assert_eq!(due, vec![1], "only the hot shard is due after 1s");
         assert!(sched.due(Duration::ZERO).is_empty());
+    }
+
+    fn demand(model: usize, shard: usize, bits: u64, ber: f64, late: f64, def: u32) -> ScrubDemand {
+        ScrubDemand {
+            model,
+            shard,
+            bits,
+            ber_upper: ber,
+            lateness_secs: late,
+            deferrals: def,
+        }
+    }
+
+    #[test]
+    fn arbitrate_conserves_the_bit_budget() {
+        let demands: Vec<ScrubDemand> = (0..6)
+            .map(|i| demand(i % 2, i, 1000, 1e-6 * (i + 1) as f64, i as f64, 0))
+            .collect();
+        for budget in [0u64, 999, 1000, 2500, 6000] {
+            let grants = arbitrate(&demands, budget, 4);
+            let spent: u64 = grants.iter().map(|_| 1000u64).sum();
+            assert!(spent <= budget, "budget {budget}: spent {spent}");
+        }
+        // full budget grants everything
+        assert_eq!(arbitrate(&demands, 6000, 4).len(), 6);
+    }
+
+    #[test]
+    fn arbitrate_ranks_by_urgency_then_serves_starved_first() {
+        // model 1's shard is far hotter; at budget for one pass it wins
+        let d = vec![
+            demand(0, 0, 1000, 1e-7, 0.0, 0),
+            demand(1, 0, 1000, 1e-3, 0.0, 0),
+        ];
+        let g = arbitrate(&d, 1000, 4);
+        assert_eq!(g, vec![FleetGrant { model: 1, shard: 0, starved: false }]);
+        // ...unless the cold one has hit the deferral cap: starvation
+        // freedom outranks urgency
+        let d = vec![
+            demand(0, 0, 1000, 1e-7, 0.0, 4),
+            demand(1, 0, 1000, 1e-3, 0.0, 0),
+        ];
+        let g = arbitrate(&d, 1000, 4);
+        assert_eq!(g, vec![FleetGrant { model: 0, shard: 0, starved: true }]);
+    }
+
+    #[test]
+    fn arbitrate_lateness_breaks_equal_rates() {
+        let d = vec![
+            demand(0, 0, 1000, 1e-5, 0.0, 0),
+            demand(0, 1, 1000, 1e-5, 30.0, 0),
+        ];
+        let g = arbitrate(&d, 1000, 4);
+        assert_eq!((g[0].model, g[0].shard), (0, 1), "later shard first");
+    }
+
+    #[test]
+    fn planner_accounts_deficits_and_bounds_waits() {
+        // two 4-shard models, every shard 1000 bits, budget = one pass
+        // per wakeup: 7 of 8 due shards are denied every wakeup, yet
+        // the deferral cap must cycle every shard through within
+        // starve_after + total_shards wakeups.
+        let cfg = SchedulerConfig::fixed(secs(1));
+        let bits = [1000u64; 4];
+        let mut scheds = vec![
+            ScrubScheduler::new(cfg, &bits, Duration::ZERO),
+            ScrubScheduler::new(cfg, &bits, Duration::ZERO),
+        ];
+        let mut fleet = FleetArbitration::new(Some(1000), 3);
+        let a = fleet.register(4);
+        let b = fleet.register(4);
+        assert_eq!((a, b), (0, 1));
+        let mut last_scrub = [[0u64; 4]; 2];
+        let clean = DecodeStats::default();
+        for wakeup in 1..=40u64 {
+            let now = secs(wakeup);
+            let grants = {
+                let refs: Vec<(usize, &ScrubScheduler)> =
+                    vec![(a, &scheds[0]), (b, &scheds[1])];
+                fleet.plan(&refs, now)
+            };
+            assert_eq!(grants.len(), 1, "budget fits exactly one pass");
+            for g in grants {
+                scheds[g.model].record_pass(g.shard, &clean, now);
+                let waited = wakeup - last_scrub[g.model][g.shard];
+                assert!(
+                    waited <= 3 + 8 + 1,
+                    "shard ({}, {}) waited {waited} wakeups",
+                    g.model,
+                    g.shard
+                );
+                last_scrub[g.model][g.shard] = wakeup;
+            }
+        }
+        // demand is 8x the budget: both models must be carrying deficit
+        for m in [a, b] {
+            let d = fleet.deficit(m);
+            assert!(d.deficit_bits > 0, "model {m} deficit: {d:?}");
+            assert!(d.starved_grants > 0, "model {m} starved grants");
+        }
+        assert_eq!(fleet.wakeups(), 40);
+    }
+
+    #[test]
+    fn planner_without_budget_grants_everything_due() {
+        let cfg = SchedulerConfig::fixed(secs(1));
+        let sched = ScrubScheduler::new(cfg, &[500, 500, 500], Duration::ZERO);
+        let mut fleet = FleetArbitration::new(None, 4);
+        let m = fleet.register(3);
+        let grants = fleet.plan(&[(m, &sched)], Duration::ZERO);
+        assert_eq!(grants.len(), 3);
+        assert_eq!(fleet.deficit(m), ModelDeficit::default());
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //!    unknowns by `(layer, column)` (one linear system per column,
 //!    jointly over every implicated block), solves the normal equations
 //!    of `Y[:,c] = X · W[:,c]` by partial-pivot Gaussian elimination in
-//!    f64, and re-quantizes to int8 on the WOT grid.
+//!    f64, and re-quantizes to int8 on the strategy's quantization
+//!    grid ([`crate::ecc::QuantGrid`] — plain WOT for the period-8
+//!    strategies, extended WOT for `bch16`).
 //! 4. **quarantine** — blocks whose system is underdetermined, singular,
 //!    or fails verification come back on [`RecoveryOutcome`]'s typed
 //!    quarantine list, not as panics; the caller records them and keeps
@@ -39,6 +41,7 @@
 //! `<model>.recovery.json` sidecar next to the manifest — it holds float
 //! activation planes, far too large to inline into the manifest itself.
 
+use crate::ecc::QuantGrid;
 use crate::model::manifest::Layer;
 use crate::runtime::guard::DenseModel;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -376,6 +379,7 @@ pub fn recover_blocks(
     weights: &[i8],
     blocks: &[usize],
     block_bytes: usize,
+    grid: QuantGrid,
 ) -> RecoveryOutcome {
     let bb = block_bytes.max(1);
     let mut blist: Vec<usize> = blocks.to_vec();
@@ -422,7 +426,7 @@ pub fn recover_blocks(
     let mut recovered: BTreeMap<usize, i8> = BTreeMap::new();
     for ((li, col), mut rows) in unknown {
         rows.sort_unstable();
-        match solve_column(set, &shapes[li], weights, &rows, col) {
+        match solve_column(set, &shapes[li], weights, &rows, col, grid) {
             Ok(vals) => recovered.extend(vals),
             Err(e) => {
                 for &b in &members[&(li, col)] {
@@ -447,16 +451,17 @@ pub fn recover_blocks(
 }
 
 /// Solve one `(layer, column)` system: least squares over the
-/// calibration batch for the unknown `rows`, re-quantized to the WOT
-/// int8 grid and verified against the checkpointed `Y`. Returns the
-/// recovered `(flat element, value)` pairs, or the typed reason the
-/// column cannot be trusted.
+/// calibration batch for the unknown `rows`, re-quantized onto the
+/// strategy's quantization grid and verified against the checkpointed
+/// `Y`. Returns the recovered `(flat element, value)` pairs, or the
+/// typed reason the column cannot be trusted.
 fn solve_column(
     set: &RecoverySet,
     sh: &DenseShape,
     weights: &[i8],
     rows: &[usize],
     col: usize,
+    grid: QuantGrid,
 ) -> Result<Vec<(usize, i8)>, RecoveryError> {
     let calib = set
         .layer(&sh.name)
@@ -506,14 +511,14 @@ fn solve_column(
         layer: sh.name.clone(),
         col,
     })?;
-    // re-quantize onto the WOT int8 grid
+    // re-quantize onto the strategy's int8 grid
     let vals: Vec<(usize, i8)> = rows
         .iter()
         .zip(&z)
         .map(|(&r, &zi)| {
             let e = sh.offset + r * sh.cols + col;
             let q = (zi / scale).round();
-            let (lo, hi) = if e % 8 == 7 { (-128.0, 127.0) } else { (-64.0, 63.0) };
+            let (lo, hi) = grid.bounds(e);
             (e, q.clamp(lo, hi) as i8)
         })
         .collect();
@@ -658,7 +663,7 @@ mod tests {
         for e in 24..32 {
             bad[e] = bad[e].wrapping_add(37);
         }
-        let out = recover_blocks(&set, &[shape], &bad, &[3], 8);
+        let out = recover_blocks(&set, &[shape], &bad, &[3], 8, QuantGrid::WOT8);
         assert!(out.quarantined.is_empty());
         let rec = out.recovered;
         assert_eq!(rec.len(), 1);
@@ -675,7 +680,7 @@ mod tests {
         for e in (2 * 8..3 * 8).chain(6 * 8..7 * 8) {
             bad[e] ^= 0x55;
         }
-        let out = recover_blocks(&set, &[shape], &bad, &[6, 2, 6], 8);
+        let out = recover_blocks(&set, &[shape], &bad, &[6, 2, 6], 8, QuantGrid::WOT8);
         assert!(out.quarantined.is_empty());
         let rec = out.recovered;
         assert_eq!(rec.len(), 2, "deduped, sorted");
@@ -694,7 +699,7 @@ mod tests {
         for e in 8..16 {
             bad[e] = bad[e].wrapping_sub(19);
         }
-        let out = recover_blocks(&set, &[shape], &bad, &[1], 8);
+        let out = recover_blocks(&set, &[shape], &bad, &[1], 8, QuantGrid::WOT8);
         assert!(out.quarantined.is_empty());
         assert_eq!(out.recovered[0].weights, w[8..16]);
     }
@@ -703,7 +708,7 @@ mod tests {
     fn underdetermined_and_missing_calibration_are_typed() {
         let (w, shape, mut set) = synth(16, 8, 2, 0.02, 11);
         // batch 2 < 3 joint unknowns per column (blocks 0, 1, 2 = rows 0..3)
-        let out = recover_blocks(&set, &[shape.clone()], &w, &[0, 1, 2], 8);
+        let out = recover_blocks(&set, &[shape.clone()], &w, &[0, 1, 2], 8, QuantGrid::WOT8);
         assert!(out.recovered.is_empty());
         assert_eq!(out.quarantined.len(), 3, "every implicated block quarantined");
         assert!(
@@ -715,14 +720,14 @@ mod tests {
             out.quarantined[0].1
         );
         set.layers[0].name = "other".into();
-        let out = recover_blocks(&set, &[shape.clone()], &w, &[0], 8);
+        let out = recover_blocks(&set, &[shape.clone()], &w, &[0], 8, QuantGrid::WOT8);
         assert!(matches!(out.quarantined[..], [(0, RecoveryError::NoCalibration(_))]));
         // a non-dense placeholder refuses with NotDense
         let flat = DenseShape {
             rows: 0,
             ..shape
         };
-        let out = recover_blocks(&set, &[flat], &w, &[0], 8);
+        let out = recover_blocks(&set, &[flat], &w, &[0], 8, QuantGrid::WOT8);
         assert!(matches!(out.quarantined[..], [(0, RecoveryError::NotDense(_))]));
     }
 
@@ -740,7 +745,7 @@ mod tests {
         let mut y = vec![0f32; 16 * 8];
         layer.matmul(&set.layers[0].x, 16, &mut y);
         set.layers[0].y = y;
-        let out = recover_blocks(&set, &[shape], &w, &[4], 8);
+        let out = recover_blocks(&set, &[shape], &w, &[4], 8, QuantGrid::WOT8);
         assert!(out.recovered.is_empty());
         assert!(
             matches!(out.quarantined[..], [(4, RecoveryError::Singular { .. })]),
@@ -759,7 +764,7 @@ mod tests {
         }
         // make the corruption non-affine so no exact solution exists
         set.layers[0].y[3] *= -7.0;
-        let out = recover_blocks(&set, &[shape], &w, &[2], 8);
+        let out = recover_blocks(&set, &[shape], &w, &[2], 8, QuantGrid::WOT8);
         assert!(
             out.recovered.is_empty(),
             "poisoned Y must not yield a 'recovered' block: {out:?}"
@@ -787,7 +792,7 @@ mod tests {
         for b in 0..24 {
             set.layers[0].y[b * 16 + 3] = -1e3;
         }
-        let out = recover_blocks(&set, &[shape], &bad, &[0, 5], 8);
+        let out = recover_blocks(&set, &[shape], &bad, &[0, 5], 8, QuantGrid::WOT8);
         assert_eq!(out.recovered.len(), 1, "{:?}", out.quarantined);
         assert_eq!(out.recovered[0].block, 5);
         assert_eq!(out.recovered[0].weights, w[40..48], "exact reconstruction");

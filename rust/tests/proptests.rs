@@ -948,3 +948,152 @@ fn prop_ber_estimator_brackets_injected_rate() {
         Ok(())
     });
 }
+
+// ------------------------------------------------ fleet arbitration --
+
+/// A random cross-model demand set: distinct (model, shard) pairs with
+/// arbitrary pass costs, urgency signals, and deferral histories.
+fn random_demands(rng: &mut Rng, size: usize) -> Vec<zsecc::memory::ScrubDemand> {
+    use zsecc::memory::ScrubDemand;
+    let n = rng.below(3 * size as u64 + 2) as usize;
+    (0..n)
+        .map(|i| ScrubDemand {
+            model: rng.below(4) as usize,
+            shard: i, // shard index unique => (model, shard) distinct
+            bits: 64 * (1 + rng.below(64)),
+            ber_upper: rng.f64() * 1e-3,
+            lateness_secs: rng.f64() * 30.0,
+            deferrals: rng.below(8) as u32,
+        })
+        .collect()
+}
+
+/// Conservation: for any demand set and budget, the arbiter never
+/// spends more bits than the budget, never grants a pass it was not
+/// asked for, never grants the same shard twice, is deterministic, and
+/// — whenever the budget covers the largest single demand — grants at
+/// least one pass (the lemma the starvation bound stands on).
+#[test]
+fn prop_fleet_arbitration_conserves_the_budget() {
+    use zsecc::memory::arbitrate;
+    check("fleet budget conservation", 60, |rng, size| {
+        let demands = random_demands(rng, size);
+        let starve_after = 1 + rng.below(6) as u32;
+        let max_bits = demands.iter().map(|d| d.bits).max().unwrap_or(0);
+        let budget = match rng.below(3) {
+            0 => rng.below(max_bits + 1),          // tight: may grant nothing
+            1 => max_bits + rng.below(max_bits + 1), // covers the largest demand
+            _ => u64::MAX,                          // unbounded
+        };
+        let grants = arbitrate(&demands, budget, starve_after);
+        let by_key: std::collections::BTreeMap<(usize, usize), u64> =
+            demands.iter().map(|d| ((d.model, d.shard), d.bits)).collect();
+        let mut spent = 0u64;
+        let mut seen = std::collections::BTreeSet::new();
+        for g in &grants {
+            let bits = by_key
+                .get(&(g.model, g.shard))
+                .ok_or_else(|| format!("granted undemanded shard ({}, {})", g.model, g.shard))?;
+            if !seen.insert((g.model, g.shard)) {
+                return Err(format!("duplicate grant ({}, {})", g.model, g.shard));
+            }
+            spent = spent.saturating_add(*bits);
+        }
+        if budget != u64::MAX && spent > budget {
+            return Err(format!("spent {spent} bits of a {budget} budget"));
+        }
+        if !demands.is_empty() && budget >= max_bits && grants.is_empty() {
+            return Err(format!(
+                "budget {budget} covers the largest demand ({max_bits}) but nothing was granted"
+            ));
+        }
+        if arbitrate(&demands, budget, starve_after) != grants {
+            return Err("arbitration is not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+/// Starvation-freedom over the live planner: a permanently overloaded
+/// fleet (every shard due every wakeup, demand far above budget) with a
+/// hot shard whose urgency dominates — and migrates between models —
+/// must still scrub every shard at least once every
+/// `starve_after + total_shards` wakeups once the books warm up,
+/// while each wakeup's granted bits stay within the budget.
+#[test]
+fn prop_fleet_planner_never_starves_a_due_shard() {
+    use std::time::Duration;
+    use zsecc::memory::{FleetArbitration, SchedulerConfig, ScrubScheduler};
+    check("fleet starvation freedom", 12, |rng, size| {
+        let nmodels = 1 + rng.below(3) as usize;
+        let shards_per = 2 + rng.below((size as u64 / 8).max(1) + 4) as usize;
+        let shard_bits = 512u64;
+        let budget_passes = 1 + rng.below(3);
+        let starve_after = 1 + rng.below(4) as u32;
+        let tick = Duration::from_secs(1);
+        let mut fleet = FleetArbitration::new(Some(budget_passes * shard_bits), starve_after);
+        let mut scheds: Vec<ScrubScheduler> = (0..nmodels)
+            .map(|_| {
+                // fixed 1-tick cadence: with virtual time stepping one
+                // tick per wakeup, every shard is due at every wakeup —
+                // the permanent-overload worst case.
+                ScrubScheduler::new(
+                    SchedulerConfig::fixed(tick),
+                    &vec![shard_bits; shards_per],
+                    Duration::ZERO,
+                )
+            })
+            .collect();
+        let slots: Vec<usize> = (0..nmodels).map(|_| fleet.register(shards_per)).collect();
+        let total_shards = (nmodels * shards_per) as u64;
+        let bound = u64::from(starve_after) + total_shards;
+        let wakeups = 4 * bound + 16;
+        let mut last_grant = vec![vec![0u64; shards_per]; nmodels];
+        let mut hot = (0usize, 0usize);
+        for w in 1..=wakeups {
+            // the hotspot migrates across models/shards every few wakeups
+            if w % (bound / 2 + 1) == 0 {
+                hot = (
+                    rng.below(nmodels as u64) as usize,
+                    rng.below(shards_per as u64) as usize,
+                );
+            }
+            let now = tick * (w as u32);
+            let grants = {
+                let refs: Vec<(usize, &ScrubScheduler)> =
+                    slots.iter().copied().zip(scheds.iter()).collect();
+                fleet.plan(&refs, now)
+            };
+            let spent = grants.len() as u64 * shard_bits;
+            if spent > budget_passes * shard_bits {
+                return Err(format!(
+                    "wakeup {w}: spent {spent} bits of a {} budget",
+                    budget_passes * shard_bits
+                ));
+            }
+            for g in &grants {
+                // pump the hot shard's error history so its Wilson
+                // upper bound (and urgency) dominates the field
+                let detected = if (g.model, g.shard) == hot { 40 } else { 0 };
+                let stats = DecodeStats { corrected: 0, detected, zeroed: 0 };
+                scheds[g.model].record_pass(g.shard, &stats, now);
+                last_grant[g.model][g.shard] = w;
+            }
+        }
+        // warm-up excluded: the first `bound` wakeups drain the initial
+        // all-due burst in deterministic order
+        for (mi, lane) in last_grant.iter().enumerate() {
+            for (si, &last) in lane.iter().enumerate() {
+                let wait = wakeups - last;
+                if last == 0 || wait > bound {
+                    return Err(format!(
+                        "model {mi} shard {si}: last grant at wakeup {last} of {wakeups} \
+                         (wait {wait} > bound {bound}, starve_after {starve_after}, \
+                         {total_shards} shards, {budget_passes} passes/wakeup)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
