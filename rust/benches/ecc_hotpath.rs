@@ -25,6 +25,10 @@
 //! `FleetArbitration::plan` per wakeup at N models × S shards with
 //! every shard due (worst-case demand width).
 //!
+//! The `closedloop` section prices the wear aging process the
+//! closed-loop accuracy simulation drives every tick: `Wear::advance`
+//! and `Wear::strike_positions` at the saturated stuck population.
+//!
 //! `--json` appends one machine-readable record (for the BENCH_*.json
 //! trajectory) after the human-readable output; `--out FILE` appends
 //! the same record to FILE (the repo-root `BENCH_ecc.json` ledger is a
@@ -556,6 +560,48 @@ fn main() {
         rows
     };
 
+    // closed-loop wear process: the per-tick overhead the aging model
+    // adds to the accuracy simulation — advance() (stuck-at accrual)
+    // and strike_positions() (stuck re-assert scan over the full stuck
+    // set + transient draws) against the n-byte in-place image, priced
+    // at the saturated stuck population (the steady-state worst case:
+    // every tick walks the whole stuck map). Ledger-only, not a
+    // regression gate.
+    let (wear_advance_us, wear_strike_us, wear_strikes, wear_stuck) = {
+        use zsecc::memory::{Wear, WearParams};
+        println!("== closedloop: wear process per-tick cost (saturated stuck set) ==");
+        let sb = ShardedBank::new(strategy_by_name("in-place").unwrap(), &w8, 32, 1).unwrap();
+        let total_bits = sb.total_bits();
+        let mut wear = Wear::new(WearParams::default(), 7).unwrap();
+        // default params reach the stuck cap around tick ~600
+        // (size-independent: both cap and per-tick budget scale with
+        // total_bits); past the cap every advance() is O(1)
+        for _ in 0..1000 {
+            wear.advance(total_bits);
+        }
+        let ra = bench("wear: advance (at stuck cap)", || {
+            wear.advance(std::hint::black_box(total_bits));
+        });
+        let strikes = wear.strike_positions(sb.image()).len();
+        let rs = bench("wear: strike_positions", || {
+            let p = wear.strike_positions(std::hint::black_box(sb.image()));
+            std::hint::black_box(&p);
+        });
+        println!(
+            "    -> advance {:.2} us/tick | strikes {:.1} us/tick ({} positions, {} stuck)",
+            ra.ns_per_iter / 1e3,
+            rs.ns_per_iter / 1e3,
+            strikes,
+            wear.stuck_cells()
+        );
+        (
+            ra.ns_per_iter / 1e3,
+            rs.ns_per_iter / 1e3,
+            strikes,
+            wear.stuck_cells(),
+        )
+    };
+
     // compute-path guards: the guarded software executor's dense-head
     // forward under each guard mode vs the unguarded pass (same model,
     // same inputs, no faults — the steady-state serve cost), plus the
@@ -773,6 +819,15 @@ fn main() {
                         "ns_per_due_shard",
                         arr(fleet_rows.iter().map(|&(m, sh, ns)| num(ns / (m * sh) as f64))),
                     ),
+                ]),
+            ),
+            (
+                "closedloop",
+                obj(vec![
+                    ("wear_advance_us_per_tick", num(wear_advance_us)),
+                    ("wear_strike_us_per_tick", num(wear_strike_us)),
+                    ("wear_strikes_per_tick", num(wear_strikes as f64)),
+                    ("wear_stuck_cells", num(wear_stuck as f64)),
                 ]),
             ),
             (

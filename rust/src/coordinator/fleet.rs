@@ -68,6 +68,31 @@ impl Default for FleetConfig {
     }
 }
 
+impl FleetConfig {
+    /// Derive the per-wakeup bit budget from an operator-facing
+    /// scrub-bandwidth figure in GB/s (see
+    /// [`crate::memory::scheduler::gbps_to_bits_per_wakeup`]): the
+    /// fleet may spend `gbps x wakeup` worth of stored bits each
+    /// wakeup. A non-positive or non-finite `gbps` converts to a zero
+    /// budget — nothing is ever granted — rather than `None`'s
+    /// unbounded legacy behavior, so a typo'd bandwidth fails loudly.
+    pub fn with_budget_gbps(mut self, gbps: f64, wakeup: Duration) -> FleetConfig {
+        self.budget_bits = Some(crate::memory::scheduler::gbps_to_bits_per_wakeup(
+            gbps, wakeup,
+        ));
+        self
+    }
+
+    /// The pure arbitration state this config describes — the same
+    /// `FleetArbitration::new` call the control thread makes at
+    /// startup. The closed-loop simulation harness drives this planner
+    /// directly (register banks, `plan` each tick), so a policy the
+    /// sim certifies is byte-for-byte the law production executes.
+    pub fn planner(&self) -> FleetArbitration {
+        FleetArbitration::new(self.budget_bits, self.starve_after)
+    }
+}
+
 /// Everything the fleet control loop needs to scrub one model: the
 /// protected store, its refresh plumbing toward the inference thread,
 /// fault-injection knobs and the recovery tier. Built by

@@ -106,6 +106,14 @@ pub struct ServerConfig {
     /// Lane name in fleet gauges and the merged router report;
     /// [`Server::start_pjrt`] sets it to the model name.
     pub fleet_label: String,
+    /// Scrub-bandwidth budget for this server's *private* fleet-of-one
+    /// in GB/s, converted to bits per wakeup against `scrub_interval`
+    /// (see [`crate::memory::gbps_to_bits_per_wakeup`]). `None` keeps
+    /// the legacy unbounded behavior (every due shard granted every
+    /// wakeup). Ignored when the server enrolls in a shared arbiter —
+    /// the shared [`FleetConfig`] owns the budget there. Must be finite
+    /// and > 0 when set.
+    pub scrub_budget_gbps: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -132,6 +140,7 @@ impl Default for ServerConfig {
             // the same constant); see SchedulerConfig::target_residual
             target_residual: 0.5,
             fleet_label: "model".into(),
+            scrub_budget_gbps: None,
         }
     }
 }
@@ -158,6 +167,9 @@ pub enum ConfigError {
     /// `target_residual` is not a finite positive number — the fleet
     /// arbiter and the adaptive scheduler both divide by it.
     TargetResidual,
+    /// `scrub_budget_gbps` is set but not a finite positive number — a
+    /// zero/NaN bandwidth would silently grant no scrub passes at all.
+    ScrubBudgetGbps,
 }
 
 impl std::fmt::Display for ConfigError {
@@ -191,6 +203,11 @@ impl std::fmt::Display for ConfigError {
                 "target_residual must be a finite number > 0 \
                  (expected new error bits per shard per scrub interval)"
             ),
+            ConfigError::ScrubBudgetGbps => write!(
+                f,
+                "scrub_budget_gbps must be a finite number > 0 when set \
+                 (scrub bandwidth the private fleet-of-one may spend)"
+            ),
         }
     }
 }
@@ -223,6 +240,12 @@ impl ServerConfig {
         }
         if !self.target_residual.is_finite() || self.target_residual <= 0.0 {
             return Err(ConfigError::TargetResidual);
+        }
+        if self
+            .scrub_budget_gbps
+            .is_some_and(|g| !g.is_finite() || g <= 0.0)
+        {
+            return Err(ConfigError::ScrubBudgetGbps);
         }
         Ok(())
     }
@@ -578,12 +601,20 @@ impl Server {
                 stop: Arc::new(AtomicBool::new(false)),
             };
             scrub_stop = Some(unit.stop.clone());
-            // A private fleet-of-one (no budget cap) reproduces the old
-            // per-server scrub thread exactly: every due shard granted
-            // every wakeup, no cross-model contention.
+            // A private fleet-of-one reproduces the old per-server
+            // scrub thread exactly (no budget cap: every due shard
+            // granted every wakeup) unless the operator stated a
+            // bandwidth budget, which converts to bits per wakeup
+            // against this server's own scrub interval.
             let arbiter = match fleet {
                 Some(f) => f,
-                None => Arc::new(FleetArbiter::new(FleetConfig::default())?),
+                None => {
+                    let fc = match cfg.scrub_budget_gbps {
+                        Some(gbps) => FleetConfig::default().with_budget_gbps(gbps, interval),
+                        None => FleetConfig::default(),
+                    };
+                    Arc::new(FleetArbiter::new(fc)?)
+                }
             };
             arbiter.enroll(unit);
             fleet_handle = Some(arbiter);

@@ -1,0 +1,880 @@
+//! Closed-loop accuracy-vs-scrub-energy simulation under drifting
+//! wear faults.
+//!
+//! Every other harness measures protection in *storage* terms
+//! (residual uncorrectable blocks, wrong weights). This one closes the
+//! loop the paper's reliability argument actually cares about: a real
+//! model is served from a [`ShardedBank`] while a [`Wear`] aging
+//! process drifts — per-cell stuck-at damage accumulates inside a wear
+//! window tick after tick, and the worn region's transient rate is
+//! elevated, so the scheduler's Wilson BER estimator chases a moving
+//! target — and each simulated epoch is scored by **end-to-end
+//! accuracy** of the decoded weights through an [`EpochScorer`] (the
+//! PJRT evaluator when artifacts exist, the campaign's synthetic dense
+//! head otherwise).
+//!
+//! One discrete tick (= one virtual second):
+//!
+//! ```text
+//!   wear.advance            damage drifts (stuck set grows)
+//!   wear.strike_positions   stuck cells re-assert + transients land
+//!   bank.inject_positions   the store reads back the damaged state
+//!   sched.step_plan         ONE dispatch law: due shards through the
+//!     (or FleetConfig        fleet arbiter under this cell's bit
+//!      ::planner().plan)     budget — exactly what production runs
+//!   bank.scrub_subset       granted shards scrub; bits are the
+//!   sched.record_pass        energy spent (joules proxy)
+//! ```
+//!
+//! At each epoch boundary the bank is decoded once (the inference
+//! path's read, correcting single-error blocks in flight) and the
+//! scorer turns the decoded weights into an accuracy. Sweeping scrub
+//! policy {fixed, adaptive} × per-tick pass budgets at equal bandwidth
+//! yields the **accuracy-vs-scrub-joules frontier**; the
+//! deterministic acceptance gate ([`verdict`]) requires the adaptive
+//! policy to dominate fixed at every equal-budget point — at least the
+//! accuracy for at most the energy — and is the `[closedloop ok]` line
+//! nightly CI greps for.
+//!
+//! Why adaptive dominates here and not under a uniform process: the
+//! wear process is window-localized, and the damage the policy can
+//! actually prevent is an in-window transient collecting a *partner*
+//! flip in the same code block before a scrub separates them (two
+//! uncorrected flips in one SEC block are permanent wrong weights).
+//! Both policies see the *identical* damage stream — [`Wear`] consumes
+//! randomness independently of the image contents — so a pair the
+//! adaptive policy's 1-tick hot cadence lets form (both flips in one
+//! tick) also forms under fixed, while fixed's longer hot-shard period
+//! lets strictly more pairs survive. Stuck-at pairs, by contrast, are
+//! permanent under any policy; they set the drifting accuracy floor
+//! both policies share.
+//!
+//! Everything is deterministic in the config seed and independent of
+//! worker count or wall-clock, so the sweep checkpoints into a
+//! fingerprinted resumable ledger (same idiom as the campaign engine)
+//! and a resumed run reproduces the interrupted one byte for byte.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use crate::coordinator::FleetConfig;
+use crate::ecc::strategy_by_name;
+use crate::memory::{SchedulerConfig, ScrubPolicy, ScrubScheduler, ShardedBank, Wear, WearParams};
+use crate::runtime::guard::DenseModel;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::plot;
+use crate::util::rng::Rng;
+
+/// Which dispatch law plans each tick's scrub passes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Planner {
+    /// [`ScrubScheduler::step_plan`] — the single-model stepping of the
+    /// shared arbitration law (no deferral counters).
+    Sched,
+    /// [`FleetConfig::planner`] — the full fleet arbiter with deferral
+    /// tracking and the starvation guarantee, driven as a fleet of one.
+    Fleet,
+}
+
+impl Planner {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Planner::Sched => "sched",
+            Planner::Fleet => "fleet",
+        }
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Planner> {
+        match text {
+            "sched" => Ok(Planner::Sched),
+            "fleet" => Ok(Planner::Fleet),
+            _ => anyhow::bail!("unknown planner '{text}' (sched | fleet)"),
+        }
+    }
+}
+
+/// Closed-loop sweep knobs. `budgets` are scrub passes per tick; each
+/// is converted to a bit budget over the widest shard so every cell of
+/// the sweep is an equal-bandwidth comparison.
+#[derive(Clone, Debug)]
+pub struct LoopConfig {
+    pub strategy: String,
+    pub n_weights: usize,
+    pub shards: usize,
+    pub epochs: u64,
+    pub ticks_per_epoch: u64,
+    /// Adaptive upper clamp, in ticks.
+    pub max_interval_ticks: u64,
+    /// Pool workers for the scrub fan-out (decode output is
+    /// worker-count independent, so this is excluded from the ledger
+    /// fingerprint).
+    pub workers: usize,
+    pub planner: Planner,
+    /// Deferral cap when `planner` is [`Planner::Fleet`].
+    pub starve_after: u32,
+    pub wear: WearParams,
+    pub seed: u64,
+    pub budgets: Vec<u64>,
+}
+
+impl Default for LoopConfig {
+    fn default() -> Self {
+        LoopConfig {
+            strategy: "in-place".into(),
+            n_weights: 64 * 1024,
+            shards: 16,
+            epochs: 6,
+            ticks_per_epoch: 30,
+            max_interval_ticks: 16,
+            workers: 2,
+            planner: Planner::Sched,
+            starve_after: 4,
+            wear: WearParams::default(),
+            seed: 42,
+            budgets: vec![1, 2, 4],
+        }
+    }
+}
+
+impl LoopConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.epochs >= 1, "closed loop needs at least one epoch");
+        anyhow::ensure!(
+            self.ticks_per_epoch >= 1,
+            "closed loop needs at least one tick per epoch"
+        );
+        anyhow::ensure!(!self.budgets.is_empty(), "budget sweep must not be empty");
+        for pair in self.budgets.windows(2) {
+            anyhow::ensure!(
+                pair[0] < pair[1],
+                "budgets must be strictly increasing (got {} then {})",
+                pair[0],
+                pair[1]
+            );
+        }
+        anyhow::ensure!(
+            self.budgets[0] >= 1,
+            "every budget needs at least 1 pass/tick"
+        );
+        self.wear.validate()
+    }
+
+    /// Identity of the sweep a ledger belongs to. Excludes `workers`
+    /// (results are worker-count independent) and the policy set (cells
+    /// are keyed individually, so a fixed-only run can be resumed into
+    /// a both-policies run).
+    pub fn fingerprint(&self, scorer: &str) -> String {
+        let budgets: Vec<String> = self.budgets.iter().map(|b| b.to_string()).collect();
+        format!(
+            "closedloop-v1|scorer={scorer}|strategy={}|n={}|shards={}|epochs={}|ticks={}|maxint={}|planner={}|starve={}|seed={}|{}|budgets={}",
+            self.strategy,
+            self.n_weights,
+            self.shards,
+            self.epochs,
+            self.ticks_per_epoch,
+            self.max_interval_ticks,
+            self.planner.tag(),
+            self.starve_after,
+            self.seed,
+            self.wear.tag(),
+            budgets.join(",")
+        )
+    }
+}
+
+/// Scores one epoch's decoded weights by end-to-end accuracy. The
+/// scorer owns the clean weight image the protected bank stores.
+pub trait EpochScorer {
+    /// Identity entering the ledger fingerprint (e.g. `synthetic`,
+    /// `pjrt:squeezenet_s`).
+    fn name(&self) -> String;
+    /// The clean int8 weights the bank protects.
+    fn weights(&self) -> &[i8];
+    /// Accuracy in [0, 1] of a decoded weight image.
+    fn score(&mut self, decoded: &[i8]) -> anyhow::Result<f64>;
+}
+
+/// Artifact-free scorer: the campaign engine's synthetic dense head
+/// (`[n/16 x 16]` over the dequantized synthetic WOT image), scored as
+/// argmax agreement with the clean model on one deterministic batch.
+/// What CI and the nightly frontier run.
+pub struct SyntheticScorer {
+    weights: Vec<i8>,
+    x: Vec<f32>,
+    dim: usize,
+    clean_argmax: Vec<usize>,
+}
+
+impl SyntheticScorer {
+    /// Columns of the synthetic dense head (the campaign's geometry).
+    const CLASSES: usize = 16;
+    /// Rows of the fixed scoring batch: accuracy quantizes to 1/64.
+    const BATCH: usize = 64;
+    /// The int8 pipeline's dequantization scale for synthetic heads.
+    const SCALE: f32 = 0.02;
+
+    pub fn new(n_weights: usize) -> anyhow::Result<SyntheticScorer> {
+        anyhow::ensure!(
+            n_weights >= Self::CLASSES && n_weights % Self::CLASSES == 0,
+            "closed-loop scoring needs n_weights to be a multiple of {} (got {n_weights})",
+            Self::CLASSES
+        );
+        let weights = crate::harness::ablation::synth_wot(n_weights, 42);
+        let dim = n_weights / Self::CLASSES;
+        let mut rng = Rng::new(4242);
+        let x: Vec<f32> = (0..Self::BATCH * dim).map(|_| rng.f64() as f32).collect();
+        let clean = Self::head(&weights, dim)?.forward(&x, Self::BATCH);
+        let clean_argmax = argmax_rows(&clean, Self::CLASSES);
+        Ok(SyntheticScorer {
+            weights,
+            x,
+            dim,
+            clean_argmax,
+        })
+    }
+
+    fn head(q: &[i8], dim: usize) -> anyhow::Result<DenseModel> {
+        let w: Vec<f32> = q.iter().map(|&v| f32::from(v) * Self::SCALE).collect();
+        DenseModel::from_flat(&w, &[(dim, Self::CLASSES)])
+    }
+}
+
+impl EpochScorer for SyntheticScorer {
+    fn name(&self) -> String {
+        "synthetic".into()
+    }
+
+    fn weights(&self) -> &[i8] {
+        &self.weights
+    }
+
+    fn score(&mut self, decoded: &[i8]) -> anyhow::Result<f64> {
+        anyhow::ensure!(
+            decoded.len() == self.weights.len(),
+            "decoded image holds {} weights, scorer expects {}",
+            decoded.len(),
+            self.weights.len()
+        );
+        let logits = Self::head(decoded, self.dim)?.forward(&self.x, Self::BATCH);
+        let agree = argmax_rows(&logits, Self::CLASSES)
+            .iter()
+            .zip(&self.clean_argmax)
+            .filter(|(a, b)| a == b)
+            .count();
+        Ok(agree as f64 / Self::BATCH as f64)
+    }
+}
+
+/// Row-wise argmax of a `[rows x classes]` logit matrix. Ties resolve
+/// to the lowest index, deterministically.
+fn argmax_rows(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            let mut best = 0;
+            for (c, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// One (policy, budget) cell of the sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellOutcome {
+    pub policy: ScrubPolicy,
+    pub budget_passes: u64,
+    /// End-to-end accuracy at each epoch boundary.
+    pub epoch_acc: Vec<f64>,
+    /// Total stored bits scrubbed — the energy (joules) proxy.
+    pub bits_scrubbed: u64,
+    pub scrub_passes: u64,
+    pub faults_struck: u64,
+    /// Stuck cells accumulated by the wear process when the clock
+    /// stopped (identical across cells by construction).
+    pub stuck_cells: u64,
+    pub residual_uncorrectable: u64,
+    pub residual_wrong_weights: u64,
+}
+
+impl CellOutcome {
+    fn key_of(policy: ScrubPolicy, budget: u64) -> String {
+        format!("{}|{budget}", policy.tag())
+    }
+
+    pub fn key(&self) -> String {
+        Self::key_of(self.policy, self.budget_passes)
+    }
+
+    pub fn mean_acc(&self) -> f64 {
+        if self.epoch_acc.is_empty() {
+            return 0.0;
+        }
+        self.epoch_acc.iter().sum::<f64>() / self.epoch_acc.len() as f64
+    }
+
+    pub fn min_acc(&self) -> f64 {
+        self.epoch_acc.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("policy", s(self.policy.tag())),
+            ("budget_passes", num(self.budget_passes as f64)),
+            ("epoch_acc", arr(self.epoch_acc.iter().map(|&a| num(a)))),
+            ("bits_scrubbed", num(self.bits_scrubbed as f64)),
+            ("scrub_passes", num(self.scrub_passes as f64)),
+            ("faults_struck", num(self.faults_struck as f64)),
+            ("stuck_cells", num(self.stuck_cells as f64)),
+            (
+                "residual_uncorrectable",
+                num(self.residual_uncorrectable as f64),
+            ),
+            (
+                "residual_wrong_weights",
+                num(self.residual_wrong_weights as f64),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<CellOutcome> {
+        let f = |k: &str| -> anyhow::Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("ledger cell field '{k}' must be a number"))
+        };
+        let policy = ScrubPolicy::parse(
+            v.req("policy")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("ledger cell field 'policy' must be a string"))?,
+        )?;
+        let epoch_acc = v
+            .req("epoch_acc")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("ledger cell field 'epoch_acc' must be an array"))?
+            .iter()
+            .map(|a| {
+                a.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("epoch accuracies must be numbers"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        Ok(CellOutcome {
+            policy,
+            budget_passes: f("budget_passes")? as u64,
+            epoch_acc,
+            bits_scrubbed: f("bits_scrubbed")? as u64,
+            scrub_passes: f("scrub_passes")? as u64,
+            faults_struck: f("faults_struck")? as u64,
+            stuck_cells: f("stuck_cells")? as u64,
+            residual_uncorrectable: f("residual_uncorrectable")? as u64,
+            residual_wrong_weights: f("residual_wrong_weights")? as u64,
+        })
+    }
+}
+
+/// The finished sweep: cells in budget-major, fixed-before-adaptive
+/// order (whichever of those the policy set produced).
+#[derive(Clone, Debug)]
+pub struct LoopReport {
+    pub fingerprint: String,
+    pub cells: Vec<CellOutcome>,
+}
+
+impl LoopReport {
+    fn pair(&self, budget: u64) -> (Option<&CellOutcome>, Option<&CellOutcome>) {
+        let find = |p: ScrubPolicy| {
+            self.cells
+                .iter()
+                .find(|c| c.policy == p && c.budget_passes == budget)
+        };
+        (find(ScrubPolicy::Fixed), find(ScrubPolicy::Adaptive))
+    }
+
+    fn budgets(&self) -> Vec<u64> {
+        let mut budgets: Vec<u64> = self.cells.iter().map(|c| c.budget_passes).collect();
+        budgets.sort_unstable();
+        budgets.dedup();
+        budgets
+    }
+
+    /// JSON record: the raw cells (with their per-epoch accuracy
+    /// traces) plus the derived frontier — one point per budget pairing
+    /// each policy's mean accuracy with the energy it actually spent.
+    pub fn to_json(&self) -> Json {
+        let frontier = self.budgets().into_iter().map(|b| {
+            let (fixed, adaptive) = self.pair(b);
+            let acc = |c: Option<&CellOutcome>| match c {
+                Some(c) => num(c.mean_acc()),
+                None => Json::Null,
+            };
+            let bits = |c: Option<&CellOutcome>| match c {
+                Some(c) => num(c.bits_scrubbed as f64),
+                None => Json::Null,
+            };
+            obj(vec![
+                ("budget_passes", num(b as f64)),
+                ("fixed_acc", acc(fixed)),
+                ("adaptive_acc", acc(adaptive)),
+                ("fixed_bits", bits(fixed)),
+                ("adaptive_bits", bits(adaptive)),
+            ])
+        });
+        obj(vec![
+            ("fingerprint", s(&self.fingerprint)),
+            ("cells", arr(self.cells.iter().map(|c| c.to_json()))),
+            ("frontier", arr(frontier)),
+        ])
+    }
+}
+
+/// Human-readable sweep table.
+pub fn render(report: &LoopReport) -> String {
+    let headers = [
+        "budget",
+        "policy",
+        "passes",
+        "bits-scrubbed",
+        "mean-acc",
+        "min-acc",
+        "final-acc",
+        "stuck",
+        "resid-uncorr",
+        "resid-wrong",
+    ];
+    let rows: Vec<Vec<String>> = report
+        .cells
+        .iter()
+        .map(|c| {
+            vec![
+                format!("{}/tick", c.budget_passes),
+                c.policy.tag().to_string(),
+                c.scrub_passes.to_string(),
+                c.bits_scrubbed.to_string(),
+                format!("{:.4}", c.mean_acc()),
+                format!("{:.4}", c.min_acc()),
+                format!("{:.4}", c.epoch_acc.last().copied().unwrap_or(0.0)),
+                c.stuck_cells.to_string(),
+                c.residual_uncorrectable.to_string(),
+                c.residual_wrong_weights.to_string(),
+            ]
+        })
+        .collect();
+    plot::table(&headers, &rows)
+}
+
+/// The deterministic acceptance gate: at every budget where both
+/// policies ran, adaptive must reach **at least** fixed's mean epoch
+/// accuracy while spending **at most** fixed's scrub energy — the
+/// adaptive frontier dominates the fixed one pointwise. Returns the
+/// `[closedloop ok]` line; a violated inequality is an error (the CLI
+/// exits nonzero, which is what CI gates on).
+pub fn verdict(report: &LoopReport) -> anyhow::Result<String> {
+    let mut compared = 0usize;
+    for b in report.budgets() {
+        let (Some(fixed), Some(adaptive)) = report.pair(b) else {
+            continue;
+        };
+        anyhow::ensure!(
+            adaptive.mean_acc() >= fixed.mean_acc(),
+            "[closedloop FAIL] adaptive mean accuracy {:.4} < fixed {:.4} at {b} passes/tick",
+            adaptive.mean_acc(),
+            fixed.mean_acc()
+        );
+        anyhow::ensure!(
+            adaptive.bits_scrubbed <= fixed.bits_scrubbed,
+            "[closedloop FAIL] adaptive scrubbed {} bits > fixed {} at {b} passes/tick",
+            adaptive.bits_scrubbed,
+            fixed.bits_scrubbed
+        );
+        compared += 1;
+    }
+    anyhow::ensure!(
+        compared > 0,
+        "[closedloop FAIL] no budget ran both policies; nothing to compare"
+    );
+    Ok(format!(
+        "[closedloop ok] adaptive dominates fixed at all {compared} equal-budget \
+         frontier points (accuracy >= at energy <=)"
+    ))
+}
+
+/// Run one (policy, budget) cell: the full tick/epoch loop of the
+/// module docs over a fresh bank, scheduler and wear process.
+pub fn run_cell(
+    cfg: &LoopConfig,
+    scorer: &mut dyn EpochScorer,
+    policy: ScrubPolicy,
+    budget_passes: u64,
+) -> anyhow::Result<CellOutcome> {
+    anyhow::ensure!(budget_passes >= 1, "budget must be at least 1 pass/tick");
+    let weights = scorer.weights().to_vec();
+    anyhow::ensure!(
+        weights.len() == cfg.n_weights,
+        "scorer holds {} weights, config says {}",
+        weights.len(),
+        cfg.n_weights
+    );
+    let mut bank = ShardedBank::new(
+        strategy_by_name(&cfg.strategy)?,
+        &weights,
+        cfg.shards,
+        cfg.workers,
+    )?;
+    let nshards = bank.num_shards();
+    let shard_bits: Vec<u64> = (0..nshards).map(|i| bank.shard_bits(i)).collect();
+    // Equal-bandwidth budgets: passes are priced at the widest shard,
+    // so every cell of the sweep may spend the same stored bits/tick.
+    let pass_bits = shard_bits.iter().copied().max().unwrap_or(0);
+    anyhow::ensure!(pass_bits > 0, "bank has no stored bits to scrub");
+    let budget_bits = budget_passes * pass_bits;
+    let tick = Duration::from_secs(1);
+    let sched_cfg = match policy {
+        // fixed at the bandwidth-implied period: budget passes/tick
+        // over S shards = each shard every S/budget ticks
+        ScrubPolicy::Fixed => {
+            SchedulerConfig::fixed(tick * (nshards.div_ceil(budget_passes as usize) as u32))
+        }
+        ScrubPolicy::Adaptive => {
+            SchedulerConfig::adaptive(tick, tick * (cfg.max_interval_ticks as u32))
+        }
+    };
+    let mut sched = ScrubScheduler::new(sched_cfg, &shard_bits, Duration::ZERO);
+    let mut planner = match cfg.planner {
+        Planner::Sched => None,
+        Planner::Fleet => {
+            let mut arb = FleetConfig {
+                budget_bits: Some(budget_bits),
+                starve_after: cfg.starve_after,
+            }
+            .planner();
+            let slot = arb.register(nshards);
+            Some((arb, slot))
+        }
+    };
+    // The wear process is seeded from the config alone — never the
+    // policy or budget — so every cell faces the identical damage
+    // stream and the sweep isolates the scrub response.
+    let mut wear = Wear::new(cfg.wear, cfg.seed)?;
+    let mut cell = CellOutcome {
+        policy,
+        budget_passes,
+        epoch_acc: Vec::with_capacity(cfg.epochs as usize),
+        bits_scrubbed: 0,
+        scrub_passes: 0,
+        faults_struck: 0,
+        stuck_cells: 0,
+        residual_uncorrectable: 0,
+        residual_wrong_weights: 0,
+    };
+    let mut decoded = vec![0i8; weights.len()];
+    for epoch in 0..cfg.epochs {
+        for et in 0..cfg.ticks_per_epoch {
+            let t = epoch * cfg.ticks_per_epoch + et;
+            let now = tick * (t as u32);
+            wear.advance(bank.total_bits());
+            let strikes = wear.strike_positions(bank.image());
+            cell.faults_struck += bank.inject_positions(&strikes);
+            let chosen: Vec<usize> = match &mut planner {
+                None => sched.step_plan(now, Some(budget_bits)),
+                Some((arb, slot)) => arb
+                    .plan(&[(*slot, &sched)], now)
+                    .into_iter()
+                    .map(|g| g.shard)
+                    .collect(),
+            };
+            for &(i, stats) in &bank.scrub_subset(&chosen) {
+                cell.bits_scrubbed += sched.shard_bits(i);
+                sched.record_pass(i, &stats, now);
+                cell.scrub_passes += 1;
+            }
+        }
+        // Epoch boundary: the inference path's protected read (single
+        // errors corrected in flight), scored end to end.
+        bank.read(&mut decoded);
+        cell.epoch_acc.push(scorer.score(&decoded)?);
+    }
+    cell.stuck_cells = wear.stuck_cells();
+    let outcome = bank.read_outcome(&mut decoded);
+    cell.residual_uncorrectable = if outcome.overflow {
+        outcome.stats.detected
+    } else {
+        outcome.detected_blocks.len() as u64
+    };
+    cell.residual_wrong_weights = decoded
+        .iter()
+        .zip(&weights)
+        .filter(|(a, b)| a != b)
+        .count() as u64;
+    Ok(cell)
+}
+
+/// Run the sweep: `policies` × `cfg.budgets`, checkpointing each
+/// finished cell into the ledger (when given) so an interrupted sweep
+/// resumes where it stopped. With `resume`, an existing ledger's cells
+/// are trusted verbatim after a fingerprint match — re-running a
+/// completed sweep touches nothing and reproduces the ledger byte for
+/// byte.
+pub fn run(
+    cfg: &LoopConfig,
+    scorer: &mut dyn EpochScorer,
+    policies: &[ScrubPolicy],
+    ledger_path: Option<&Path>,
+    resume: bool,
+) -> anyhow::Result<LoopReport> {
+    cfg.validate()?;
+    anyhow::ensure!(!policies.is_empty(), "no scrub policies selected");
+    let fingerprint = cfg.fingerprint(&scorer.name());
+    let mut ledger = match ledger_path {
+        Some(path) if resume && path.exists() => Ledger::load(path, &fingerprint)?,
+        _ => Ledger {
+            fingerprint: fingerprint.clone(),
+            cells: BTreeMap::new(),
+        },
+    };
+    for &budget in &cfg.budgets {
+        for &policy in policies {
+            let key = CellOutcome::key_of(policy, budget);
+            if ledger.cells.contains_key(&key) {
+                continue;
+            }
+            let cell = run_cell(cfg, scorer, policy, budget)?;
+            ledger.cells.insert(key, cell);
+            if let Some(path) = ledger_path {
+                ledger.save(path)?;
+            }
+        }
+    }
+    let mut cells = Vec::new();
+    for &budget in &cfg.budgets {
+        for policy in [ScrubPolicy::Fixed, ScrubPolicy::Adaptive] {
+            if let Some(c) = ledger.cells.get(&CellOutcome::key_of(policy, budget)) {
+                cells.push(c.clone());
+            }
+        }
+    }
+    Ok(LoopReport { fingerprint, cells })
+}
+
+// -------------------------------------------------------------- ledger --
+
+/// Resumable checkpoint of the sweep — the campaign engine's ledger
+/// idiom: a fingerprint hard-gating resume, cells keyed
+/// `policy|budget`, write-to-temp + rename persistence, and no
+/// wall-clock anywhere so the bytes are a pure function of the config.
+struct Ledger {
+    fingerprint: String,
+    cells: BTreeMap<String, CellOutcome>,
+}
+
+impl Ledger {
+    fn load(path: &Path, fingerprint: &str) -> anyhow::Result<Ledger> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading ledger {}: {e}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing ledger {}: {e}", path.display()))?;
+        let fp = v
+            .req("fingerprint")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("ledger 'fingerprint' must be a string"))?;
+        anyhow::ensure!(
+            fp == fingerprint,
+            "ledger {} belongs to a different sweep (fingerprint mismatch:\n  ledger: {fp}\n  config: {fingerprint})",
+            path.display()
+        );
+        let mut cells = BTreeMap::new();
+        for (k, cv) in v
+            .req("cells")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("ledger 'cells' must be an object"))?
+        {
+            cells.insert(k.clone(), CellOutcome::from_json(cv)?);
+        }
+        Ok(Ledger {
+            fingerprint: fingerprint.to_string(),
+            cells,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("fingerprint", s(&self.fingerprint)),
+            (
+                "cells",
+                Json::Obj(
+                    self.cells
+                        .iter()
+                        .map(|(k, c)| (k.clone(), c.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing ledger {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("publishing ledger {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small but physically meaningful: an 8-shard bank whose wear
+    /// window sits inside one shard, hot transients landing a few
+    /// flips per tick — the regime where pair formation separates the
+    /// policies within a couple of simulated minutes.
+    fn test_cfg() -> LoopConfig {
+        LoopConfig {
+            n_weights: 4 * 1024,
+            shards: 8,
+            epochs: 2,
+            ticks_per_epoch: 24,
+            max_interval_ticks: 8,
+            workers: 1,
+            wear: WearParams {
+                transient_rate: 0.0,
+                wear_rate: 2e-5,
+                accel: 1.0,
+                window_start: 0.25,
+                window_frac: 0.10,
+                max_stuck_frac: 0.05,
+                hot_rate: 8e-4,
+            },
+            budgets: vec![1],
+            ..LoopConfig::default()
+        }
+    }
+
+    #[test]
+    fn cells_are_deterministic() {
+        let cfg = test_cfg();
+        let mut scorer = SyntheticScorer::new(cfg.n_weights).unwrap();
+        let a = run_cell(&cfg, &mut scorer, ScrubPolicy::Adaptive, 1).unwrap();
+        let b = run_cell(&cfg, &mut scorer, ScrubPolicy::Adaptive, 1).unwrap();
+        assert_eq!(a, b, "same config + seed must reproduce the cell exactly");
+        assert!(a.faults_struck > 0, "the wear process must actually strike");
+        assert!(a.scrub_passes > 0, "the planner must actually grant passes");
+    }
+
+    #[test]
+    fn fleet_planner_is_the_same_law() {
+        // A fleet of one under the arbiter grants the same passes the
+        // scheduler's own stepping grants — the "one law" claim,
+        // observed end to end through cell outcomes. The budget covers
+        // every shard, so the arbiter's starvation guarantee (which
+        // single-model stepping deliberately omits) never has to fire
+        // and the two dispatch paths must coincide exactly.
+        let cfg = test_cfg();
+        let budget = cfg.shards as u64;
+        let mut scorer = SyntheticScorer::new(cfg.n_weights).unwrap();
+        let sched = run_cell(&cfg, &mut scorer, ScrubPolicy::Adaptive, budget).unwrap();
+        let fleet_cfg = LoopConfig {
+            planner: Planner::Fleet,
+            ..test_cfg()
+        };
+        let fleet = run_cell(&fleet_cfg, &mut scorer, ScrubPolicy::Adaptive, budget).unwrap();
+        assert_eq!(sched.epoch_acc, fleet.epoch_acc);
+        assert_eq!(sched.bits_scrubbed, fleet.bits_scrubbed);
+        assert_eq!(sched.scrub_passes, fleet.scrub_passes);
+    }
+
+    #[test]
+    fn adaptive_dominates_fixed_under_localized_wear() {
+        let cfg = test_cfg();
+        let mut scorer = SyntheticScorer::new(cfg.n_weights).unwrap();
+        let report = run(
+            &cfg,
+            &mut scorer,
+            &[ScrubPolicy::Fixed, ScrubPolicy::Adaptive],
+            None,
+            false,
+        )
+        .unwrap();
+        assert_eq!(report.cells.len(), 2);
+        let (fixed, adaptive) = (report.pair(1).0.unwrap(), report.pair(1).1.unwrap());
+        // Pair-formation physics: fixed's 8-tick hot period lets
+        // in-window transients collect partners; adaptive's 1-tick
+        // cadence separates them. Strictly fewer permanent wrong
+        // weights, at no extra energy, at no accuracy loss.
+        assert!(
+            adaptive.residual_wrong_weights < fixed.residual_wrong_weights,
+            "adaptive {} vs fixed {} residual wrong weights",
+            adaptive.residual_wrong_weights,
+            fixed.residual_wrong_weights
+        );
+        assert!(adaptive.bits_scrubbed <= fixed.bits_scrubbed);
+        assert!(adaptive.mean_acc() >= fixed.mean_acc());
+        let line = verdict(&report).unwrap();
+        assert!(line.starts_with("[closedloop ok]"), "{line}");
+    }
+
+    #[test]
+    fn ledger_resume_is_byte_identical() {
+        let dir = std::env::temp_dir().join(format!("zsecc-closedloop-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let fresh = dir.join("fresh.json");
+        let staged = dir.join("staged.json");
+        let cfg = test_cfg();
+        let mut scorer = SyntheticScorer::new(cfg.n_weights).unwrap();
+        let both = [ScrubPolicy::Fixed, ScrubPolicy::Adaptive];
+        run(&cfg, &mut scorer, &both, Some(&fresh), false).unwrap();
+        // Interrupted sweep: only the fixed cell lands, then a resumed
+        // run completes the adaptive cell on top of it.
+        run(&cfg, &mut scorer, &both[..1], Some(&staged), false).unwrap();
+        run(&cfg, &mut scorer, &both, Some(&staged), true).unwrap();
+        let a = std::fs::read(&fresh).unwrap();
+        let b = std::fs::read(&staged).unwrap();
+        assert_eq!(a, b, "resumed ledger must match a fresh run byte for byte");
+        // A different config must refuse the ledger outright.
+        let other = LoopConfig {
+            seed: 43,
+            ..test_cfg()
+        };
+        let err = run(&other, &mut scorer, &both, Some(&fresh), true).unwrap_err();
+        assert!(err.to_string().contains("fingerprint mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn report_json_carries_cells_and_frontier() {
+        let cfg = test_cfg();
+        let mut scorer = SyntheticScorer::new(cfg.n_weights).unwrap();
+        let report = run(
+            &cfg,
+            &mut scorer,
+            &[ScrubPolicy::Fixed, ScrubPolicy::Adaptive],
+            None,
+            false,
+        )
+        .unwrap();
+        let v = Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(
+            v.req("fingerprint").unwrap().as_str().unwrap(),
+            report.fingerprint
+        );
+        let cells = v.req("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        // cells round-trip through the ledger codec
+        for c in cells {
+            CellOutcome::from_json(c).unwrap();
+        }
+        let frontier = v.req("frontier").unwrap().as_arr().unwrap();
+        assert_eq!(frontier.len(), 1);
+        let point = &frontier[0];
+        assert_eq!(point.req("budget_passes").unwrap().as_f64(), Some(1.0));
+        assert!(point.req("fixed_acc").unwrap().as_f64().is_some());
+        assert!(point.req("adaptive_acc").unwrap().as_f64().is_some());
+        // the rendered table mentions every budget once per policy
+        let table = render(&report);
+        assert_eq!(table.matches("1/tick").count(), 2, "{table}");
+    }
+}

@@ -13,9 +13,13 @@
 //! set on synthetic buffers. [`scrubsim`] replays *time-varying*
 //! scenarios (rate ramps, hotspot migration) against the adaptive
 //! scrub scheduler at equal scrub bandwidth vs fixed-interval.
+//! [`closedloop`] closes the loop end to end: a model served under a
+//! live scheduler while a wear process drifts, scored per epoch by
+//! real accuracy, swept into the accuracy-vs-scrub-joules frontier.
 
 pub mod ablation;
 pub mod campaign;
+pub mod closedloop;
 pub mod eval;
 pub mod fig1;
 pub mod fig34;

@@ -344,8 +344,15 @@ pub struct FleetSimConfig {
     /// Shards per model bank.
     pub shards: usize,
     /// Scrub passes dispatched per tick **across the whole fleet** —
-    /// the bandwidth every allocation policy gets.
+    /// the bandwidth every allocation policy gets. Overridden by
+    /// `budget_gbps` when that is set.
     pub budget_passes: usize,
+    /// Operator-facing alternative to `budget_passes`: a scrub
+    /// bandwidth in GB/s, converted against the 1-second tick via
+    /// [`crate::memory::gbps_to_bits_per_wakeup`] and rounded *down*
+    /// to whole passes over the fleet's widest shard (a pass is never
+    /// split). Must buy at least one pass.
+    pub budget_gbps: Option<f64>,
     /// Adaptive upper clamp, in ticks.
     pub max_interval_ticks: u64,
     /// Pool workers for the per-shard scrub fan-out.
@@ -360,6 +367,7 @@ impl Default for FleetSimConfig {
             strategy: "in-place".into(),
             shards: 8,
             budget_passes: 3,
+            budget_gbps: None,
             max_interval_ticks: 16,
             workers: 2,
             starve_after: 4,
@@ -496,16 +504,6 @@ pub fn run_fleet_sim(
     alloc: FleetAllocation,
 ) -> anyhow::Result<FleetSimResult> {
     anyhow::ensure!(!models.is_empty(), "fleet sim needs at least one model");
-    anyhow::ensure!(cfg.budget_passes >= 1, "scrub budget must be at least 1 pass/tick");
-    if alloc == FleetAllocation::Isolated {
-        anyhow::ensure!(
-            cfg.budget_passes % models.len() == 0,
-            "isolated allocation needs a budget divisible by the model count \
-             ({} passes over {} models)",
-            cfg.budget_passes,
-            models.len()
-        );
-    }
     let total_ticks = models[0].scenario.total_ticks();
     anyhow::ensure!(
         models.iter().all(|m| m.scenario.total_ticks() == total_ticks),
@@ -540,8 +538,34 @@ pub fn run_fleet_sim(
         .flat_map(|b| (0..b.num_shards()).map(|i| b.shard_bits(i)))
         .max()
         .unwrap_or(0);
+    // A bandwidth-stated budget converts to whole passes over the
+    // widest shard (rounding down: bandwidth is a cap, not a promise),
+    // so every allocation policy still compares at equal whole-pass
+    // bandwidth.
+    let budget_passes = match cfg.budget_gbps {
+        None => cfg.budget_passes,
+        Some(gbps) => {
+            let bits = crate::memory::gbps_to_bits_per_wakeup(gbps, tick);
+            anyhow::ensure!(
+                pass_bits > 0 && bits >= pass_bits,
+                "--budget-gbps {gbps} buys {bits} bits/tick, less than one \
+                 pass over the widest shard ({pass_bits} bits)"
+            );
+            (bits / pass_bits) as usize
+        }
+    };
+    anyhow::ensure!(budget_passes >= 1, "scrub budget must be at least 1 pass/tick");
+    if alloc == FleetAllocation::Isolated {
+        anyhow::ensure!(
+            budget_passes % models.len() == 0,
+            "isolated allocation needs a budget divisible by the model count \
+             ({} passes over {} models)",
+            budget_passes,
+            models.len()
+        );
+    }
     let mut fleet =
-        FleetArbitration::new(Some(cfg.budget_passes as u64 * pass_bits), cfg.starve_after);
+        FleetArbitration::new(Some(budget_passes as u64 * pass_bits), cfg.starve_after);
     let slots: Vec<usize> = banks.iter().map(|b| fleet.register(b.num_shards())).collect();
     let mut lanes: Vec<FleetLaneResult> = models
         .iter()
@@ -561,7 +585,7 @@ pub fn run_fleet_sim(
         }
         let grants: Vec<(usize, Vec<usize>)> = match alloc {
             FleetAllocation::Isolated => {
-                let per = cfg.budget_passes / models.len();
+                let per = budget_passes / models.len();
                 scheds
                     .iter()
                     .enumerate()
@@ -571,7 +595,7 @@ pub fn run_fleet_sim(
             FleetAllocation::RoundRobin => {
                 let mi = rr_cursor;
                 rr_cursor = (rr_cursor + 1) % models.len();
-                vec![(mi, scheds[mi].most_urgent(cfg.budget_passes))]
+                vec![(mi, scheds[mi].most_urgent(budget_passes))]
             }
             FleetAllocation::Arbitrated => {
                 let refs: Vec<(usize, &ScrubScheduler)> =
@@ -748,6 +772,36 @@ mod tests {
         assert_eq!(sc.phase_at(60).model, sc.phases[1].model);
         assert_eq!(sc.phase_at(179).model, sc.phases[2].model);
         assert!(Scenario::by_name("nope", 1).is_err());
+    }
+
+    /// A bandwidth-stated fleet budget is exactly the whole-pass budget
+    /// it converts to: bits/tick over the widest shard, rounded down.
+    #[test]
+    fn fleet_budget_gbps_equals_converted_passes() {
+        let models = fleet_models(3);
+        let by_passes = FleetSimConfig::default();
+        // the widest shard of a 32 KiB in-place bank at 8 shards is
+        // 4096 bytes = 32768 stored bits; 3.4 passes/tick rounds down
+        // to the default 3
+        let pass_bits = (32 * 1024 / 8) * 8;
+        let gbps = 3.4 * pass_bits as f64 / 8e9;
+        let by_gbps = FleetSimConfig {
+            budget_gbps: Some(gbps),
+            budget_passes: 999, // must be ignored
+            ..FleetSimConfig::default()
+        };
+        for alloc in [FleetAllocation::RoundRobin, FleetAllocation::Arbitrated] {
+            let a = run_fleet_sim(&by_passes, &models, alloc).unwrap();
+            let b = run_fleet_sim(&by_gbps, &models, alloc).unwrap();
+            assert_eq!(a.total_passes, b.total_passes, "{}", alloc.tag());
+            assert_eq!(a.lanes, b.lanes, "{}", alloc.tag());
+        }
+        // a bandwidth below one pass per tick is a loud error
+        let starved = FleetSimConfig {
+            budget_gbps: Some(0.5 * pass_bits as f64 / 8e9),
+            ..FleetSimConfig::default()
+        };
+        assert!(run_fleet_sim(&starved, &models, FleetAllocation::Arbitrated).is_err());
     }
 
     /// The tentpole acceptance test: under a seeded hotspot-migration

@@ -68,6 +68,11 @@
 //!   banks instead of re-encoding. `harness::scrubsim` replays
 //!   time-varying fault scenarios (rate ramps, hotspot migration)
 //!   against the adaptive scrub scheduler at equal scrub bandwidth.
+//!   `harness::closedloop` closes the loop end to end: a model served
+//!   under a live scheduler while the stateful `memory::fault::Wear`
+//!   aging process drifts, scored per epoch by real accuracy and swept
+//!   over {fixed, adaptive} × scrub budgets into the
+//!   accuracy-vs-scrub-joules frontier.
 //! * [`util`] — substrates the offline build denies us as crates: JSON,
 //!   PRNG, CLI parsing, stats, ASCII plots, a bench timer.
 

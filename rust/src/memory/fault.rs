@@ -318,6 +318,311 @@ fn burst_positions(rng: &mut Rng, total: u64, bursts: u64, len: u64) -> Vec<u64>
     positions
 }
 
+// ------------------------------------------------------------------ wear --
+
+/// Parameters of the [`Wear`] aging process. Unlike [`FaultModel`]
+/// (stateless per-injection distributions) wear is a *process*: damage
+/// accumulates over simulated time, so the model carries state and
+/// lives outside the `FaultModel` enum.
+///
+/// Two fault populations share one clock:
+///
+/// * **Stuck cells** — permanent damage. Each tick an expected
+///   `wear_rate x total_bits` new cells (growing by `accel` per tick)
+///   are pinned to a random value inside one contiguous window of the
+///   image (`window_start`/`window_frac`): wear-out is localized —
+///   write-hot rows age first — which is exactly the regime where
+///   per-shard adaptive scrubbing can beat a uniform fixed interval.
+///   Scrubbing corrects a stuck cell's *stored* image, but the cell
+///   re-asserts its pinned value at the next strike — the per-cell
+///   flip probability the Wilson estimator sees drifts upward.
+/// * **Transient flips** — a uniform background at `transient_rate`
+///   flips/bit/tick over the whole image, so the quiet shards are not
+///   error-free (the scheduler must keep paying them *some* attention).
+///   Worn cells also retain worse: `hot_rate` adds *extra* transient
+///   flips confined to the wear window. This is the population scrub
+///   policy actually differentiates on — an in-window transient that is
+///   corrected before a partner flip arrives stays harmless, while two
+///   uncorrected flips in one code block are permanent damage — whereas
+///   stuck-at pairs form identically under any policy.
+///
+/// All populations use fractional-carry accounting: the realized count
+/// after T ticks is exactly `floor(cumulative expectation)` (until the
+/// `max_stuck_frac` cap or the window capacity saturates), which makes
+/// the drift envelope a provable property rather than a statistical
+/// one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WearParams {
+    /// Expected transient flips per stored bit per tick (whole image).
+    pub transient_rate: f64,
+    /// Expected new stuck cells per stored bit per tick at tick 0.
+    pub wear_rate: f64,
+    /// Per-tick multiplicative growth of the stuck-cell arrival rate
+    /// (`>= 1`); 1.0 means linear damage accumulation.
+    pub accel: f64,
+    /// Start of the wear window as a fraction of the stored image.
+    pub window_start: f64,
+    /// Width of the wear window as a fraction of the stored image.
+    pub window_frac: f64,
+    /// Saturation cap: stuck cells never exceed this fraction of the
+    /// stored image (also capped by the window capacity).
+    pub max_stuck_frac: f64,
+    /// Extra transient flips per *window* bit per tick — the worn
+    /// region's degraded retention.
+    pub hot_rate: f64,
+}
+
+impl Default for WearParams {
+    fn default() -> Self {
+        // The window geometry mirrors the scrubsim migrate scenario's
+        // first hotspot (inside one shard at a 16-way split); rates are
+        // tuned so a few-hundred-tick run accumulates on the order of a
+        // hundred stuck cells — enough damage drift to move the BER
+        // estimate without saturating every window block past 1-bit
+        // correctability — while the hot transient rate lands a few
+        // in-window flips per tick, the population whose pairing-up
+        // between scrubs the scrub policy actually controls.
+        WearParams {
+            transient_rate: 2e-7,
+            wear_rate: 5e-7,
+            accel: 1.01,
+            window_start: 0.07,
+            window_frac: 0.03,
+            max_stuck_frac: 0.02,
+            hot_rate: 2e-4,
+        }
+    }
+}
+
+impl WearParams {
+    /// Stable tag naming the process — ledger fingerprints, JSON
+    /// reports, CLI. `parse` accepts every string `tag` produces.
+    pub fn tag(&self) -> String {
+        format!(
+            "wear:{}:{}:{}:{}:{}:{}:{}",
+            self.transient_rate,
+            self.wear_rate,
+            self.accel,
+            self.window_start,
+            self.window_frac,
+            self.max_stuck_frac,
+            self.hot_rate
+        )
+    }
+
+    /// Parse a wear tag:
+    /// `wear[:TRANSIENT[:RATE[:ACCEL[:START[:FRAC[:CAP[:HOT]]]]]]]` —
+    /// trailing parameters may be omitted for the defaults.
+    pub fn parse(text: &str) -> anyhow::Result<WearParams> {
+        let mut parts = text.split(':');
+        anyhow::ensure!(
+            parts.next() == Some("wear"),
+            "unknown wear model '{text}' (wear:TRANSIENT:RATE:ACCEL:START:FRAC:CAP:HOT)"
+        );
+        let mut p = WearParams::default();
+        let fields: [(&str, &mut f64); 7] = [
+            ("transient rate", &mut p.transient_rate),
+            ("wear rate", &mut p.wear_rate),
+            ("acceleration", &mut p.accel),
+            ("window start", &mut p.window_start),
+            ("window fraction", &mut p.window_frac),
+            ("stuck cap", &mut p.max_stuck_frac),
+            ("hot transient rate", &mut p.hot_rate),
+        ];
+        let mut parts = parts.fuse();
+        for (what, slot) in fields {
+            match parts.next() {
+                None => break,
+                Some(raw) => {
+                    *slot = raw
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad {what} in wear model '{text}'"))?;
+                }
+            }
+        }
+        anyhow::ensure!(
+            parts.next().is_none(),
+            "too many parameters in wear model '{text}'"
+        );
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Range checks shared by `parse` and [`Wear::new`].
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let unit = |v: f64| (0.0..=1.0).contains(&v);
+        anyhow::ensure!(
+            self.transient_rate.is_finite() && self.transient_rate >= 0.0,
+            "wear transient rate must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.hot_rate.is_finite() && self.hot_rate >= 0.0,
+            "wear hot transient rate must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.wear_rate.is_finite() && self.wear_rate >= 0.0,
+            "wear rate must be finite and >= 0"
+        );
+        anyhow::ensure!(
+            self.accel.is_finite() && self.accel >= 1.0,
+            "wear acceleration must be finite and >= 1"
+        );
+        anyhow::ensure!(
+            unit(self.window_start) && unit(self.window_frac) && unit(self.max_stuck_frac),
+            "wear window start/fraction and stuck cap must be in [0, 1]"
+        );
+        Ok(())
+    }
+}
+
+/// Stateful wear/aging fault process (see [`WearParams`]).
+///
+/// Drive it with one [`Wear::advance`] per simulated tick (damage
+/// accrual), then ask [`Wear::strike_positions`] which stored bits
+/// differ from what the damaged memory would read back — stuck cells
+/// re-assert their pinned value even if a scrub just rewrote them,
+/// plus this tick's transient flips. The caller flips exactly those
+/// positions (e.g. via `ShardedBank::inject_positions`), keeping the
+/// bank's dirty tracking correct.
+pub struct Wear {
+    params: WearParams,
+    rng: Rng,
+    /// Permanently damaged cells: stored-bit position -> pinned value.
+    stuck: std::collections::BTreeMap<u64, bool>,
+    /// Current stuck-cell arrival rate (grows by `accel` per tick).
+    rate: f64,
+    /// Fractional-carry accumulators (exact floor-of-expectation
+    /// realization for stuck growth and transient counts).
+    wear_carry: f64,
+    transient_carry: f64,
+    hot_carry: f64,
+    ticks: u64,
+}
+
+impl Wear {
+    pub fn new(params: WearParams, seed: u64) -> anyhow::Result<Wear> {
+        params.validate()?;
+        Ok(Wear {
+            params,
+            rng: Rng::new(seed),
+            stuck: std::collections::BTreeMap::new(),
+            rate: params.wear_rate,
+            wear_carry: 0.0,
+            transient_carry: 0.0,
+            hot_carry: 0.0,
+            ticks: 0,
+        })
+    }
+
+    pub fn params(&self) -> WearParams {
+        self.params
+    }
+
+    /// Stuck cells accumulated so far (monotone in tick count).
+    pub fn stuck_cells(&self) -> u64 {
+        self.stuck.len() as u64
+    }
+
+    /// Stuck-cell arrival rate for the *next* tick (flips/bit/tick).
+    pub fn current_wear_rate(&self) -> f64 {
+        self.rate
+    }
+
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Advance simulated time by one tick over an image of
+    /// `total_bits` stored bits: pin `floor(rate x total + carry)` new
+    /// cells inside the wear window, then accelerate the rate.
+    pub fn advance(&mut self, total_bits: u64) {
+        if total_bits == 0 {
+            self.ticks += 1;
+            return;
+        }
+        let window =
+            ((total_bits as f64 * self.params.window_frac).ceil() as u64).clamp(1, total_bits);
+        let start = ((total_bits as f64 * self.params.window_start) as u64).min(total_bits - 1);
+        let cap = ((total_bits as f64 * self.params.max_stuck_frac) as u64).min(window);
+        let expected = self.rate * total_bits as f64 + self.wear_carry;
+        let budget = expected.floor().max(0.0) as u64;
+        self.wear_carry = (expected - budget as f64).clamp(0.0, 1.0);
+        for _ in 0..budget {
+            if self.stuck.len() as u64 >= cap {
+                // saturated: damage stops accruing, and the carry must
+                // not bank the denied budget toward a burst later
+                self.wear_carry = 0.0;
+                break;
+            }
+            // deterministic linear probe inside the (circular) window:
+            // collisions with already-stuck cells walk to the next cell
+            let mut off = self.rng.below(window);
+            let mut pos = (start + off) % total_bits;
+            while self.stuck.contains_key(&pos) {
+                off = (off + 1) % window;
+                pos = (start + off) % total_bits;
+            }
+            let pinned = self.rng.next_u64() & 1 == 1;
+            self.stuck.insert(pos, pinned);
+        }
+        self.rate = (self.rate * self.params.accel).min(1.0);
+        self.ticks += 1;
+    }
+
+    /// Bit positions of `enc` that the damaged memory reads back
+    /// differently from what is stored: every stuck cell whose stored
+    /// bit is not its pinned value (re-assertion — a scrub's rewrite
+    /// does not heal the cell), this tick's uniform background
+    /// transient flips, and the worn window's extra `hot_rate`
+    /// transients — all drawn outside the stuck set and deduplicated
+    /// (a repeated position would flip back). Flipping exactly the
+    /// returned positions brings the image to the damaged read-back
+    /// state.
+    ///
+    /// RNG consumption here depends only on the image *size*, never on
+    /// its contents, so two simulations fed the same seed see the same
+    /// damage process no matter how their scrub policies respond.
+    pub fn strike_positions(&mut self, enc: &Encoded) -> Vec<u64> {
+        let total = enc.total_bits();
+        if total == 0 {
+            return Vec::new();
+        }
+        let mut positions: std::collections::BTreeSet<u64> = self
+            .stuck
+            .iter()
+            .filter(|&(&pos, &pinned)| pos < total && enc.get_bit(pos) != pinned)
+            .map(|(&pos, _)| pos)
+            .collect();
+        let expected = self.params.transient_rate * total as f64 + self.transient_carry;
+        let n = expected.floor().max(0.0) as u64;
+        self.transient_carry = (expected - n as f64).clamp(0.0, 1.0);
+        if n > 0 {
+            positions.extend(
+                self.rng
+                    .distinct(total, n.min(total))
+                    .into_iter()
+                    .filter(|pos| !self.stuck.contains_key(pos)),
+            );
+        }
+        let window =
+            ((total as f64 * self.params.window_frac).ceil() as u64).clamp(1, total);
+        let start = ((total as f64 * self.params.window_start) as u64).min(total - 1);
+        let expected = self.params.hot_rate * window as f64 + self.hot_carry;
+        let h = expected.floor().max(0.0) as u64;
+        self.hot_carry = (expected - h as f64).clamp(0.0, 1.0);
+        if h > 0 {
+            positions.extend(
+                self.rng
+                    .distinct(window, h.min(window))
+                    .into_iter()
+                    .map(|off| (start + off) % total)
+                    .filter(|pos| !self.stuck.contains_key(pos)),
+            );
+        }
+        positions.into_iter().collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -583,5 +888,178 @@ mod tests {
             assert_eq!(a.data, b.data, "{}", m.tag());
             assert_eq!(a.oob, b.oob, "{}", m.tag());
         }
+    }
+
+    // -------------------------------------------------------------- wear --
+
+    fn wear_params() -> WearParams {
+        WearParams {
+            transient_rate: 1e-4,
+            wear_rate: 1e-3,
+            accel: 1.05,
+            window_start: 0.25,
+            window_frac: 0.10,
+            max_stuck_frac: 0.05,
+            hot_rate: 0.0,
+        }
+    }
+
+    #[test]
+    fn wear_tag_roundtrips_and_defaults() {
+        let p = wear_params();
+        assert_eq!(WearParams::parse(&p.tag()).unwrap(), p);
+        assert_eq!(WearParams::parse("wear").unwrap(), WearParams::default());
+        // trailing parameters default positionally
+        let partial = WearParams::parse("wear:1e-6:2e-5").unwrap();
+        assert_eq!(partial.transient_rate, 1e-6);
+        assert_eq!(partial.wear_rate, 2e-5);
+        assert_eq!(partial.accel, WearParams::default().accel);
+        assert!(WearParams::parse("wear:x").is_err());
+        assert!(WearParams::parse("wear:1:1:0.5").is_err(), "accel < 1");
+        assert!(WearParams::parse("wear:0:0:1:2").is_err(), "start > 1");
+        assert!(WearParams::parse("wear:0:0:1:0:0:0:0:9").is_err(), "extra");
+        assert!(WearParams::parse("uniform").is_err());
+    }
+
+    #[test]
+    fn wear_is_deterministic_per_seed() {
+        let enc = image(1024);
+        let mut a = Wear::new(wear_params(), 77).unwrap();
+        let mut b = Wear::new(wear_params(), 77).unwrap();
+        for _ in 0..20 {
+            a.advance(enc.total_bits());
+            b.advance(enc.total_bits());
+            assert_eq!(a.strike_positions(&enc), b.strike_positions(&enc));
+        }
+        assert_eq!(a.stuck_cells(), b.stuck_cells());
+    }
+
+    #[test]
+    fn wear_stuck_set_grows_to_floor_of_expectation() {
+        // 9216 stored bits at 1e-3/bit/tick, accel 1.05: the realized
+        // stuck count after each tick is exactly floor(cumulative
+        // expectation) until the cap binds (carry accounting is exact).
+        let enc = image(1024);
+        let total = enc.total_bits();
+        let p = wear_params();
+        let mut wear = Wear::new(p, 5).unwrap();
+        let mut expected = 0.0f64;
+        let mut rate = p.wear_rate;
+        let cap = ((total as f64 * p.max_stuck_frac) as u64)
+            .min((total as f64 * p.window_frac).ceil() as u64);
+        let mut prev = 0;
+        for t in 0..40 {
+            wear.advance(total);
+            expected += rate * total as f64;
+            rate *= p.accel;
+            let got = wear.stuck_cells();
+            assert!(got >= prev, "stuck set must be monotone (tick {t})");
+            prev = got;
+            if got < cap {
+                assert_eq!(got, expected.floor() as u64, "tick {t}");
+            } else {
+                assert_eq!(got, cap, "tick {t}: saturated at the cap");
+            }
+        }
+        assert_eq!(prev, cap, "40 ticks at these rates must saturate");
+    }
+
+    #[test]
+    fn wear_strikes_stay_inside_window_and_reassert_after_scrub() {
+        let mut enc = image(1024);
+        let total = enc.total_bits();
+        let p = WearParams {
+            transient_rate: 0.0,
+            ..wear_params()
+        };
+        let mut wear = Wear::new(p, 3).unwrap();
+        for _ in 0..10 {
+            wear.advance(total);
+        }
+        let start = (total as f64 * p.window_start) as u64;
+        let window = (total as f64 * p.window_frac).ceil() as u64;
+        let strikes = wear.strike_positions(&enc);
+        assert!(!strikes.is_empty());
+        for &pos in &strikes {
+            let off = (pos + total - start) % total;
+            assert!(off < window, "stuck cell {pos} outside the wear window");
+        }
+        for &pos in &strikes {
+            enc.flip_bit(pos);
+        }
+        // damaged state reached: nothing further to assert this tick
+        assert!(wear.strike_positions(&enc).is_empty());
+        // a "scrub" rewriting the stored image does not heal the cells:
+        // every pinned cell re-asserts at the next strike
+        let mut sorted = strikes.clone();
+        sorted.sort_unstable();
+        for &pos in &strikes {
+            enc.flip_bit(pos); // restore clean stored image
+        }
+        let mut again = wear.strike_positions(&enc);
+        again.sort_unstable();
+        assert_eq!(again, sorted, "stuck cells must re-assert after rewrite");
+    }
+
+    #[test]
+    fn wear_transients_follow_carry_and_avoid_stuck_cells() {
+        // wear_rate 0: every strike is transient. 1e-4 over 9216 bits
+        // = 0.9216/tick, so exact carry realizes floor(0.9216 * 10) = 9
+        // strikes over 10 ticks.
+        let enc = image(1024);
+        let total = enc.total_bits();
+        let p = WearParams {
+            wear_rate: 0.0,
+            ..wear_params()
+        };
+        let mut wear = Wear::new(p, 11).unwrap();
+        let mut transients = 0usize;
+        for _ in 0..10 {
+            wear.advance(total);
+            transients += wear.strike_positions(&enc).len();
+        }
+        assert_eq!(transients, 9, "carry must realize floor of expectation");
+
+        // with stuck cells present, transient draws skip the stuck set:
+        // strike positions are always pairwise distinct.
+        let p = WearParams {
+            transient_rate: 5e-3,
+            ..wear_params()
+        };
+        let mut wear = Wear::new(p, 13).unwrap();
+        for _ in 0..10 {
+            wear.advance(total);
+            let strikes = wear.strike_positions(&enc);
+            let distinct: std::collections::HashSet<_> = strikes.iter().collect();
+            assert_eq!(distinct.len(), strikes.len(), "strikes must be distinct");
+        }
+    }
+
+    #[test]
+    fn wear_hot_transients_stay_inside_window() {
+        // hot_rate only: 1e-3 over a ceil(9216 * 0.10) = 922-bit window
+        // = 0.922/tick -> exactly floor(9.22) = 9 strikes over 10
+        // ticks, every one inside the window.
+        let enc = image(1024);
+        let total = enc.total_bits();
+        let p = WearParams {
+            transient_rate: 0.0,
+            wear_rate: 0.0,
+            hot_rate: 1e-3,
+            ..wear_params()
+        };
+        let start = (total as f64 * p.window_start) as u64;
+        let window = (total as f64 * p.window_frac).ceil() as u64;
+        let mut wear = Wear::new(p, 21).unwrap();
+        let mut hot = 0usize;
+        for _ in 0..10 {
+            wear.advance(total);
+            for pos in wear.strike_positions(&enc) {
+                let off = (pos + total - start) % total;
+                assert!(off < window, "hot transient {pos} outside the window");
+                hot += 1;
+            }
+        }
+        assert_eq!(hot, 9, "hot carry must realize floor of expectation");
     }
 }

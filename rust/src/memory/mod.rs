@@ -6,7 +6,12 @@
 //!   upsets) and hotspot (localized damage) models for the ablations
 //!   and the campaign engine. All models draw through
 //!   `FaultInjector::draw_positions`, so shard dirty tracking works
-//!   unchanged for every one of them.
+//!   unchanged for every one of them. The same module hosts the
+//!   stateful [`fault::Wear`] aging process (stuck-at damage
+//!   accumulating over simulated time inside a wear window, an
+//!   elevated in-window transient rate from degraded retention, plus a
+//!   uniform transient background) that the closed-loop accuracy
+//!   simulation drives via `ShardedBank::inject_positions`.
 //! * [`bank`] — `MemoryBank`: an encoded weight image + its protection
 //!   strategy; supports fault injection, protected reads and scrubbing.
 //! * [`shard`] — `ShardedBank`: the same stored image split into S
@@ -40,10 +45,10 @@ pub mod scheduler;
 pub mod shard;
 
 pub use bank::MemoryBank;
-pub use fault::{FaultInjector, FaultModel, FaultSite};
+pub use fault::{FaultInjector, FaultModel, FaultSite, Wear, WearParams};
 pub use pool::{run_jobs, Pool};
 pub use scheduler::{
-    arbitrate, FleetArbitration, FleetGrant, ModelDeficit, SchedulerConfig, ScrubDemand,
-    ScrubPolicy, ScrubScheduler, ShardSchedule,
+    arbitrate, gbps_to_bits_per_wakeup, FleetArbitration, FleetGrant, ModelDeficit,
+    SchedulerConfig, ScrubDemand, ScrubPolicy, ScrubScheduler, ShardSchedule,
 };
 pub use shard::{plan_shards, ShardState, ShardedBank};

@@ -326,6 +326,34 @@ impl ScrubScheduler {
         }
         s.deadline = now + s.interval;
     }
+
+    /// One discrete time step of the scheduler's dispatch law: which
+    /// shards scrub *now*, spending at most `budget_bits` (None = no
+    /// cap). Due shards become [`ScrubDemand`]s and route through the
+    /// same [`arbitrate`] planner the fleet control loop runs — the
+    /// closed-loop simulation and the serve path share one law, so a
+    /// policy the sim certifies is the policy production executes.
+    /// Shards the budget cannot place simply stay due and compete again
+    /// next step (single-model stepping keeps no deferral counters; the
+    /// starvation bound belongs to [`FleetArbitration`]).
+    pub fn step_plan(&self, now: Duration, budget_bits: Option<u64>) -> Vec<usize> {
+        let demands: Vec<ScrubDemand> = self
+            .due(now)
+            .into_iter()
+            .map(|i| ScrubDemand {
+                model: 0,
+                shard: i,
+                bits: self.shard_bits(i),
+                ber_upper: self.ber_bounds(i).1,
+                lateness_secs: (now.as_secs_f64() - self.deadline(i).as_secs_f64()).max(0.0),
+                deferrals: 0,
+            })
+            .collect();
+        arbitrate(&demands, budget_bits.unwrap_or(u64::MAX), u32::MAX)
+            .into_iter()
+            .map(|g| g.shard)
+            .collect()
+    }
 }
 
 /// The adaptive interval that keeps expected new-error arrivals at the
@@ -453,6 +481,20 @@ pub fn arbitrate(demands: &[ScrubDemand], budget_bits: u64, starve_after: u32) -
         }
     }
     grants
+}
+
+/// Convert an operator-facing scrub-bandwidth budget in GB/s (decimal
+/// gigabytes, as bandwidth is always quoted) into the stored-bit budget
+/// one arbiter wakeup may spend: `gbps x 1e9 bytes x 8 bits x wakeup
+/// seconds`, rounded to nearest. Non-finite or non-positive inputs map
+/// to 0 (an explicit "no bandwidth" rather than a surprise huge cast).
+/// This is the first step of deriving the fleet budget from a
+/// machine-level bandwidth fraction instead of a raw bit count.
+pub fn gbps_to_bits_per_wakeup(gbps: f64, wakeup: Duration) -> u64 {
+    if !gbps.is_finite() || gbps <= 0.0 {
+        return 0;
+    }
+    (gbps * 1e9 * 8.0 * wakeup.as_secs_f64()).round() as u64
 }
 
 /// Per-model budget-deficit gauges (degraded-mode observability): how
@@ -865,6 +907,53 @@ mod tests {
         let grants = fleet.plan(&[(m, &sched)], Duration::ZERO);
         assert_eq!(grants.len(), 3);
         assert_eq!(fleet.deficit(m), ModelDeficit::default());
+    }
+
+    #[test]
+    fn step_plan_is_the_fleet_law_for_one_model() {
+        let cfg = SchedulerConfig::fixed(secs(1));
+        let mut sched = ScrubScheduler::new(cfg, &[600, 600, 600], Duration::ZERO);
+        // uncapped: every due shard granted, exactly `due`'s set
+        assert_eq!(sched.step_plan(Duration::ZERO, None), vec![0, 1, 2]);
+        // nothing due -> nothing planned
+        for i in 0..3 {
+            sched.record_pass(i, &DecodeStats::default(), Duration::ZERO);
+        }
+        assert!(sched.step_plan(secs(0), Some(u64::MAX)).is_empty());
+        // capped at one shard's bits: exactly one grant, and it matches
+        // what the fleet arbiter would grant for the same demand set
+        let now = secs(1);
+        sched.record_pass(0, &errs(40, 0), Duration::ZERO); // shard 0 urgent
+        let plan = sched.step_plan(now, Some(600));
+        assert_eq!(plan.len(), 1);
+        let mut fleet = FleetArbitration::new(Some(600), u32::MAX);
+        let m = fleet.register(3);
+        let grants = fleet.plan(&[(m, &sched)], now);
+        assert_eq!(
+            plan,
+            grants.iter().map(|g| g.shard).collect::<Vec<_>>(),
+            "sim stepping and the fleet planner must agree"
+        );
+        // budget below the smallest shard: due work stays due
+        assert!(sched.step_plan(now, Some(100)).is_empty());
+        assert_eq!(sched.due(now).len(), 3);
+    }
+
+    #[test]
+    fn gbps_conversion_is_pinned() {
+        // 1 GB/s for a 1-second wakeup is exactly 8e9 stored bits
+        assert_eq!(
+            gbps_to_bits_per_wakeup(1.0, Duration::from_secs(1)),
+            8_000_000_000
+        );
+        // 0.25 GB/s at a 200 ms wakeup: 0.25e9 * 8 * 0.2 = 4e8
+        assert_eq!(
+            gbps_to_bits_per_wakeup(0.25, Duration::from_millis(200)),
+            400_000_000
+        );
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(gbps_to_bits_per_wakeup(bad, Duration::from_secs(1)), 0);
+        }
     }
 
     #[test]

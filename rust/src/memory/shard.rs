@@ -230,8 +230,18 @@ impl ShardedBank {
         let mut inj = FaultInjector::new(model, seed);
         let n = FaultInjector::flip_count(self.image.total_bits(), rate);
         let positions = inj.draw_positions(&self.image, n);
+        self.inject_positions(&positions)
+    }
+
+    /// Flip explicit stored-bit positions (a caller-driven fault
+    /// process, e.g. [`crate::memory::fault::Wear`] strikes), with the
+    /// same dirty-shard marking and copy-on-write block tracking as
+    /// [`ShardedBank::inject`]. Positions must be in-range and should
+    /// be distinct — a repeated position flips back. Returns bits
+    /// flipped.
+    pub fn inject_positions(&mut self, positions: &[u64]) -> u64 {
         let flipped = positions.len() as u64;
-        for pos in positions {
+        for &pos in positions {
             let shard = self.shard_of_bit(pos);
             let block = self.block_of_bit(pos);
             self.image.flip_bit(pos);
